@@ -1,0 +1,53 @@
+//! Ablation: fill-reducing orderings (the paper's stated future work —
+//! "a detailed evaluation of different permutation algorithms"). Reports
+//! fill-L and the numeric factorization time under natural / RCM /
+//! greedy-min-degree orderings on the paper's geometric matrices.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::sparse::cholesky::LdlFactor;
+use csgp::sparse::ordering::{compute_ordering, Ordering};
+use csgp::sparse::symbolic::Symbolic;
+
+fn main() {
+    let full = std::env::var("CSGP_FULL").is_ok();
+    let ns: Vec<usize> = if full { vec![1000, 2000, 4000] } else { vec![500, 1000, 2000] };
+    println!("# Ablation: ordering algorithms (pp3 covariance matrices)");
+    println!("| dim | n | ordering | fill-K | fill-L | ordering time | factor time |");
+    println!("|---|---|---|---|---|---|---|");
+
+    for (dim, ls) in [(2usize, 1.3), (5usize, 5.0)] {
+        for &n in &ns {
+            let cfg = if dim == 2 { ClusterConfig::paper_2d(n) } else { ClusterConfig::paper_5d(n) };
+            let data = cluster_dataset(&cfg, 9);
+            let cov = CovFunction::new(CovKind::Pp(3), dim, 1.0, ls);
+            let k0 = cov.cov_matrix(&data.x);
+            for ord in [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree] {
+                if ord == Ordering::MinDegree && dim == 5 && n > 1000 {
+                    // greedy min-degree is quadratic on dense-ish graphs
+                    println!("| {dim}D | {n} | {ord:?} | — | skipped (quadratic) | | |");
+                    continue;
+                }
+                let t0 = Instant::now();
+                let perm = compute_ordering(&k0, ord);
+                let t_ord = t0.elapsed();
+                let kp = k0.permute_sym(&perm);
+                let sym = Arc::new(Symbolic::analyze(&kp));
+                let t0 = Instant::now();
+                let _f = LdlFactor::factor(sym.clone(), &kp).unwrap();
+                let t_fac = t0.elapsed();
+                println!(
+                    "| {dim}D | {n} | {ord:?} | {:.3} | {:.3} | {} | {} |",
+                    k0.density(),
+                    sym.fill_l(),
+                    csgp::bench::fmt_duration(t_ord),
+                    csgp::bench::fmt_duration(t_fac)
+                );
+            }
+        }
+    }
+    println!("\nexpectation: RCM/min-degree beat natural; the fill gap drives the EP speedup (paper §5.4).");
+}

@@ -1,0 +1,44 @@
+//! Perf: covariance assembly through the AOT XLA tile artifact vs the
+//! native rust loop — the L1/L2 hot path measured from the L3 side.
+//! (Numbers are CPU-PJRT; on a real TPU the tile runs on the MXU and the
+//! crossover moves sharply toward XLA — see DESIGN.md §Hardware-Adaptation.)
+
+use std::time::Instant;
+
+use csgp::data::synthetic::uniform_points;
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::runtime::{Runtime, XlaCovarianceAssembler};
+
+fn main() {
+    let Ok(rt) = Runtime::open_default() else {
+        println!("artifacts/ not built — run `make artifacts` first");
+        return;
+    };
+    let asm = XlaCovarianceAssembler::new(&rt);
+    let full = std::env::var("CSGP_FULL").is_ok();
+    let ns: Vec<usize> = if full { vec![512, 1024, 2048, 4096] } else { vec![256, 512, 1024, 2048] };
+
+    println!("# Perf: covariance assembly — XLA tiles vs native rust");
+    println!("| n | kind | native | xla (PJRT CPU) | nnz agreement |");
+    println!("|---|---|---|---|---|");
+    for &n in &ns {
+        let x = uniform_points(n, 2, 10.0, 77);
+        for kind in [CovKind::Se, CovKind::Pp(3)] {
+            let cov = CovFunction::new(kind, 2, 1.0, 1.5);
+            let t0 = Instant::now();
+            let k_native = cov.cov_matrix(&x);
+            let t_native = t0.elapsed();
+            let t0 = Instant::now();
+            let k_xla = asm.cov_matrix(&cov, &x).unwrap();
+            let t_xla = t0.elapsed();
+            assert_eq!(k_native.nnz(), k_xla.nnz(), "pattern mismatch");
+            println!(
+                "| {n} | {:?} | {} | {} | {} nnz ✓ |",
+                kind,
+                csgp::bench::fmt_duration(t_native),
+                csgp::bench::fmt_duration(t_xla),
+                k_native.nnz()
+            );
+        }
+    }
+}

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# make the build-time `compile` package importable when pytest runs from the repo root
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

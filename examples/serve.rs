@@ -1,0 +1,72 @@
+//! Serving demo: fit a sparse-EP classifier, run the coordinator's
+//! batching prediction service under concurrent client load, and report
+//! throughput + latency percentiles (the serving story for a trained GP
+//! classifier, with the probit stage on the XLA artifact when available).
+//!
+//! Run: `cargo run --release --example serve [-- <requests>]`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use csgp::coordinator::{PredictionService, ServiceConfig};
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::rng::Rng;
+use csgp::sparse::ordering::Ordering;
+
+fn main() {
+    let requests: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(4000);
+    let data = cluster_dataset(&ClusterConfig::paper_2d(800), 7);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    println!("fitting model (n = 800)...");
+    let fitted = Arc::new(model.infer_only(&data.x, &data.y).unwrap());
+
+    let artifact_dir = std::path::PathBuf::from(
+        std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let use_xla = artifact_dir.join("manifest.json").exists();
+    println!("probit stage: {}", if use_xla { "XLA artifact" } else { "native (no artifacts)" });
+
+    for (clients, batch) in [(1usize, 1usize), (4, 64), (16, 256)] {
+        let svc = Arc::new(PredictionService::start(
+            fitted.clone(),
+            use_xla.then(|| artifact_dir.clone()),
+            ServiceConfig { max_batch: batch, max_wait: Duration::from_millis(2) },
+        ));
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let svc = svc.clone();
+            let per = requests / clients;
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                let mut lat = Vec::with_capacity(per);
+                for _ in 0..per {
+                    let x = vec![rng.uniform_in(0.0, 10.0), rng.uniform_in(0.0, 10.0)];
+                    lat.push(svc.predict(x).unwrap().service_time);
+                }
+                lat
+            }));
+        }
+        let mut lats: Vec<Duration> = Vec::new();
+        for h in handles {
+            lats.extend(h.join().unwrap());
+        }
+        let wall = t0.elapsed();
+        lats.sort();
+        let n = lats.len();
+        println!(
+            "clients={clients:>2} max_batch={batch:>3}: {:>7.0} req/s | p50 {:>9?} p95 {:>9?} p99 {:>9?} | biggest batch {}",
+            n as f64 / wall.as_secs_f64(),
+            lats[n / 2],
+            lats[n * 95 / 100],
+            lats[n * 99 / 100],
+            svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed)
+        );
+        svc.shutdown();
+    }
+}

@@ -1,0 +1,129 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the full system on the
+//! paper's §6.1 simulation workload, exercising every layer —
+//!
+//!   L1/L2  covariance assembly through the AOT Pallas/XLA tile artifact,
+//!   L3     sparse EP (Algorithm 1: rowmod + sparse solves) with MAP-II
+//!          hyperparameter optimization (SCG + Takahashi gradients),
+//!   serve  batched prediction through the coordinator with the
+//!          `predict_probit` XLA artifact on the response path,
+//!
+//! and compares against the dense k_se baseline on the same split.
+//!
+//! Run: `make artifacts && cargo run --release --example simulation_study`
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use csgp::coordinator::{PredictionService, ServiceConfig};
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::gp::predict::evaluate;
+use csgp::runtime::{Runtime, XlaCovarianceAssembler};
+use csgp::sparse::ordering::Ordering;
+
+fn main() {
+    let n_train = std::env::var("CSGP_N").ok().and_then(|s| s.parse().ok()).unwrap_or(1000);
+    let n_test = 500;
+    let data = cluster_dataset(&ClusterConfig::paper_2d(n_train + n_test), 42);
+    let (train, test) = data.split(n_train);
+    println!("== E2E simulation study: n_train = {n_train}, n_test = {n_test}, 2-D cluster data ==");
+
+    // --- L1/L2: covariance assembly through the XLA artifact -------------
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    println!("PJRT platform: {}", rt.platform());
+    let cov0 = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3);
+    let asm = XlaCovarianceAssembler::new(&rt);
+    let t0 = Instant::now();
+    let k_xla = asm.cov_matrix(&cov0, &train.x).expect("XLA covariance assembly");
+    let t_asm = t0.elapsed();
+    let k_native = cov0.cov_matrix(&train.x);
+    let max_diff = k_xla
+        .values
+        .iter()
+        .zip(&k_native.values)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!(
+        "covariance via XLA tile artifact: {} nnz in {:?} (native agreement {max_diff:.1e})",
+        k_xla.nnz(),
+        t_asm
+    );
+
+    // --- L3: sparse EP + hyperparameter optimization ----------------------
+    let mut sparse_model = GpClassifier::new(cov0.clone(), Inference::Sparse(Ordering::Rcm));
+    sparse_model.opt_opts.max_iters = 8;
+    let t0 = Instant::now();
+    let sparse_fit = sparse_model.fit(&train.x, &train.y).expect("sparse EP fit");
+    let t_sparse_fit = t0.elapsed();
+    println!(
+        "sparse EP (pp3): opt {:?} ({} iters), EP run {:?}, fill-K {:.1}% fill-L {:.1}%, logZ {:.2}",
+        sparse_fit.report.opt_time,
+        sparse_fit.report.opt_iters,
+        sparse_fit.report.ep_time,
+        100.0 * sparse_fit.report.fill_k,
+        100.0 * sparse_fit.report.fill_l,
+        sparse_fit.report.log_z
+    );
+
+    // --- baseline: dense EP with k_se (no optimization; timing only) -----
+    let dense_model =
+        GpClassifier::new(CovFunction::new(CovKind::Se, 2, 1.0, 1.3), Inference::Dense);
+    let t0 = Instant::now();
+    let dense_fit = dense_model.infer_only(&train.x, &train.y).expect("dense EP");
+    let t_dense = t0.elapsed();
+    println!(
+        "dense EP (se):   EP run {t_dense:?}  |  sparse/dense EP-run speedup: {:.1}x",
+        t_dense.as_secs_f64() / sparse_fit.report.ep_time.as_secs_f64()
+    );
+
+    // --- quality ----------------------------------------------------------
+    let m_sparse = evaluate(&sparse_fit.predict_latent_batch(&test.x), &test.y);
+    let m_dense = evaluate(&dense_fit.predict_latent_batch(&test.x), &test.y);
+    println!(
+        "test metrics: pp3-sparse err {:.3} / nlpd {:.3}   se-dense err {:.3} / nlpd {:.3}",
+        m_sparse.err, m_sparse.nlpd, m_dense.err, m_dense.nlpd
+    );
+
+    // --- serving: batched prediction through the coordinator --------------
+    let artifact_dir = std::path::PathBuf::from(
+        std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let svc = Arc::new(PredictionService::start(
+        Arc::new(sparse_fit),
+        Some(artifact_dir),
+        ServiceConfig::default(),
+    ));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for chunk in test.x.chunks(test.x.len() / 4 + 1) {
+        let chunk = chunk.to_vec();
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            chunk.iter().map(|x| svc.predict(x.clone()).unwrap()).collect::<Vec<_>>()
+        }));
+    }
+    let mut served = Vec::new();
+    for h in handles {
+        served.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    let correct = served
+        .iter()
+        .zip(&test.y)
+        .filter(|(p, &y)| (p.probability - 0.5).signum() == y)
+        .count();
+    println!(
+        "served {} predictions in {:?} ({:.0} req/s), batches up to {}, accuracy {:.3}",
+        served.len(),
+        wall,
+        served.len() as f64 / wall.as_secs_f64(),
+        svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed),
+        correct as f64 / served.len() as f64
+    );
+    svc.shutdown();
+
+    let _ = t_sparse_fit;
+    assert!(m_sparse.err < 0.35, "E2E quality regression");
+    println!("== E2E OK ==");
+}

@@ -1,0 +1,66 @@
+//! UCI-analogue benchmark: trains k_se (dense EP), k_pp3 (sparse EP) and
+//! FIC on two of the paper's §6.2 datasets through the coordinator's
+//! job manager, then cross-validates the winner.
+//!
+//! Run: `cargo run --release --example uci_benchmark`
+
+use std::time::Duration;
+
+use csgp::coordinator::{JobManager, JobStatus, TrainSpec};
+use csgp::data::cv::cross_validate;
+use csgp::data::uci::{generate, UCI_SPECS};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::sparse::ordering::Ordering;
+
+fn main() {
+    // crabs (200/6) and sonar (208/60) — the paper's smallest and widest
+    let specs: Vec<_> =
+        UCI_SPECS.iter().filter(|s| s.name == "crabs" || s.name == "sonar").collect();
+    let mgr = JobManager::start(3);
+
+    println!("submitting {} training jobs to the coordinator...", specs.len() * 3);
+    let mut jobs = Vec::new();
+    for spec in &specs {
+        let data = generate(spec, 11);
+        for (label, cov, inference) in [
+            ("k_se/dense", CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5), Inference::Dense),
+            (
+                "k_pp3/sparse",
+                CovFunction::new(CovKind::Pp(3), spec.d, 1.0, 4.0),
+                Inference::Sparse(Ordering::Rcm),
+            ),
+            ("FIC m=10", CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5), Inference::Fic { m: 10 }),
+        ] {
+            let id = mgr
+                .submit(TrainSpec { dataset: data.clone(), cov, inference, optimize: false })
+                .unwrap();
+            jobs.push((spec.name, label, id));
+        }
+    }
+
+    println!("\n| dataset | model | status | logZ | EP time |");
+    println!("|---|---|---|---|---|");
+    for (ds, label, id) in &jobs {
+        match mgr.wait(*id, Duration::from_secs(300)) {
+            Some(JobStatus::Done { log_post, ep_time, .. }) => {
+                println!("| {ds} | {label} | done | {log_post:.2} | {ep_time:?} |");
+            }
+            other => println!("| {ds} | {label} | {other:?} | | |"),
+        }
+    }
+    mgr.shutdown();
+
+    // cross-validate the sparse model on crabs
+    let crabs = generate(UCI_SPECS.iter().find(|s| s.name == "crabs").unwrap(), 11);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), crabs.dim(), 1.0, 4.0),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let res = cross_validate(&model, &crabs, 10, false, 3).unwrap();
+    println!(
+        "\n10-fold CV on crabs (k_pp3 sparse EP): err = {:.3}, nlpd = {:.3}, mean EP {:?}",
+        res.err, res.nlpd, res.ep_time
+    );
+    assert!(res.err < 0.5);
+}

@@ -1,0 +1,84 @@
+"""AOT lowering: jax (L2, calling the L1 Pallas kernels) -> HLO text.
+
+HLO *text* is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  python -m compile.aot --out ../artifacts
+Writes one .hlo.txt per entry point plus manifest.json and a `.stamp`
+file that the Makefile uses for freshness.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.cov import KINDS  # noqa: E402
+from .kernels.ref import DMAX, PROBIT_BATCH, TILE  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points():
+    """name -> (fn, example_args, n_outputs)."""
+    eps = {}
+    for kind in KINDS:
+        eps[f"cov_tile_{kind}"] = (
+            model.make_cov_tile_fn(kind),
+            model.cov_tile_specs(),
+            1,
+        )
+    eps["probit_moments"] = (model.probit_moments_fn, model.probit_specs(3), 3)
+    eps["predict_probit"] = (model.predict_probit_fn, model.probit_specs(2), 1)
+    return eps
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {
+        "tile": TILE,
+        "dmax": DMAX,
+        "probit_batch": PROBIT_BATCH,
+        "dtype": "f64",
+        "entry_points": {},
+    }
+    for name, (fn, specs, n_out) in entry_points().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entry_points"][name] = {
+            "inputs": [list(s.shape) for s in specs],
+            "n_outputs": n_out,
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"manifest: {len(manifest['entry_points'])} entry points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""L1 — Pallas covariance-tile kernel.
+
+The dense compute hot-spot of the pipeline: a TILE×TILE block of the
+covariance matrix K[i, j] = sigma2 * phi(r(x1_i, x2_j)) for one of the
+radial profiles (se / pp0..pp3 / matern). The L3 rust coordinator calls
+the AOT-compiled artifact per tile pair and *sparsifies* the result (CS
+profiles are exactly zero at r >= 1).
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the cross term of
+r² = ‖a‖² + ‖b‖² − 2·a bᵀ is a (TILE, DMAX) @ (DMAX, TILE) contraction —
+MXU work — while the polynomial cutoff is elementwise VPU work on the
+tile while it sits in VMEM. VMEM footprint: 2·128·64·8 B inputs +
+128·128·8 B output ≈ 260 KiB, far under the ~16 MiB budget, leaving room
+to widen the grid on a real TPU. Here the kernel runs under
+interpret=True (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+KINDS = ("se", "pp0", "pp1", "pp2", "pp3", "matern32", "matern52")
+
+
+def _profile(kind, r, jexp):
+    """Radial profile, written with jnp ops Pallas supports."""
+    if kind == "se":
+        return jnp.exp(-r * r)
+    if kind == "matern32":
+        a = jnp.sqrt(3.0) * r
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == "matern52":
+        a = jnp.sqrt(5.0) * r
+        return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+    q = int(kind[2])
+    u = jnp.maximum(1.0 - r, 0.0)
+    j = jexp
+    if q == 0:
+        base, poly = u**j, 1.0
+    elif q == 1:
+        base, poly = u ** (j + 1.0), (j + 1.0) * r + 1.0
+    elif q == 2:
+        base = u ** (j + 2.0)
+        poly = ((j * j + 4.0 * j + 3.0) * r * r + (3.0 * j + 6.0) * r + 3.0) / 3.0
+    else:
+        base = u ** (j + 3.0)
+        poly = (
+            (j**3 + 9.0 * j * j + 23.0 * j + 15.0) * r**3
+            + (6.0 * j * j + 36.0 * j + 45.0) * r * r
+            + (15.0 * j + 45.0) * r
+            + 15.0
+        ) / 15.0
+    return jnp.where(r < 1.0, base * poly, 0.0)
+
+
+def _cov_kernel(kind, x1_ref, x2_ref, inv_ls2_ref, scal_ref, o_ref):
+    """Pallas kernel body. scal_ref = [sigma2, jexp] (shape (2,))."""
+    scale = jnp.sqrt(inv_ls2_ref[...])[None, :]
+    a = x1_ref[...] * scale
+    b = x2_ref[...] * scale
+    r2 = (
+        jnp.sum(a * a, axis=1)[:, None]
+        + jnp.sum(b * b, axis=1)[None, :]
+        - 2.0 * jnp.dot(a, b.T)
+    )
+    r = jnp.sqrt(jnp.maximum(r2, 0.0))
+    sigma2 = scal_ref[0]
+    jexp = scal_ref[1]
+    o_ref[...] = sigma2 * _profile(kind, r, jexp)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def cov_tile(kind, x1, x2, inv_ls2, scal):
+    """One covariance tile via the Pallas kernel.
+
+    Args:
+      kind: one of KINDS (static).
+      x1, x2: (T, D) input blocks (zero-padded columns allowed).
+      inv_ls2: (D,) 1/l_d² (zero for padded columns).
+      scal: (2,) = [sigma2, wendland_j] (j ignored by non-pp kinds).
+    """
+    t = x1.shape[0]
+    return pl.pallas_call(
+        functools.partial(_cov_kernel, kind),
+        out_shape=jax.ShapeDtypeStruct((t, x2.shape[0]), x1.dtype),
+        interpret=True,
+    )(x1, x2, inv_ls2, scal)
+
+
+def cov_tile_reference(kind, x1, x2, inv_ls2, scal):
+    """The pure-jnp oracle with the same calling convention."""
+    return ref.cov_tile_ref(kind, x1, x2, inv_ls2, scal[0], scal[1])

@@ -1,0 +1,66 @@
+"""L1 — Pallas kernels for the probit-likelihood transforms.
+
+Two batched elementwise kernels:
+
+* `probit_moments`: the EP tilted-moment computation (ln Zhat, mu_hat,
+  sigma2_hat) for a batch of cavity parameters — used by the parallel-EP
+  path and by the serving coordinator's calibration endpoint.
+* `predict_probit`: the averaged predictive probability
+  pi* = Phi(mean / sqrt(1 + var)) for a batch of latent predictions —
+  the last stage of every serving request.
+
+Pure VPU work; batch = 1024 keeps the artifact shape static.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from . import special
+
+
+def _moments_kernel(y_ref, mu_ref, var_ref, lnz_ref, muh_ref, s2h_ref):
+    y = y_ref[...]
+    mu = mu_ref[...]
+    var = var_ref[...]
+    denom = jnp.sqrt(1.0 + var)
+    z = y * mu / denom
+    ln_zhat = special.log_ndtr(z)
+    ln_pdf = -0.5 * z * z - 0.5 * jnp.log(2.0 * jnp.pi)
+    rho = jnp.exp(ln_pdf - ln_zhat)
+    lnz_ref[...] = ln_zhat
+    muh_ref[...] = mu + y * var * rho / denom
+    s2h_ref[...] = var - var * var * rho * (z + rho) / (1.0 + var)
+
+
+@jax.jit
+def probit_moments(y, mu, var):
+    """Batched tilted moments through the Pallas kernel."""
+    shape = jax.ShapeDtypeStruct(y.shape, y.dtype)
+    return pl.pallas_call(
+        _moments_kernel,
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(y, mu, var)
+
+
+def _predict_kernel(mean_ref, var_ref, p_ref):
+    mean = mean_ref[...]
+    var = var_ref[...]
+    p_ref[...] = special.ndtr(mean / jnp.sqrt(1.0 + var))
+
+
+@jax.jit
+def predict_probit(mean, var):
+    """Batched pi* through the Pallas kernel."""
+    return pl.pallas_call(
+        _predict_kernel,
+        out_shape=jax.ShapeDtypeStruct(mean.shape, mean.dtype),
+        interpret=True,
+    )(mean, var)
+
+
+# oracles with identical calling conventions
+probit_moments_reference = ref.probit_moments_ref
+predict_probit_reference = ref.predict_probit_ref

@@ -1,0 +1,94 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: every kernel in cov.py / probit.py must match these to ~1e-12).
+
+These mirror rust/src/gp/covariance.rs and likelihood.rs exactly, so the
+pytest suite here plus the rust agreement tests pin all three layers to
+the same numbers.
+"""
+
+import jax.numpy as jnp
+import jax.scipy.special as jsp
+
+# Tile geometry shared with the AOT artifacts (see aot.py):
+TILE = 128  # covariance tile edge
+DMAX = 64   # padded feature dimension (covers Sonar's d = 60)
+PROBIT_BATCH = 1024
+
+
+def scaled_r2(x1, x2, inv_ls2):
+    """Pairwise squared scaled distance r² between rows of x1 and x2.
+
+    Padding convention: unused feature columns carry x = 0 and
+    inv_ls2 = 0, so they contribute nothing.
+    """
+    a = x1 * jnp.sqrt(inv_ls2)[None, :]
+    b = x2 * jnp.sqrt(inv_ls2)[None, :]
+    r2 = (
+        jnp.sum(a * a, axis=1)[:, None]
+        + jnp.sum(b * b, axis=1)[None, :]
+        - 2.0 * a @ b.T
+    )
+    return jnp.maximum(r2, 0.0)
+
+
+def cov_profile(kind, r, jexp):
+    """Unit-magnitude radial profile phi(r). `jexp` is the Wendland
+    exponent j = floor(D/2) + q + 1 (ignored by non-pp kinds)."""
+    if kind == "se":
+        return jnp.exp(-r * r)
+    if kind == "matern32":
+        a = jnp.sqrt(3.0) * r
+        return (1.0 + a) * jnp.exp(-a)
+    if kind == "matern52":
+        a = jnp.sqrt(5.0) * r
+        return (1.0 + a + a * a / 3.0) * jnp.exp(-a)
+    if kind.startswith("pp"):
+        q = int(kind[2])
+        u = jnp.maximum(1.0 - r, 0.0)
+        j = jexp
+        if q == 0:
+            poly = jnp.ones_like(r)
+            base = u**j
+        elif q == 1:
+            poly = (j + 1.0) * r + 1.0
+            base = u ** (j + 1.0)
+        elif q == 2:
+            poly = ((j * j + 4.0 * j + 3.0) * r * r + (3.0 * j + 6.0) * r + 3.0) / 3.0
+            base = u ** (j + 2.0)
+        elif q == 3:
+            poly = (
+                (j**3 + 9.0 * j * j + 23.0 * j + 15.0) * r**3
+                + (6.0 * j * j + 36.0 * j + 45.0) * r * r
+                + (15.0 * j + 45.0) * r
+                + 15.0
+            ) / 15.0
+            base = u ** (j + 3.0)
+        else:
+            raise ValueError(f"pp q must be 0..3, got {q}")
+        return jnp.where(r < 1.0, base * poly, 0.0)
+    raise ValueError(f"unknown covariance kind {kind!r}")
+
+
+def cov_tile_ref(kind, x1, x2, inv_ls2, sigma2, jexp):
+    """Reference covariance tile: K[i, j] = sigma2 * phi(r(x1_i, x2_j))."""
+    r = jnp.sqrt(scaled_r2(x1, x2, inv_ls2))
+    return sigma2 * cov_profile(kind, r, jexp)
+
+
+def probit_moments_ref(y, mu, var):
+    """Tilted moments of Phi(y f) N(f | mu, var):
+    returns (ln Zhat, mu_hat, sigma2_hat) — mirrors
+    rust/src/gp/likelihood.rs::probit_moments."""
+    denom = jnp.sqrt(1.0 + var)
+    z = y * mu / denom
+    ln_zhat = jsp.log_ndtr(z)
+    ln_pdf = -0.5 * z * z - 0.5 * jnp.log(2.0 * jnp.pi)
+    rho = jnp.exp(ln_pdf - ln_zhat)
+    mu_hat = mu + y * var * rho / denom
+    sigma2_hat = var - var * var * rho * (z + rho) / (1.0 + var)
+    return ln_zhat, mu_hat, sigma2_hat
+
+
+def predict_probit_ref(mean, var):
+    """Averaged predictive probability pi* = Phi(mean / sqrt(1 + var))."""
+    return jsp.ndtr(mean / jnp.sqrt(1.0 + var))

@@ -1,0 +1,92 @@
+"""Normal-cdf special functions lowered WITHOUT the `erf` HLO opcode.
+
+jax >= 0.5 lowers `jax.scipy.special.ndtr`/`log_ndtr` to an `erf`
+instruction, which the xla_extension 0.5.1 HLO text parser (the version
+the rust `xla` crate binds) does not know. These implementations use the
+regularized incomplete gamma function — series + continued fraction, the
+same algorithm as rust/src/gp/likelihood.rs — so the lowered HLO contains
+only exp/log/power/while ops that 0.5.1 parses, and the three layers
+agree to ~1e-14.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+LN_SQRT_PI = 0.5723649429247001  # ln Γ(1/2)
+_A = 0.5
+_SPLIT = 2.5  # x² threshold between series and continued fraction
+_FPMIN = 1e-300
+
+
+def _gamma_p_series(x2):
+    """P(1/2, x2) by series (used for x2 < _SPLIT; input clamped)."""
+    x = jnp.minimum(x2, _SPLIT)
+
+    def body(_, carry):
+        ap, delv, s = carry
+        ap = ap + 1.0
+        delv = delv * x / ap
+        return (ap, delv, s + delv)
+
+    init = (
+        jnp.full_like(x, _A),
+        jnp.full_like(x, 1.0 / _A),
+        jnp.full_like(x, 1.0 / _A),
+    )
+    _, _, s = lax.fori_loop(0, 100, body, init)
+    return s * jnp.exp(-x + _A * jnp.log(jnp.maximum(x, _FPMIN)) - LN_SQRT_PI)
+
+
+def _ln_gamma_q_cf(x2):
+    """ln Q(1/2, x2) by modified-Lentz continued fraction (x2 >= _SPLIT;
+    input clamped)."""
+    x = jnp.maximum(x2, _SPLIT)
+    b = x + 1.0 - _A
+    c = jnp.full_like(x, 1.0 / _FPMIN)
+    d = 1.0 / b
+    h = d
+
+    def body(i, carry):
+        b, c, d, h = carry
+        fi = i.astype(x.dtype)
+        an = -fi * (fi - _A)
+        b = b + 2.0
+        d = an * d + b
+        d = jnp.where(jnp.abs(d) < _FPMIN, _FPMIN, d)
+        c = b + an / c
+        c = jnp.where(jnp.abs(c) < _FPMIN, _FPMIN, c)
+        d = 1.0 / d
+        h = h * d * c
+        return (b, c, d, h)
+
+    b, c, d, h = lax.fori_loop(1, 160, body, (b, c, d, h))
+    return -x + _A * jnp.log(x) - LN_SQRT_PI + jnp.log(h)
+
+
+def erfc(x):
+    """Complementary error function (elementwise, f64 accuracy ~1e-14)."""
+    ax = jnp.abs(x)
+    x2 = ax * ax
+    small = x2 < _SPLIT
+    e = jnp.where(small, 1.0 - _gamma_p_series(x2), jnp.exp(_ln_gamma_q_cf(x2)))
+    return jnp.where(x >= 0.0, e, 2.0 - e)
+
+
+def ndtr(z):
+    """Standard normal cdf Φ(z)."""
+    return 0.5 * erfc(-z / jnp.sqrt(2.0))
+
+
+def log_ndtr(z):
+    """ln Φ(z), stable into the deep negative tail."""
+    t2 = 0.5 * z * z  # (|z|/√2)²
+    # z >= 0: log1p(−½ erfc(z/√2))
+    pos = jnp.log1p(-0.5 * erfc(jnp.abs(z) / jnp.sqrt(2.0)))
+    # z < 0, moderate: log(½ (1 − P))
+    neg_small = jnp.log(
+        jnp.maximum(0.5 * (1.0 - _gamma_p_series(t2)), _FPMIN)
+    )
+    # z < 0, deep tail: fully log-domain
+    neg_big = _ln_gamma_q_cf(t2) - jnp.log(2.0)
+    neg = jnp.where(t2 < _SPLIT, neg_small, neg_big)
+    return jnp.where(z >= 0.0, pos, neg)

@@ -1,0 +1,57 @@
+"""L2 — the jax compute graph that gets AOT-lowered.
+
+Each exported function is a thin, fixed-shape jit wrapper around the L1
+Pallas kernels; `aot.py` lowers them once to HLO text and the rust
+runtime (`rust/src/runtime/`) loads + executes them via PJRT. Python
+never runs at inference time.
+
+Fixed artifact shapes (see kernels/ref.py):
+  covariance tiles:  x1, x2: (TILE, DMAX) f64; inv_ls2: (DMAX,) f64;
+                     scal: (2,) f64 = [sigma2, wendland_j]
+  probit batches:    (PROBIT_BATCH,) f64 vectors
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import cov as cov_kernels
+from .kernels import probit as probit_kernels
+from .kernels.ref import DMAX, PROBIT_BATCH, TILE
+
+jax.config.update("jax_enable_x64", True)
+
+
+def make_cov_tile_fn(kind):
+    """Covariance-tile entry point for one radial profile."""
+
+    def fn(x1, x2, inv_ls2, scal):
+        return (cov_kernels.cov_tile(kind, x1, x2, inv_ls2, scal),)
+
+    fn.__name__ = f"cov_tile_{kind}"
+    return fn
+
+
+def probit_moments_fn(y, mu, var):
+    """Batched EP tilted moments."""
+    return probit_kernels.probit_moments(y, mu, var)
+
+
+def predict_probit_fn(mean, var):
+    """Batched averaged predictive probability."""
+    return (probit_kernels.predict_probit(mean, var),)
+
+
+def cov_tile_specs():
+    """(example-input ShapeDtypeStructs) for the covariance tiles."""
+    f64 = jnp.float64
+    return (
+        jax.ShapeDtypeStruct((TILE, DMAX), f64),
+        jax.ShapeDtypeStruct((TILE, DMAX), f64),
+        jax.ShapeDtypeStruct((DMAX,), f64),
+        jax.ShapeDtypeStruct((2,), f64),
+    )
+
+
+def probit_specs(n_inputs):
+    f64 = jnp.float64
+    return tuple(jax.ShapeDtypeStruct((PROBIT_BATCH,), f64) for _ in range(n_inputs))

@@ -1,0 +1,20 @@
+"""Quadrature oracle for the tilted probit moments (no scipy needed)."""
+
+import numpy as np
+from math import erf
+
+
+def _ndtr(x):
+    return 0.5 * (1.0 + erf(x / np.sqrt(2.0)))
+
+
+def tilted_quadrature(y, mu, var, n=200001, width=10.0):
+    """Trapezoid moments of Phi(y f) N(f | mu, var)."""
+    s = np.sqrt(var)
+    f = np.linspace(mu - width * s, mu + width * s, n)
+    pdf = np.exp(-0.5 * ((f - mu) / s) ** 2) / (s * np.sqrt(2 * np.pi))
+    w = np.array([_ndtr(y * fi) for fi in f]) * pdf
+    z0 = np.trapezoid(w, f)
+    m = np.trapezoid(w * f, f) / z0
+    v = np.trapezoid(w * f * f, f) / z0 - m * m
+    return z0, m, v

@@ -1,0 +1,103 @@
+"""L1 correctness: Pallas covariance tile vs the pure-jnp oracle, with
+hypothesis sweeping shapes, dtypes-relevant scales and hyperparameters."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import cov, ref  # noqa: E402
+
+KINDS = cov.KINDS
+
+
+def make_inputs(rng, t1, t2, d, dmax, lengthscale, sigma2, jexp, side=4.0):
+    x1 = np.zeros((t1, dmax))
+    x2 = np.zeros((t2, dmax))
+    x1[:, :d] = rng.uniform(0, side, size=(t1, d))
+    x2[:, :d] = rng.uniform(0, side, size=(t2, d))
+    inv_ls2 = np.zeros(dmax)
+    inv_ls2[:d] = 1.0 / lengthscale**2
+    scal = np.array([sigma2, jexp])
+    return (
+        jnp.asarray(x1),
+        jnp.asarray(x2),
+        jnp.asarray(inv_ls2),
+        jnp.asarray(scal),
+    )
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_kernel_matches_ref_fixed_shape(kind):
+    rng = np.random.default_rng(0)
+    args = make_inputs(rng, 32, 32, 5, 16, lengthscale=1.5, sigma2=1.3, jexp=5.0)
+    got = cov.cov_tile(kind, *args)
+    want = cov.cov_tile_reference(kind, *args)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    kind=st.sampled_from(KINDS),
+    t1=st.integers(1, 48),
+    t2=st.integers(1, 48),
+    d=st.integers(1, 12),
+    lengthscale=st.floats(0.2, 10.0),
+    sigma2=st.floats(0.01, 50.0),
+    q_dim=st.integers(1, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_hypothesis(kind, t1, t2, d, lengthscale, sigma2, q_dim, seed):
+    rng = np.random.default_rng(seed)
+    jexp = float(q_dim // 2 + 3 + 1)
+    args = make_inputs(rng, t1, t2, d, 16, lengthscale, sigma2, jexp)
+    got = np.asarray(cov.cov_tile(kind, *args))
+    want = np.asarray(cov.cov_tile_reference(kind, *args))
+    np.testing.assert_allclose(got, want, rtol=1e-11, atol=1e-11)
+    assert got.shape == (t1, t2)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_padding_invariance(kind):
+    """Zero-padded feature columns must not change the result."""
+    rng = np.random.default_rng(7)
+    d = 3
+    small = make_inputs(rng, 16, 16, d, d, lengthscale=2.0, sigma2=1.0, jexp=4.0)
+    rng = np.random.default_rng(7)
+    padded = make_inputs(rng, 16, 16, d, 24, lengthscale=2.0, sigma2=1.0, jexp=4.0)
+    got_small = np.asarray(cov.cov_tile(kind, *small))
+    got_padded = np.asarray(cov.cov_tile(kind, *padded))
+    np.testing.assert_allclose(got_small, got_padded, rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("kind", ["pp0", "pp1", "pp2", "pp3"])
+def test_compact_support_is_exact_zero(kind):
+    rng = np.random.default_rng(3)
+    x1, x2, inv_ls2, scal = make_inputs(
+        rng, 16, 16, 2, 8, lengthscale=0.5, sigma2=2.0, jexp=3.0, side=10.0
+    )
+    out = np.asarray(cov.cov_tile(kind, x1, x2, inv_ls2, scal))
+    r = np.sqrt(np.asarray(ref.scaled_r2(x1, x2, inv_ls2)))
+    assert np.all(out[r >= 1.0] == 0.0), "CS kernel must be exactly zero at r >= 1"
+    assert np.any(r >= 1.0), "test geometry should include far pairs"
+
+
+def test_diagonal_tile_is_symmetric_with_sigma2_diag():
+    rng = np.random.default_rng(11)
+    x1, _, inv_ls2, scal = make_inputs(rng, 24, 24, 4, 8, 1.0, 1.7, 4.0)
+    out = np.asarray(cov.cov_tile("pp3", x1, x1, inv_ls2, scal))
+    np.testing.assert_allclose(out, out.T, rtol=1e-12, atol=1e-12)
+    np.testing.assert_allclose(np.diag(out), 1.7, rtol=1e-12)
+
+
+def test_se_ignores_jexp():
+    rng = np.random.default_rng(5)
+    a1 = make_inputs(rng, 8, 8, 2, 4, 1.0, 1.0, jexp=3.0)
+    rng = np.random.default_rng(5)
+    a2 = make_inputs(rng, 8, 8, 2, 4, 1.0, 1.0, jexp=9.0)
+    np.testing.assert_array_equal(
+        np.asarray(cov.cov_tile("se", *a1)), np.asarray(cov.cov_tile("se", *a2))
+    )

@@ -1,0 +1,78 @@
+"""L1 correctness: Pallas probit kernels vs the jnp oracle and vs
+quadrature; hypothesis sweeps the cavity-parameter space."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import probit  # noqa: E402
+
+
+def test_moments_match_ref_fixed():
+    rng = np.random.default_rng(0)
+    n = 256
+    y = jnp.asarray(rng.choice([-1.0, 1.0], size=n))
+    mu = jnp.asarray(rng.normal(0, 2, size=n))
+    var = jnp.asarray(rng.uniform(0.05, 5.0, size=n))
+    got = probit.probit_moments(y, mu, var)
+    want = probit.probit_moments_reference(y, mu, var)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-9, atol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    y=st.sampled_from([-1.0, 1.0]),
+    mu=st.floats(-8.0, 8.0),
+    var=st.floats(1e-3, 50.0),
+)
+def test_moments_hypothesis_scalarwise(y, mu, var):
+    ya = jnp.full((4,), y)
+    mua = jnp.full((4,), mu)
+    vara = jnp.full((4,), var)
+    lnz, muh, s2h = (np.asarray(v) for v in probit.probit_moments(ya, mua, vara))
+    # basic sanity invariants of the tilted distribution
+    assert np.all(np.isfinite(lnz))
+    assert np.all(lnz <= 0.0 + 1e-12)  # Zhat <= 1
+    assert np.all(s2h > 0.0)
+    assert np.all(s2h < var + 1e-12)  # probit tilt shrinks variance
+    # tilting pulls the mean toward the observed class
+    assert np.all(y * (muh - mua) >= -1e-12)
+
+
+def test_moments_match_quadrature():
+    """Direct numerical check of Zhat / mu_hat / var_hat."""
+    from tests.scipy_free_quad import tilted_quadrature  # local helper
+
+    for y, mu, var in [(1.0, 0.3, 0.8), (-1.0, -1.2, 2.5), (1.0, -3.0, 0.5)]:
+        lnz, muh, s2h = (
+            float(np.asarray(v)[0])
+            for v in probit.probit_moments(
+                jnp.array([y]), jnp.array([mu]), jnp.array([var])
+            )
+        )
+        z0, m_q, v_q = tilted_quadrature(y, mu, var)
+        assert abs(lnz - np.log(z0)) < 1e-7
+        assert abs(muh - m_q) < 1e-7
+        assert abs(s2h - v_q) < 1e-7
+
+
+def test_predict_probit_matches_ref():
+    rng = np.random.default_rng(1)
+    mean = jnp.asarray(rng.normal(0, 3, size=512))
+    var = jnp.asarray(rng.uniform(0.01, 10.0, size=512))
+    got = np.asarray(probit.predict_probit(mean, var))
+    want = np.asarray(probit.predict_probit_reference(mean, var))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+    assert np.all((got >= 0) & (got <= 1))
+
+
+def test_predict_probit_limits():
+    p = np.asarray(
+        probit.predict_probit(jnp.array([0.0, 100.0, -100.0]), jnp.array([1.0, 1.0, 1.0]))
+    )
+    np.testing.assert_allclose(p[0], 0.5, atol=1e-12)
+    assert p[1] > 1 - 1e-10 and p[2] < 1e-10

@@ -1,0 +1,146 @@
+//! Minimal benchmark harness (criterion is not available offline).
+//!
+//! Benches under `benches/` are `harness = false` binaries that call
+//! [`Bencher::run`] and print a fixed-width table; `cargo bench` therefore
+//! emits exactly the rows each paper table/figure needs.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over a set of measured iterations.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let mean = total / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_secs_f64() - mean_s;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        Stats {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+}
+
+/// Harness configuration: `warmup` unmeasured runs then up to `max_iters`
+/// measured runs, stopping early once `max_time` has elapsed (always at
+/// least one measured run).
+pub struct Bencher {
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, max_iters: 20, max_time: Duration::from_secs(10) }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher { warmup: 1, max_iters: 5, max_time: Duration::from_secs(5) }
+    }
+
+    /// Measure `f`, which should perform one complete unit of work and
+    /// return a value that we `std::hint::black_box` to keep the work alive.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let start = Instant::now();
+        let mut samples = Vec::new();
+        for _ in 0..self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_time {
+                break;
+            }
+        }
+        Stats::from_samples(samples)
+    }
+}
+
+/// Render seconds compactly: "1.234 s", "12.3 ms", "45.6 µs".
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.3} µs", s * 1e6)
+    }
+}
+
+/// Print a markdown-ish table row with `|`-separated cells.
+pub fn row(cells: &[String]) {
+    println!("| {} |", cells.join(" | "));
+}
+
+/// Print a table header and separator.
+pub fn header(cells: &[&str]) {
+    println!("| {} |", cells.join(" | "));
+    println!("|{}|", cells.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_samples() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(3),
+        ]);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.mean, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn bencher_runs_and_respects_caps() {
+        let b = Bencher { warmup: 0, max_iters: 3, max_time: Duration::from_secs(5) };
+        let mut count = 0;
+        let s = b.run(|| {
+            count += 1;
+            count
+        });
+        assert_eq!(s.iters, 3);
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn fmt_duration_ranges() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with(" µs"));
+    }
+}

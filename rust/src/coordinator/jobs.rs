@@ -1,0 +1,201 @@
+//! Training-job manager: submit hyperparameter-optimization jobs, poll
+//! their status, collect the fitted classifiers. A fixed worker pool
+//! drains a shared queue — the coordinator pattern for the "train many
+//! models" workloads of the UCI benchmark.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::data::Dataset;
+use crate::gp::covariance::CovFunction;
+use crate::gp::model::{FittedClassifier, GpClassifier, Inference};
+
+/// Job identifier.
+pub type JobId = u64;
+
+/// What to train.
+#[derive(Clone)]
+pub struct TrainSpec {
+    pub dataset: Dataset,
+    pub cov: CovFunction,
+    pub inference: Inference,
+    /// Optimize hyperparameters (vs a single EP run).
+    pub optimize: bool,
+}
+
+/// Lifecycle of a job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Done { log_post: f64, ep_time: Duration, opt_time: Duration },
+    Failed(String),
+}
+
+struct Shared {
+    status: Mutex<HashMap<JobId, JobStatus>>,
+    results: Mutex<HashMap<JobId, Arc<FittedClassifier>>>,
+}
+
+/// The manager handle.
+pub struct JobManager {
+    tx: Mutex<Option<Sender<(JobId, TrainSpec)>>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    shared: Arc<Shared>,
+    next_id: Mutex<JobId>,
+}
+
+impl JobManager {
+    pub fn start(n_workers: usize) -> JobManager {
+        let (tx, rx) = channel::<(JobId, TrainSpec)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            status: Mutex::new(HashMap::new()),
+            results: Mutex::new(HashMap::new()),
+        });
+        let mut workers = Vec::new();
+        for _ in 0..n_workers.max(1) {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            workers.push(std::thread::spawn(move || loop {
+                let job = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let (id, spec) = match job {
+                    Ok(j) => j,
+                    Err(_) => return,
+                };
+                shared.status.lock().unwrap().insert(id, JobStatus::Running);
+                let model = GpClassifier::new(spec.cov.clone(), spec.inference.clone());
+                let outcome = if spec.optimize {
+                    model.fit(&spec.dataset.x, &spec.dataset.y)
+                } else {
+                    model.infer_only(&spec.dataset.x, &spec.dataset.y)
+                };
+                match outcome {
+                    Ok(fitted) => {
+                        let st = JobStatus::Done {
+                            log_post: fitted.report.log_post,
+                            ep_time: fitted.report.ep_time,
+                            opt_time: fitted.report.opt_time,
+                        };
+                        shared.results.lock().unwrap().insert(id, Arc::new(fitted));
+                        shared.status.lock().unwrap().insert(id, st);
+                    }
+                    Err(e) => {
+                        shared.status.lock().unwrap().insert(id, JobStatus::Failed(e));
+                    }
+                }
+            }));
+        }
+        JobManager {
+            tx: Mutex::new(Some(tx)),
+            workers: Mutex::new(workers),
+            shared,
+            next_id: Mutex::new(0),
+        }
+    }
+
+    /// Enqueue a job; returns its id.
+    pub fn submit(&self, spec: TrainSpec) -> Result<JobId, String> {
+        let mut next = self.next_id.lock().unwrap();
+        let id = *next;
+        *next += 1;
+        drop(next);
+        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
+        let guard = self.tx.lock().unwrap();
+        guard
+            .as_ref()
+            .ok_or("manager stopped")?
+            .send((id, spec))
+            .map_err(|_| "workers gone".to_string())?;
+        Ok(id)
+    }
+
+    pub fn status(&self, id: JobId) -> Option<JobStatus> {
+        self.shared.status.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Fitted model of a finished job.
+    pub fn result(&self, id: JobId) -> Option<Arc<FittedClassifier>> {
+        self.shared.results.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Block until `id` leaves Queued/Running (or the timeout hits).
+    pub fn wait(&self, id: JobId, timeout: Duration) -> Option<JobStatus> {
+        let start = std::time::Instant::now();
+        loop {
+            match self.status(id) {
+                Some(JobStatus::Queued) | Some(JobStatus::Running) => {
+                    if start.elapsed() > timeout {
+                        return self.status(id);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                other => return other,
+            }
+        }
+    }
+
+    /// Stop accepting jobs and join the workers.
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap().take();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for JobManager {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::CovKind;
+    use crate::sparse::ordering::Ordering;
+    use crate::testutil::random_points;
+
+    fn toy_spec(seed: u64, optimize: bool) -> TrainSpec {
+        let x = random_points(30, 2, 6.0, seed);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        TrainSpec {
+            dataset: Dataset { name: format!("toy{seed}"), x, y },
+            cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            inference: Inference::Sparse(Ordering::Rcm),
+            optimize,
+        }
+    }
+
+    #[test]
+    fn jobs_run_to_completion_in_parallel() {
+        let mgr = JobManager::start(3);
+        let ids: Vec<JobId> =
+            (0..5).map(|s| mgr.submit(toy_spec(s, false)).unwrap()).collect();
+        for id in ids {
+            let st = mgr.wait(id, Duration::from_secs(30)).unwrap();
+            match st {
+                JobStatus::Done { log_post, .. } => assert!(log_post.is_finite()),
+                other => panic!("job {id}: {other:?}"),
+            }
+            let fitted = mgr.result(id).unwrap();
+            let (m, _) = fitted.predict_latent(&[1.0, 1.0]);
+            assert!(m.is_finite());
+        }
+        mgr.shutdown();
+    }
+
+    #[test]
+    fn unknown_job_has_no_status() {
+        let mgr = JobManager::start(1);
+        assert!(mgr.status(999).is_none());
+        mgr.shutdown();
+    }
+}

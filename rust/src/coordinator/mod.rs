@@ -1,0 +1,14 @@
+//! L3 coordinator: a training-job manager and a batching prediction
+//! service, built on std threads + channels (the environment vendors no
+//! async runtime — see DESIGN.md §Substitutions).
+//!
+//! The serving path is: client → [`service::PredictionService`] →
+//! dynamic batcher (size/deadline) → sparse latent prediction (rust) →
+//! `predict_probit` PJRT artifact (XLA) → response. Python is never
+//! involved.
+
+pub mod jobs;
+pub mod service;
+
+pub use jobs::{JobId, JobManager, JobStatus, TrainSpec};
+pub use service::{PredictionService, ServiceConfig, ServiceStats};

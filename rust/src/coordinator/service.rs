@@ -1,0 +1,244 @@
+//! Batching prediction service.
+//!
+//! Requests (feature vectors) are queued on a channel; a worker thread
+//! drains them into batches bounded by `max_batch` and `max_wait`, runs
+//! the latent prediction through the fitted sparse-EP state, pushes the
+//! batch through the `predict_probit` XLA artifact when a runtime is
+//! attached (falling back to the native probit otherwise), and answers
+//! each caller on its private response channel.
+
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::gp::model::FittedClassifier;
+use crate::gp::predict::class_probability;
+use crate::runtime::Runtime;
+
+/// Service tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { max_batch: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// One prediction answer.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub probability: f64,
+    pub latent_mean: f64,
+    pub latent_var: f64,
+    /// Time spent inside the service (queue + compute).
+    pub service_time: Duration,
+}
+
+struct Request {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: Sender<Prediction>,
+}
+
+/// Aggregate counters (lock-free reads).
+#[derive(Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items_max: AtomicU64,
+}
+
+/// Handle to a running service.
+pub struct PredictionService {
+    tx: Mutex<Option<Sender<Request>>>,
+    worker: Mutex<Option<JoinHandle<()>>>,
+    pub stats: Arc<ServiceStats>,
+}
+
+impl PredictionService {
+    /// Spawn the worker. `artifact_dir` enables the XLA probit stage; the
+    /// worker opens its own PJRT client there (the xla crate's handles are
+    /// not `Send`, so the runtime must live on the worker thread).
+    pub fn start(
+        model: Arc<FittedClassifier>,
+        artifact_dir: Option<std::path::PathBuf>,
+        config: ServiceConfig,
+    ) -> PredictionService {
+        let (tx, rx) = channel::<Request>();
+        let stats = Arc::new(ServiceStats::default());
+        let stats_w = stats.clone();
+        let worker = std::thread::spawn(move || {
+            let runtime = artifact_dir.and_then(|d| Runtime::open(d).ok());
+            serve_loop(rx, model, runtime, config, stats_w);
+        });
+        PredictionService {
+            tx: Mutex::new(Some(tx)),
+            worker: Mutex::new(Some(worker)),
+            stats,
+        }
+    }
+
+    /// Submit one request and wait for the answer.
+    pub fn predict(&self, x: Vec<f64>) -> Result<Prediction, String> {
+        let (reply_tx, reply_rx) = channel();
+        {
+            let guard = self.tx.lock().unwrap();
+            let tx = guard.as_ref().ok_or("service stopped")?;
+            tx.send(Request { x, enqueued: Instant::now(), reply: reply_tx })
+                .map_err(|_| "service worker gone".to_string())?;
+        }
+        reply_rx.recv().map_err(|_| "service dropped request".to_string())
+    }
+
+    /// Drain and stop the worker.
+    pub fn shutdown(&self) {
+        self.tx.lock().unwrap().take();
+        if let Some(h) = self.worker.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for PredictionService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_loop(
+    rx: Receiver<Request>,
+    model: Arc<FittedClassifier>,
+    runtime: Option<Runtime>,
+    config: ServiceConfig,
+    stats: Arc<ServiceStats>,
+) {
+    loop {
+        // block for the first request of a batch
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders gone
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + config.max_wait;
+        while batch.len() < config.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        stats.requests.fetch_add(batch.len() as u64, AtomicOrdering::Relaxed);
+        stats.batches.fetch_add(1, AtomicOrdering::Relaxed);
+        stats
+            .batched_items_max
+            .fetch_max(batch.len() as u64, AtomicOrdering::Relaxed);
+
+        // latent predictions (sparse solves in rust)
+        let latents: Vec<(f64, f64)> =
+            batch.iter().map(|r| model.predict_latent(&r.x)).collect();
+        // probability stage: XLA artifact if available, else native probit
+        let probs: Vec<f64> = match &runtime {
+            Some(rt) => {
+                let means: Vec<f64> = latents.iter().map(|l| l.0).collect();
+                let vars: Vec<f64> = latents.iter().map(|l| l.1).collect();
+                match rt.predict_probit(&means, &vars) {
+                    Ok(p) => p,
+                    Err(_) => latents.iter().map(|&(m, v)| class_probability(m, v)).collect(),
+                }
+            }
+            None => latents.iter().map(|&(m, v)| class_probability(m, v)).collect(),
+        };
+        for ((req, (m, v)), p) in batch.into_iter().zip(latents).zip(probs) {
+            let _ = req.reply.send(Prediction {
+                probability: p,
+                latent_mean: m,
+                latent_var: v,
+                service_time: req.enqueued.elapsed(),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::{CovFunction, CovKind};
+    use crate::gp::model::{GpClassifier, Inference};
+    use crate::sparse::ordering::Ordering;
+    use crate::testutil::random_points;
+
+    fn fitted_toy() -> Arc<FittedClassifier> {
+        let x = random_points(40, 2, 6.0, 2);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let model = GpClassifier::new(
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            Inference::Sparse(Ordering::Rcm),
+        );
+        Arc::new(model.infer_only(&x, &y).unwrap())
+    }
+
+    #[test]
+    fn serves_requests_and_batches() {
+        let model = fitted_toy();
+        let svc = Arc::new(PredictionService::start(
+            model.clone(),
+            None,
+            ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(5) },
+        ));
+        // concurrent clients
+        let mut handles = Vec::new();
+        for t in 0..8 {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut preds = Vec::new();
+                for i in 0..10 {
+                    let x = vec![(t as f64) * 0.7, (i as f64) * 0.5];
+                    preds.push(svc.predict(x).unwrap());
+                }
+                preds
+            }));
+        }
+        let mut all = Vec::new();
+        for h in handles {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len(), 80);
+        assert!(all.iter().all(|p| (0.0..=1.0).contains(&p.probability)));
+        assert_eq!(svc.stats.requests.load(AtomicOrdering::Relaxed), 80);
+        let batches = svc.stats.batches.load(AtomicOrdering::Relaxed);
+        assert!(batches <= 80, "batching never engaged: {batches}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn predictions_match_direct_model_calls() {
+        let model = fitted_toy();
+        let svc = PredictionService::start(model.clone(), None, ServiceConfig::default());
+        for x in [vec![1.0, 1.0], vec![4.0, 2.0], vec![3.0, 5.5]] {
+            let served = svc.predict(x.clone()).unwrap();
+            let (m, v) = model.predict_latent(&x);
+            assert!((served.latent_mean - m).abs() < 1e-12);
+            assert!((served.latent_var - v).abs() < 1e-12);
+            assert!((served.probability - class_probability(m, v)).abs() < 1e-12);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_clean_and_idempotent() {
+        let svc = PredictionService::start(fitted_toy(), None, ServiceConfig::default());
+        svc.shutdown();
+        svc.shutdown();
+        assert!(svc.predict(vec![0.0, 0.0]).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! k-fold cross-validation with the paper's metrics (err, nlpd) —
+//! Table 2 uses 10-fold CV.
+
+use crate::data::Dataset;
+use crate::gp::model::GpClassifier;
+use crate::gp::predict::evaluate;
+use crate::rng::Rng;
+use std::time::Duration;
+
+/// Per-fold and aggregate results.
+#[derive(Clone, Debug)]
+pub struct CvResult {
+    pub err: f64,
+    pub nlpd: f64,
+    pub fold_err: Vec<f64>,
+    pub fold_nlpd: Vec<f64>,
+    /// Mean per-fold hyperparameter-optimization and single-EP times.
+    pub opt_time: Duration,
+    pub ep_time: Duration,
+    pub fill_l: f64,
+}
+
+/// Deterministic fold assignment: shuffled indices chunked into k folds.
+pub fn fold_indices(n: usize, k: usize, seed: u64) -> Vec<Vec<usize>> {
+    let mut rng = Rng::new(seed);
+    let idx = rng.permutation(n);
+    let mut folds = vec![Vec::new(); k];
+    for (pos, &i) in idx.iter().enumerate() {
+        folds[pos % k].push(i);
+    }
+    folds
+}
+
+/// Run k-fold CV of `model` on `data`. `optimize` controls whether each
+/// fold re-optimizes hyperparameters (the paper's protocol) or only runs
+/// EP at the provided ones (cheaper; used in quick benches).
+pub fn cross_validate(
+    model: &GpClassifier,
+    data: &Dataset,
+    k: usize,
+    optimize: bool,
+    seed: u64,
+) -> Result<CvResult, String> {
+    let folds = fold_indices(data.n(), k, seed);
+    let mut fold_err = Vec::with_capacity(k);
+    let mut fold_nlpd = Vec::with_capacity(k);
+    let mut opt_time = Duration::ZERO;
+    let mut ep_time = Duration::ZERO;
+    let mut fill_l = 0.0;
+    for test_fold in folds.iter() {
+        let test_set: std::collections::HashSet<usize> = test_fold.iter().copied().collect();
+        let mut xtr = Vec::new();
+        let mut ytr = Vec::new();
+        let mut xte = Vec::new();
+        let mut yte = Vec::new();
+        for i in 0..data.n() {
+            if test_set.contains(&i) {
+                xte.push(data.x[i].clone());
+                yte.push(data.y[i]);
+            } else {
+                xtr.push(data.x[i].clone());
+                ytr.push(data.y[i]);
+            }
+        }
+        let fitted = if optimize { model.fit(&xtr, &ytr)? } else { model.infer_only(&xtr, &ytr)? };
+        let m = evaluate(&fitted.predict_latent_batch(&xte), &yte);
+        fold_err.push(m.err);
+        fold_nlpd.push(m.nlpd);
+        opt_time += fitted.report.opt_time;
+        ep_time += fitted.report.ep_time;
+        fill_l += fitted.report.fill_l;
+    }
+    let kf = k as f64;
+    Ok(CvResult {
+        err: fold_err.iter().sum::<f64>() / kf,
+        nlpd: fold_nlpd.iter().sum::<f64>() / kf,
+        fold_err,
+        fold_nlpd,
+        opt_time: opt_time / k as u32,
+        ep_time: ep_time / k as u32,
+        fill_l: fill_l / kf,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::{CovFunction, CovKind};
+    use crate::gp::model::Inference;
+    use crate::sparse::ordering::Ordering;
+    use crate::testutil::random_points;
+
+    #[test]
+    fn folds_partition_everything() {
+        let folds = fold_indices(103, 10, 7);
+        assert_eq!(folds.len(), 10);
+        let mut seen = vec![false; 103];
+        for f in &folds {
+            for &i in f {
+                assert!(!seen[i], "index {i} in two folds");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // balanced sizes
+        assert!(folds.iter().all(|f| f.len() == 10 || f.len() == 11));
+    }
+
+    #[test]
+    fn cv_runs_end_to_end() {
+        let x = random_points(60, 2, 6.0, 55);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let data = Dataset { name: "toy".into(), x, y };
+        let model = GpClassifier::new(
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            Inference::Sparse(Ordering::Rcm),
+        );
+        let res = cross_validate(&model, &data, 5, false, 1).unwrap();
+        assert_eq!(res.fold_err.len(), 5);
+        assert!(res.err < 0.35, "CV err {}", res.err);
+        assert!(res.nlpd.is_finite());
+    }
+}

@@ -1,0 +1,105 @@
+//! Lloyd's k-means with k-means++ seeding — used to place FIC inducing
+//! inputs (DESIGN.md §Substitutions: the paper co-optimizes them; k-means
+//! placement is the standard modern alternative and favours FIC's
+//! optimization time if anything).
+
+use crate::rng::Rng;
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k cluster centres of `x` (k-means++ init, `iters` Lloyd steps).
+pub fn kmeans(x: &[Vec<f64>], k: usize, iters: usize, seed: u64) -> Vec<Vec<f64>> {
+    let n = x.len();
+    assert!(k >= 1);
+    if k >= n {
+        return x.to_vec();
+    }
+    let mut rng = Rng::new(seed);
+    // k-means++ seeding
+    let mut centers: Vec<Vec<f64>> = vec![x[rng.below(n)].clone()];
+    let mut d2: Vec<f64> = x.iter().map(|p| dist2(p, &centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let mut pick = rng.uniform() * total;
+        let mut idx = 0;
+        for (i, &w) in d2.iter().enumerate() {
+            pick -= w;
+            if pick <= 0.0 {
+                idx = i;
+                break;
+            }
+        }
+        centers.push(x[idx].clone());
+        for (i, p) in x.iter().enumerate() {
+            d2[i] = d2[i].min(dist2(p, centers.last().unwrap()));
+        }
+    }
+    // Lloyd iterations
+    let dim = x[0].len();
+    let mut assign = vec![0usize; n];
+    for _ in 0..iters {
+        let mut changed = false;
+        for (i, p) in x.iter().enumerate() {
+            let best = (0..k)
+                .min_by(|&a, &b| {
+                    dist2(p, &centers[a]).partial_cmp(&dist2(p, &centers[b])).unwrap()
+                })
+                .unwrap();
+            if assign[i] != best {
+                assign[i] = best;
+                changed = true;
+            }
+        }
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in x.iter().enumerate() {
+            counts[assign[i]] += 1;
+            for d in 0..dim {
+                sums[assign[i]][d] += p[d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for d in 0..dim {
+                    centers[c][d] = sums[c][d] / counts[c] as f64;
+                }
+            } else {
+                // re-seed empty cluster at a random point
+                centers[c] = x[rng.below(n)].clone();
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    centers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_two_obvious_blobs() {
+        let mut x = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            x.push(vec![rng.normal() * 0.1, rng.normal() * 0.1]);
+            x.push(vec![10.0 + rng.normal() * 0.1, 10.0 + rng.normal() * 0.1]);
+        }
+        let c = kmeans(&x, 2, 30, 7);
+        assert_eq!(c.len(), 2);
+        let near_origin = c.iter().any(|p| p[0].abs() < 1.0 && p[1].abs() < 1.0);
+        let near_ten = c.iter().any(|p| (p[0] - 10.0).abs() < 1.0 && (p[1] - 10.0).abs() < 1.0);
+        assert!(near_origin && near_ten, "centres: {c:?}");
+    }
+
+    #[test]
+    fn k_ge_n_returns_points() {
+        let x = vec![vec![1.0], vec![2.0]];
+        let c = kmeans(&x, 5, 10, 3);
+        assert_eq!(c.len(), 2);
+    }
+}

@@ -1,0 +1,90 @@
+//! Data generation and evaluation harnesses.
+//!
+//! * [`synthetic`] — the paper's §6.1 simulation workload: uniform inputs
+//!   in a hypercube labelled by nearest cluster centre.
+//! * [`uci`] — synthetic stand-ins for the six UCI datasets of §6.2
+//!   (identical n and d; see DESIGN.md §Substitutions).
+//! * [`cv`] — k-fold cross-validation with the paper's metrics.
+//! * [`kmeans`] — inducing-input selection for FIC.
+
+pub mod cv;
+pub mod kmeans;
+pub mod synthetic;
+pub mod uci;
+
+/// A labelled binary-classification dataset.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub x: Vec<Vec<f64>>,
+    /// Labels in {−1, +1}.
+    pub y: Vec<f64>,
+}
+
+impl Dataset {
+    pub fn n(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.first().map(|v| v.len()).unwrap_or(0)
+    }
+
+    /// Split into (train, test) by index count.
+    pub fn split(&self, n_train: usize) -> (Dataset, Dataset) {
+        assert!(n_train <= self.n());
+        let tr = Dataset {
+            name: format!("{}-train", self.name),
+            x: self.x[..n_train].to_vec(),
+            y: self.y[..n_train].to_vec(),
+        };
+        let te = Dataset {
+            name: format!("{}-test", self.name),
+            x: self.x[n_train..].to_vec(),
+            y: self.y[n_train..].to_vec(),
+        };
+        (tr, te)
+    }
+
+    /// Standardize features to zero mean / unit variance (fitted on self).
+    pub fn standardize(&mut self) {
+        let d = self.dim();
+        let n = self.n() as f64;
+        for j in 0..d {
+            let mean = self.x.iter().map(|r| r[j]).sum::<f64>() / n;
+            let var = self.x.iter().map(|r| (r[j] - mean) * (r[j] - mean)).sum::<f64>() / n;
+            let sd = var.sqrt().max(1e-12);
+            for r in self.x.iter_mut() {
+                r[j] = (r[j] - mean) / sd;
+            }
+        }
+    }
+
+    /// Fraction of +1 labels.
+    pub fn positive_rate(&self) -> f64 {
+        self.y.iter().filter(|&&v| v > 0.0).count() as f64 / self.n() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_and_standardize() {
+        let mut d = Dataset {
+            name: "t".into(),
+            x: vec![vec![1.0, 10.0], vec![3.0, 20.0], vec![5.0, 30.0], vec![7.0, 40.0]],
+            y: vec![1.0, -1.0, 1.0, -1.0],
+        };
+        let (tr, te) = d.split(3);
+        assert_eq!(tr.n(), 3);
+        assert_eq!(te.n(), 1);
+        d.standardize();
+        for j in 0..2 {
+            let mean: f64 = d.x.iter().map(|r| r[j]).sum::<f64>() / 4.0;
+            assert!(mean.abs() < 1e-12);
+        }
+        assert!((d.positive_rate() - 0.5).abs() < 1e-12);
+    }
+}

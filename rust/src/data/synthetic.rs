@@ -1,0 +1,119 @@
+//! The paper's §6.1 simulation workload.
+//!
+//! "We constructed two data sets by sampling 15 000 inputs randomly from
+//! the hypercubes [0 10]² and [0 10]⁵. After this we drew 200/1000 center
+//! points which were assigned randomly to either class. Then each input
+//! was assigned to the class of its nearest center point."
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// Configuration mirroring the paper's setup.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    pub n_points: usize,
+    pub dim: usize,
+    pub n_centers: usize,
+    pub side: f64,
+}
+
+impl ClusterConfig {
+    /// Paper's 2-D setting (downscalable via `n_points`).
+    pub fn paper_2d(n_points: usize) -> Self {
+        ClusterConfig { n_points, dim: 2, n_centers: 200, side: 10.0 }
+    }
+
+    /// Paper's 5-D setting.
+    pub fn paper_5d(n_points: usize) -> Self {
+        ClusterConfig { n_points, dim: 5, n_centers: 1000, side: 10.0 }
+    }
+}
+
+/// Uniform random points in `[0, side]^d` (shared by tests and benches).
+pub fn uniform_points(n: usize, d: usize, side: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed.wrapping_add(0x5151));
+    (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, side)).collect()).collect()
+}
+
+/// Generate the nearest-centre cluster dataset.
+pub fn cluster_dataset(cfg: &ClusterConfig, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let centers: Vec<Vec<f64>> = (0..cfg.n_centers)
+        .map(|_| (0..cfg.dim).map(|_| rng.uniform_in(0.0, cfg.side)).collect())
+        .collect();
+    let center_class: Vec<f64> =
+        (0..cfg.n_centers).map(|_| if rng.uniform() < 0.5 { 1.0 } else { -1.0 }).collect();
+    let mut x = Vec::with_capacity(cfg.n_points);
+    let mut y = Vec::with_capacity(cfg.n_points);
+    for _ in 0..cfg.n_points {
+        let p: Vec<f64> = (0..cfg.dim).map(|_| rng.uniform_in(0.0, cfg.side)).collect();
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for (c, cp) in centers.iter().enumerate() {
+            let d: f64 = cp.iter().zip(&p).map(|(a, b)| (a - b) * (a - b)).sum();
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        x.push(p);
+        y.push(center_class[best]);
+    }
+    Dataset { name: format!("cluster-{}d-n{}", cfg.dim, cfg.n_points), x, y }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_shape() {
+        let d = cluster_dataset(&ClusterConfig::paper_2d(500), 1);
+        assert_eq!(d.n(), 500);
+        assert_eq!(d.dim(), 2);
+        assert!(d.x.iter().all(|p| p.iter().all(|&v| (0.0..10.0).contains(&v))));
+        assert!(d.y.iter().all(|&v| v == 1.0 || v == -1.0));
+    }
+
+    #[test]
+    fn labels_are_roughly_balanced() {
+        let d = cluster_dataset(&ClusterConfig::paper_2d(2000), 3);
+        let rate = d.positive_rate();
+        assert!(rate > 0.3 && rate < 0.7, "positive rate {rate}");
+    }
+
+    #[test]
+    fn labels_are_spatially_coherent() {
+        // nearest-centre labelling: a point's label should usually agree
+        // with its nearest neighbour's label
+        let d = cluster_dataset(&ClusterConfig::paper_2d(800), 5);
+        let mut agree = 0;
+        for i in 0..200 {
+            let mut best = usize::MAX;
+            let mut best_d = f64::INFINITY;
+            for j in 0..d.n() {
+                if i == j {
+                    continue;
+                }
+                let dist: f64 =
+                    d.x[i].iter().zip(&d.x[j]).map(|(a, b)| (a - b) * (a - b)).sum();
+                if dist < best_d {
+                    best_d = dist;
+                    best = j;
+                }
+            }
+            if d.y[i] == d.y[best] {
+                agree += 1;
+            }
+        }
+        assert!(agree > 140, "only {agree}/200 nearest neighbours agree");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = cluster_dataset(&ClusterConfig::paper_5d(100), 42);
+        let b = cluster_dataset(&ClusterConfig::paper_5d(100), 42);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,493 @@
+//! Covariance functions: the globally-supported squared exponential and
+//! Matérn family, and the compactly supported Wendland piecewise
+//! polynomials `k_pp,q` of the paper (eqs. 7–10).
+//!
+//! All functions are radial: `k(x, x') = σ² φ(r)` with the ARD distance
+//! `r = sqrt(Σ_d (x_d − x'_d)² / l_d²)`. CS functions vanish exactly for
+//! `r ≥ 1`, which is what makes the covariance matrix sparse; the Wendland
+//! exponent `j = ⌊D/2⌋ + q + 1` ties the polynomial degree to the input
+//! dimension `D` to keep the function positive definite (Wendland 2005).
+//!
+//! Hyperparameters are handled in log space throughout
+//! (`params = [ln σ², ln l₁, …, ln l_D]`), matching how the optimizer and
+//! the priors operate.
+
+use crate::sparse::csc::CscMatrix;
+
+/// Which radial profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CovKind {
+    /// Squared exponential, `σ² exp(−r²)` (paper eq. 1 — note no ½).
+    Se,
+    /// Wendland piecewise polynomial of smoothness q ∈ {0, 1, 2, 3}.
+    Pp(u8),
+    /// Matérn ν = 3/2.
+    Matern32,
+    /// Matérn ν = 5/2.
+    Matern52,
+}
+
+impl CovKind {
+    pub fn name(&self) -> String {
+        match self {
+            CovKind::Se => "se".into(),
+            CovKind::Pp(q) => format!("pp{q}"),
+            CovKind::Matern32 => "matern32".into(),
+            CovKind::Matern52 => "matern52".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CovKind, String> {
+        match s {
+            "se" => Ok(CovKind::Se),
+            "pp0" => Ok(CovKind::Pp(0)),
+            "pp1" => Ok(CovKind::Pp(1)),
+            "pp2" => Ok(CovKind::Pp(2)),
+            "pp3" => Ok(CovKind::Pp(3)),
+            "matern32" => Ok(CovKind::Matern32),
+            "matern52" => Ok(CovKind::Matern52),
+            other => Err(format!("unknown covariance '{other}'")),
+        }
+    }
+}
+
+/// A covariance function with its hyperparameters.
+#[derive(Clone, Debug)]
+pub struct CovFunction {
+    pub kind: CovKind,
+    /// Input dimension D (sets the Wendland exponent j).
+    pub input_dim: usize,
+    /// Magnitude σ².
+    pub sigma2: f64,
+    /// ARD length-scales, one per input dimension.
+    pub lengthscales: Vec<f64>,
+}
+
+impl CovFunction {
+    pub fn new(kind: CovKind, input_dim: usize, sigma2: f64, lengthscale: f64) -> CovFunction {
+        CovFunction { kind, input_dim, sigma2, lengthscales: vec![lengthscale; input_dim] }
+    }
+
+    /// Is the support compact (k ≡ 0 for r ≥ 1)?
+    pub fn is_compact(&self) -> bool {
+        matches!(self.kind, CovKind::Pp(_))
+    }
+
+    /// Wendland exponent j = ⌊D/2⌋ + q + 1.
+    pub fn wendland_j(&self) -> f64 {
+        match self.kind {
+            CovKind::Pp(q) => (self.input_dim / 2) as f64 + q as f64 + 1.0,
+            _ => panic!("wendland_j on non-pp covariance"),
+        }
+    }
+
+    // ---- log-parameter plumbing ------------------------------------------
+
+    pub fn n_params(&self) -> usize {
+        1 + self.lengthscales.len()
+    }
+
+    /// `[ln σ², ln l₁, …, ln l_D]`.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = Vec::with_capacity(self.n_params());
+        p.push(self.sigma2.ln());
+        p.extend(self.lengthscales.iter().map(|l| l.ln()));
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        self.sigma2 = p[0].exp();
+        for (l, &lp) in self.lengthscales.iter_mut().zip(&p[1..]) {
+            *l = lp.exp();
+        }
+    }
+
+    // ---- radial profile ---------------------------------------------------
+
+    /// Scaled distance r between two points.
+    #[inline]
+    pub fn r(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        let mut r2 = 0.0;
+        for d in 0..x1.len() {
+            let diff = (x1[d] - x2[d]) / self.lengthscales[d];
+            r2 += diff * diff;
+        }
+        r2.sqrt()
+    }
+
+    /// Unit-magnitude radial profile φ(r) (so k = σ² φ(r)).
+    pub fn profile(&self, r: f64) -> f64 {
+        match self.kind {
+            CovKind::Se => (-r * r).exp(),
+            CovKind::Matern32 => {
+                let a = 3f64.sqrt() * r;
+                (1.0 + a) * (-a).exp()
+            }
+            CovKind::Matern52 => {
+                let a = 5f64.sqrt() * r;
+                (1.0 + a + a * a / 3.0) * (-a).exp()
+            }
+            CovKind::Pp(q) => {
+                if r >= 1.0 {
+                    return 0.0;
+                }
+                let j = self.wendland_j();
+                let u = 1.0 - r;
+                match q {
+                    0 => u.powf(j),
+                    1 => u.powf(j + 1.0) * ((j + 1.0) * r + 1.0),
+                    2 => {
+                        let a = j * j + 4.0 * j + 3.0;
+                        let b = 3.0 * j + 6.0;
+                        u.powf(j + 2.0) * (a * r * r + b * r + 3.0) / 3.0
+                    }
+                    3 => {
+                        let a = j * j * j + 9.0 * j * j + 23.0 * j + 15.0;
+                        let b = 6.0 * j * j + 36.0 * j + 45.0;
+                        let c = 15.0 * j + 45.0;
+                        u.powf(j + 3.0) * (a * r * r * r + b * r * r + c * r + 15.0) / 15.0
+                    }
+                    _ => panic!("pp q must be 0..=3"),
+                }
+            }
+        }
+    }
+
+    /// dφ/dr.
+    pub fn profile_deriv(&self, r: f64) -> f64 {
+        match self.kind {
+            CovKind::Se => -2.0 * r * (-r * r).exp(),
+            CovKind::Matern32 => {
+                let s = 3f64.sqrt();
+                let a = s * r;
+                // d/dr[(1+a)e^{-a}] = -s*a*e^{-a}
+                -s * a * (-a).exp()
+            }
+            CovKind::Matern52 => {
+                let s = 5f64.sqrt();
+                let a = s * r;
+                // d/dr[(1+a+a²/3)e^{-a}] = -(s/3)a(1+a)e^{-a}
+                -(s / 3.0) * a * (1.0 + a) * (-a).exp()
+            }
+            CovKind::Pp(q) => {
+                if r >= 1.0 {
+                    return 0.0;
+                }
+                let j = self.wendland_j();
+                let u = 1.0 - r;
+                match q {
+                    0 => -j * u.powf(j - 1.0),
+                    1 => {
+                        // product rule on u^{j+1}((j+1)r+1)
+                        -(j + 1.0) * u.powf(j) * ((j + 1.0) * r + 1.0)
+                            + u.powf(j + 1.0) * (j + 1.0)
+                    }
+                    2 => {
+                        let a = j * j + 4.0 * j + 3.0;
+                        let b = 3.0 * j + 6.0;
+                        (-(j + 2.0) * u.powf(j + 1.0) * (a * r * r + b * r + 3.0)
+                            + u.powf(j + 2.0) * (2.0 * a * r + b))
+                            / 3.0
+                    }
+                    3 => {
+                        let a = j * j * j + 9.0 * j * j + 23.0 * j + 15.0;
+                        let b = 6.0 * j * j + 36.0 * j + 45.0;
+                        let c = 15.0 * j + 45.0;
+                        (-(j + 3.0) * u.powf(j + 2.0) * (a * r * r * r + b * r * r + c * r + 15.0)
+                            + u.powf(j + 3.0) * (3.0 * a * r * r + 2.0 * b * r + c))
+                            / 15.0
+                    }
+                    _ => panic!("pp q must be 0..=3"),
+                }
+            }
+        }
+    }
+
+    /// k(x1, x2).
+    #[inline]
+    pub fn kernel(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        self.sigma2 * self.profile(self.r(x1, x2))
+    }
+
+    /// k(x1, x2) plus the gradient w.r.t. the log parameters
+    /// `[ln σ², ln l₁, …]` written into `grad`.
+    pub fn kernel_grad(&self, x1: &[f64], x2: &[f64], grad: &mut [f64]) -> f64 {
+        debug_assert_eq!(grad.len(), self.n_params());
+        let r = self.r(x1, x2);
+        let phi = self.profile(r);
+        let k = self.sigma2 * phi;
+        grad[0] = k; // d/d ln σ² = k
+        if r == 0.0 {
+            for g in grad[1..].iter_mut() {
+                *g = 0.0;
+            }
+            return k;
+        }
+        let dphi = self.profile_deriv(r);
+        for d in 0..self.lengthscales.len() {
+            let diff = (x1[d] - x2[d]) / self.lengthscales[d];
+            // dr/d ln l_d = −diff² / r
+            grad[1 + d] = self.sigma2 * dphi * (-(diff * diff) / r);
+        }
+        k
+    }
+
+    // ---- matrix assembly --------------------------------------------------
+
+    /// Full-storage CSC covariance matrix of `x`. For compact support only
+    /// pairs with r < 1 are stored (plus the diagonal); globally supported
+    /// functions yield a dense pattern.
+    pub fn cov_matrix(&self, x: &[Vec<f64>]) -> CscMatrix {
+        let n = x.len();
+        let compact = self.is_compact();
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for j in 0..n {
+            for (i, xi) in x.iter().enumerate() {
+                if i == j {
+                    row_idx.push(i);
+                    values.push(self.sigma2);
+                    continue;
+                }
+                if compact {
+                    let r = self.r(xi, &x[j]);
+                    if r < 1.0 {
+                        row_idx.push(i);
+                        values.push(self.sigma2 * self.profile(r));
+                    }
+                } else {
+                    row_idx.push(i);
+                    values.push(self.kernel(xi, &x[j]));
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values }
+    }
+
+    /// Covariance matrix plus per-parameter gradient values aligned with
+    /// the matrix pattern: `grads[p][e]` is `∂K/∂θ_p` at pattern entry `e`.
+    pub fn cov_matrix_grads(&self, x: &[Vec<f64>]) -> (CscMatrix, Vec<Vec<f64>>) {
+        let k = self.cov_matrix(x);
+        let np = self.n_params();
+        let mut grads = vec![Vec::with_capacity(k.nnz()); np];
+        let mut g = vec![0.0; np];
+        for j in 0..k.n_cols {
+            let (rows, _) = k.col(j);
+            for &i in rows {
+                self.kernel_grad(&x[i], &x[j], &mut g);
+                for (p, gp) in g.iter().enumerate() {
+                    grads[p].push(*gp);
+                }
+            }
+        }
+        (k, grads)
+    }
+
+    /// Sparse cross-covariance column k(X, x*): (row indices, values).
+    pub fn cross_cov(&self, x: &[Vec<f64>], xstar: &[f64]) -> (Vec<usize>, Vec<f64>) {
+        let mut rows = Vec::new();
+        let mut vals = Vec::new();
+        let compact = self.is_compact();
+        for (i, xi) in x.iter().enumerate() {
+            let r = self.r(xi, xstar);
+            if !compact || r < 1.0 {
+                let v = self.sigma2 * self.profile(r);
+                if v != 0.0 {
+                    rows.push(i);
+                    vals.push(v);
+                }
+            }
+        }
+        (rows, vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_points;
+
+    fn all_kinds() -> Vec<CovKind> {
+        vec![
+            CovKind::Se,
+            CovKind::Pp(0),
+            CovKind::Pp(1),
+            CovKind::Pp(2),
+            CovKind::Pp(3),
+            CovKind::Matern32,
+            CovKind::Matern52,
+        ]
+    }
+
+    #[test]
+    fn profile_at_zero_is_one() {
+        for kind in all_kinds() {
+            for dim in [1, 2, 5, 10] {
+                let c = CovFunction::new(kind, dim, 1.7, 2.0);
+                assert!(
+                    (c.profile(0.0) - 1.0).abs() < 1e-12,
+                    "{kind:?} D={dim}: {}",
+                    c.profile(0.0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pp_vanish_beyond_support() {
+        for q in 0..4u8 {
+            let c = CovFunction::new(CovKind::Pp(q), 3, 1.0, 1.0);
+            assert_eq!(c.profile(1.0), 0.0);
+            assert_eq!(c.profile(1.5), 0.0);
+            assert!(c.profile(0.999) > 0.0);
+        }
+    }
+
+    #[test]
+    fn profiles_decrease_monotonically() {
+        for kind in all_kinds() {
+            let c = CovFunction::new(kind, 2, 1.0, 1.0);
+            let mut prev = c.profile(0.0);
+            let mut r = 0.01;
+            while r < 1.0 {
+                let v = c.profile(r);
+                assert!(v <= prev + 1e-12, "{kind:?} not decreasing at r={r}");
+                prev = v;
+                r += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn profile_deriv_matches_finite_difference() {
+        for kind in all_kinds() {
+            for dim in [1, 2, 5] {
+                let c = CovFunction::new(kind, dim, 1.0, 1.0);
+                for &r in &[0.05, 0.3, 0.7, 0.95, 1.2] {
+                    let h = 1e-6;
+                    let fd = (c.profile(r + h) - c.profile(r - h)) / (2.0 * h);
+                    let an = c.profile_deriv(r);
+                    assert!(
+                        (fd - an).abs() < 1e-5 * (1.0 + an.abs()),
+                        "{kind:?} D={dim} r={r}: fd={fd} an={an}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_grad_matches_finite_difference() {
+        let x = random_points(6, 3, 4.0, 11);
+        for kind in all_kinds() {
+            let mut c = CovFunction::new(kind, 3, 1.5, 2.5);
+            c.lengthscales = vec![2.0, 3.0, 2.5];
+            let p0 = c.params();
+            let mut g = vec![0.0; c.n_params()];
+            for i in 0..x.len() {
+                for j in 0..x.len() {
+                    if i == j {
+                        continue;
+                    }
+                    c.kernel_grad(&x[i], &x[j], &mut g);
+                    for p in 0..c.n_params() {
+                        let h = 1e-6;
+                        let mut cp = c.clone();
+                        let mut pp = p0.clone();
+                        pp[p] += h;
+                        cp.set_params(&pp);
+                        let kp = cp.kernel(&x[i], &x[j]);
+                        pp[p] -= 2.0 * h;
+                        cp.set_params(&pp);
+                        let km = cp.kernel(&x[i], &x[j]);
+                        let fd = (kp - km) / (2.0 * h);
+                        assert!(
+                            (fd - g[p]).abs() < 1e-5 * (1.0 + g[p].abs()),
+                            "{kind:?} ({i},{j}) param {p}: fd={fd} an={}",
+                            g[p]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cov_matrix_is_spd_and_symmetric() {
+        let x = random_points(40, 2, 10.0, 3);
+        for kind in all_kinds() {
+            let c = CovFunction::new(kind, 2, 1.0, 2.0);
+            let k = c.cov_matrix(&x);
+            assert!(k.check());
+            assert!(k.is_symmetric(1e-12), "{kind:?} not symmetric");
+            // jittered PD check (covariance matrices can be near-singular)
+            let mut kd = k.to_dense();
+            kd.add_diag(1e-8);
+            assert!(kd.cholesky().is_ok(), "{kind:?} not PSD");
+        }
+    }
+
+    #[test]
+    fn cs_matrix_is_sparse_se_is_dense() {
+        let x = random_points(60, 2, 10.0, 9);
+        let cs = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5).cov_matrix(&x);
+        let se = CovFunction::new(CovKind::Se, 2, 1.0, 1.5).cov_matrix(&x);
+        assert!(cs.density() < 0.5, "CS density {}", cs.density());
+        assert!((se.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wendland_j_depends_on_dim() {
+        let c2 = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.0);
+        let c10 = CovFunction::new(CovKind::Pp(3), 10, 1.0, 1.0);
+        assert_eq!(c2.wendland_j(), 5.0);
+        assert_eq!(c10.wendland_j(), 9.0);
+        // correlation decays faster in higher dim at the same r (Fig 1)
+        assert!(c10.profile(0.5) < c2.profile(0.5));
+    }
+
+    #[test]
+    fn params_roundtrip() {
+        let mut c = CovFunction::new(CovKind::Se, 3, 2.0, 1.5);
+        let p = c.params();
+        c.set_params(&p);
+        assert!((c.sigma2 - 2.0).abs() < 1e-12);
+        assert!(c.lengthscales.iter().all(|&l| (l - 1.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn cross_cov_matches_kernel() {
+        let x = random_points(20, 2, 5.0, 21);
+        let c = CovFunction::new(CovKind::Pp(2), 2, 1.3, 2.0);
+        let xs = vec![2.5, 2.5];
+        let (rows, vals) = c.cross_cov(&x, &xs);
+        for (&i, &v) in rows.iter().zip(&vals) {
+            assert!((v - c.kernel(&x[i], &xs)).abs() < 1e-14);
+        }
+        // entries not listed are genuinely zero
+        for i in 0..20 {
+            if !rows.contains(&i) {
+                assert_eq!(c.kernel(&x[i], &xs), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cov_matrix_grads_align_with_pattern() {
+        let x = random_points(15, 2, 6.0, 31);
+        let c = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let (k, grads) = c.cov_matrix_grads(&x);
+        assert_eq!(grads.len(), 3);
+        for g in &grads {
+            assert_eq!(g.len(), k.nnz());
+        }
+        // d/d ln σ² equals K itself
+        for (e, &v) in k.values.iter().enumerate() {
+            assert!((grads[0][e] - v).abs() < 1e-13);
+        }
+    }
+}

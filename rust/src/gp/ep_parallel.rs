@@ -1,0 +1,183 @@
+//! Parallel EP ablation: instead of the paper's sequential site visits
+//! with `ldlrowmodify`, update *all* sites from the current posterior
+//! marginals, then rebuild and refactor `B` once per sweep.
+//!
+//! This trades the row-modification machinery for `n` sparse solves plus
+//! one sparse refactorization per sweep, at the cost of needing damping to
+//! converge. The `abl_parallel_ep` bench quantifies the trade-off against
+//! Algorithm 1.
+
+use std::sync::Arc;
+
+use crate::gp::covariance::CovFunction;
+use crate::gp::ep_sparse::build_b;
+use crate::gp::likelihood::probit_site_update;
+use crate::gp::marginal::{ep_log_z, EpOptions, EpSites};
+use crate::sparse::cholesky::LdlFactor;
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::ordering::{compute_ordering, Ordering};
+use crate::sparse::symbolic::Symbolic;
+use crate::sparse::triangular::SparseSolveWorkspace;
+
+/// Converged parallel-EP state (permuted space, like `SparseEp`).
+pub struct ParallelEp {
+    pub perm: Vec<usize>,
+    pub xp: Vec<Vec<f64>>,
+    pub k: CscMatrix,
+    pub factor: LdlFactor,
+    pub sites: EpSites,
+    pub log_z: f64,
+    pub mu: Vec<f64>,
+    pub sweeps: usize,
+    pub converged: bool,
+    pub w_pred: Vec<f64>,
+}
+
+impl ParallelEp {
+    pub fn run(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        y: &[f64],
+        ordering: Ordering,
+        opts: &EpOptions,
+    ) -> Result<ParallelEp, String> {
+        let n = x.len();
+        let k0 = cov.cov_matrix(x);
+        let perm = compute_ordering(&k0, ordering);
+        let k = k0.permute_sym(&perm);
+        let mut xp = vec![Vec::new(); n];
+        let mut yp = vec![0.0; n];
+        for old in 0..n {
+            xp[perm[old]] = x[old].clone();
+            yp[perm[old]] = y[old];
+        }
+        let symbolic = Arc::new(Symbolic::analyze(&k));
+        let mut factor = LdlFactor::identity(symbolic);
+        let mut sites = EpSites::zeros(n);
+        let mut ws = SparseSolveWorkspace::new(n);
+        let mut t = vec![0.0; n];
+        let mut a_vals = Vec::with_capacity(n);
+        // parallel EP needs damping; honour opts.damping but cap at 0.9
+        let damping = opts.damping.min(0.9);
+
+        let mut gamma = vec![0.0; n];
+        let mut mu = vec![0.0; n];
+        let mut sigma_diag: Vec<f64> = (0..n).map(|i| k.get(i, i)).collect();
+        let mut log_z = f64::NEG_INFINITY;
+        let mut log_z_old = f64::NEG_INFINITY;
+        let mut sweeps = 0;
+        let mut converged = false;
+
+        while sweeps < opts.max_sweeps {
+            // batched site updates from current marginals
+            let mut new_tau = sites.tau.clone();
+            let mut new_nu = sites.nu.clone();
+            for i in 0..n {
+                let Some((lz, tc, nc, tn, nn)) =
+                    probit_site_update(yp[i], mu[i], sigma_diag[i], sites.tau[i], sites.nu[i])
+                else {
+                    continue;
+                };
+                sites.ln_zhat[i] = lz;
+                sites.tau_cav[i] = tc;
+                sites.nu_cav[i] = nc;
+                new_tau[i] = damping * tn + (1.0 - damping) * sites.tau[i];
+                new_nu[i] = damping * nn + (1.0 - damping) * sites.nu[i];
+            }
+            sites.tau = new_tau;
+            sites.nu = new_nu;
+
+            // one refactor of B for the whole batch
+            let b = build_b(&k, &sites.tau);
+            factor.refactor(&b)?;
+
+            // recompute γ = K ν̃ and all marginals through the new factor
+            gamma = k.matvec(&sites.nu);
+            let mut swg: Vec<f64> =
+                (0..n).map(|i| sites.tau[i].max(0.0).sqrt() * gamma[i]).collect();
+            factor.solve_in_place(&mut swg);
+            let scaled: Vec<f64> =
+                (0..n).map(|i| sites.tau[i].max(0.0).sqrt() * swg[i]).collect();
+            let kv = k.matvec(&scaled);
+            for i in 0..n {
+                mu[i] = gamma[i] - kv[i];
+            }
+            for i in 0..n {
+                let (krows, kvals) = k.col(i);
+                a_vals.clear();
+                a_vals.extend(
+                    krows.iter().zip(kvals).map(|(&r, &v)| sites.tau[r].max(0.0).sqrt() * v),
+                );
+                factor.solve_sparse_rhs(krows, &a_vals, &mut ws, &mut t);
+                let quad: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
+                sigma_diag[i] = k.get(i, i) - quad;
+                t.iter_mut().for_each(|v| *v = 0.0);
+            }
+
+            sweeps += 1;
+            let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
+            log_z = ep_log_z(&sites, factor.logdet(), nu_dot_mu);
+            if (log_z - log_z_old).abs() < opts.tol {
+                converged = true;
+                break;
+            }
+            log_z_old = log_z;
+        }
+
+        let mut swg: Vec<f64> = (0..n).map(|i| sites.tau[i].max(0.0).sqrt() * gamma[i]).collect();
+        factor.solve_in_place(&mut swg);
+        let w_pred: Vec<f64> =
+            (0..n).map(|i| sites.nu[i] - sites.tau[i].max(0.0).sqrt() * swg[i]).collect();
+
+        Ok(ParallelEp { perm, xp, k, factor, sites, log_z, mu, sweeps, converged, w_pred })
+    }
+
+    /// Latent predictive mean/variance (same representation as `SparseEp`).
+    pub fn predict_latent(&self, cov: &CovFunction, xstar: &[f64]) -> (f64, f64) {
+        let (rows, vals) = cov.cross_cov(&self.xp, xstar);
+        let mean: f64 = rows.iter().zip(&vals).map(|(&i, &v)| v * self.w_pred[i]).sum();
+        let u_vals: Vec<f64> = rows
+            .iter()
+            .zip(&vals)
+            .map(|(&i, &v)| self.sites.tau[i].max(0.0).sqrt() * v)
+            .collect();
+        let n = self.k.n_rows;
+        let mut ws = SparseSolveWorkspace::new(n);
+        let mut t = vec![0.0; n];
+        self.factor.solve_sparse_rhs(&rows, &u_vals, &mut ws, &mut t);
+        let quad: f64 = rows.iter().zip(&u_vals).map(|(&i, &v)| v * t[i]).sum();
+        (mean, (cov.sigma2 - quad).max(1e-12))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::CovKind;
+    use crate::gp::ep_sparse::SparseEp;
+    use crate::testutil::random_points;
+
+    #[test]
+    fn parallel_ep_reaches_same_fixed_point_as_sequential() {
+        let x = random_points(30, 2, 6.0, 77);
+        let y: Vec<f64> =
+            x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let opts = EpOptions { max_sweeps: 300, tol: 1e-10, damping: 0.8 };
+        let pe = ParallelEp::run(&cov, &x, &y, Ordering::Rcm, &opts).unwrap();
+        let se = SparseEp::run(&cov, &x, &y, Ordering::Rcm, &opts, None).unwrap();
+        assert!(pe.converged, "parallel EP failed to converge");
+        assert!(
+            (pe.log_z - se.log_z).abs() < 1e-5,
+            "logZ parallel {} vs sequential {}",
+            pe.log_z,
+            se.log_z
+        );
+        for px in [vec![1.0, 2.0], vec![4.5, 4.0]] {
+            let (mp, vp) = pe.predict_latent(&cov, &px);
+            let (ms, vs) = se.predict_latent(&cov, &px);
+            assert!((mp - ms).abs() < 1e-4, "{mp} vs {ms}");
+            assert!((vp - vs).abs() < 1e-4, "{vp} vs {vs}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Probit likelihood: numerically stable normal cdf machinery and the
+//! tilted (EP "moment-matching") integrals.
+//!
+//! `Φ` is computed through the regularized incomplete gamma function
+//! (series + continued fraction, Numerical-Recipes style but run to f64
+//! convergence), with a log-domain continued fraction for the deep
+//! negative tail so `log Φ(z)` is finite and accurate down to z ≈ −1e7.
+
+use std::f64::consts::PI;
+
+const LN_SQRT_PI: f64 = 0.5723649429247001; // ln Γ(1/2) = ln √π
+const EPS: f64 = 1e-16;
+const FPMIN: f64 = 1e-300;
+
+/// Regularized lower incomplete gamma P(a, x) by series expansion.
+fn gamma_p_series(a: f64, x: f64, ln_gamma_a: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    let mut ap = a;
+    let mut sum = 1.0 / a;
+    let mut del = sum;
+    for _ in 0..500 {
+        ap += 1.0;
+        del *= x / ap;
+        sum += del;
+        if del.abs() < sum.abs() * EPS {
+            break;
+        }
+    }
+    sum * (-x + a * x.ln() - ln_gamma_a).exp()
+}
+
+/// ln of the regularized upper incomplete gamma Q(a, x) by continued
+/// fraction (modified Lentz). Accurate for x ≳ a + 1.
+fn ln_gamma_q_cf(a: f64, x: f64, ln_gamma_a: f64) -> f64 {
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / FPMIN;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < FPMIN {
+            d = FPMIN;
+        }
+        c = b + an / c;
+        if c.abs() < FPMIN {
+            c = FPMIN;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < EPS {
+            break;
+        }
+    }
+    -x + a * x.ln() - ln_gamma_a + h.ln()
+}
+
+/// Complementary error function, |relative error| ≲ 1e-14.
+pub fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let x2 = x * x;
+    if x2 < 1.5 {
+        1.0 - gamma_p_series(0.5, x2, LN_SQRT_PI)
+    } else {
+        ln_gamma_q_cf(0.5, x2, LN_SQRT_PI).exp()
+    }
+}
+
+/// Standard normal pdf.
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * PI).sqrt()
+}
+
+/// ln of the standard normal pdf.
+#[inline]
+pub fn ln_norm_pdf(z: f64) -> f64 {
+    -0.5 * z * z - 0.5 * (2.0 * PI).ln()
+}
+
+/// Standard normal cdf Φ(z).
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * erfc(-z / std::f64::consts::SQRT_2)
+}
+
+/// ln Φ(z), stable in the deep negative tail.
+pub fn ln_norm_cdf(z: f64) -> f64 {
+    if z >= 0.0 {
+        // 1 − Φ(z) = ½ erfc(z/√2) ≤ ½; ln1p is exact here
+        (-0.5 * erfc(z / std::f64::consts::SQRT_2)).ln_1p()
+    } else {
+        let x2 = 0.5 * z * z; // (|z|/√2)²
+        if x2 < 1.5 {
+            (0.5 * erfc(-z / std::f64::consts::SQRT_2)).ln()
+        } else {
+            // ln(½ Q(½, z²/2)) — fully log-domain
+            ln_gamma_q_cf(0.5, x2, LN_SQRT_PI) - std::f64::consts::LN_2
+        }
+    }
+}
+
+/// φ(z)/Φ(z), the inverse Mills ratio (stable for very negative z).
+pub fn mills_ratio_inv(z: f64) -> f64 {
+    (ln_norm_pdf(z) - ln_norm_cdf(z)).exp()
+}
+
+/// Moments of the tilted distribution `∝ Φ(y·f) N(f | m, s²)`:
+/// returns `(ln Ẑ, μ̂, σ̂²)` — the EP moment-matching step for the probit
+/// likelihood (Rasmussen & Williams eqs. 3.58, 3.85).
+pub fn probit_moments(y: f64, m: f64, s2: f64) -> (f64, f64, f64) {
+    debug_assert!(y == 1.0 || y == -1.0);
+    let denom = (1.0 + s2).sqrt();
+    let z = y * m / denom;
+    let ln_zhat = ln_norm_cdf(z);
+    let rho = mills_ratio_inv(z);
+    let mu_hat = m + y * s2 * rho / denom;
+    let sigma2_hat = s2 - s2 * s2 * rho * (z + rho) / (1.0 + s2);
+    (ln_zhat, mu_hat, sigma2_hat)
+}
+
+/// EP site update from the current marginal `(mu_i, sigma2_i)` and site
+/// `(tau_site, nu_site)`: returns `(ln Ẑ, cavity τ₋, cavity ν₋, new τ̃,
+/// new ν̃)`. Returns `None` when the cavity precision is non-positive
+/// (site skipped, standard EP practice).
+pub fn probit_site_update(
+    y: f64,
+    mu_i: f64,
+    sigma2_i: f64,
+    tau_site: f64,
+    nu_site: f64,
+) -> Option<(f64, f64, f64, f64, f64)> {
+    let tau_cav = 1.0 / sigma2_i - tau_site;
+    if tau_cav <= 0.0 {
+        return None;
+    }
+    let nu_cav = mu_i / sigma2_i - nu_site;
+    let m = nu_cav / tau_cav;
+    let s2 = 1.0 / tau_cav;
+    let (ln_zhat, mu_hat, sigma2_hat) = probit_moments(y, m, s2);
+    let tau_new = 1.0 / sigma2_hat - tau_cav;
+    let nu_new = mu_hat / sigma2_hat - nu_cav;
+    Some((ln_zhat, tau_cav, nu_cav, tau_new, nu_new))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force Φ by Simpson integration of the pdf (test oracle).
+    fn phi_numeric(z: f64) -> f64 {
+        let lo = (-12.0f64).min(z - 1.0);
+        let n = 40000;
+        let h = (z - lo) / n as f64;
+        let mut s = norm_pdf(lo) + norm_pdf(z);
+        for i in 1..n {
+            let x = lo + i as f64 * h;
+            s += norm_pdf(x) * if i % 2 == 1 { 4.0 } else { 2.0 };
+        }
+        s * h / 3.0
+    }
+
+    #[test]
+    fn erfc_reference_values() {
+        // reference values (Abramowitz & Stegun / mpmath)
+        let cases = [
+            (0.0, 1.0),
+            (0.5, 0.4795001221869535),
+            (1.0, 0.15729920705028513),
+            (2.0, 0.004677734981063127),
+            (3.0, 2.209049699858544e-5),
+            (-1.0, 1.842700792949715),
+        ];
+        for (x, want) in cases {
+            let got = erfc(x);
+            assert!((got - want).abs() < 1e-13 * (1.0 + want.abs()), "erfc({x}) = {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn norm_cdf_matches_numeric() {
+        for &z in &[-3.0, -1.5, -0.5, 0.0, 0.7, 2.2] {
+            let got = norm_cdf(z);
+            let want = phi_numeric(z);
+            assert!((got - want).abs() < 1e-8, "Phi({z}) = {got}, numeric {want}");
+        }
+    }
+
+    #[test]
+    fn ln_norm_cdf_deep_tail() {
+        // asymptotics: ln Φ(z) ≈ −z²/2 − ln(−z√(2π)) for z → −∞
+        for &z in &[-10.0, -30.0, -100.0, -1000.0] {
+            let got = ln_norm_cdf(z);
+            let asym = -0.5 * z * z - (-z * (2.0 * PI).sqrt()).ln();
+            assert!(
+                (got - asym).abs() < 1e-2 * asym.abs().max(1.0),
+                "lnPhi({z}) = {got}, asym {asym}"
+            );
+            assert!(got.is_finite());
+        }
+        // symmetric identity Φ(z) + Φ(−z) = 1 around the centre
+        for &z in &[-5.0, -2.0, -0.3, 0.0, 1.7] {
+            let s = ln_norm_cdf(z).exp() + ln_norm_cdf(-z).exp();
+            assert!((s - 1.0).abs() < 1e-12, "z={z}: {s}");
+        }
+    }
+
+    #[test]
+    fn mills_ratio_limits() {
+        // ρ(z) → −z as z → −∞; ρ(0) = 2φ(0) = √(2/π)
+        assert!((mills_ratio_inv(0.0) - (2.0 / PI).sqrt()).abs() < 1e-12);
+        for &z in &[-20.0, -50.0] {
+            let rho = mills_ratio_inv(z);
+            assert!(rho > -z && rho < -z + 1.0 / (-z), "rho({z}) = {rho}");
+        }
+    }
+
+    /// Tilted moments vs brute-force quadrature over f.
+    #[test]
+    fn probit_moments_match_quadrature() {
+        for &(y, m, s2) in &[(1.0, 0.3, 0.8), (-1.0, -1.2, 2.5), (1.0, -3.0, 0.5), (-1.0, 2.0, 4.0)] {
+            let (ln_zhat, mu_hat, sigma2_hat) = probit_moments(y, m, s2);
+            // quadrature
+            let s = s2.sqrt();
+            let n = 200001;
+            let lo = m - 10.0 * s;
+            let hi = m + 10.0 * s;
+            let h = (hi - lo) / (n - 1) as f64;
+            let (mut z0, mut z1, mut z2) = (0.0, 0.0, 0.0);
+            for i in 0..n {
+                let f = lo + i as f64 * h;
+                let w = if i == 0 || i == n - 1 { 0.5 } else { 1.0 };
+                let p = norm_cdf(y * f) * norm_pdf((f - m) / s) / s;
+                z0 += w * p;
+                z1 += w * p * f;
+                z2 += w * p * f * f;
+            }
+            z0 *= h;
+            z1 *= h;
+            z2 *= h;
+            let mu_q = z1 / z0;
+            let var_q = z2 / z0 - mu_q * mu_q;
+            assert!((ln_zhat - z0.ln()).abs() < 1e-6, "lnZ: {ln_zhat} vs {}", z0.ln());
+            assert!((mu_hat - mu_q).abs() < 1e-6, "mu: {mu_hat} vs {mu_q}");
+            assert!((sigma2_hat - var_q).abs() < 1e-6, "var: {sigma2_hat} vs {var_q}");
+        }
+    }
+
+    #[test]
+    fn site_update_gives_positive_site_precision() {
+        // probit tilted variance is strictly below cavity variance, so the
+        // new site precision must be positive
+        for &(y, mu, s2, ts, ns) in &[
+            (1.0, 0.0, 1.0, 0.0, 0.0),
+            (-1.0, 0.5, 2.0, 0.3, 0.1),
+            (1.0, -2.0, 0.7, 0.5, -0.4),
+        ] {
+            let (_, tau_cav, _, tau_new, _) =
+                probit_site_update(y, mu, s2, ts, ns).expect("cavity valid");
+            assert!(tau_cav > 0.0);
+            assert!(tau_new > 0.0, "tau_new = {tau_new}");
+        }
+    }
+
+    #[test]
+    fn site_update_skips_bad_cavity() {
+        assert!(probit_site_update(1.0, 0.0, 1.0, 2.0, 0.0).is_none());
+    }
+}

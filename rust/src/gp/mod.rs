@@ -1,0 +1,21 @@
+//! Gaussian-process machinery: covariance functions, the probit
+//! likelihood, EP inference (dense baseline, the paper's sparse algorithm,
+//! a parallel-EP ablation, and the FIC approximation), marginal likelihood
+//! with gradients, hyperpriors, prediction and exact GP regression.
+
+pub mod covariance;
+pub mod ep_dense;
+pub mod ep_parallel;
+pub mod ep_sparse;
+pub mod fic;
+pub mod likelihood;
+pub mod marginal;
+pub mod model;
+pub mod predict;
+pub mod priors;
+pub mod regression;
+
+pub use covariance::{CovFunction, CovKind};
+pub use ep_dense::DenseEp;
+pub use ep_sparse::SparseEp;
+pub use model::{FittedClassifier, GpClassifier, Inference};

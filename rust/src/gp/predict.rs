@@ -1,0 +1,90 @@
+//! Class-probability prediction and the paper's evaluation metrics.
+//!
+//! The latent predictive `(μ*, σ*²)` comes from whichever EP backend ran
+//! (dense, sparse, parallel or FIC); the averaged predictive probability
+//! for the probit likelihood is the closed form
+//! `π* = Φ(μ* / sqrt(1 + σ*²))` (Rasmussen & Williams eq. 3.77).
+
+use crate::gp::likelihood::{ln_norm_cdf, norm_cdf};
+
+/// π* from a latent mean/variance.
+#[inline]
+pub fn class_probability(mean: f64, var: f64) -> f64 {
+    norm_cdf(mean / (1.0 + var).sqrt())
+}
+
+/// −log p(y* | D) for a single test case with label y ∈ {−1, +1}.
+#[inline]
+pub fn neg_log_pred_density(y: f64, mean: f64, var: f64) -> f64 {
+    -ln_norm_cdf(y * mean / (1.0 + var).sqrt())
+}
+
+/// Hard decision: sign of the latent mean (equivalently π* ≷ ½).
+#[inline]
+pub fn classify(mean: f64) -> f64 {
+    if mean >= 0.0 {
+        1.0
+    } else {
+        -1.0
+    }
+}
+
+/// Aggregated test metrics: mean classification error and mean nlpd —
+/// the columns of the paper's Table 2.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Metrics {
+    pub err: f64,
+    pub nlpd: f64,
+    pub n: usize,
+}
+
+/// Evaluate predictions `(mean, var)` against labels.
+pub fn evaluate(preds: &[(f64, f64)], y: &[f64]) -> Metrics {
+    assert_eq!(preds.len(), y.len());
+    let n = y.len();
+    let mut errors = 0usize;
+    let mut nlpd = 0.0;
+    for (&(m, v), &yi) in preds.iter().zip(y) {
+        if classify(m) != yi {
+            errors += 1;
+        }
+        nlpd += neg_log_pred_density(yi, m, v);
+    }
+    Metrics { err: errors as f64 / n as f64, nlpd: nlpd / n as f64, n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probability_is_half_at_zero_mean() {
+        assert!((class_probability(0.0, 3.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variance_shrinks_confidence() {
+        let p_low_var = class_probability(1.0, 0.01);
+        let p_high_var = class_probability(1.0, 100.0);
+        assert!(p_low_var > p_high_var);
+        assert!(p_high_var > 0.5);
+    }
+
+    #[test]
+    fn nlpd_consistency_with_probability() {
+        let (m, v) = (0.7, 1.3);
+        let p = class_probability(m, v);
+        assert!((neg_log_pred_density(1.0, m, v) + p.ln()).abs() < 1e-12);
+        assert!((neg_log_pred_density(-1.0, m, v) + (1.0 - p).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn evaluate_counts_errors() {
+        let preds = vec![(1.0, 0.1), (-2.0, 0.1), (0.5, 0.1), (-0.5, 0.1)];
+        let y = vec![1.0, -1.0, -1.0, -1.0];
+        let m = evaluate(&preds, &y);
+        assert!((m.err - 0.25).abs() < 1e-12);
+        assert!(m.nlpd > 0.0);
+        assert_eq!(m.n, 4);
+    }
+}

@@ -1,0 +1,105 @@
+//! Hyperpriors. The paper places a half-Student-t prior (Gelman 2006) with
+//! ν = 4 degrees of freedom and scale 6 on each covariance hyperparameter
+//! (magnitude and length-scales), and optimizes the posterior mode of
+//! `log Z_EP + log p(θ)` in log-parameter space — so the log-densities
+//! here include the `exp` Jacobian.
+
+/// Half-Student-t prior on a positive parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct HalfStudentT {
+    pub nu: f64,
+    pub scale: f64,
+}
+
+impl HalfStudentT {
+    /// Paper's setting: ν = 4, s = 6.
+    pub fn paper_default() -> Self {
+        HalfStudentT { nu: 4.0, scale: 6.0 }
+    }
+
+    /// Unnormalized log density at x > 0.
+    pub fn ln_pdf(&self, x: f64) -> f64 {
+        debug_assert!(x > 0.0);
+        -(self.nu + 1.0) / 2.0 * (1.0 + x * x / (self.nu * self.scale * self.scale)).ln()
+    }
+
+    /// log p(θ(u)) + log|dθ/du| at u = ln x (the quantity added to the
+    /// objective when optimizing in log space).
+    pub fn ln_pdf_log_space(&self, u: f64) -> f64 {
+        self.ln_pdf(u.exp()) + u
+    }
+
+    /// d/du of [`Self::ln_pdf_log_space`].
+    pub fn ln_pdf_log_space_grad(&self, u: f64) -> f64 {
+        let x = u.exp();
+        let x2 = x * x;
+        -(self.nu + 1.0) * x2 / (self.nu * self.scale * self.scale + x2) + 1.0
+    }
+}
+
+/// A prior per log-parameter of a covariance function.
+#[derive(Clone, Debug)]
+pub struct HyperPrior {
+    pub per_param: Vec<HalfStudentT>,
+}
+
+impl HyperPrior {
+    /// The paper's prior replicated over `n_params` log-parameters.
+    pub fn paper_default(n_params: usize) -> Self {
+        HyperPrior { per_param: vec![HalfStudentT::paper_default(); n_params] }
+    }
+
+    pub fn ln_pdf(&self, log_params: &[f64]) -> f64 {
+        self.per_param.iter().zip(log_params).map(|(p, &u)| p.ln_pdf_log_space(u)).sum()
+    }
+
+    pub fn ln_pdf_grad(&self, log_params: &[f64]) -> Vec<f64> {
+        self.per_param
+            .iter()
+            .zip(log_params)
+            .map(|(p, &u)| p.ln_pdf_log_space_grad(u))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_matches_finite_difference() {
+        let p = HalfStudentT::paper_default();
+        for &u in &[-2.0, -0.5, 0.0, 1.0, 3.0] {
+            let h = 1e-6;
+            let fd = (p.ln_pdf_log_space(u + h) - p.ln_pdf_log_space(u - h)) / (2.0 * h);
+            let an = p.ln_pdf_log_space_grad(u);
+            assert!((fd - an).abs() < 1e-6, "u={u}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn heavier_tail_than_normal() {
+        let p = HalfStudentT::paper_default();
+        let l10 = p.ln_pdf(60.0);
+        let l20 = p.ln_pdf(120.0);
+        // a Gaussian with scale 6 would give l20 − l10 ≈ −150
+        assert!(l20 - l10 > -5.0, "tail too light: {}", l20 - l10);
+    }
+
+    #[test]
+    fn favors_small_values() {
+        let p = HalfStudentT::paper_default();
+        assert!(p.ln_pdf(1.0) > p.ln_pdf(10.0));
+        assert!(p.ln_pdf(10.0) > p.ln_pdf(100.0));
+    }
+
+    #[test]
+    fn hyperprior_sums_over_params() {
+        let hp = HyperPrior::paper_default(3);
+        let u = vec![0.1, 0.2, 0.3];
+        let single: f64 =
+            u.iter().map(|&ui| HalfStudentT::paper_default().ln_pdf_log_space(ui)).sum();
+        assert!((hp.ln_pdf(&u) - single).abs() < 1e-12);
+        assert_eq!(hp.ln_pdf_grad(&u).len(), 3);
+    }
+}

@@ -1,0 +1,38 @@
+//! `csgp` — Sparse expectation propagation for binary Gaussian process
+//! classification with compactly supported covariance functions.
+//!
+//! Reproduction of Vanhatalo & Vehtari, *Speeding up the binary Gaussian
+//! process classification* (stat.ML, 2012). The crate is organised as the
+//! L3 (rust coordinator) layer of a three-layer rust + JAX + Pallas stack:
+//!
+//! * [`sparse`] — from-scratch sparse linear algebra: CSC matrices,
+//!   elimination trees, symbolic analysis, up-looking LDLᵀ factorization,
+//!   sparse triangular solves, rank-one update/downdate, the Davis–Hager
+//!   row-modification (`ldlrowmodify`, the paper's Algorithm 2) and the
+//!   Takahashi sparsified inverse.
+//! * [`gp`] — covariance functions (squared exponential, the Wendland
+//!   piecewise polynomials `pp0..pp3`, Matérn), the probit likelihood,
+//!   dense EP (Rasmussen & Williams Alg. 3.5), the paper's sparse EP
+//!   (Algorithm 1), FIC + EP, marginal likelihood and gradients,
+//!   hyperpriors and prediction.
+//! * [`opt`] — scaled conjugate gradients for hyperparameter MAP search.
+//! * [`data`] — the paper's synthetic cluster workload (§6.1), UCI-like
+//!   dataset generators and the cross-validation harness.
+//! * [`runtime`] — PJRT (XLA) client wrapper that loads AOT-compiled
+//!   covariance / probit artifacts produced by `python/compile/aot.py`.
+//! * [`coordinator`] — training-job manager and a batching prediction
+//!   service (threads + channels).
+//! * [`bench`] — a minimal measurement harness used by `benches/`.
+
+pub mod bench;
+pub mod coordinator;
+pub mod data;
+pub mod gp;
+pub mod metrics;
+pub mod opt;
+pub mod rng;
+pub mod runtime;
+pub mod sparse;
+
+#[cfg(test)]
+pub(crate) mod testutil;

@@ -1,0 +1,288 @@
+//! `csgp` CLI — leader entrypoint for the sparse-EP GP classification
+//! system.
+//!
+//! Subcommands (argument parsing is hand-rolled; no clap offline):
+//!
+//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic>] [--optimize]`
+//! * `cv        --data uci:<name> --cov pp3 --folds 10`
+//! * `serve     --n <train size> [--requests <r>] [--batch <b>]` — demo server + load
+//! * `artifacts-check` — verify the PJRT artifacts load and agree with native code
+//! * `fill      --n <n> --dim <2|5> --cov pp3` — fill-K/fill-L statistics (Table 1)
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use csgp::coordinator::{PredictionService, ServiceConfig};
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::data::{cv, uci, Dataset};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::rng::Rng;
+use csgp::runtime::Runtime;
+use csgp::sparse::ordering::Ordering;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    flags
+}
+
+fn load_dataset(spec: &str, n: usize, seed: u64) -> Result<Dataset, String> {
+    if spec == "cluster2d" {
+        Ok(cluster_dataset(&ClusterConfig::paper_2d(n), seed))
+    } else if spec == "cluster5d" {
+        Ok(cluster_dataset(&ClusterConfig::paper_5d(n), seed))
+    } else if let Some(name) = spec.strip_prefix("uci:") {
+        uci::UCI_SPECS
+            .iter()
+            .find(|s| s.name == name)
+            .map(|s| uci::generate(s, seed))
+            .ok_or_else(|| format!("unknown uci dataset '{name}'"))
+    } else {
+        Err(format!("unknown dataset spec '{spec}'"))
+    }
+}
+
+fn build_model(flags: &HashMap<String, String>, dim: usize) -> Result<GpClassifier, String> {
+    let kind = CovKind::parse(flags.get("cov").map(String::as_str).unwrap_or("pp3"))?;
+    let ls: f64 = flags.get("lengthscale").map(|s| s.parse().unwrap()).unwrap_or(2.0);
+    let s2: f64 = flags.get("magnitude").map(|s| s.parse().unwrap()).unwrap_or(1.0);
+    let cov = CovFunction::new(kind, dim, s2, ls);
+    let ordering: Ordering =
+        flags.get("ordering").map(String::as_str).unwrap_or("rcm").parse()?;
+    let inference = match flags.get("inference").map(String::as_str).unwrap_or("sparse") {
+        "dense" => Inference::Dense,
+        "sparse" => Inference::Sparse(ordering),
+        "parallel" => Inference::Parallel(ordering),
+        "fic" => Inference::Fic {
+            m: flags.get("m").map(|s| s.parse().unwrap()).unwrap_or(64),
+        },
+        other => return Err(format!("unknown inference '{other}'")),
+    };
+    Ok(GpClassifier::new(cov, inference))
+}
+
+fn cmd_train(flags: HashMap<String, String>) -> Result<(), String> {
+    let n: usize = flags.get("n").map(|s| s.parse().unwrap()).unwrap_or(500);
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let spec = flags.get("data").cloned().unwrap_or_else(|| "cluster2d".into());
+    let data = load_dataset(&spec, n + n / 2, seed)?;
+    let (train, test) = data.split(n.min(data.n() * 2 / 3));
+    let model = build_model(&flags, train.dim())?;
+    println!(
+        "training on {} (n={}, d={}) cov={:?} inference={:?}",
+        train.name,
+        train.n(),
+        train.dim(),
+        model.cov.kind,
+        model.inference
+    );
+    let fitted = if flags.contains_key("optimize") {
+        model.fit(&train.x, &train.y)?
+    } else {
+        model.infer_only(&train.x, &train.y)?
+    };
+    let m = fitted.evaluate(&test.x, &test.y);
+    println!(
+        "logZ = {:.4}  fill-K = {:.3}  fill-L = {:.3}  opt = {:?} ({} iters)  EP = {:?}",
+        fitted.report.log_z,
+        fitted.report.fill_k,
+        fitted.report.fill_l,
+        fitted.report.opt_time,
+        fitted.report.opt_iters,
+        fitted.report.ep_time
+    );
+    println!("test err = {:.4}  nlpd = {:.4}  (n_test = {})", m.err, m.nlpd, m.n);
+    Ok(())
+}
+
+fn cmd_cv(flags: HashMap<String, String>) -> Result<(), String> {
+    let spec = flags.get("data").cloned().unwrap_or_else(|| "uci:crabs".into());
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let folds: usize = flags.get("folds").map(|s| s.parse().unwrap()).unwrap_or(10);
+    let data = load_dataset(&spec, 0, seed)?;
+    let model = build_model(&flags, data.dim())?;
+    let optimize = flags.contains_key("optimize");
+    let res = cv::cross_validate(&model, &data, folds, optimize, seed)?;
+    println!(
+        "{}: err = {:.3}  nlpd = {:.3}  opt = {:?}  EP = {:?}  fill-L = {:.2}",
+        data.name, res.err, res.nlpd, res.opt_time, res.ep_time, res.fill_l
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
+    let n: usize = flags.get("n").map(|s| s.parse().unwrap()).unwrap_or(500);
+    let requests: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(2000);
+    let batch: usize = flags.get("batch").map(|s| s.parse().unwrap()).unwrap_or(256);
+    let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
+    let model = build_model(&flags, 2)?;
+    println!("fitting serving model on n={n}...");
+    let fitted = Arc::new(model.infer_only(&data.x, &data.y)?);
+    let artifact_dir = std::path::PathBuf::from(
+        std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
+    );
+    let artifacts = artifact_dir.join("manifest.json").exists().then_some(artifact_dir);
+    println!(
+        "probability stage: {}",
+        if artifacts.is_some() { "XLA predict_probit artifact" } else { "native probit" }
+    );
+    let svc = Arc::new(PredictionService::start(
+        fitted,
+        artifacts,
+        ServiceConfig { max_batch: batch, max_wait: Duration::from_millis(2) },
+    ));
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let client_count = 8;
+    for c in 0..client_count {
+        let svc = svc.clone();
+        let per_client = requests / client_count;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64);
+            let mut lat = Vec::with_capacity(per_client);
+            for _ in 0..per_client {
+                let x = vec![rng.uniform_in(0.0, 10.0), rng.uniform_in(0.0, 10.0)];
+                let p = svc.predict(x).unwrap();
+                lat.push(p.service_time);
+            }
+            lat
+        }));
+    }
+    let mut latencies: Vec<Duration> = Vec::new();
+    for h in handles {
+        latencies.extend(h.join().unwrap());
+    }
+    let wall = t0.elapsed();
+    latencies.sort();
+    let total = latencies.len();
+    println!(
+        "served {total} requests in {:.3}s  ({:.0} req/s)",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50 = {:?}  p95 = {:?}  p99 = {:?}  max batch = {}",
+        latencies[total / 2],
+        latencies[total * 95 / 100],
+        latencies[total * 99 / 100],
+        svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_artifacts_check() -> Result<(), String> {
+    let rt = Runtime::open_default().map_err(|e| e.to_string())?;
+    println!("PJRT platform: {}", rt.platform());
+    let (lnz, muh, s2h) =
+        rt.probit_moments(&[1.0, -1.0], &[0.5, -0.5], &[1.0, 2.0]).map_err(|e| e.to_string())?;
+    for i in 0..2 {
+        let (l, m, s) = csgp::gp::likelihood::probit_moments(
+            [1.0, -1.0][i],
+            [0.5, -0.5][i],
+            [1.0, 2.0][i],
+        );
+        assert!((lnz[i] - l).abs() < 1e-10 && (muh[i] - m).abs() < 1e-10 && (s2h[i] - s).abs() < 1e-10);
+    }
+    println!("probit_moments: XLA == native OK");
+    let asm = csgp::runtime::XlaCovarianceAssembler::new(&rt);
+    let x: Vec<Vec<f64>> = (0..140).map(|i| vec![(i % 12) as f64, (i / 12) as f64]).collect();
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+    let k_xla = asm.cov_matrix(&cov, &x).map_err(|e| e.to_string())?;
+    let k_native = cov.cov_matrix(&x);
+    assert_eq!(k_xla.col_ptr, k_native.col_ptr);
+    let max_diff = k_xla
+        .values
+        .iter()
+        .zip(&k_native.values)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f64::max);
+    println!("cov_tile_pp3: XLA == native (max |delta| = {max_diff:.2e}) OK");
+    println!("artifacts OK");
+    Ok(())
+}
+
+fn cmd_fill(flags: HashMap<String, String>) -> Result<(), String> {
+    let n: usize = flags.get("n").map(|s| s.parse().unwrap()).unwrap_or(1000);
+    let dim: usize = flags.get("dim").map(|s| s.parse().unwrap()).unwrap_or(2);
+    let seed: u64 = flags.get("seed").map(|s| s.parse().unwrap()).unwrap_or(1);
+    let cfg = if dim == 2 { ClusterConfig::paper_2d(n) } else { ClusterConfig::paper_5d(n) };
+    let data = cluster_dataset(&cfg, seed);
+    let model = build_model(&flags, dim)?;
+    let fitted = model.infer_only(&data.x, &data.y)?;
+    println!(
+        "n = {n} dim = {dim}: fill-K = {:.3}  fill-L = {:.3}  ratio = {:.2}",
+        fitted.report.fill_k,
+        fitted.report.fill_l,
+        fitted.report.fill_l / fitted.report.fill_k
+    );
+    Ok(())
+}
+
+fn cmd_profile(flags: HashMap<String, String>) -> Result<(), String> {
+    let n: usize = flags.get("n").map(|s| s.parse().unwrap()).unwrap_or(1000);
+    let dim: usize = flags.get("dim").map(|s| s.parse().unwrap()).unwrap_or(2);
+    let ls: f64 = flags.get("lengthscale").map(|s| s.parse().unwrap()).unwrap_or(1.3);
+    let cfg = if dim == 2 { ClusterConfig::paper_2d(n) } else { ClusterConfig::paper_5d(n) };
+    let data = cluster_dataset(&cfg, 1);
+    let cov = CovFunction::new(CovKind::Pp(3), dim, 1.0, ls);
+    let metrics = csgp::metrics::Metrics::new();
+    let t0 = std::time::Instant::now();
+    let ep = csgp::gp::ep_sparse::SparseEp::run(
+        &cov,
+        &data.x,
+        &data.y,
+        Ordering::Rcm,
+        &csgp::gp::marginal::EpOptions::default(),
+        Some(&metrics),
+    )?;
+    let total = t0.elapsed();
+    println!(
+        "n = {n} dim = {dim}: EP {:?} over {} sweeps (fill-L {:.3}, logZ {:.2})",
+        total, ep.sweeps, ep.fill_l, ep.log_z
+    );
+    println!("{}", metrics.report());
+    Ok(())
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: csgp <train|cv|serve|artifacts-check|fill> [--flags ...]\n\
+         see rust/src/main.rs header for the flag reference"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else { usage() };
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "train" => cmd_train(flags),
+        "cv" => cmd_cv(flags),
+        "serve" => cmd_serve(flags),
+        "artifacts-check" => cmd_artifacts_check(),
+        "fill" => cmd_fill(flags),
+        "profile" => cmd_profile(flags),
+        _ => usage(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Lightweight instrumentation: named counters and accumulated timers.
+//!
+//! The EP hot loop is instrumented with [`Section`] timers so the perf pass
+//! (EXPERIMENTS.md §Perf) can attribute time to `rowmod`, `solve_t`,
+//! `moments`, etc. without an external profiler. Overhead is one `Instant`
+//! pair per section; disabled sections cost a branch.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// A registry of accumulated section timings and counters.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    timings: BTreeMap<&'static str, (Duration, u64)>,
+    counters: BTreeMap<&'static str, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add_time(name, t0.elapsed());
+        out
+    }
+
+    pub fn add_time(&self, name: &'static str, d: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        let e = g.timings.entry(name).or_insert((Duration::ZERO, 0));
+        e.0 += d;
+        e.1 += 1;
+    }
+
+    pub fn incr(&self, name: &'static str, by: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name).or_insert(0) += by;
+    }
+
+    pub fn total(&self, name: &'static str) -> Duration {
+        self.inner.lock().unwrap().timings.get(name).map(|e| e.0).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn count(&self, name: &'static str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.timings.clear();
+        g.counters.clear();
+    }
+
+    /// Render a sorted report, longest sections first.
+    pub fn report(&self) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut rows: Vec<_> = g.timings.iter().collect();
+        rows.sort_by(|a, b| b.1 .0.cmp(&a.1 .0));
+        let mut out = String::new();
+        for (name, (dur, calls)) in rows {
+            out.push_str(&format!(
+                "{name:<24} {:>10.3} ms  ({calls} calls, {:.3} µs/call)\n",
+                dur.as_secs_f64() * 1e3,
+                dur.as_secs_f64() * 1e6 / (*calls).max(1) as f64
+            ));
+        }
+        for (name, v) in g.counters.iter() {
+            out.push_str(&format!("{name:<24} {v:>10} (count)\n"));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_accumulates() {
+        let m = Metrics::new();
+        let x = m.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        m.time("work", || ());
+        assert!(m.total("work") > Duration::ZERO);
+        let report = m.report();
+        assert!(report.contains("work"));
+        assert!(report.contains("2 calls"));
+    }
+
+    #[test]
+    fn counters() {
+        let m = Metrics::new();
+        m.incr("sites", 5);
+        m.incr("sites", 2);
+        assert_eq!(m.count("sites"), 7);
+        m.reset();
+        assert_eq!(m.count("sites"), 0);
+    }
+}

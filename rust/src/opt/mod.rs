@@ -1,0 +1,2 @@
+//! Optimizers for hyperparameter MAP search.
+pub mod scg;

@@ -1,0 +1,199 @@
+//! Scaled conjugate gradients (Møller 1993) — the optimizer the paper uses
+//! ("optimization was conducted using the scaled conjugate gradient
+//! method", via GPstuff/netlab). Minimizes `f` given `(f, ∇f)`; no line
+//! searches, one extra gradient evaluation per step for the Hessian-vector
+//! finite difference.
+
+/// Result of an SCG run.
+#[derive(Clone, Debug)]
+pub struct ScgResult {
+    pub x: Vec<f64>,
+    pub f: f64,
+    pub iterations: usize,
+    pub fn_evals: usize,
+    pub grad_evals: usize,
+    pub converged: bool,
+}
+
+/// Options.
+#[derive(Clone, Copy, Debug)]
+pub struct ScgOptions {
+    pub max_iters: usize,
+    /// Stop when both |Δx| and |Δf| fall below these.
+    pub x_tol: f64,
+    pub f_tol: f64,
+}
+
+impl Default for ScgOptions {
+    fn default() -> Self {
+        ScgOptions { max_iters: 100, x_tol: 1e-5, f_tol: 1e-6 }
+    }
+}
+
+fn norm2(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum()
+}
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Minimize `f` from `x0`. `eval` returns `(f(x), ∇f(x))`.
+pub fn scg(
+    x0: &[f64],
+    mut eval: impl FnMut(&[f64]) -> (f64, Vec<f64>),
+    opts: &ScgOptions,
+) -> ScgResult {
+    let n = x0.len();
+    let sigma0 = 1e-4;
+    let mut lambda = 1e-6f64;
+    let mut lambda_bar = 0.0f64;
+    let mut x = x0.to_vec();
+    let (mut fnow, mut grad) = eval(&x);
+    let mut fn_evals = 1;
+    let mut grad_evals = 1;
+    let mut d: Vec<f64> = grad.iter().map(|g| -g).collect();
+    let mut success = true;
+    let mut n_successes = 0usize;
+    let mut converged = false;
+    let mut iterations = 0;
+    #[allow(unused_assignments)]
+    let mut delta = 0.0f64;
+    let mut theta = 0.0f64; // d' H d approximation
+
+    for k in 0..opts.max_iters {
+        iterations = k + 1;
+        let d2 = norm2(&d);
+        if d2 < 1e-300 {
+            converged = true;
+            break;
+        }
+        if success {
+            // Hessian-vector product via finite differences along d
+            let sigma = sigma0 / d2.sqrt();
+            let xs: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + sigma * di).collect();
+            let (_, gs) = eval(&xs);
+            fn_evals += 1;
+            grad_evals += 1;
+            theta = (0..n).map(|i| (gs[i] - grad[i]) * d[i]).sum::<f64>() / sigma;
+        }
+        // scale to make delta positive definite
+        delta = theta + (lambda - lambda_bar) * d2;
+        if delta <= 0.0 {
+            lambda_bar = 2.0 * (lambda - delta / d2);
+            delta = -theta + lambda * d2;
+            lambda = lambda_bar;
+        }
+        let mu = -dot(&d, &grad); // note: mu = d'r with r = -grad
+        let alpha = mu / delta;
+        let xnew: Vec<f64> = x.iter().zip(&d).map(|(xi, di)| xi + alpha * di).collect();
+        let (fnew, gnew) = eval(&xnew);
+        fn_evals += 1;
+        grad_evals += 1;
+        let big_delta = 2.0 * delta * (fnow - fnew) / (mu * mu);
+
+        if big_delta >= 0.0 {
+            // successful step
+            let dx2: f64 = alpha * alpha * d2;
+            let df = (fnow - fnew).abs();
+            x = xnew;
+            let grad_old = std::mem::replace(&mut grad, gnew);
+            fnow = fnew;
+            lambda_bar = 0.0;
+            success = true;
+            n_successes += 1;
+            if big_delta >= 0.75 {
+                lambda *= 0.25;
+            }
+            // Polak-Ribière-style restart every n successes
+            if n_successes % n == 0 {
+                d = grad.iter().map(|g| -g).collect();
+            } else {
+                let beta = (norm2(&grad) - dot(&grad, &grad_old)) / mu;
+                for i in 0..n {
+                    d[i] = -grad[i] + beta * d[i];
+                }
+            }
+            if dx2.sqrt() < opts.x_tol && df < opts.f_tol {
+                converged = true;
+                break;
+            }
+        } else {
+            lambda_bar = lambda;
+            success = false;
+        }
+        if big_delta < 0.25 {
+            lambda += delta * (1.0 - big_delta) / d2;
+        }
+        if lambda > 1e100 {
+            break; // cannot make progress
+        }
+    }
+
+    ScgResult { x, f: fnow, iterations, fn_evals, grad_evals, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizes_quadratic() {
+        // f = ½ (x-a)' D (x-a)
+        let a = [1.0, -2.0, 3.0];
+        let d = [1.0, 4.0, 0.5];
+        let res = scg(
+            &[0.0, 0.0, 0.0],
+            |x| {
+                let f: f64 =
+                    (0..3).map(|i| 0.5 * d[i] * (x[i] - a[i]) * (x[i] - a[i])).sum();
+                let g: Vec<f64> = (0..3).map(|i| d[i] * (x[i] - a[i])).collect();
+                (f, g)
+            },
+            &ScgOptions::default(),
+        );
+        assert!(res.converged, "not converged: {res:?}");
+        for i in 0..3 {
+            assert!((res.x[i] - a[i]).abs() < 1e-4, "x[{i}] = {}", res.x[i]);
+        }
+    }
+
+    #[test]
+    fn minimizes_rosenbrock() {
+        let res = scg(
+            &[-1.2, 1.0],
+            |x| {
+                let (a, b) = (x[0], x[1]);
+                let f = (1.0 - a).powi(2) + 100.0 * (b - a * a).powi(2);
+                let g = vec![
+                    -2.0 * (1.0 - a) - 400.0 * a * (b - a * a),
+                    200.0 * (b - a * a),
+                ];
+                (f, g)
+            },
+            &ScgOptions { max_iters: 3000, x_tol: 1e-10, f_tol: 1e-12 },
+        );
+        assert!(res.f < 1e-5, "f = {} at {:?}", res.f, res.x);
+        assert!((res.x[0] - 1.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn handles_already_optimal_start() {
+        let res = scg(
+            &[0.0],
+            |x| (x[0] * x[0], vec![2.0 * x[0]]),
+            &ScgOptions::default(),
+        );
+        assert!(res.f < 1e-12);
+    }
+
+    #[test]
+    fn respects_iteration_cap() {
+        let res = scg(
+            &[5.0],
+            |x| (x[0] * x[0], vec![2.0 * x[0]]),
+            &ScgOptions { max_iters: 2, x_tol: 0.0, f_tol: 0.0 },
+        );
+        assert!(res.iterations <= 2);
+    }
+}

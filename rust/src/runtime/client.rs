@@ -1,0 +1,214 @@
+//! PJRT client wrapper and executable cache.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Artifact geometry — must match `python/compile/kernels/ref.py`
+/// (`manifest.json` is checked against these at load time).
+pub const TILE: usize = 128;
+pub const DMAX: usize = 64;
+pub const PROBIT_BATCH: usize = 1024;
+
+/// A PJRT CPU client plus a compile-once executable cache keyed by
+/// artifact name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `<name>.hlo.txt` files and a
+    /// `manifest.json` as written by `python -m compile.aot`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.json");
+        if manifest.exists() {
+            let text = std::fs::read_to_string(&manifest)?;
+            for (key, want) in
+                [("\"tile\"", TILE), ("\"dmax\"", DMAX), ("\"probit_batch\"", PROBIT_BATCH)]
+            {
+                let got = json_usize(&text, key)
+                    .ok_or_else(|| anyhow!("manifest missing {key}"))?;
+                if got != want {
+                    return Err(anyhow!(
+                        "artifact geometry mismatch: {key} = {got}, runtime expects {want} \
+                         (re-run `make artifacts`)"
+                    ));
+                }
+            }
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default location: `$CSGP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (once) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`?)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).with_context(|| format!("compiling {name}"))?);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact whose lowered signature returns a tuple; the
+    /// tuple elements come back as f64 vectors.
+    pub fn run_f64(
+        &self,
+        name: &str,
+        inputs: &[(&[f64], &[i64])], // (data, dims)
+    ) -> Result<Vec<Vec<f64>>> {
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| xla::Literal::vec1(data).reshape(dims))
+            .collect::<std::result::Result<_, _>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let out = result[0][0].to_literal_sync()?;
+        let parts = out.to_tuple()?;
+        parts.into_iter().map(|l| Ok(l.to_vec::<f64>()?)).collect()
+    }
+
+    /// Batched probit tilted moments through the `probit_moments`
+    /// artifact. Inputs shorter than [`PROBIT_BATCH`] are padded.
+    pub fn probit_moments(
+        &self,
+        y: &[f64],
+        mu: &[f64],
+        var: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let n = y.len();
+        assert!(n <= PROBIT_BATCH && mu.len() == n && var.len() == n);
+        let pad = |v: &[f64], fill: f64| {
+            let mut p = v.to_vec();
+            p.resize(PROBIT_BATCH, fill);
+            p
+        };
+        let (yp, mup, varp) = (pad(y, 1.0), pad(mu, 0.0), pad(var, 1.0));
+        let dims = [PROBIT_BATCH as i64];
+        let mut out =
+            self.run_f64("probit_moments", &[(&yp, &dims), (&mup, &dims), (&varp, &dims)])?;
+        let mut s2h = out.pop().ok_or_else(|| anyhow!("missing output"))?;
+        let mut muh = out.pop().ok_or_else(|| anyhow!("missing output"))?;
+        let mut lnz = out.pop().ok_or_else(|| anyhow!("missing output"))?;
+        lnz.truncate(n);
+        muh.truncate(n);
+        s2h.truncate(n);
+        Ok((lnz, muh, s2h))
+    }
+
+    /// Batched predictive probabilities through the `predict_probit`
+    /// artifact (handles any length by chunking).
+    pub fn predict_probit(&self, mean: &[f64], var: &[f64]) -> Result<Vec<f64>> {
+        assert_eq!(mean.len(), var.len());
+        let mut out = Vec::with_capacity(mean.len());
+        let dims = [PROBIT_BATCH as i64];
+        for (mc, vc) in mean.chunks(PROBIT_BATCH).zip(var.chunks(PROBIT_BATCH)) {
+            let mut mp = mc.to_vec();
+            mp.resize(PROBIT_BATCH, 0.0);
+            let mut vp = vc.to_vec();
+            vp.resize(PROBIT_BATCH, 1.0);
+            let res = self.run_f64("predict_probit", &[(&mp, &dims), (&vp, &dims)])?;
+            out.extend_from_slice(&res[0][..mc.len()]);
+        }
+        Ok(out)
+    }
+}
+
+/// Minimal "key": value extractor for the flat manifest fields.
+fn json_usize(text: &str, key: &str) -> Option<usize> {
+    let pos = text.find(key)?;
+    let rest = &text[pos + key.len()..];
+    let colon = rest.find(':')?;
+    let tail = rest[colon + 1..].trim_start();
+    let end = tail.find(|c: char| !c.is_ascii_digit()).unwrap_or(tail.len());
+    tail[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    #[test]
+    fn json_usize_extracts() {
+        let t = r#"{"tile": 128, "dmax":64, "probit_batch" : 1024}"#;
+        assert_eq!(json_usize(t, "\"tile\""), Some(128));
+        assert_eq!(json_usize(t, "\"dmax\""), Some(64));
+        assert_eq!(json_usize(t, "\"probit_batch\""), Some(1024));
+        assert_eq!(json_usize(t, "\"missing\""), None);
+    }
+
+    #[test]
+    fn probit_artifacts_match_native_likelihood() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let mu = vec![0.3, -1.2, 2.0, 0.0];
+        let var = vec![0.8, 2.5, 0.5, 1.0];
+        let (lnz, muh, s2h) = rt.probit_moments(&y, &mu, &var).unwrap();
+        for i in 0..4 {
+            let (l, m, s) = crate::gp::likelihood::probit_moments(y[i], mu[i], var[i]);
+            assert!((lnz[i] - l).abs() < 1e-10, "lnz[{i}]: {} vs {l}", lnz[i]);
+            assert!((muh[i] - m).abs() < 1e-10, "muh[{i}]: {} vs {m}", muh[i]);
+            assert!((s2h[i] - s).abs() < 1e-10, "s2h[{i}]: {} vs {s}", s2h[i]);
+        }
+    }
+
+    #[test]
+    fn predict_probit_matches_native_and_chunks() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        // longer than one batch to exercise chunking
+        let n = PROBIT_BATCH + 37;
+        let mean: Vec<f64> = (0..n).map(|i| (i as f64 / 100.0) - 5.0).collect();
+        let var: Vec<f64> = (0..n).map(|i| 0.1 + (i % 7) as f64).collect();
+        let got = rt.predict_probit(&mean, &var).unwrap();
+        assert_eq!(got.len(), n);
+        for i in (0..n).step_by(101) {
+            let want = crate::gp::predict::class_probability(mean[i], var[i]);
+            assert!((got[i] - want).abs() < 1e-10, "i={i}: {} vs {want}", got[i]);
+        }
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        let a = rt.executable("predict_probit").unwrap();
+        let b = rt.executable("predict_probit").unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+}

@@ -1,0 +1,161 @@
+//! Tiled covariance assembly through the AOT artifact.
+//!
+//! The L3 coordinator asks for a full (symmetric) covariance matrix; this
+//! assembler cuts the point set into 128-row blocks, runs the
+//! `cov_tile_<kind>` executable per block pair (upper triangle only,
+//! mirrored), and sparsifies the result into a CSC matrix — compact
+//! supports yield exact zeros at r ≥ 1, so the sparsification is
+//! pattern-exact, not a numerical threshold.
+
+use anyhow::{anyhow, Result};
+
+use crate::gp::covariance::{CovFunction, CovKind};
+use crate::runtime::client::{Runtime, DMAX, TILE};
+use crate::sparse::csc::CscMatrix;
+
+/// Covariance assembly backend running on the PJRT executables.
+pub struct XlaCovarianceAssembler<'rt> {
+    rt: &'rt Runtime,
+}
+
+impl<'rt> XlaCovarianceAssembler<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        XlaCovarianceAssembler { rt }
+    }
+
+    fn artifact_name(kind: CovKind) -> String {
+        format!("cov_tile_{}", kind.name())
+    }
+
+    /// Pack a block of points into a zero-padded (TILE, DMAX) buffer.
+    fn pack_block(x: &[Vec<f64>], lo: usize, hi: usize, d: usize) -> Vec<f64> {
+        let mut buf = vec![0.0; TILE * DMAX];
+        for (bi, xi) in x[lo..hi].iter().enumerate() {
+            buf[bi * DMAX..bi * DMAX + d].copy_from_slice(xi);
+        }
+        buf
+    }
+
+    /// Dense covariance values between two blocks via the artifact.
+    fn tile(
+        &self,
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        lo1: usize,
+        hi1: usize,
+        lo2: usize,
+        hi2: usize,
+    ) -> Result<Vec<f64>> {
+        let d = cov.lengthscales.len();
+        if d > DMAX {
+            return Err(anyhow!("input dim {d} exceeds artifact DMAX {DMAX}"));
+        }
+        let b1 = Self::pack_block(x, lo1, hi1, d);
+        let b2 = Self::pack_block(x, lo2, hi2, d);
+        let mut inv_ls2 = vec![0.0; DMAX];
+        for (dst, l) in inv_ls2.iter_mut().zip(&cov.lengthscales) {
+            *dst = 1.0 / (l * l);
+        }
+        let jexp = match cov.kind {
+            CovKind::Pp(_) => cov.wendland_j(),
+            _ => 0.0,
+        };
+        let scal = vec![cov.sigma2, jexp];
+        let tdims = [TILE as i64, DMAX as i64];
+        let out = self.rt.run_f64(
+            &Self::artifact_name(cov.kind),
+            &[
+                (&b1, &tdims),
+                (&b2, &tdims),
+                (&inv_ls2, &[DMAX as i64]),
+                (&scal, &[2i64]),
+            ],
+        )?;
+        Ok(out.into_iter().next().ok_or_else(|| anyhow!("no output"))?)
+    }
+
+    /// Assemble the full symmetric covariance matrix of `x`, sparsified.
+    /// Matches `CovFunction::cov_matrix` to f64 round-off.
+    pub fn cov_matrix(&self, cov: &CovFunction, x: &[Vec<f64>]) -> Result<CscMatrix> {
+        let n = x.len();
+        let nblocks = n.div_ceil(TILE);
+        // tile results stored per (block row, block col), upper triangle
+        let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+        let compact = cov.is_compact();
+        for br in 0..nblocks {
+            let (lo1, hi1) = (br * TILE, ((br + 1) * TILE).min(n));
+            for bc in br..nblocks {
+                let (lo2, hi2) = (bc * TILE, ((bc + 1) * TILE).min(n));
+                let vals = self.tile(cov, x, lo1, hi1, lo2, hi2)?;
+                for i in 0..(hi1 - lo1) {
+                    for j in 0..(hi2 - lo2) {
+                        let (gi, gj) = (lo1 + i, lo2 + j);
+                        if gj < gi {
+                            continue; // handled by the mirrored entry
+                        }
+                        if gi == gj {
+                            // The ‖a‖²+‖b‖²−2abᵀ distance loses ~√ε near
+                            // r = 0; the diagonal is k(x,x) = σ² exactly.
+                            triplets.push((gi, gj, cov.sigma2));
+                            continue;
+                        }
+                        let v = vals[i * TILE + j];
+                        if !compact || v != 0.0 {
+                            triplets.push((gi, gj, v));
+                            triplets.push((gj, gi, v));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(CscMatrix::from_triplets(n, n, &triplets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_points;
+
+    fn artifacts_available() -> bool {
+        std::path::Path::new("artifacts/manifest.json").exists()
+    }
+
+    /// The cross-layer agreement test: XLA-assembled covariance equals the
+    /// native rust covariance entry for entry, pattern included.
+    #[test]
+    fn xla_assembly_matches_native() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        let asm = XlaCovarianceAssembler::new(&rt);
+        // n > TILE to exercise multi-block assembly
+        let x = random_points(150, 3, 8.0, 99);
+        for kind in [CovKind::Se, CovKind::Pp(0), CovKind::Pp(3), CovKind::Matern52] {
+            let mut cov = CovFunction::new(kind, 3, 1.4, 2.0);
+            cov.lengthscales = vec![2.0, 1.0, 3.0];
+            let got = asm.cov_matrix(&cov, &x).unwrap();
+            let want = cov.cov_matrix(&x);
+            assert_eq!(got.col_ptr, want.col_ptr, "{kind:?}: pattern mismatch");
+            assert_eq!(got.row_idx, want.row_idx, "{kind:?}: pattern mismatch");
+            for (a, b) in got.values.iter().zip(&want.values) {
+                assert!((a - b).abs() < 1e-10, "{kind:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_too_many_dims() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::open_default().unwrap();
+        let asm = XlaCovarianceAssembler::new(&rt);
+        let cov = CovFunction::new(CovKind::Se, DMAX + 1, 1.0, 1.0);
+        let x = random_points(4, DMAX + 1, 1.0, 1);
+        assert!(asm.cov_matrix(&cov, &x).is_err());
+    }
+}

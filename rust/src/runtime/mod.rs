@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts produced by
+//! `python/compile/aot.py` (HLO text), compiles each once on the CPU PJRT
+//! client, caches the executables, and exposes typed wrappers for the
+//! covariance-tile and probit entry points used on the L3 hot path.
+//!
+//! Python never runs here — the `.hlo.txt` files are the only thing that
+//! crosses the language boundary, at build time.
+
+pub mod client;
+pub mod covariance;
+
+pub use client::{Runtime, DMAX, PROBIT_BATCH, TILE};
+pub use covariance::XlaCovarianceAssembler;

@@ -1,0 +1,221 @@
+//! Numeric LDLᵀ factorization on a static symbolic pattern.
+//!
+//! Up-looking algorithm (Davis's LDL package): row k of L is the solution
+//! of a sparse lower-triangular system whose pattern is the etree reach of
+//! `A(0..k, k)`. Because the EP algorithm keeps the pattern of `B` fixed,
+//! the factor is allocated once from [`Symbolic`] and re-factored /
+//! row-modified in place.
+
+use std::sync::Arc;
+
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::etree::ereach;
+use crate::sparse::symbolic::Symbolic;
+
+/// LDLᵀ factor: unit lower-triangular `L` (strict lower part stored on the
+/// symbolic pattern) and diagonal `D`.
+#[derive(Clone, Debug)]
+pub struct LdlFactor {
+    pub symbolic: Arc<Symbolic>,
+    /// Values aligned with `symbolic.row_idx` (strictly lower triangle).
+    pub l: Vec<f64>,
+    /// Diagonal of D.
+    pub d: Vec<f64>,
+}
+
+impl LdlFactor {
+    /// Factor symmetric positive-definite `a` (full storage). The pattern
+    /// of `a` must match the pattern `symbolic` was analysed from (entries
+    /// of `a` outside it will panic in debug, give wrong results in
+    /// release — callers always pass the analysed matrix).
+    pub fn factor(symbolic: Arc<Symbolic>, a: &CscMatrix) -> Result<LdlFactor, String> {
+        let n = symbolic.n;
+        let mut f = LdlFactor { symbolic, l: vec![0.0; 0], d: vec![0.0; n] };
+        f.l = vec![0.0; f.symbolic.row_idx.len()];
+        f.refactor(a)?;
+        Ok(f)
+    }
+
+    /// Identity factor (L = I, D = I); the state of `B = I` before any EP
+    /// site has been updated.
+    pub fn identity(symbolic: Arc<Symbolic>) -> LdlFactor {
+        let n = symbolic.n;
+        let nnz = symbolic.row_idx.len();
+        LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![1.0; n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.symbolic.n
+    }
+
+    /// Re-run the numeric factorization of `a` in place.
+    pub fn refactor(&mut self, a: &CscMatrix) -> Result<(), String> {
+        let sym = self.symbolic.clone();
+        let n = sym.n;
+        assert_eq!(a.n_rows, n);
+        let mut y = vec![0.0; n]; // dense accumulator for row k
+        let mut mark = vec![usize::MAX; n];
+        let mut pattern = Vec::with_capacity(n);
+        let mut lnz = vec![0usize; n]; // entries placed per column so far
+        self.l.iter_mut().for_each(|v| *v = 0.0);
+
+        for k in 0..n {
+            ereach(a, k, &sym.parent, &mut mark, &mut pattern);
+            // scatter A(0..k, k) into y, pick up the diagonal
+            let (rows, vals) = a.col(k);
+            let mut dk = 0.0;
+            for (&i, &v) in rows.iter().zip(vals) {
+                if i < k {
+                    y[i] = v;
+                } else if i == k {
+                    dk = v;
+                }
+            }
+            // sparse triangular solve along the (ascending == topological
+            // for an etree) pattern
+            for &j in pattern.iter() {
+                let yj = y[j];
+                y[j] = 0.0;
+                let lo = sym.col_ptr[j];
+                for p in lo..lo + lnz[j] {
+                    y[sym.row_idx[p]] -= self.l[p] * yj;
+                }
+                let lkj = yj / self.d[j];
+                dk -= lkj * yj;
+                let slot = lo + lnz[j];
+                debug_assert_eq!(sym.row_idx[slot], k, "pattern mismatch at ({k},{j})");
+                self.l[slot] = lkj;
+                lnz[j] += 1;
+            }
+            if dk <= 0.0 {
+                return Err(format!("matrix not positive definite at pivot {k} (d = {dk})"));
+            }
+            self.d[k] = dk;
+        }
+        Ok(())
+    }
+
+    /// log|A| = Σ log dᵢ.
+    pub fn logdet(&self) -> f64 {
+        self.d.iter().map(|&d| d.ln()).sum()
+    }
+
+    /// Values of the strictly-lower column j (aligned with
+    /// `symbolic.col_pattern(j)`).
+    #[inline]
+    pub fn col_values(&self, j: usize) -> &[f64] {
+        &self.l[self.symbolic.col_ptr[j]..self.symbolic.col_ptr[j + 1]]
+    }
+
+    /// Dense reconstruction L D Lᵀ (tests only).
+    pub fn reconstruct(&self) -> crate::sparse::dense::DenseMatrix {
+        let n = self.n();
+        let mut ld = crate::sparse::dense::DenseMatrix::identity(n);
+        for j in 0..n {
+            let pat = self.symbolic.col_pattern(j);
+            let vals = self.col_values(j);
+            for (&i, &v) in pat.iter().zip(vals) {
+                *ld.at_mut(i, j) = v;
+            }
+        }
+        let mut out = crate::sparse::dense::DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += ld.at(i, k) * self.d[k] * ld.at(j, k);
+                }
+                *out.at_mut(i, j) = s;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::testutil::random_sparse_spd;
+
+    #[test]
+    fn factor_reconstructs_small() {
+        // 3x3 SPD with known factor
+        let a = CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 4.0), (1, 0, 2.0), (0, 1, 2.0), (1, 1, 5.0), (2, 1, 2.0), (1, 2, 2.0), (2, 2, 6.0)],
+        );
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::factor(sym, &a).unwrap();
+        let rec = f.reconstruct();
+        assert!(rec.max_abs_diff(&a.to_dense()) < 1e-12);
+    }
+
+    #[test]
+    fn factor_matches_dense_on_random_spd() {
+        for seed in 0..8 {
+            let a = random_sparse_spd(40, 0.15, seed);
+            let sym = Arc::new(Symbolic::analyze(&a));
+            let f = LdlFactor::factor(sym, &a).unwrap();
+            let rec = f.reconstruct();
+            assert!(
+                rec.max_abs_diff(&a.to_dense()) < 1e-9,
+                "seed {seed}: {}",
+                rec.max_abs_diff(&a.to_dense())
+            );
+        }
+    }
+
+    #[test]
+    fn logdet_matches_dense() {
+        let a = random_sparse_spd(30, 0.2, 42);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::factor(sym, &a).unwrap();
+        let dense_logdet = a.to_dense().cholesky().unwrap().logdet();
+        assert!((f.logdet() - dense_logdet).abs() < 1e-9);
+    }
+
+    #[test]
+    fn identity_factor() {
+        let a = CscMatrix::identity(5);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::identity(sym);
+        assert_eq!(f.d, vec![1.0; 5]);
+        assert!((f.logdet()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn refactor_in_place_after_value_change() {
+        let mut rng = Rng::new(9);
+        let a = random_sparse_spd(25, 0.2, 7);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let mut f = LdlFactor::factor(sym, &a).unwrap();
+        // change values (same pattern), refactor, compare
+        let mut a2 = a.clone();
+        for v in a2.values.iter_mut() {
+            *v *= 1.0 + 0.01 * rng.uniform();
+        }
+        // keep symmetric + diagonally dominant
+        let a2 = {
+            let t = a2.transpose();
+            let mut sym_vals = a2.clone();
+            for p in 0..sym_vals.values.len() {
+                sym_vals.values[p] = 0.5 * (a2.values[p] + t.values[p]);
+            }
+            for j in 0..25 {
+                *sym_vals.get_mut(j, j) += 5.0;
+            }
+            sym_vals
+        };
+        f.refactor(&a2).unwrap();
+        assert!(f.reconstruct().max_abs_diff(&a2.to_dense()) < 1e-9);
+    }
+
+    #[test]
+    fn indefinite_matrix_errors() {
+        let a = CscMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 0, 2.0), (0, 1, 2.0), (1, 1, 1.0)]);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        assert!(LdlFactor::factor(sym, &a).is_err());
+    }
+}

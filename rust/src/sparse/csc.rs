@@ -1,0 +1,334 @@
+//! Compressed-sparse-column matrices.
+//!
+//! Symmetric matrices (covariances, `B`) are stored with *both* triangles
+//! so that a full column — which the EP inner loop reads at every site
+//! visit — is a contiguous slice. Row indices are kept sorted within each
+//! column.
+
+/// A CSC matrix with sorted row indices per column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CscMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Column pointers, length `n_cols + 1`.
+    pub col_ptr: Vec<usize>,
+    /// Row indices, length `nnz`, sorted within each column.
+    pub row_idx: Vec<usize>,
+    /// Values aligned with `row_idx`.
+    pub values: Vec<f64>,
+}
+
+impl CscMatrix {
+    /// Build from unsorted triplets; duplicate entries are summed.
+    pub fn from_triplets(
+        n_rows: usize,
+        n_cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> CscMatrix {
+        let mut per_col: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n_cols];
+        for &(i, j, v) in triplets {
+            assert!(i < n_rows && j < n_cols, "triplet ({i},{j}) out of bounds");
+            per_col[j].push((i, v));
+        }
+        let mut col_ptr = Vec::with_capacity(n_cols + 1);
+        let mut row_idx = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        col_ptr.push(0);
+        for col in per_col.iter_mut() {
+            col.sort_by_key(|&(i, _)| i);
+            let mut k = 0;
+            while k < col.len() {
+                let (i, mut v) = col[k];
+                let mut m = k + 1;
+                while m < col.len() && col[m].0 == i {
+                    v += col[m].1;
+                    m += 1;
+                }
+                row_idx.push(i);
+                values.push(v);
+                k = m;
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { n_rows, n_cols, col_ptr, row_idx, values }
+    }
+
+    /// Build a dense-stored matrix (row-major closure `f(i, j)`) keeping
+    /// entries with `|v| > drop_tol` plus the whole diagonal.
+    pub fn from_fn(
+        n: usize,
+        drop_tol: f64,
+        mut f: impl FnMut(usize, usize) -> f64,
+    ) -> CscMatrix {
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        col_ptr.push(0);
+        for j in 0..n {
+            for i in 0..n {
+                let v = f(i, j);
+                if i == j || v.abs() > drop_tol {
+                    row_idx.push(i);
+                    values.push(v);
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values }
+    }
+
+    /// n-by-n identity.
+    pub fn identity(n: usize) -> CscMatrix {
+        CscMatrix {
+            n_rows: n,
+            n_cols: n,
+            col_ptr: (0..=n).collect(),
+            row_idx: (0..n).collect(),
+            values: vec![1.0; n],
+        }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.row_idx.len()
+    }
+
+    /// (row indices, values) of column `j`.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let r = self.col_ptr[j]..self.col_ptr[j + 1];
+        (&self.row_idx[r.clone()], &self.values[r])
+    }
+
+    /// Value at (i, j); zero if not stored. Binary search within column.
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        let (rows, vals) = self.col(j);
+        match rows.binary_search(&i) {
+            Ok(p) => vals[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Mutable reference to a *stored* entry (i, j); panics otherwise.
+    pub fn get_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        let p = lo + self.row_idx[lo..hi]
+            .binary_search(&i)
+            .unwrap_or_else(|_| panic!("entry ({i},{j}) not in pattern"));
+        &mut self.values[p]
+    }
+
+    /// y = A x (dense x).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        let mut y = vec![0.0; self.n_rows];
+        for j in 0..self.n_cols {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                y[i] += v * xj;
+            }
+        }
+        y
+    }
+
+    /// y += alpha * A[:, j] (sparse axpy of one column into dense y).
+    pub fn axpy_col(&self, j: usize, alpha: f64, y: &mut [f64]) {
+        let (rows, vals) = self.col(j);
+        for (&i, &v) in rows.iter().zip(vals) {
+            y[i] += alpha * v;
+        }
+    }
+
+    /// Transpose (also converts CSC<->CSR views).
+    pub fn transpose(&self) -> CscMatrix {
+        let mut count = vec![0usize; self.n_rows + 1];
+        for &i in &self.row_idx {
+            count[i + 1] += 1;
+        }
+        for i in 0..self.n_rows {
+            count[i + 1] += count[i];
+        }
+        let col_ptr = count.clone();
+        let mut next = count;
+        let mut row_idx = vec![0usize; self.nnz()];
+        let mut values = vec![0.0; self.nnz()];
+        for j in 0..self.n_cols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                let p = next[i];
+                next[i] += 1;
+                row_idx[p] = j;
+                values[p] = v;
+            }
+        }
+        CscMatrix { n_rows: self.n_cols, n_cols: self.n_rows, col_ptr, row_idx, values }
+    }
+
+    /// Symmetric permutation `P A Pᵀ`: entry (i, j) moves to
+    /// (perm[i], perm[j]) where `perm` maps old index -> new index.
+    pub fn permute_sym(&self, perm: &[usize]) -> CscMatrix {
+        assert_eq!(self.n_rows, self.n_cols);
+        let n = self.n_rows;
+        assert_eq!(perm.len(), n);
+        let mut triplets = Vec::with_capacity(self.nnz());
+        for j in 0..n {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                triplets.push((perm[i], perm[j], v));
+            }
+        }
+        CscMatrix::from_triplets(n, n, &triplets)
+    }
+
+    /// Fraction of stored entries: nnz / (n_rows * n_cols). Paper's fill-K.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Check structural invariants (sorted, in-bounds, monotone pointers).
+    pub fn check(&self) -> bool {
+        if self.col_ptr.len() != self.n_cols + 1 || self.col_ptr[0] != 0 {
+            return false;
+        }
+        if *self.col_ptr.last().unwrap() != self.row_idx.len() {
+            return false;
+        }
+        if self.row_idx.len() != self.values.len() {
+            return false;
+        }
+        for j in 0..self.n_cols {
+            if self.col_ptr[j] > self.col_ptr[j + 1] {
+                return false;
+            }
+            let (rows, _) = self.col(j);
+            for w in rows.windows(2) {
+                if w[0] >= w[1] {
+                    return false;
+                }
+            }
+            if rows.iter().any(|&i| i >= self.n_rows) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Dense copy (row-major), for tests and small problems.
+    pub fn to_dense(&self) -> crate::sparse::dense::DenseMatrix {
+        let mut d = crate::sparse::dense::DenseMatrix::zeros(self.n_rows, self.n_cols);
+        for j in 0..self.n_cols {
+            let (rows, vals) = self.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                *d.at_mut(i, j) = v;
+            }
+        }
+        d
+    }
+
+    /// Is the matrix exactly symmetric (pattern and values)?
+    pub fn is_symmetric(&self, tol: f64) -> bool {
+        if self.n_rows != self.n_cols {
+            return false;
+        }
+        let t = self.transpose();
+        if t.col_ptr != self.col_ptr || t.row_idx != self.row_idx {
+            return false;
+        }
+        self.values.iter().zip(&t.values).all(|(a, b)| (a - b).abs() <= tol)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CscMatrix {
+        // [ 4 1 0 ]
+        // [ 1 5 2 ]
+        // [ 0 2 6 ]
+        CscMatrix::from_triplets(
+            3,
+            3,
+            &[(0, 0, 4.0), (1, 0, 1.0), (0, 1, 1.0), (1, 1, 5.0), (2, 1, 2.0), (1, 2, 2.0), (2, 2, 6.0)],
+        )
+    }
+
+    #[test]
+    fn triplets_build_sorted_and_dedup() {
+        let a = CscMatrix::from_triplets(2, 2, &[(1, 0, 1.0), (0, 0, 2.0), (1, 0, 3.0)]);
+        assert!(a.check());
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(1, 0), 4.0);
+        assert_eq!(a.get(0, 0), 2.0);
+        assert_eq!(a.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = sample();
+        let y = a.matvec(&[1.0, 2.0, 3.0]);
+        assert_eq!(y, vec![4.0 + 2.0, 1.0 + 10.0 + 6.0, 4.0 + 18.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = sample();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn symmetric_detection() {
+        assert!(sample().is_symmetric(0.0));
+        let ns = CscMatrix::from_triplets(2, 2, &[(0, 1, 1.0), (0, 0, 1.0), (1, 1, 1.0)]);
+        assert!(!ns.is_symmetric(0.0));
+    }
+
+    #[test]
+    fn permute_sym_roundtrip() {
+        let a = sample();
+        let perm = vec![2usize, 0, 1]; // old->new
+        let p = a.permute_sym(&perm);
+        assert!(p.check());
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(p.get(perm[i], perm[j]), a.get(i, j));
+            }
+        }
+        // inverse permutation restores
+        let mut inv = vec![0usize; 3];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new] = old;
+        }
+        assert_eq!(p.permute_sym(&inv), a);
+    }
+
+    #[test]
+    fn identity_and_density() {
+        let i = CscMatrix::identity(4);
+        assert!(i.check());
+        assert_eq!(i.matvec(&[1.0, 2.0, 3.0, 4.0]), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!((i.density() - 0.25).abs() < 1e-15);
+    }
+
+    #[test]
+    fn from_fn_drops_small_keeps_diagonal() {
+        let a = CscMatrix::from_fn(3, 0.5, |i, j| if i == j { 0.0 } else { 1.0 / (1.0 + (i as f64 - j as f64).abs()) });
+        // off-diagonals 0.5 dropped (not > tol), diagonal kept even at 0.0
+        assert_eq!(a.nnz(), 3);
+        assert_eq!(a.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn axpy_col() {
+        let a = sample();
+        let mut y = vec![0.0; 3];
+        a.axpy_col(1, 2.0, &mut y);
+        assert_eq!(y, vec![2.0, 10.0, 4.0]);
+    }
+}

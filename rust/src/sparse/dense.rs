@@ -1,0 +1,249 @@
+//! Dense matrices with Cholesky factorization.
+//!
+//! Used three ways: (1) the dense-EP baseline the paper compares against
+//! (`k_se` with full covariance), (2) the m×m inner solves of FIC, and
+//! (3) the *oracle* every sparse kernel is tested against.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseMatrix {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl DenseMatrix {
+    pub fn zeros(n_rows: usize, n_cols: usize) -> DenseMatrix {
+        DenseMatrix { n_rows, n_cols, data: vec![0.0; n_rows * n_cols] }
+    }
+
+    pub fn identity(n: usize) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    pub fn from_fn(n_rows: usize, n_cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> DenseMatrix {
+        let mut m = DenseMatrix::zeros(n_rows, n_cols);
+        for i in 0..n_rows {
+            for j in 0..n_cols {
+                *m.at_mut(i, j) = f(i, j);
+            }
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.n_cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        &mut self.data[i * self.n_cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.n_cols..(i + 1) * self.n_cols]
+    }
+
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n_cols);
+        (0..self.n_rows)
+            .map(|i| self.row(i).iter().zip(x).map(|(a, b)| a * b).sum())
+            .collect()
+    }
+
+    pub fn matmul(&self, other: &DenseMatrix) -> DenseMatrix {
+        assert_eq!(self.n_cols, other.n_rows);
+        let mut out = DenseMatrix::zeros(self.n_rows, other.n_cols);
+        for i in 0..self.n_rows {
+            for k in 0..self.n_cols {
+                let aik = self.at(i, k);
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..other.n_cols {
+                    *out.at_mut(i, j) += aik * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> DenseMatrix {
+        DenseMatrix::from_fn(self.n_cols, self.n_rows, |i, j| self.at(j, i))
+    }
+
+    pub fn add_diag(&mut self, d: f64) {
+        let n = self.n_rows.min(self.n_cols);
+        for i in 0..n {
+            *self.at_mut(i, i) += d;
+        }
+    }
+
+    /// Lower-triangular Cholesky `A = L Lᵀ`. Errors if not positive definite.
+    pub fn cholesky(&self) -> Result<DenseCholesky, String> {
+        assert_eq!(self.n_rows, self.n_cols);
+        let n = self.n_rows;
+        let mut l = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = self.at(i, j);
+                for k in 0..j {
+                    sum -= l[i * n + k] * l[j * n + k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(format!("not positive definite at pivot {i} ({sum})"));
+                    }
+                    l[i * n + j] = sum.sqrt();
+                } else {
+                    l[i * n + j] = sum / l[j * n + j];
+                }
+            }
+        }
+        Ok(DenseCholesky { n, l })
+    }
+
+    /// Solve A x = b via an internal Cholesky (A must be SPD).
+    pub fn solve_spd(&self, b: &[f64]) -> Result<Vec<f64>, String> {
+        Ok(self.cholesky()?.solve(b))
+    }
+
+    /// Explicit inverse of an SPD matrix (tests / Takahashi oracle).
+    pub fn inverse_spd(&self) -> Result<DenseMatrix, String> {
+        let ch = self.cholesky()?;
+        let n = self.n_rows;
+        let mut inv = DenseMatrix::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            let x = ch.solve(&e);
+            e[j] = 0.0;
+            for i in 0..n {
+                *inv.at_mut(i, j) = x[i];
+            }
+        }
+        Ok(inv)
+    }
+
+    pub fn max_abs_diff(&self, other: &DenseMatrix) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Dense lower Cholesky factor.
+#[derive(Clone, Debug)]
+pub struct DenseCholesky {
+    pub n: usize,
+    /// Row-major lower-triangular factor (upper part zero).
+    pub l: Vec<f64>,
+}
+
+impl DenseCholesky {
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.l[i * self.n + j]
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l[i * n + k] * y[k];
+            }
+            y[i] /= self.l[i * n + i];
+        }
+        y
+    }
+
+    /// Solve Lᵀ x = y (backward substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n;
+        let mut x = y.to_vec();
+        for i in (0..n).rev() {
+            for k in i + 1..n {
+                x[i] -= self.l[k * n + i] * x[k];
+            }
+            x[i] /= self.l[i * n + i];
+        }
+        x
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// log |A| = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n).map(|i| self.l[i * self.n + i].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> DenseMatrix {
+        let mut rng = Rng::new(seed);
+        let g = DenseMatrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = g.matmul(&g.transpose());
+        a.add_diag(n as f64 * 0.5);
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let a = random_spd(12, 3);
+        let ch = a.cholesky().unwrap();
+        let l = DenseMatrix { n_rows: 12, n_cols: 12, data: ch.l.clone() };
+        let rec = l.matmul(&l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_matvec() {
+        let a = random_spd(15, 4);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(15);
+        let b = a.matvec(&x);
+        let x2 = a.solve_spd(&b).unwrap();
+        for (u, v) in x.iter().zip(&x2) {
+            assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn inverse_spd_is_inverse() {
+        let a = random_spd(8, 6);
+        let inv = a.inverse_spd().unwrap();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&DenseMatrix::identity(8)) < 1e-9);
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = DenseMatrix::from_fn(2, 2, |i, j| if i == j { 3.0 } else { 1.0 });
+        let det: f64 = 3.0 * 3.0 - 1.0;
+        assert!((a.cholesky().unwrap().logdet() - det.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn not_pd_errors() {
+        let a = DenseMatrix::from_fn(2, 2, |i, j| if i == j { -1.0 } else { 0.0 });
+        assert!(a.cholesky().is_err());
+    }
+}

@@ -1,0 +1,200 @@
+//! Elimination tree of a symmetric sparse matrix (Davis 2006, §4.1).
+//!
+//! The etree drives everything downstream: symbolic row patterns
+//! (`row_pattern`), the reach computation of sparse triangular solves, and
+//! the column sequence visited by rank-one updates.
+
+use crate::sparse::csc::CscMatrix;
+
+/// Compute the elimination tree of symmetric `A` (full storage; only the
+/// upper triangle is read). `parent[i] == usize::MAX` marks a root.
+pub fn etree(a: &CscMatrix) -> Vec<usize> {
+    assert_eq!(a.n_rows, a.n_cols);
+    let n = a.n_rows;
+    let mut parent = vec![usize::MAX; n];
+    let mut ancestor = vec![usize::MAX; n];
+    for k in 0..n {
+        let (rows, _) = a.col(k);
+        for &i in rows {
+            if i >= k {
+                break;
+            }
+            // Traverse from i to the root of its current subtree, with
+            // path compression through `ancestor`.
+            let mut i = i;
+            while i != usize::MAX && i < k {
+                let next = ancestor[i];
+                ancestor[i] = k;
+                if next == usize::MAX {
+                    parent[i] = k;
+                }
+                i = next;
+            }
+        }
+    }
+    parent
+}
+
+/// Postorder of the forest given by `parent`.
+pub fn postorder(parent: &[usize]) -> Vec<usize> {
+    let n = parent.len();
+    // children lists
+    let mut head = vec![usize::MAX; n];
+    let mut next = vec![usize::MAX; n];
+    // iterate in reverse so children lists end up in ascending order
+    for i in (0..n).rev() {
+        let p = parent[i];
+        if p != usize::MAX {
+            next[i] = head[p];
+            head[p] = i;
+        }
+    }
+    let mut post = Vec::with_capacity(n);
+    let mut stack = Vec::new();
+    for root in 0..n {
+        if parent[root] != usize::MAX {
+            continue;
+        }
+        // iterative DFS
+        stack.push(root);
+        while let Some(&node) = stack.last() {
+            let child = head[node];
+            if child == usize::MAX {
+                post.push(node);
+                stack.pop();
+            } else {
+                head[node] = next[child];
+                stack.push(child);
+            }
+        }
+    }
+    post
+}
+
+/// Row pattern of row `k` of the Cholesky factor: the indices `i < k`
+/// reachable by walking each nonzero of `A(0..k, k)` up the etree until a
+/// node already marked for `k`. Returns indices in `out` (unsorted) and
+/// uses `mark`/`mark_tag` as a workspace (caller supplies arrays of len n).
+///
+/// This is the core of the up-looking factorization (Davis, `ereach`).
+pub fn ereach(
+    a: &CscMatrix,
+    k: usize,
+    parent: &[usize],
+    mark: &mut [usize],
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    mark[k] = k; // mark the diagonal so walks stop before k
+    let (rows, _) = a.col(k);
+    for &i in rows {
+        if i >= k {
+            break;
+        }
+        let mut i = i;
+        let mut path_start = out.len();
+        while mark[i] != k {
+            out.push(i);
+            mark[i] = k;
+            i = parent[i];
+            debug_assert!(i != usize::MAX, "etree walk fell off the root before k");
+        }
+        // The path was appended leaf->ancestor; reverse it in place so the
+        // full `out` ends up topologically sorted ancestors-last per path.
+        out[path_start..].reverse();
+        path_start = 0;
+        let _ = path_start;
+    }
+    out.sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csc::CscMatrix;
+
+    /// Arrow matrix: dense last row/col + diagonal.
+    fn arrow(n: usize) -> CscMatrix {
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i, n - 1, 1.0));
+                t.push((n - 1, i, 1.0));
+            }
+        }
+        CscMatrix::from_triplets(n, n, &t)
+    }
+
+    /// Tridiagonal matrix.
+    fn tridiag(n: usize) -> CscMatrix {
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i, i + 1, 1.0));
+                t.push((i + 1, i, 1.0));
+            }
+        }
+        CscMatrix::from_triplets(n, n, &t)
+    }
+
+    #[test]
+    fn etree_tridiagonal_is_a_path() {
+        let a = tridiag(6);
+        let p = etree(&a);
+        assert_eq!(p, vec![1, 2, 3, 4, 5, usize::MAX]);
+    }
+
+    #[test]
+    fn etree_arrow_all_point_to_last() {
+        let a = arrow(5);
+        let p = etree(&a);
+        assert_eq!(p, vec![4, 4, 4, 4, usize::MAX]);
+    }
+
+    #[test]
+    fn etree_diagonal_is_forest_of_roots() {
+        let a = CscMatrix::identity(4);
+        assert_eq!(etree(&a), vec![usize::MAX; 4]);
+    }
+
+    #[test]
+    fn postorder_is_valid() {
+        let a = arrow(7);
+        let parent = etree(&a);
+        let post = postorder(&parent);
+        assert_eq!(post.len(), 7);
+        // each node appears once, and children precede parents
+        let mut pos = vec![0usize; 7];
+        for (idx, &node) in post.iter().enumerate() {
+            pos[node] = idx;
+        }
+        for i in 0..7 {
+            if parent[i] != usize::MAX {
+                assert!(pos[i] < pos[parent[i]], "child {i} after parent");
+            }
+        }
+    }
+
+    #[test]
+    fn ereach_tridiagonal() {
+        let a = tridiag(5);
+        let parent = etree(&a);
+        let mut mark = vec![usize::MAX; 5];
+        let mut out = Vec::new();
+        ereach(&a, 3, &parent, &mut mark, &mut out);
+        // row 3 of L touches only column 2 for a tridiagonal matrix
+        assert_eq!(out, vec![2]);
+    }
+
+    #[test]
+    fn ereach_arrow_last_row_full() {
+        let a = arrow(5);
+        let parent = etree(&a);
+        let mut mark = vec![usize::MAX; 5];
+        let mut out = Vec::new();
+        ereach(&a, 4, &parent, &mut mark, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+}

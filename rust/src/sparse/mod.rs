@@ -1,0 +1,34 @@
+//! From-scratch sparse linear algebra substrate.
+//!
+//! This is the machinery the paper's sparse EP rests on (Davis, *Direct
+//! Methods for Sparse Linear Systems*, 2006; Davis & Hager 2005;
+//! Takahashi et al. 1973):
+//!
+//! * [`csc`] — compressed-sparse-column matrices (full symmetric storage).
+//! * [`dense`] — dense matrix + Cholesky oracle used by the dense-EP
+//!   baseline and by tests.
+//! * [`etree`] — elimination tree, postorder.
+//! * [`ordering`] — fill-reducing permutations (RCM, greedy min-degree).
+//! * [`symbolic`] — static symbolic Cholesky analysis (pattern incl. fill,
+//!   row-structure map used by the row-modification kernel).
+//! * [`cholesky`] — up-looking numeric LDLᵀ on the static pattern.
+//! * [`triangular`] — dense- and sparse-RHS triangular solves.
+//! * [`update`] — rank-one update/downdate (Method C) on the static pattern.
+//! * [`rowmod`] — `ldlrowmodify`, the paper's Algorithm 2.
+//! * [`takahashi`] — sparsified inverse on the factor pattern (paper eq. 11).
+
+pub mod cholesky;
+pub mod csc;
+pub mod dense;
+pub mod etree;
+pub mod ordering;
+pub mod rowmod;
+pub mod symbolic;
+pub mod takahashi;
+pub mod triangular;
+pub mod update;
+
+pub use cholesky::LdlFactor;
+pub use csc::CscMatrix;
+pub use dense::DenseMatrix;
+pub use symbolic::Symbolic;

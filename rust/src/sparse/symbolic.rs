@@ -1,0 +1,185 @@
+//! Symbolic Cholesky analysis: the *static* nonzero pattern of `L`.
+//!
+//! The paper's EP algorithm exploits the fact that the sparsity pattern of
+//! `B = I + S̃^{1/2} K S̃^{1/2}` never changes while sites are updated
+//! (section 5.2): the pattern — including fill — is analysed once here, and
+//! every numeric kernel (factorization, row modification, rank-one
+//! update/downdate, Takahashi inverse) then works in-place on it.
+
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::etree::{ereach, etree};
+
+/// Static symbolic factorization of a symmetric matrix pattern.
+#[derive(Clone, Debug)]
+pub struct Symbolic {
+    pub n: usize,
+    /// Elimination-tree parent (usize::MAX at roots).
+    pub parent: Vec<usize>,
+    /// Column pointers of the strictly-lower-triangular pattern of L.
+    pub col_ptr: Vec<usize>,
+    /// Row indices (sorted, all > column index) of the L pattern.
+    pub row_idx: Vec<usize>,
+    /// Row-structure map (CSR over the same pattern): for each row i, the
+    /// positions `p` into `row_idx`/values such that `row_idx[p] == i`,
+    /// together with the owning column. Lets `ldlrowmodify` write row i of
+    /// L without searching.
+    pub rowmap_ptr: Vec<usize>,
+    /// (column j, position p) pairs, ordered by row then column.
+    pub rowmap: Vec<(usize, usize)>,
+}
+
+impl Symbolic {
+    /// Analyse the pattern of symmetric `a` (full storage, diagonal present).
+    pub fn analyze(a: &CscMatrix) -> Symbolic {
+        assert_eq!(a.n_rows, a.n_cols);
+        let n = a.n_rows;
+        let parent = etree(a);
+        let mut mark = vec![usize::MAX; n];
+        let mut rowpat = Vec::new();
+
+        // Pass 1: column counts of L (strictly lower) via row patterns.
+        let mut counts = vec![0usize; n];
+        for k in 0..n {
+            ereach(a, k, &parent, &mut mark, &mut rowpat);
+            for &j in rowpat.iter() {
+                counts[j] += 1; // L[k, j] exists
+            }
+        }
+        let mut col_ptr = vec![0usize; n + 1];
+        for j in 0..n {
+            col_ptr[j + 1] = col_ptr[j] + counts[j];
+        }
+        let nnz = col_ptr[n];
+
+        // Pass 2: fill row indices. Processing k ascending appends rows in
+        // ascending order within each column.
+        let mut next = col_ptr.clone();
+        let mut row_idx = vec![0usize; nnz];
+        let mut mark2 = vec![usize::MAX; n];
+        for k in 0..n {
+            ereach(a, k, &parent, &mut mark2, &mut rowpat);
+            for &j in rowpat.iter() {
+                row_idx[next[j]] = k;
+                next[j] += 1;
+            }
+        }
+
+        // Row-structure map: CSR over (row -> [(col, pos)]).
+        let mut rcount = vec![0usize; n + 1];
+        for &i in &row_idx {
+            rcount[i + 1] += 1;
+        }
+        for i in 0..n {
+            rcount[i + 1] += rcount[i];
+        }
+        let rowmap_ptr = rcount.clone();
+        let mut rnext = rcount;
+        let mut rowmap = vec![(0usize, 0usize); nnz];
+        for j in 0..n {
+            for p in col_ptr[j]..col_ptr[j + 1] {
+                let i = row_idx[p];
+                rowmap[rnext[i]] = (j, p);
+                rnext[i] += 1;
+            }
+        }
+
+        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap }
+    }
+
+    /// Number of nonzeros in L including the diagonal.
+    pub fn nnz_l(&self) -> usize {
+        self.row_idx.len() + self.n
+    }
+
+    /// Paper's fill-L statistic: nnz(L) / (n(n+1)/2).
+    pub fn fill_l(&self) -> f64 {
+        self.nnz_l() as f64 / (self.n as f64 * (self.n as f64 + 1.0) / 2.0)
+    }
+
+    /// Strictly-lower pattern entries of column j.
+    #[inline]
+    pub fn col_pattern(&self, j: usize) -> &[usize] {
+        &self.row_idx[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// (column, position) pairs of row i's strictly-lower entries.
+    #[inline]
+    pub fn row_pattern(&self, i: usize) -> &[(usize, usize)] {
+        &self.rowmap[self.rowmap_ptr[i]..self.rowmap_ptr[i + 1]]
+    }
+
+    /// Position of entry (i, j) in the value array, if present.
+    pub fn find(&self, i: usize, j: usize) -> Option<usize> {
+        let lo = self.col_ptr[j];
+        let hi = self.col_ptr[j + 1];
+        self.row_idx[lo..hi].binary_search(&i).ok().map(|p| lo + p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::csc::CscMatrix;
+
+    fn tridiag(n: usize) -> CscMatrix {
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i, i + 1, 1.0));
+                t.push((i + 1, i, 1.0));
+            }
+        }
+        CscMatrix::from_triplets(n, n, &t)
+    }
+
+    #[test]
+    fn tridiagonal_no_fill() {
+        let s = Symbolic::analyze(&tridiag(6));
+        // strictly lower: one entry per column except the last
+        assert_eq!(s.row_idx.len(), 5);
+        for j in 0..5 {
+            assert_eq!(s.col_pattern(j), &[j + 1]);
+        }
+        assert!(s.col_pattern(5).is_empty());
+    }
+
+    #[test]
+    fn fill_in_happens() {
+        // "bowtie": row 0 connected to everything -> eliminating 0 first
+        // fills in the rest completely.
+        let n = 5;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i > 0 {
+                t.push((0, i, 1.0));
+                t.push((i, 0, 1.0));
+            }
+        }
+        let a = CscMatrix::from_triplets(n, n, &t);
+        let s = Symbolic::analyze(&a);
+        // After eliminating node 0 the remainder is a clique: L is full.
+        assert_eq!(s.nnz_l(), n * (n + 1) / 2);
+        assert!((s.fill_l() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rowmap_consistent_with_colmap() {
+        let a = tridiag(7);
+        let s = Symbolic::analyze(&a);
+        for i in 0..7 {
+            for &(j, p) in s.row_pattern(i) {
+                assert_eq!(s.row_idx[p], i);
+                assert!(s.col_ptr[j] <= p && p < s.col_ptr[j + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn find_locates_entries() {
+        let s = Symbolic::analyze(&tridiag(5));
+        assert!(s.find(1, 0).is_some());
+        assert!(s.find(2, 0).is_none());
+    }
+}

@@ -1,0 +1,224 @@
+//! Triangular solves against an [`LdlFactor`].
+//!
+//! The EP inner loop solves `B t = a` once per site visit with a *sparse*
+//! right-hand side `a = S̃^{1/2} K[:, i]` (paper §5.1). The forward solve
+//! only touches the etree reach of `a`'s pattern; the backward solve is
+//! column-oriented over all of `L` (the paper notes `t` is generally
+//! dense), so a solve costs `O(nnz(L))` rather than `O(n²)`.
+
+use crate::sparse::cholesky::LdlFactor;
+
+/// Union of etree paths from `seeds` (all < usize::MAX), i.e. the nonzero
+/// pattern of `L⁻¹ b` when `seeds` is the pattern of `b`. Output sorted
+/// ascending. `mark` is caller-provided scratch of length n, all entries
+/// != `tag` on entry.
+pub fn etree_reach(
+    parent: &[usize],
+    seeds: &[usize],
+    mark: &mut [usize],
+    tag: usize,
+    out: &mut Vec<usize>,
+) {
+    out.clear();
+    for &s in seeds {
+        let mut i = s;
+        while i != usize::MAX && mark[i] != tag {
+            mark[i] = tag;
+            out.push(i);
+            i = parent[i];
+        }
+    }
+    out.sort_unstable();
+}
+
+impl LdlFactor {
+    /// Dense forward solve L y = b in place (L unit lower).
+    pub fn solve_lower_dense(&self, x: &mut [f64]) {
+        let sym = &self.symbolic;
+        debug_assert_eq!(x.len(), sym.n);
+        for j in 0..sym.n {
+            let xj = x[j];
+            if xj == 0.0 {
+                continue;
+            }
+            // SAFETY: pattern indices are < n by construction.
+            unsafe {
+                let lo = *sym.col_ptr.get_unchecked(j);
+                let hi = *sym.col_ptr.get_unchecked(j + 1);
+                for p in lo..hi {
+                    let i = *sym.row_idx.get_unchecked(p);
+                    *x.get_unchecked_mut(i) -= self.l.get_unchecked(p) * xj;
+                }
+            }
+        }
+    }
+
+    /// Dense backward solve Lᵀ x = y in place.
+    pub fn solve_upper_dense(&self, x: &mut [f64]) {
+        let sym = &self.symbolic;
+        debug_assert_eq!(x.len(), sym.n);
+        for j in (0..sym.n).rev() {
+            // SAFETY: pattern indices are < n by construction.
+            unsafe {
+                let lo = *sym.col_ptr.get_unchecked(j);
+                let hi = *sym.col_ptr.get_unchecked(j + 1);
+                let mut s = *x.get_unchecked(j);
+                for p in lo..hi {
+                    s -= self.l.get_unchecked(p) * x.get_unchecked(*sym.row_idx.get_unchecked(p));
+                }
+                *x.get_unchecked_mut(j) = s;
+            }
+        }
+    }
+
+    /// Divide by D in place.
+    pub fn solve_diag_dense(&self, x: &mut [f64]) {
+        for (xi, di) in x.iter_mut().zip(&self.d) {
+            *xi /= di;
+        }
+    }
+
+    /// Full solve A x = b with dense b (A = L D Lᵀ).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        self.solve_in_place(&mut x);
+        x
+    }
+
+    pub fn solve_in_place(&self, x: &mut [f64]) {
+        self.solve_lower_dense(x);
+        self.solve_diag_dense(x);
+        self.solve_upper_dense(x);
+    }
+
+    /// Solve A t = a with *sparse* a, writing the dense result into `t`
+    /// (caller-provided, will be fully overwritten on the reach and must be
+    /// zero elsewhere — pass a zeroed scratch that you re-zero afterwards,
+    /// or use [`SparseSolveWorkspace`]).
+    ///
+    /// `a_rows`/`a_vals` are the sorted pattern/values of `a`.
+    pub fn solve_sparse_rhs(
+        &self,
+        a_rows: &[usize],
+        a_vals: &[f64],
+        ws: &mut SparseSolveWorkspace,
+        t: &mut [f64],
+    ) {
+        let sym = self.symbolic.clone();
+        ws.tag += 1;
+        etree_reach(&sym.parent, a_rows, &mut ws.mark, ws.tag, &mut ws.reach);
+        // scatter a
+        for (&i, &v) in a_rows.iter().zip(a_vals) {
+            t[i] = v;
+        }
+        // forward solve restricted to the reach (ascending = topological)
+        for &j in ws.reach.iter() {
+            let xj = t[j];
+            if xj != 0.0 {
+                // SAFETY: pattern indices are < n by construction.
+                unsafe {
+                    let lo = *sym.col_ptr.get_unchecked(j);
+                    let hi = *sym.col_ptr.get_unchecked(j + 1);
+                    for p in lo..hi {
+                        *t.get_unchecked_mut(*sym.row_idx.get_unchecked(p)) -=
+                            self.l.get_unchecked(p) * xj;
+                    }
+                }
+            }
+        }
+        // diagonal on the reach
+        for &j in ws.reach.iter() {
+            t[j] /= self.d[j];
+        }
+        // backward solve: t is generally dense from here on
+        self.solve_upper_dense(t);
+    }
+}
+
+/// Scratch for repeated sparse-RHS solves (no allocation per call).
+pub struct SparseSolveWorkspace {
+    pub mark: Vec<usize>,
+    pub tag: usize,
+    pub reach: Vec<usize>,
+}
+
+impl SparseSolveWorkspace {
+    pub fn new(n: usize) -> Self {
+        SparseSolveWorkspace { mark: vec![0; n], tag: 0, reach: Vec::with_capacity(n) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::symbolic::Symbolic;
+    use crate::testutil::{assert_close, random_sparse_spd, random_vec};
+    use std::sync::Arc;
+
+    #[test]
+    fn dense_solve_matches_dense_oracle() {
+        for seed in 0..6 {
+            let a = random_sparse_spd(30, 0.2, seed);
+            let sym = Arc::new(Symbolic::analyze(&a));
+            let f = LdlFactor::factor(sym, &a).unwrap();
+            let b = random_vec(30, seed);
+            let x = f.solve(&b);
+            let x_ref = a.to_dense().solve_spd(&b).unwrap();
+            assert_close(&x, &x_ref, 1e-9, "solve");
+        }
+    }
+
+    #[test]
+    fn sparse_rhs_solve_matches_dense_solve() {
+        for seed in 0..6 {
+            let n = 40;
+            let a = random_sparse_spd(n, 0.1, seed + 100);
+            let sym = Arc::new(Symbolic::analyze(&a));
+            let f = LdlFactor::factor(sym, &a).unwrap();
+            // sparse rhs: a few entries
+            let rows = vec![3usize, 17, 29];
+            let vals = vec![1.5, -0.5, 2.0];
+            let mut b = vec![0.0; n];
+            for (&i, &v) in rows.iter().zip(&vals) {
+                b[i] = v;
+            }
+            let x_ref = f.solve(&b);
+            let mut ws = SparseSolveWorkspace::new(n);
+            let mut t = vec![0.0; n];
+            f.solve_sparse_rhs(&rows, &vals, &mut ws, &mut t);
+            assert_close(&t, &x_ref, 1e-10, "sparse-rhs solve");
+        }
+    }
+
+    #[test]
+    fn reach_on_path_etree() {
+        // tridiagonal -> etree is a path; reach of {2} in a 6-node path is 2..6
+        let parent = vec![1, 2, 3, 4, 5, usize::MAX];
+        let mut mark = vec![0usize; 6];
+        let mut out = Vec::new();
+        etree_reach(&parent, &[2], &mut mark, 1, &mut out);
+        assert_eq!(out, vec![2, 3, 4, 5]);
+        // union of two seeds dedups
+        etree_reach(&parent, &[4, 2], &mut mark, 2, &mut out);
+        assert_eq!(out, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn repeated_solves_with_shared_workspace() {
+        let n = 25;
+        let a = random_sparse_spd(n, 0.15, 5);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::factor(sym, &a).unwrap();
+        let mut ws = SparseSolveWorkspace::new(n);
+        for i in 0..n {
+            let rows = vec![i];
+            let vals = vec![1.0];
+            let mut t = vec![0.0; n];
+            f.solve_sparse_rhs(&rows, &vals, &mut ws, &mut t);
+            let mut e = vec![0.0; n];
+            e[i] = 1.0;
+            let x_ref = f.solve(&e);
+            assert_close(&t, &x_ref, 1e-10, "e_i solve");
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! Shared randomized-test helpers (the crate's proptest substitute).
+//!
+//! Each helper is deterministic given a seed; property tests loop over many
+//! seeds so failures are reproducible by seed number.
+
+use crate::rng::Rng;
+use crate::sparse::csc::CscMatrix;
+
+/// Random sparse symmetric positive-definite matrix: a random sparse
+/// symmetric pattern with `density` off-diagonal fill, values in
+/// [-1, 1], made SPD by diagonal dominance.
+pub fn random_sparse_spd(n: usize, density: f64, seed: u64) -> CscMatrix {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9).wrapping_add(17));
+    let mut triplets = Vec::new();
+    let mut row_sums = vec![0.0f64; n];
+    for i in 0..n {
+        for j in 0..i {
+            if rng.uniform() < density {
+                let v = rng.uniform_in(-1.0, 1.0);
+                triplets.push((i, j, v));
+                triplets.push((j, i, v));
+                row_sums[i] += v.abs();
+                row_sums[j] += v.abs();
+            }
+        }
+    }
+    for i in 0..n {
+        triplets.push((i, i, row_sums[i] + 1.0 + rng.uniform()));
+    }
+    CscMatrix::from_triplets(n, n, &triplets)
+}
+
+/// Random dense vector with entries in [-1, 1].
+pub fn random_vec(n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed.wrapping_add(0xabcd));
+    (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+}
+
+/// Random geometric points in `[0, side]^d` — the kind of input geometry
+/// the paper's CS covariance matrices come from.
+pub fn random_points(n: usize, d: usize, side: f64, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed.wrapping_add(0x5151));
+    (0..n).map(|_| (0..d).map(|_| rng.uniform_in(0.0, side)).collect()).collect()
+}
+
+/// Assert two slices are elementwise close.
+pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())),
+            "{what}: element {k}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spd_generator_is_spd_and_symmetric() {
+        for seed in 0..5 {
+            let a = random_sparse_spd(20, 0.3, seed);
+            assert!(a.check());
+            assert!(a.is_symmetric(0.0));
+            assert!(a.to_dense().cholesky().is_ok(), "seed {seed} not SPD");
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! Integration tests over the public API: data generation → model fit →
+//! prediction → metrics, across inference backends and covariance
+//! families, plus invariants that span modules (ordering × EP × predict).
+
+use csgp::data::synthetic::{cluster_dataset, uniform_points, ClusterConfig};
+use csgp::data::uci;
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::marginal::EpOptions;
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::gp::SparseEp;
+use csgp::rng::Rng;
+use csgp::sparse::ordering::Ordering;
+
+fn cluster(n: usize, seed: u64) -> csgp::data::Dataset {
+    cluster_dataset(&ClusterConfig::paper_2d(n), seed)
+}
+
+#[test]
+fn full_pipeline_sparse_pp3_beats_chance_substantially() {
+    let data = cluster(700, 3);
+    let (train, test) = data.split(500);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let fitted = model.infer_only(&train.x, &train.y).unwrap();
+    let m = fitted.evaluate(&test.x, &test.y);
+    assert!(m.err < 0.30, "err = {}", m.err);
+    assert!(m.nlpd < 0.65, "nlpd = {}", m.nlpd);
+    // probabilities are calibrated-ish: mean prob of predicted class > 0.5
+    let probs = fitted.predict_proba(&test.x);
+    let conf: f64 =
+        probs.iter().map(|&p| p.max(1.0 - p)).sum::<f64>() / probs.len() as f64;
+    assert!(conf > 0.6, "mean confidence {conf}");
+}
+
+#[test]
+fn every_covariance_family_runs_through_sparse_ep() {
+    let data = cluster(120, 9);
+    for kind in [CovKind::Pp(0), CovKind::Pp(1), CovKind::Pp(2), CovKind::Pp(3), CovKind::Matern32, CovKind::Matern52, CovKind::Se]
+    {
+        // globally supported kernels exercise the dense-pattern path
+        let ls = if matches!(kind, CovKind::Pp(_)) { 1.8 } else { 1.2 };
+        let cov = CovFunction::new(kind, 2, 1.0, ls);
+        let ep = SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &EpOptions::default(), None)
+            .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+        assert!(ep.log_z.is_finite(), "{kind:?}");
+        assert!(ep.converged, "{kind:?} did not converge");
+    }
+}
+
+#[test]
+fn ordering_choice_does_not_change_the_answer() {
+    let data = cluster(150, 21);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
+    let opts = EpOptions { max_sweeps: 100, tol: 1e-10, damping: 1.0 };
+    let runs: Vec<SparseEp> = [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree]
+        .iter()
+        .map(|&o| SparseEp::run(&cov, &data.x, &data.y, o, &opts, None).unwrap())
+        .collect();
+    for pair in runs.windows(2) {
+        assert!(
+            (pair[0].log_z - pair[1].log_z).abs() < 1e-7,
+            "{} vs {}",
+            pair[0].log_z,
+            pair[1].log_z
+        );
+        // predictions agree at random probe points
+        let mut rng = Rng::new(5);
+        for _ in 0..10 {
+            let p = vec![rng.uniform_in(0.0, 10.0), rng.uniform_in(0.0, 10.0)];
+            let (m0, v0) = pair[0].predict_latent(&cov, &p);
+            let (m1, v1) = pair[1].predict_latent(&cov, &p);
+            assert!((m0 - m1).abs() < 1e-6 && (v0 - v1).abs() < 1e-6);
+        }
+    }
+    // but the fill should differ (that's the point of ordering)
+    assert!(runs[0].fill_l > runs[1].fill_l, "natural should have more fill than RCM");
+}
+
+#[test]
+fn uci_analogues_fit_with_all_models() {
+    let spec = uci::UCI_SPECS.iter().find(|s| s.name == "crabs").unwrap();
+    let data = uci::generate(spec, 4);
+    for inference in [
+        Inference::Dense,
+        Inference::Sparse(Ordering::Rcm),
+        Inference::Fic { m: 12 },
+    ] {
+        let kind = if matches!(inference, Inference::Sparse(_)) { CovKind::Pp(3) } else { CovKind::Se };
+        let model = GpClassifier::new(CovFunction::new(kind, spec.d, 1.0, 3.0), inference);
+        let fitted = model.infer_only(&data.x, &data.y).unwrap();
+        let m = fitted.evaluate(&data.x, &data.y); // train-set sanity
+        assert!(m.err < 0.35, "{:?}: train err {}", fitted.report.log_z, m.err);
+    }
+}
+
+#[test]
+fn hyperparameter_optimization_moves_toward_the_data_scale() {
+    // data drawn with lengthscale 2: starting from 0.5, the MAP search
+    // should increase the lengthscale and the log posterior
+    let x = uniform_points(150, 2, 10.0, 31);
+    let truth = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+    let mut rng = Rng::new(8);
+    let f = csgp::gp::regression::sample_gp(&truth, 1e-6, &x, &mut rng);
+    let y: Vec<f64> = f.iter().map(|&v| if v > 0.0 { 1.0 } else { -1.0 }).collect();
+    let mut model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 0.5),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    model.opt_opts.max_iters = 12;
+    let before = model.infer_only(&x, &y).unwrap().report.log_post;
+    let fitted = model.fit(&x, &y).unwrap();
+    assert!(fitted.report.log_post > before, "{} !> {before}", fitted.report.log_post);
+    assert!(
+        fitted.cov.lengthscales[0] > 0.5,
+        "lengthscale should grow from 0.5, got {}",
+        fitted.cov.lengthscales[0]
+    );
+}
+
+#[test]
+fn sparse_ep_scales_better_than_dense_on_sparse_problems() {
+    // not a benchmark — just the qualitative invariant on a mid-size case
+    let data = cluster(800, 77);
+    let cov_cs = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.2);
+    let cov_se = CovFunction::new(CovKind::Se, 2, 1.0, 1.2);
+    let t0 = std::time::Instant::now();
+    let se_sparse = GpClassifier::new(cov_cs, Inference::Sparse(Ordering::Rcm))
+        .infer_only(&data.x, &data.y)
+        .unwrap();
+    let t_sparse = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let _de = GpClassifier::new(cov_se, Inference::Dense).infer_only(&data.x, &data.y).unwrap();
+    let t_dense = t0.elapsed();
+    assert!(
+        t_sparse < t_dense,
+        "sparse {t_sparse:?} should beat dense {t_dense:?} (fill-L {})",
+        se_sparse.report.fill_l
+    );
+}
+
+#[test]
+fn cv_and_jobs_compose() {
+    let data = cluster(160, 15);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let res = csgp::data::cv::cross_validate(&model, &data, 4, false, 2).unwrap();
+    assert!(res.err < 0.4);
+    let mgr = csgp::coordinator::JobManager::start(2);
+    let id = mgr
+        .submit(csgp::coordinator::TrainSpec {
+            dataset: data,
+            cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5),
+            inference: Inference::Sparse(Ordering::Rcm),
+            optimize: false,
+        })
+        .unwrap();
+    let st = mgr.wait(id, std::time::Duration::from_secs(60)).unwrap();
+    assert!(matches!(st, csgp::coordinator::JobStatus::Done { .. }), "{st:?}");
+    mgr.shutdown();
+}
