@@ -6,7 +6,10 @@
 //! hours). CSGP_FULL=1 extends the sweep. Times are a single EP run to
 //! convergence at fixed, sensible hyperparameters (the paper measures at
 //! the posterior mode; the *ratio* between methods is what Figure 3
-//! conveys and is preserved).
+//! conveys and is preserved). Sparse covariance assembly goes through the
+//! `geom::NeighborIndex` path (O(n·k) candidate pairs), so at the large-n
+//! end of the sweep the EP column measures EP, not the O(n²) assembly the
+//! seed paid on top of it.
 
 use std::time::Instant;
 

@@ -1,44 +1,83 @@
-//! Perf: covariance assembly through the AOT XLA tile artifact vs the
-//! native rust loop — the L1/L2 hot path measured from the L3 side.
-//! (Numbers are CPU-PJRT; on a real TPU the tile runs on the MXU and the
-//! crossover moves sharply toward XLA — see DESIGN.md §Hardware-Adaptation.)
+//! Perf: CS-covariance assembly through the spatial [`NeighborIndex`]
+//! (`cov_matrix`, the default path at n ≥ 64) vs the all-pairs O(n²) scan
+//! (`cov_matrix_brute`, the seed implementation, kept as the reference /
+//! comparison path). The acceptance target is ≥5× at n = 4000, dim = 2,
+//! pp3. Also measures the `PatternCache` hit path (values re-evaluated on
+//! a cached pattern — what every non-growing SCG step pays) and the
+//! cross-covariance column used per prediction.
+//!
+//! `CSGP_FULL=1` extends the sweep; `CSGP_SKIP_BRUTE=1` drops the
+//! brute-force column (for profiling just the indexed path at large n).
 
 use std::time::Instant;
 
+use csgp::bench::{fmt_duration, header, row, Bencher};
 use csgp::data::synthetic::uniform_points;
+use csgp::geom::NeighborIndex;
+use csgp::gp::cache::PatternCache;
 use csgp::gp::covariance::{CovFunction, CovKind};
-use csgp::runtime::{Runtime, XlaCovarianceAssembler};
+use csgp::sparse::ordering::Ordering;
 
 fn main() {
-    let Ok(rt) = Runtime::open_default() else {
-        println!("artifacts/ not built — run `make artifacts` first");
-        return;
-    };
-    let asm = XlaCovarianceAssembler::new(&rt);
     let full = std::env::var("CSGP_FULL").is_ok();
-    let ns: Vec<usize> = if full { vec![512, 1024, 2048, 4096] } else { vec![256, 512, 1024, 2048] };
+    let skip_brute = std::env::var("CSGP_SKIP_BRUTE").is_ok();
+    let ns: Vec<usize> =
+        if full { vec![1000, 2000, 4000, 8000, 16000] } else { vec![1000, 2000, 4000] };
 
-    println!("# Perf: covariance assembly — XLA tiles vs native rust");
-    println!("| n | kind | native | xla (PJRT CPU) | nnz agreement |");
-    println!("|---|---|---|---|---|");
+    println!("# Perf: CS covariance assembly — neighbor index vs brute force");
+    println!("# (pp3, dim 2, lengthscale 1.0 on [0,10]²; identical pattern & values)");
+    header(&["n", "brute O(n²)", "indexed O(n·k)", "speedup", "cache-hit refill", "nnz"]);
     for &n in &ns {
         let x = uniform_points(n, 2, 10.0, 77);
-        for kind in [CovKind::Se, CovKind::Pp(3)] {
-            let cov = CovFunction::new(kind, 2, 1.0, 1.5);
-            let t0 = Instant::now();
-            let k_native = cov.cov_matrix(&x);
-            let t_native = t0.elapsed();
-            let t0 = Instant::now();
-            let k_xla = asm.cov_matrix(&cov, &x).unwrap();
-            let t_xla = t0.elapsed();
-            assert_eq!(k_native.nnz(), k_xla.nnz(), "pattern mismatch");
-            println!(
-                "| {n} | {:?} | {} | {} | {} nnz ✓ |",
-                kind,
-                csgp::bench::fmt_duration(t_native),
-                csgp::bench::fmt_duration(t_xla),
-                k_native.nnz()
-            );
-        }
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.0);
+        let b = Bencher::quick();
+
+        let indexed = b.run(|| cov.cov_matrix(&x));
+        let k_indexed = cov.cov_matrix(&x);
+
+        // the PatternCache hit path: values only, structure reused
+        let mut cache = PatternCache::new(Ordering::Natural);
+        let cached = cache.pattern_for(&cov, &x);
+        let refill = b.run(|| cov.cov_values_on_pattern(&x, &cached.pattern));
+
+        let (brute_cell, speedup_cell) = if skip_brute {
+            ("skipped".to_string(), "-".to_string())
+        } else {
+            let brute = b.run(|| cov.cov_matrix_brute(&x));
+            let k_brute = cov.cov_matrix_brute(&x);
+            assert_eq!(k_indexed, k_brute, "indexed assembly must match brute force exactly");
+            let speedup = brute.median.as_secs_f64() / indexed.median.as_secs_f64();
+            (fmt_duration(brute.median), format!("{speedup:.1}x"))
+        };
+        row(&[
+            n.to_string(),
+            brute_cell,
+            fmt_duration(indexed.median),
+            speedup_cell,
+            fmt_duration(refill.median),
+            k_indexed.nnz().to_string(),
+        ]);
     }
+
+    // per-prediction cross-covariance column: indexed vs full scan
+    println!("\n# Cross-covariance per test point (pp3, dim 2, n = 4000)");
+    header(&["path", "time / query", "nnz(k*)"]);
+    let n = 4000;
+    let x = uniform_points(n, 2, 10.0, 77);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.0);
+    let index = NeighborIndex::build(&x, cov.support_radius().unwrap());
+    let queries = uniform_points(256, 2, 10.0, 123);
+    let mut rows = Vec::new();
+    let mut vals = Vec::new();
+    for (label, idx) in [("scan", None), ("indexed", Some(&index))] {
+        let t0 = Instant::now();
+        let mut nnz = 0usize;
+        for q in &queries {
+            cov.cross_cov_into(&x, q, idx, &mut rows, &mut vals);
+            nnz += rows.len();
+        }
+        let per = t0.elapsed() / queries.len() as u32;
+        row(&[label.to_string(), fmt_duration(per), (nnz / queries.len()).to_string()]);
+    }
+    println!("\ntarget: indexed assembly >= 5x brute at n = 4000 (pp3, dim 2).");
 }

@@ -1,15 +1,16 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): the full system on the
 //! paper's §6.1 simulation workload, exercising every layer —
 //!
-//!   L1/L2  covariance assembly through the AOT Pallas/XLA tile artifact,
+//!   L1/L2  covariance assembly through the artifact runtime (native
+//!          interpreter by default; PJRT behind `--features xla`),
 //!   L3     sparse EP (Algorithm 1: rowmod + sparse solves) with MAP-II
 //!          hyperparameter optimization (SCG + Takahashi gradients),
 //!   serve  batched prediction through the coordinator with the
-//!          `predict_probit` XLA artifact on the response path,
+//!          `predict_probit` stage on the response path,
 //!
 //! and compares against the dense k_se baseline on the same split.
 //!
-//! Run: `make artifacts && cargo run --release --example simulation_study`
+//! Run: `cargo run --release --example simulation_study`
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,7 +20,7 @@ use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
 use csgp::gp::covariance::{CovFunction, CovKind};
 use csgp::gp::model::{GpClassifier, Inference};
 use csgp::gp::predict::evaluate;
-use csgp::runtime::{Runtime, XlaCovarianceAssembler};
+use csgp::runtime::Runtime;
 use csgp::sparse::ordering::Ordering;
 
 fn main() {
@@ -29,24 +30,27 @@ fn main() {
     let (train, test) = data.split(n_train);
     println!("== E2E simulation study: n_train = {n_train}, n_test = {n_test}, 2-D cluster data ==");
 
-    // --- L1/L2: covariance assembly through the XLA artifact -------------
-    let rt = Runtime::open_default().expect("run `make artifacts` first");
-    println!("PJRT platform: {}", rt.platform());
+    // --- L1/L2: covariance assembly through the artifact runtime ---------
+    let rt = Runtime::open_default().expect("runtime open");
+    println!("runtime backend: {}", rt.platform());
     let cov0 = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3);
-    let asm = XlaCovarianceAssembler::new(&rt);
     let t0 = Instant::now();
-    let k_xla = asm.cov_matrix(&cov0, &train.x).expect("XLA covariance assembly");
+    let k_rt = rt.cov_matrix(&cov0, &train.x).expect("runtime covariance assembly");
     let t_asm = t0.elapsed();
-    let k_native = cov0.cov_matrix(&train.x);
-    let max_diff = k_xla
+    // brute force is an independent path from the runtime's index-backed
+    // assembly, so the agreement figure is a real cross-check
+    let k_ref = cov0.cov_matrix_brute(&train.x);
+    assert_eq!(k_rt.col_ptr, k_ref.col_ptr, "assembly pattern mismatch vs brute force");
+    let max_diff = k_rt
         .values
         .iter()
-        .zip(&k_native.values)
+        .zip(&k_ref.values)
         .map(|(a, b)| (a - b).abs())
         .fold(0.0, f64::max);
     println!(
-        "covariance via XLA tile artifact: {} nnz in {:?} (native agreement {max_diff:.1e})",
-        k_xla.nnz(),
+        "covariance via {}: {} nnz in {:?} (brute-force agreement {max_diff:.1e})",
+        rt.platform(),
+        k_rt.nnz(),
         t_asm
     );
 

@@ -118,6 +118,10 @@ fn serve_loop(
     config: ServiceConfig,
     stats: Arc<ServiceStats>,
 ) {
+    // one predictor for the worker's lifetime: the neighbor index over the
+    // training inputs and the sparse-solve workspace are shared by every
+    // batch instead of rebuilt per request
+    let mut predictor = model.predictor();
     loop {
         // block for the first request of a batch
         let first = match rx.recv() {
@@ -143,9 +147,9 @@ fn serve_loop(
             .batched_items_max
             .fetch_max(batch.len() as u64, AtomicOrdering::Relaxed);
 
-        // latent predictions (sparse solves in rust)
+        // latent predictions (sparse solves in rust, shared workspace)
         let latents: Vec<(f64, f64)> =
-            batch.iter().map(|r| model.predict_latent(&r.x)).collect();
+            batch.iter().map(|r| predictor.predict_latent(&r.x)).collect();
         // probability stage: XLA artifact if available, else native probit
         let probs: Vec<f64> = match &runtime {
             Some(rt) => {

@@ -1,0 +1,214 @@
+//! Uniform grid (cell list) for low-dimensional radius queries.
+//!
+//! Points are binned into axis-aligned cubic cells of a fixed size chosen
+//! at build time (normally the covariance support radius). A radius-`r`
+//! query visits only the cells intersecting the query ball, so for the
+//! paper's geometric point sets the cost per query is `O(k)` in the number
+//! of returned candidates rather than `O(n)`.
+//!
+//! The cell size is fixed at build time but queries accept *any* radius:
+//! the scan range adapts, so a single grid serves a whole hyperparameter
+//! search even as the support radius moves. When the requested radius is
+//! much larger than the cell size the query switches to iterating the
+//! occupied cells directly (never slower than a constant factor over the
+//! brute-force scan).
+
+use std::collections::HashMap;
+
+/// Dimensions up to which the query's cell-window scratch lives on the
+/// stack (queries stay allocation-free).
+pub const GRID_STACK_DIM: usize = 16;
+
+/// Cell-list spatial index over a fixed point set.
+#[derive(Clone, Debug)]
+pub struct GridIndex {
+    points: Vec<Vec<f64>>,
+    dim: usize,
+    cell: f64,
+    mins: Vec<f64>,
+    /// Occupied cells only: integer cell coordinates -> point indices.
+    cells: HashMap<Vec<i64>, Vec<u32>>,
+}
+
+impl GridIndex {
+    /// Build with the given cell size (clamped to a sane positive value).
+    pub fn build(x: &[Vec<f64>], cell: f64) -> GridIndex {
+        let dim = x.first().map(|p| p.len()).unwrap_or(0);
+        let mut mins = vec![0.0; dim];
+        let mut maxs = vec![0.0; dim];
+        for d in 0..dim {
+            mins[d] = x.iter().map(|p| p[d]).fold(f64::INFINITY, f64::min);
+            maxs[d] = x.iter().map(|p| p[d]).fold(f64::NEG_INFINITY, f64::max);
+        }
+        let extent = (0..dim).map(|d| maxs[d] - mins[d]).fold(0.0f64, f64::max);
+        let mut cell = if cell.is_finite() && cell > 0.0 { cell } else { 1.0 };
+        // keep the grid resolution bounded so the worst-case number of
+        // distinct cell keys stays manageable
+        if extent > 0.0 {
+            cell = cell.max(extent / 1024.0);
+        }
+        let mut cells: HashMap<Vec<i64>, Vec<u32>> = HashMap::new();
+        let mut key = vec![0i64; dim];
+        for (i, p) in x.iter().enumerate() {
+            for d in 0..dim {
+                key[d] = ((p[d] - mins[d]) / cell).floor() as i64;
+            }
+            cells.entry(key.clone()).or_default().push(i as u32);
+        }
+        GridIndex { points: x.to_vec(), dim, cell, mins, cells }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Indices of all points with Euclidean distance <= `radius` from `q`
+    /// (inclusive; the query point's own index is included if it is in the
+    /// set). Results are appended to `out` unsorted.
+    ///
+    /// Queries on the serving hot path must not allocate: the cell window
+    /// lives on the stack up to [`GRID_STACK_DIM`] dimensions (the grid is
+    /// the low-D backend, so this covers every real caller) and falls back
+    /// to heap scratch above that.
+    pub fn neighbors_within(&self, q: &[f64], radius: f64, out: &mut Vec<usize>) {
+        if self.points.is_empty() || radius < 0.0 {
+            return;
+        }
+        if self.dim <= GRID_STACK_DIM {
+            let mut lo = [0i64; GRID_STACK_DIM];
+            let mut hi = [0i64; GRID_STACK_DIM];
+            let mut key = [0i64; GRID_STACK_DIM];
+            let d = self.dim;
+            self.query_window(q, radius, &mut lo[..d], &mut hi[..d], &mut key[..d], out);
+        } else {
+            let mut lo = vec![0i64; self.dim];
+            let mut hi = vec![0i64; self.dim];
+            let mut key = vec![0i64; self.dim];
+            self.query_window(q, radius, &mut lo, &mut hi, &mut key, out);
+        }
+    }
+
+    fn query_window(
+        &self,
+        q: &[f64],
+        radius: f64,
+        lo: &mut [i64],
+        hi: &mut [i64],
+        key: &mut [i64],
+        out: &mut Vec<usize>,
+    ) {
+        let r2 = radius * radius;
+        // cell-coordinate window intersecting the query ball
+        let mut window: u64 = 1;
+        for d in 0..self.dim {
+            lo[d] = ((q[d] - radius - self.mins[d]) / self.cell).floor() as i64;
+            hi[d] = ((q[d] + radius - self.mins[d]) / self.cell).floor() as i64;
+            window = window.saturating_mul((hi[d] - lo[d] + 1) as u64);
+        }
+        if window as usize > 4 * self.cells.len().max(1) {
+            // radius much larger than the cell size: walking the window
+            // would touch mostly-empty keys, so scan occupied cells instead
+            for (ckey, pts) in self.cells.iter() {
+                if (0..self.dim).any(|d| ckey[d] < lo[d] || ckey[d] > hi[d]) {
+                    continue;
+                }
+                self.scan_cell(pts, q, r2, out);
+            }
+            return;
+        }
+        // odometer over the (small) cell window
+        key.copy_from_slice(lo);
+        loop {
+            // Vec<i64> keys borrow-match against &[i64]
+            if let Some(pts) = self.cells.get(&*key) {
+                self.scan_cell(pts, q, r2, out);
+            }
+            // increment
+            let mut d = 0;
+            loop {
+                if d == self.dim {
+                    return;
+                }
+                key[d] += 1;
+                if key[d] <= hi[d] {
+                    break;
+                }
+                key[d] = lo[d];
+                d += 1;
+            }
+        }
+    }
+
+    fn scan_cell(&self, pts: &[u32], q: &[f64], r2: f64, out: &mut Vec<usize>) {
+        for &i in pts {
+            let p = &self.points[i as usize];
+            let mut d2 = 0.0;
+            for d in 0..self.dim {
+                let diff = p[d] - q[d];
+                d2 += diff * diff;
+            }
+            if d2 <= r2 {
+                out.push(i as usize);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_points;
+
+    fn brute(x: &[Vec<f64>], q: &[f64], r: f64) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..x.len())
+            .filter(|&i| {
+                let d2: f64 = x[i].iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+                d2 <= r * r
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_at_many_radii() {
+        for dim in [1usize, 2, 3] {
+            let x = random_points(120, dim, 8.0, dim as u64 + 3);
+            let g = GridIndex::build(&x, 1.5);
+            for (qi, r) in [(0usize, 0.5), (3, 1.5), (7, 3.0), (11, 20.0), (13, 0.0)] {
+                let mut got = Vec::new();
+                g.neighbors_within(&x[qi], r, &mut got);
+                got.sort_unstable();
+                assert_eq!(got, brute(&x, &x[qi], r), "dim {dim} q {qi} r {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn includes_self_and_duplicates() {
+        let mut x = random_points(20, 2, 5.0, 9);
+        x.push(x[4].clone()); // exact duplicate
+        let g = GridIndex::build(&x, 1.0);
+        let mut out = Vec::new();
+        g.neighbors_within(&x[4], 0.0, &mut out);
+        out.sort_unstable();
+        assert!(out.contains(&4) && out.contains(&20), "{out:?}");
+    }
+
+    #[test]
+    fn empty_set_is_fine() {
+        let g = GridIndex::build(&[], 1.0);
+        let mut out = Vec::new();
+        g.neighbors_within(&[0.0, 0.0], 1.0, &mut out);
+        assert!(out.is_empty());
+        assert!(g.is_empty());
+    }
+}

@@ -1,0 +1,180 @@
+//! kd-tree for radius queries in moderate-to-high dimension.
+//!
+//! The grid cell list degrades as the dimension grows (cell occupancy
+//! drops, the scan window blows up as `3^D`), so above `D = 3` the
+//! [`NeighborIndex`](crate::geom::NeighborIndex) switches to this balanced
+//! kd-tree. Built once per point set in `O(n log² n)`; radius queries
+//! prune subtrees by the splitting-plane distance and are allocation-free
+//! (recursion depth is `O(log n)` thanks to the median split).
+
+/// One tree node: a splitting point plus children. `usize::MAX` marks a
+/// missing child.
+#[derive(Clone, Debug)]
+struct Node {
+    /// Index of the splitting point in the original point set.
+    point: usize,
+    axis: usize,
+    left: usize,
+    right: usize,
+}
+
+const NONE: usize = usize::MAX;
+
+/// Balanced kd-tree over a fixed point set.
+#[derive(Clone, Debug)]
+pub struct KdTree {
+    points: Vec<Vec<f64>>,
+    dim: usize,
+    nodes: Vec<Node>,
+    root: usize,
+}
+
+impl KdTree {
+    pub fn build(x: &[Vec<f64>]) -> KdTree {
+        let dim = x.first().map(|p| p.len()).unwrap_or(0);
+        let mut tree = KdTree {
+            points: x.to_vec(),
+            dim,
+            nodes: Vec::with_capacity(x.len()),
+            root: NONE,
+        };
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        tree.root = tree.build_rec(&mut idx, 0);
+        tree
+    }
+
+    fn build_rec(&mut self, idx: &mut [usize], depth: usize) -> usize {
+        if idx.is_empty() {
+            return NONE;
+        }
+        let axis = if self.dim == 0 { 0 } else { depth % self.dim };
+        idx.sort_unstable_by(|&a, &b| {
+            self.points[a][axis]
+                .partial_cmp(&self.points[b][axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mid = idx.len() / 2;
+        let point = idx[mid];
+        let node_id = self.nodes.len();
+        self.nodes.push(Node { point, axis, left: NONE, right: NONE });
+        // recurse on copies of the two halves (idx is borrowed mutably)
+        let mut left_idx: Vec<usize> = idx[..mid].to_vec();
+        let mut right_idx: Vec<usize> = idx[mid + 1..].to_vec();
+        let left = self.build_rec(&mut left_idx, depth + 1);
+        let right = self.build_rec(&mut right_idx, depth + 1);
+        self.nodes[node_id].left = left;
+        self.nodes[node_id].right = right;
+        node_id
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Indices of all points with Euclidean distance <= `radius` from `q`
+    /// (inclusive). Results are appended to `out` unsorted.
+    ///
+    /// Recursive and allocation-free: the tree is median-split at build
+    /// time, so the depth is `O(log n)` regardless of the input geometry.
+    pub fn neighbors_within(&self, q: &[f64], radius: f64, out: &mut Vec<usize>) {
+        if self.root == NONE || radius < 0.0 {
+            return;
+        }
+        self.search(self.root, q, radius * radius, out);
+    }
+
+    fn search(&self, id: usize, q: &[f64], r2: f64, out: &mut Vec<usize>) {
+        let node = &self.nodes[id];
+        let p = &self.points[node.point];
+        let mut d2 = 0.0;
+        for d in 0..self.dim {
+            let diff = p[d] - q[d];
+            d2 += diff * diff;
+        }
+        if d2 <= r2 {
+            out.push(node.point);
+        }
+        let delta = q[node.axis] - p[node.axis];
+        let (near, far) = if delta < 0.0 {
+            (node.left, node.right)
+        } else {
+            (node.right, node.left)
+        };
+        if near != NONE {
+            self.search(near, q, r2, out);
+        }
+        if far != NONE && delta * delta <= r2 {
+            self.search(far, q, r2, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::random_points;
+
+    fn brute(x: &[Vec<f64>], q: &[f64], r: f64) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..x.len())
+            .filter(|&i| {
+                let d2: f64 = x[i].iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+                d2 <= r * r
+            })
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_across_dims() {
+        for dim in [1usize, 2, 4, 6, 10] {
+            let x = random_points(150, dim, 6.0, 100 + dim as u64);
+            let t = KdTree::build(&x);
+            for (qi, r) in [(0usize, 1.0), (5, 2.5), (9, 6.0), (17, 0.0), (33, 50.0)] {
+                let mut got = Vec::new();
+                t.neighbors_within(&x[qi], r, &mut got);
+                got.sort_unstable();
+                assert_eq!(got, brute(&x, &x[qi], r), "dim {dim} q {qi} r {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn off_sample_queries_work() {
+        let x = random_points(80, 3, 4.0, 77);
+        let t = KdTree::build(&x);
+        let q = vec![2.0, 2.0, 2.0];
+        let mut got = Vec::new();
+        t.neighbors_within(&q, 1.7, &mut got);
+        got.sort_unstable();
+        assert_eq!(got, brute(&x, &q, 1.7));
+    }
+
+    #[test]
+    fn duplicates_all_returned() {
+        let mut x = random_points(10, 4, 3.0, 5);
+        x.push(x[2].clone());
+        x.push(x[2].clone());
+        let t = KdTree::build(&x);
+        let mut got = Vec::new();
+        t.neighbors_within(&x[2], 0.0, &mut got);
+        got.sort_unstable();
+        assert_eq!(got, vec![2, 10, 11]);
+    }
+
+    #[test]
+    fn empty_tree() {
+        let t = KdTree::build(&[]);
+        let mut out = Vec::new();
+        t.neighbors_within(&[1.0], 5.0, &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,336 @@
+//! Pattern / symbolic-structure reuse across hyperparameter evaluations.
+//!
+//! The optimizer loop (SCG over `log Z_EP`) evaluates EP at a fresh
+//! hyperparameter point on every step. The *values* of the covariance
+//! matrix change every time, but its sparsity pattern only changes when a
+//! length-scale change actually grows the compact-support radius: a
+//! σ²-only step leaves the pattern untouched, and a shrinking length-scale
+//! produces a pattern that is a *subset* of the cached one (the extra
+//! entries evaluate to exact zeros, so EP on the superset pattern computes
+//! the identical fixed point). Re-running the neighbor queries, the
+//! fill-reducing ordering, and the symbolic Cholesky analysis on every
+//! gradient evaluation — as the seed did — is therefore pure waste; cf.
+//! Vanhatalo & Vehtari (2008), which reuses sparse structure across
+//! hyperparameter evaluations in GPstuff.
+//!
+//! [`PatternCache`] holds, per training set:
+//!
+//! * one [`NeighborIndex`] over the inputs (built once; radius queries
+//!   adapt to any support radius),
+//! * the covariance pattern keyed by the Euclidean support radius it was
+//!   built at (`∞` for globally supported kernels),
+//! * the fill-reducing permutation, the permuted inputs, the permuted
+//!   pattern and its [`Symbolic`] analysis (the "factorization plan"),
+//!   computed lazily — exact-GP regression only needs the pattern.
+//!
+//! The cache contract: one `PatternCache` serves one fixed point set `x`
+//! and one ordering choice. A hit requires the new ARD support ellipsoid
+//! to be contained in the built one — per-axis `l'_d <= l_d`, not just a
+//! smaller `max_d l_d` (growing any single axis can create pairs outside
+//! the cached ellipsoid pattern); anything else rebuilds and re-keys.
+//! Because values are always re-evaluated on the cached pattern with
+//! [`CovFunction::cov_values_on_pattern`], a hit and a miss produce
+//! bitwise-identical covariance values on the shared entries and exact
+//! zeros on the superset-only entries — `SparseEp::log_z_grad`'s pattern
+//! agreement is an invariant, not a hope.
+
+use std::sync::Arc;
+
+use crate::geom::NeighborIndex;
+use crate::gp::covariance::{CovFunction, INDEX_MIN_N};
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::ordering::{compute_ordering, Ordering};
+use crate::sparse::symbolic::Symbolic;
+
+/// A covariance pattern valid for every ARD support ellipsoid contained
+/// in the one it was built at.
+#[derive(Clone, Debug)]
+pub struct CachedPattern {
+    /// Euclidean support radius the pattern was built at
+    /// (`f64::INFINITY` for globally supported kernels — the pattern is
+    /// dense and covers everything).
+    pub radius: f64,
+    /// ARD length-scales the pattern was built at. The pattern is the
+    /// exact support *ellipsoid* `Σ_d Δ_d²/l_d² < 1`, so reuse requires
+    /// per-axis containment (`l'_d <= l_d` for every `d`) — a smaller
+    /// `max_d l'_d` alone does NOT make the new support a subset when one
+    /// axis grew.
+    pub lengthscales: Vec<f64>,
+    /// Unpermuted pattern over the original inputs (values are from the
+    /// build-time hyperparameters; callers re-fill with
+    /// [`CovFunction::cov_values_on_pattern`]).
+    pub pattern: CscMatrix,
+}
+
+impl CachedPattern {
+    /// Does this pattern provably contain every nonzero of `cov`'s Gram
+    /// matrix? Dense-built patterns contain everything; compact-support
+    /// patterns require the new ellipsoid to fit inside the built one,
+    /// axis by axis.
+    fn covers(&self, cov: &CovFunction) -> bool {
+        if self.radius.is_infinite() {
+            return true;
+        }
+        if !cov.is_compact() || cov.lengthscales.len() != self.lengthscales.len() {
+            return false;
+        }
+        cov.lengthscales.iter().zip(&self.lengthscales).all(|(new, old)| new <= old)
+    }
+}
+
+/// Everything the sparse factorization needs, derived from a
+/// [`CachedPattern`]: permutation, permuted inputs/pattern, symbolic
+/// analysis.
+#[derive(Clone, Debug)]
+pub struct FactorPlan {
+    /// old index -> permuted index (shared — EP runs keep a handle
+    /// instead of deep-cloning per evaluation).
+    pub perm: Arc<Vec<usize>>,
+    /// Permuted inputs (covariance values must be built against these;
+    /// shared for the same reason).
+    pub xp: Arc<Vec<Vec<f64>>>,
+    /// Permuted pattern `P K Pᵀ`.
+    pub pattern_perm: CscMatrix,
+    /// Symbolic Cholesky analysis of `pattern_perm`.
+    pub symbolic: Arc<Symbolic>,
+}
+
+/// Reusable covariance structure for repeated evaluations on one fixed
+/// training set. See the module docs for the reuse contract.
+pub struct PatternCache {
+    ordering: Ordering,
+    index: Option<NeighborIndex>,
+    pattern: Option<Arc<CachedPattern>>,
+    plan: Option<Arc<FactorPlan>>,
+    /// Cheap identity check on the point set the cache was built for
+    /// (length + first/last point bits) so that handing a cache a
+    /// different dataset misses instead of silently reusing the old
+    /// pattern.
+    data_fp: u64,
+    /// Evaluations answered from the cached pattern.
+    pub hits: usize,
+    /// Evaluations that had to rebuild the pattern.
+    pub misses: usize,
+}
+
+/// O(d) fingerprint of a point set: length plus the raw bits of the
+/// first and last points. Not collision-proof in general, but any two
+/// datasets that agree on it and still differ violate the documented
+/// one-point-set-per-cache contract in a way no cheap check can catch.
+fn point_set_fingerprint(x: &[Vec<f64>]) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = std::collections::hash_map::DefaultHasher::new();
+    x.len().hash(&mut h);
+    for p in [x.first(), x.last()].into_iter().flatten() {
+        for v in p {
+            v.to_bits().hash(&mut h);
+        }
+    }
+    h.finish()
+}
+
+impl PatternCache {
+    pub fn new(ordering: Ordering) -> PatternCache {
+        PatternCache {
+            ordering,
+            index: None,
+            pattern: None,
+            plan: None,
+            data_fp: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn ordering(&self) -> Ordering {
+        self.ordering
+    }
+
+    /// The covariance pattern for `cov` on `x`, reusing the cached
+    /// (superset) pattern when the new support ellipsoid is contained in
+    /// the cached one (see [`CachedPattern::covers`]).
+    pub fn pattern_for(&mut self, cov: &CovFunction, x: &[Vec<f64>]) -> Arc<CachedPattern> {
+        let radius = cov.support_radius().unwrap_or(f64::INFINITY);
+        let fp = point_set_fingerprint(x);
+        if let Some(cached) = &self.pattern {
+            // the fingerprint covers the length, so n_cols needs no check
+            if self.data_fp == fp && cached.covers(cov) {
+                self.hits += 1;
+                return cached.clone();
+            }
+        }
+        self.misses += 1;
+        let pattern = match cov.support_radius() {
+            Some(r) if x.len() >= INDEX_MIN_N => {
+                // one index serves every rebuild: grid/kd-tree queries
+                // accept any radius after construction. Drop it when the
+                // point set itself changed (contract misuse — rebuild
+                // rather than compound it with a wrong pattern).
+                if self.data_fp != fp {
+                    self.index = None;
+                }
+                let index = self.index.get_or_insert_with(|| NeighborIndex::build(x, r));
+                cov.cov_matrix_with(x, index)
+            }
+            _ => cov.cov_matrix_brute(x),
+        };
+        let cached = Arc::new(CachedPattern {
+            radius,
+            lengthscales: cov.lengthscales.clone(),
+            pattern,
+        });
+        self.data_fp = fp;
+        self.pattern = Some(cached.clone());
+        self.plan = None; // derived structure is stale
+        cached
+    }
+
+    /// The pattern *and* its factorization plan (permutation + symbolic),
+    /// rebuilding the plan only when the pattern itself was rebuilt.
+    pub fn plan_for(
+        &mut self,
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+    ) -> (Arc<CachedPattern>, Arc<FactorPlan>) {
+        let cached = self.pattern_for(cov, x);
+        if let Some(plan) = &self.plan {
+            return (cached, plan.clone());
+        }
+        let n = x.len();
+        let perm = compute_ordering(&cached.pattern, self.ordering);
+        let pattern_perm = cached.pattern.permute_sym(&perm);
+        let mut xp = vec![Vec::new(); n];
+        for old in 0..n {
+            xp[perm[old]] = x[old].clone();
+        }
+        let symbolic = Arc::new(Symbolic::analyze(&pattern_perm));
+        let plan = Arc::new(FactorPlan {
+            perm: Arc::new(perm),
+            xp: Arc::new(xp),
+            pattern_perm,
+            symbolic,
+        });
+        self.plan = Some(plan.clone());
+        (cached, plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::CovKind;
+    use crate::testutil::random_points;
+
+    #[test]
+    fn sigma2_step_and_shrink_hit_growth_misses() {
+        let x = random_points(80, 2, 8.0, 7);
+        let mut cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let mut cache = PatternCache::new(Ordering::Rcm);
+        let (p0, plan0) = cache.plan_for(&cov, &x);
+        assert_eq!(cache.misses, 1);
+
+        // σ²-only step: same radius, must hit and keep the plan
+        cov.sigma2 = 3.7;
+        let (p1, plan1) = cache.plan_for(&cov, &x);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        assert!(Arc::ptr_eq(&p0, &p1) && Arc::ptr_eq(&plan0, &plan1));
+
+        // shrinking length-scale: superset reuse
+        cov.lengthscales = vec![1.1, 1.1];
+        let (p2, _) = cache.plan_for(&cov, &x);
+        assert_eq!((cache.hits, cache.misses), (2, 1));
+        assert!(Arc::ptr_eq(&p0, &p2));
+
+        // growing length-scale: rebuild pattern + plan
+        cov.lengthscales = vec![2.5, 2.5];
+        let (p3, plan3) = cache.plan_for(&cov, &x);
+        assert_eq!((cache.hits, cache.misses), (2, 2));
+        assert!(!Arc::ptr_eq(&p0, &p3) && !Arc::ptr_eq(&plan0, &plan3));
+        assert!(p3.pattern.nnz() > p0.pattern.nnz());
+    }
+
+    /// The anisotropic trap: a *smaller max* lengthscale whose ellipsoid
+    /// still pokes out of the cached one along a grown axis must MISS —
+    /// a hit would silently drop true nonzero covariance entries.
+    #[test]
+    fn anisotropic_axis_growth_misses_despite_smaller_max() {
+        let x = random_points(90, 2, 8.0, 23);
+        let mut built = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.0);
+        built.lengthscales = vec![2.0, 1.0];
+        let mut probe = built.clone();
+        probe.lengthscales = vec![1.9, 1.5]; // max shrank, axis 1 grew
+        let mut cache = PatternCache::new(Ordering::Natural);
+        let _ = cache.pattern_for(&built, &x);
+        let p = cache.pattern_for(&probe, &x);
+        assert_eq!((cache.hits, cache.misses), (0, 2), "axis growth must rebuild");
+        // rebuilt pattern is the probe kernel's exact pattern
+        assert_eq!(p.pattern, probe.cov_matrix(&x));
+        // and a per-axis shrink of the new pattern hits again
+        let mut shrunk = probe.clone();
+        shrunk.lengthscales = vec![1.0, 1.5];
+        let _ = cache.pattern_for(&shrunk, &x);
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+    }
+
+    #[test]
+    fn superset_values_match_exact_assembly_on_shared_entries() {
+        let x = random_points(120, 3, 6.0, 19);
+        let big = CovFunction::new(CovKind::Pp(2), 3, 1.3, 2.2);
+        let mut small = big.clone();
+        small.lengthscales = vec![1.4, 1.0, 1.2];
+        let mut cache = PatternCache::new(Ordering::Natural);
+        let cached = cache.pattern_for(&big, &x); // key at the big radius
+        let on_superset = small.cov_values_on_pattern(&x, &cached.pattern);
+        let exact = small.cov_matrix(&x);
+        assert_eq!(cache.misses, 1);
+        assert_eq!(cache.hits, 0);
+        let _ = cache.pattern_for(&small, &x);
+        assert_eq!(cache.hits, 1);
+        // every exact entry appears in the superset with the same value;
+        // superset-only entries are exact zeros
+        for j in 0..x.len() {
+            let (rows, vals) = on_superset.col(j);
+            for (&i, &v) in rows.iter().zip(vals) {
+                assert_eq!(v, exact.get(i, j), "({i},{j})");
+            }
+            let (erows, evals) = exact.col(j);
+            for (&i, &v) in erows.iter().zip(evals) {
+                if v != 0.0 {
+                    assert_eq!(on_superset.get(i, j), v, "missing ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn different_point_set_misses_even_at_same_size() {
+        // the cache contract is one point set per cache; handing it a
+        // different dataset (same size or not) must rebuild pattern AND
+        // index rather than silently reuse the old structure
+        let x1 = random_points(80, 2, 8.0, 1);
+        let x2 = random_points(80, 2, 8.0, 2); // same size, different points
+        let x3 = random_points(120, 2, 8.0, 3);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let mut cache = PatternCache::new(Ordering::Natural);
+        let _ = cache.pattern_for(&cov, &x1);
+        let p2 = cache.pattern_for(&cov, &x2);
+        assert_eq!((cache.hits, cache.misses), (0, 2));
+        assert_eq!(p2.pattern, cov.cov_matrix(&x2));
+        let p3 = cache.pattern_for(&cov, &x3);
+        assert_eq!((cache.hits, cache.misses), (0, 3));
+        assert_eq!(p3.pattern.n_cols, 120);
+        assert_eq!(p3.pattern, cov.cov_matrix(&x3));
+    }
+
+    #[test]
+    fn dense_kernels_cache_with_infinite_radius() {
+        let x = random_points(30, 2, 5.0, 3);
+        let mut cov = CovFunction::new(CovKind::Se, 2, 1.0, 1.0);
+        let mut cache = PatternCache::new(Ordering::Natural);
+        let (p0, _) = cache.plan_for(&cov, &x);
+        assert!((p0.pattern.density() - 1.0).abs() < 1e-15);
+        cov.lengthscales = vec![9.0, 0.2];
+        let _ = cache.plan_for(&cov, &x);
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+    }
+}

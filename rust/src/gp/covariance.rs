@@ -12,7 +12,28 @@
 //! (`params = [ln σ², ln l₁, …, ln l_D]`), matching how the optimizer and
 //! the priors operate.
 
+use crate::geom::NeighborIndex;
 use crate::sparse::csc::CscMatrix;
+
+/// Below this many points the O(n²) scan beats building a spatial index;
+/// `cov_matrix` only auto-builds an index at or above it.
+pub const INDEX_MIN_N: usize = 64;
+
+/// Relative padding applied to neighbor-query radii so floating-point
+/// rounding in the index's Euclidean distance can never drop a pair that
+/// the exact `r < 1` kernel test would keep.
+pub const RADIUS_PAD: f64 = 1e-9;
+
+/// `u^e` for the Wendland exponents, which are small non-negative
+/// integers by construction (`j = ⌊D/2⌋ + q + 1` plus 0..=3): `powi` is
+/// several times cheaper than `powf` and exact for these cases. This is
+/// on the assembly hot path — every stored entry of every CS covariance
+/// evaluation goes through it.
+#[inline]
+fn powj(u: f64, e: f64) -> f64 {
+    debug_assert!(e >= 0.0 && e.fract() == 0.0 && e <= 127.0, "bad Wendland exponent {e}");
+    u.powi(e as i32)
+}
 
 /// Which radial profile.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -71,6 +92,18 @@ impl CovFunction {
     /// Is the support compact (k ≡ 0 for r ≥ 1)?
     pub fn is_compact(&self) -> bool {
         matches!(self.kind, CovKind::Pp(_))
+    }
+
+    /// Euclidean support radius: `k(x, x') = 0` whenever
+    /// `‖x − x'‖ >= max_d l_d` for a compact kernel (the ARD support
+    /// ellipsoid is contained in that ball). `None` for globally
+    /// supported kernels.
+    pub fn support_radius(&self) -> Option<f64> {
+        if self.is_compact() {
+            Some(self.lengthscales.iter().copied().fold(0.0, f64::max))
+        } else {
+            None
+        }
     }
 
     /// Wendland exponent j = ⌊D/2⌋ + q + 1.
@@ -135,18 +168,18 @@ impl CovFunction {
                 let j = self.wendland_j();
                 let u = 1.0 - r;
                 match q {
-                    0 => u.powf(j),
-                    1 => u.powf(j + 1.0) * ((j + 1.0) * r + 1.0),
+                    0 => powj(u, j),
+                    1 => powj(u, j + 1.0) * ((j + 1.0) * r + 1.0),
                     2 => {
                         let a = j * j + 4.0 * j + 3.0;
                         let b = 3.0 * j + 6.0;
-                        u.powf(j + 2.0) * (a * r * r + b * r + 3.0) / 3.0
+                        powj(u, j + 2.0) * (a * r * r + b * r + 3.0) / 3.0
                     }
                     3 => {
                         let a = j * j * j + 9.0 * j * j + 23.0 * j + 15.0;
                         let b = 6.0 * j * j + 36.0 * j + 45.0;
                         let c = 15.0 * j + 45.0;
-                        u.powf(j + 3.0) * (a * r * r * r + b * r * r + c * r + 15.0) / 15.0
+                        powj(u, j + 3.0) * (a * r * r * r + b * r * r + c * r + 15.0) / 15.0
                     }
                     _ => panic!("pp q must be 0..=3"),
                 }
@@ -177,25 +210,25 @@ impl CovFunction {
                 let j = self.wendland_j();
                 let u = 1.0 - r;
                 match q {
-                    0 => -j * u.powf(j - 1.0),
+                    0 => -j * powj(u, j - 1.0),
                     1 => {
                         // product rule on u^{j+1}((j+1)r+1)
-                        -(j + 1.0) * u.powf(j) * ((j + 1.0) * r + 1.0)
-                            + u.powf(j + 1.0) * (j + 1.0)
+                        -(j + 1.0) * powj(u, j) * ((j + 1.0) * r + 1.0)
+                            + powj(u, j + 1.0) * (j + 1.0)
                     }
                     2 => {
                         let a = j * j + 4.0 * j + 3.0;
                         let b = 3.0 * j + 6.0;
-                        (-(j + 2.0) * u.powf(j + 1.0) * (a * r * r + b * r + 3.0)
-                            + u.powf(j + 2.0) * (2.0 * a * r + b))
+                        (-(j + 2.0) * powj(u, j + 1.0) * (a * r * r + b * r + 3.0)
+                            + powj(u, j + 2.0) * (2.0 * a * r + b))
                             / 3.0
                     }
                     3 => {
                         let a = j * j * j + 9.0 * j * j + 23.0 * j + 15.0;
                         let b = 6.0 * j * j + 36.0 * j + 45.0;
                         let c = 15.0 * j + 45.0;
-                        (-(j + 3.0) * u.powf(j + 2.0) * (a * r * r * r + b * r * r + c * r + 15.0)
-                            + u.powf(j + 3.0) * (3.0 * a * r * r + 2.0 * b * r + c))
+                        (-(j + 3.0) * powj(u, j + 2.0) * (a * r * r * r + b * r * r + c * r + 15.0)
+                            + powj(u, j + 3.0) * (3.0 * a * r * r + 2.0 * b * r + c))
                             / 15.0
                     }
                     _ => panic!("pp q must be 0..=3"),
@@ -238,7 +271,24 @@ impl CovFunction {
     /// Full-storage CSC covariance matrix of `x`. For compact support only
     /// pairs with r < 1 are stored (plus the diagonal); globally supported
     /// functions yield a dense pattern.
+    ///
+    /// Compact kernels on large point sets go through a spatial
+    /// [`NeighborIndex`] (`O(n·k)` candidate pairs); the result is
+    /// identical — pattern and values — to `cov_matrix_brute`, which
+    /// remains available for comparison.
     pub fn cov_matrix(&self, x: &[Vec<f64>]) -> CscMatrix {
+        match self.support_radius() {
+            Some(radius) if x.len() >= INDEX_MIN_N => {
+                let index = NeighborIndex::build(x, radius);
+                self.cov_matrix_with(x, &index)
+            }
+            _ => self.cov_matrix_brute(x),
+        }
+    }
+
+    /// The O(n²) all-pairs assembly (the seed implementation). Kept as the
+    /// reference path for benchmarks and exactness tests.
+    pub fn cov_matrix_brute(&self, x: &[Vec<f64>]) -> CscMatrix {
         let n = x.len();
         let compact = self.is_compact();
         let mut col_ptr = Vec::with_capacity(n + 1);
@@ -268,22 +318,84 @@ impl CovFunction {
         CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values }
     }
 
+    /// Index-backed assembly: per column, enumerate only the points inside
+    /// the Euclidean support ball, then apply the exact `r < 1` test. For
+    /// globally supported kernels this degenerates to the brute path (the
+    /// pattern is dense anyway). `index` must have been built over `x`.
+    pub fn cov_matrix_with(&self, x: &[Vec<f64>], index: &NeighborIndex) -> CscMatrix {
+        let Some(radius) = self.support_radius() else {
+            return self.cov_matrix_brute(x);
+        };
+        let n = x.len();
+        debug_assert_eq!(index.len(), n, "index built over a different point set");
+        let query_r = radius * (1.0 + RADIUS_PAD);
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::new();
+        let mut values = Vec::new();
+        let mut cand: Vec<usize> = Vec::new();
+        col_ptr.push(0);
+        for (j, xj) in x.iter().enumerate() {
+            index.neighbors_sorted(xj, query_r, &mut cand);
+            for &i in cand.iter() {
+                if i == j {
+                    row_idx.push(i);
+                    values.push(self.sigma2);
+                    continue;
+                }
+                let r = self.r(&x[i], xj);
+                if r < 1.0 {
+                    row_idx.push(i);
+                    values.push(self.sigma2 * self.profile(r));
+                }
+            }
+            col_ptr.push(row_idx.len());
+        }
+        CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values }
+    }
+
+    /// Covariance values re-evaluated on a *fixed* pattern (which may be a
+    /// superset of the current support — out-of-support entries come out
+    /// as exact zeros). This is the `PatternCache` hit path: `O(nnz)`
+    /// kernel evaluations, no neighbor queries, no re-sorting.
+    pub fn cov_values_on_pattern(&self, x: &[Vec<f64>], pattern: &CscMatrix) -> CscMatrix {
+        debug_assert_eq!(pattern.n_cols, x.len());
+        let mut k = pattern.clone();
+        for j in 0..k.n_cols {
+            for p in k.col_ptr[j]..k.col_ptr[j + 1] {
+                let i = k.row_idx[p];
+                k.values[p] = if i == j {
+                    self.sigma2
+                } else {
+                    self.sigma2 * self.profile(self.r(&x[i], &x[j]))
+                };
+            }
+        }
+        k
+    }
+
+    /// Per-parameter gradient values aligned with an existing pattern:
+    /// `grads[p][e]` is `∂K/∂θ_p` at pattern entry `e`.
+    pub fn cov_grads_on_pattern(&self, x: &[Vec<f64>], pattern: &CscMatrix) -> Vec<Vec<f64>> {
+        let np = self.n_params();
+        let mut grads = vec![vec![0.0; pattern.nnz()]; np];
+        let mut g = vec![0.0; np];
+        for j in 0..pattern.n_cols {
+            for p in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
+                let i = pattern.row_idx[p];
+                self.kernel_grad(&x[i], &x[j], &mut g);
+                for (q, gq) in g.iter().enumerate() {
+                    grads[q][p] = *gq;
+                }
+            }
+        }
+        grads
+    }
+
     /// Covariance matrix plus per-parameter gradient values aligned with
     /// the matrix pattern: `grads[p][e]` is `∂K/∂θ_p` at pattern entry `e`.
     pub fn cov_matrix_grads(&self, x: &[Vec<f64>]) -> (CscMatrix, Vec<Vec<f64>>) {
         let k = self.cov_matrix(x);
-        let np = self.n_params();
-        let mut grads = vec![Vec::with_capacity(k.nnz()); np];
-        let mut g = vec![0.0; np];
-        for j in 0..k.n_cols {
-            let (rows, _) = k.col(j);
-            for &i in rows {
-                self.kernel_grad(&x[i], &x[j], &mut g);
-                for (p, gp) in g.iter().enumerate() {
-                    grads[p].push(*gp);
-                }
-            }
-        }
+        let grads = self.cov_grads_on_pattern(x, &k);
         (k, grads)
     }
 
@@ -291,18 +403,60 @@ impl CovFunction {
     pub fn cross_cov(&self, x: &[Vec<f64>], xstar: &[f64]) -> (Vec<usize>, Vec<f64>) {
         let mut rows = Vec::new();
         let mut vals = Vec::new();
-        let compact = self.is_compact();
-        for (i, xi) in x.iter().enumerate() {
-            let r = self.r(xi, xstar);
-            if !compact || r < 1.0 {
-                let v = self.sigma2 * self.profile(r);
-                if v != 0.0 {
-                    rows.push(i);
-                    vals.push(v);
+        self.cross_cov_into(x, xstar, None, &mut rows, &mut vals);
+        (rows, vals)
+    }
+
+    /// Cross-covariance written into caller-provided buffers (cleared
+    /// first), optionally routed through a [`NeighborIndex`] built over
+    /// `x` — the per-test-point cost then drops from `O(n)` to `O(k)` for
+    /// compact kernels. Pattern and values match the brute path exactly.
+    pub fn cross_cov_into(
+        &self,
+        x: &[Vec<f64>],
+        xstar: &[f64],
+        index: Option<&NeighborIndex>,
+        rows: &mut Vec<usize>,
+        vals: &mut Vec<f64>,
+    ) {
+        rows.clear();
+        vals.clear();
+        match (self.support_radius(), index) {
+            (Some(radius), Some(idx)) => {
+                debug_assert_eq!(idx.len(), x.len());
+                // `rows` doubles as the candidate buffer (filtered and
+                // compacted in place) so the serving hot path stays free
+                // of per-call allocation.
+                idx.neighbors_sorted(xstar, radius * (1.0 + RADIUS_PAD), rows);
+                let mut kept = 0;
+                for read in 0..rows.len() {
+                    let i = rows[read];
+                    let r = self.r(&x[i], xstar);
+                    if r < 1.0 {
+                        let v = self.sigma2 * self.profile(r);
+                        if v != 0.0 {
+                            rows[kept] = i;
+                            vals.push(v);
+                            kept += 1;
+                        }
+                    }
+                }
+                rows.truncate(kept);
+            }
+            _ => {
+                let compact = self.is_compact();
+                for (i, xi) in x.iter().enumerate() {
+                    let r = self.r(xi, xstar);
+                    if !compact || r < 1.0 {
+                        let v = self.sigma2 * self.profile(r);
+                        if v != 0.0 {
+                            rows.push(i);
+                            vals.push(v);
+                        }
+                    }
                 }
             }
         }
-        (rows, vals)
     }
 }
 
@@ -414,6 +568,93 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Anisotropic ARD length-scales plus exact duplicates and a pair
+    /// sitting exactly on the support boundary (r == 1).
+    fn tricky_points(dim: usize, seed: u64, ls: &[f64]) -> Vec<Vec<f64>> {
+        let mut x = random_points(90, dim, 6.0, seed);
+        x.push(x[3].clone()); // exact duplicate
+        x.push(x[3].clone()); // triple
+        // boundary pair: offset along the max-lengthscale axis by exactly
+        // that lengthscale => ARD distance exactly 1 (excluded by r < 1,
+        // returned by the inclusive index query — both paths must agree)
+        let dmax = (0..dim).max_by(|&a, &b| ls[a].total_cmp(&ls[b])).unwrap();
+        let mut origin = vec![0.0; dim];
+        origin[0] = 0.25;
+        let mut edge = origin.clone();
+        edge[dmax] += ls[dmax];
+        x.push(origin);
+        x.push(edge);
+        x
+    }
+
+    /// The exactness property the whole index-backed path rests on:
+    /// identical pattern AND bitwise-identical values vs brute force, for
+    /// every covariance kind, dims 1..=6, ARD anisotropy, duplicates and
+    /// boundary pairs, on the auto-selected index and on both forced
+    /// backends.
+    #[test]
+    fn indexed_assembly_matches_brute_force_exactly() {
+        for dim in 1usize..=6 {
+            for kind in all_kinds() {
+                let mut cov = CovFunction::new(kind, dim, 1.3, 2.5);
+                cov.lengthscales = (0..dim).map(|d| 0.75 + 0.5 * d as f64).collect();
+                let x = tricky_points(dim, 40 + dim as u64, &cov.lengthscales);
+                let brute = cov.cov_matrix_brute(&x);
+                // public entry point (auto index above INDEX_MIN_N)
+                assert_eq!(cov.cov_matrix(&x), brute, "{kind:?} dim {dim} (auto)");
+                // explicit index, both backends, regardless of dimension
+                for index in [
+                    NeighborIndex::grid(&x, 1.1),
+                    NeighborIndex::kdtree(&x),
+                    NeighborIndex::build(&x, cov.support_radius().unwrap_or(1.0)),
+                ] {
+                    assert_eq!(
+                        cov.cov_matrix_with(&x, &index),
+                        brute,
+                        "{kind:?} dim {dim} {index:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_cross_cov_matches_scan_exactly() {
+        for dim in 1usize..=6 {
+            for kind in all_kinds() {
+                let mut cov = CovFunction::new(kind, dim, 0.9, 2.0);
+                cov.lengthscales = (0..dim).map(|d| 2.1 - 0.2 * d as f64).collect();
+                let x = tricky_points(dim, 70 + dim as u64, &cov.lengthscales);
+                let index = NeighborIndex::build(&x, cov.support_radius().unwrap_or(1.0));
+                let mut rows_i = Vec::new();
+                let mut vals_i = Vec::new();
+                let mut rows_s = Vec::new();
+                let mut vals_s = Vec::new();
+                // probe on-sample points (incl. the duplicates and the
+                // boundary pair) and off-sample points
+                let mut probes: Vec<Vec<f64>> = x.iter().rev().take(6).cloned().collect();
+                probes.extend(random_points(6, dim, 7.0, 5));
+                for q in &probes {
+                    cov.cross_cov_into(&x, q, Some(&index), &mut rows_i, &mut vals_i);
+                    cov.cross_cov_into(&x, q, None, &mut rows_s, &mut vals_s);
+                    assert_eq!(rows_i, rows_s, "{kind:?} dim {dim}");
+                    assert_eq!(vals_i, vals_s, "{kind:?} dim {dim}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grads_on_pattern_match_matrix_grads() {
+        let x = random_points(80, 2, 8.0, 91);
+        let c = CovFunction::new(CovKind::Pp(3), 2, 1.2, 1.7);
+        let (k, grads) = c.cov_matrix_grads(&x);
+        let on_pattern = c.cov_grads_on_pattern(&x, &k);
+        assert_eq!(grads, on_pattern);
+        // values re-filled on the same pattern reproduce the matrix
+        assert_eq!(c.cov_values_on_pattern(&x, &k), k);
     }
 
     #[test]

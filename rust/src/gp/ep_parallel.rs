@@ -7,22 +7,21 @@
 //! converge. The `abl_parallel_ep` bench quantifies the trade-off against
 //! Algorithm 1.
 
-use std::sync::Arc;
-
+use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
 use crate::gp::ep_sparse::build_b;
 use crate::gp::likelihood::probit_site_update;
 use crate::gp::marginal::{ep_log_z, EpOptions, EpSites};
+use crate::gp::predict::PredictWorkspace;
 use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::csc::CscMatrix;
-use crate::sparse::ordering::{compute_ordering, Ordering};
-use crate::sparse::symbolic::Symbolic;
+use crate::sparse::ordering::Ordering;
 use crate::sparse::triangular::SparseSolveWorkspace;
 
 /// Converged parallel-EP state (permuted space, like `SparseEp`).
 pub struct ParallelEp {
-    pub perm: Vec<usize>,
-    pub xp: Vec<Vec<f64>>,
+    pub perm: std::sync::Arc<Vec<usize>>,
+    pub xp: std::sync::Arc<Vec<Vec<f64>>>,
     pub k: CscMatrix,
     pub factor: LdlFactor,
     pub sites: EpSites,
@@ -34,6 +33,8 @@ pub struct ParallelEp {
 }
 
 impl ParallelEp {
+    /// Run with a private, throwaway [`PatternCache`]; optimizer loops
+    /// should hold a cache and call [`ParallelEp::run_cached`].
     pub fn run(
         cov: &CovFunction,
         x: &[Vec<f64>],
@@ -41,18 +42,29 @@ impl ParallelEp {
         ordering: Ordering,
         opts: &EpOptions,
     ) -> Result<ParallelEp, String> {
+        let mut cache = PatternCache::new(ordering);
+        ParallelEp::run_cached(cov, x, y, opts, &mut cache)
+    }
+
+    /// Run parallel EP reusing `cache`'s pattern / ordering / symbolic
+    /// analysis (same contract as [`crate::gp::SparseEp::run_cached`]).
+    pub fn run_cached(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        y: &[f64],
+        opts: &EpOptions,
+        cache: &mut PatternCache,
+    ) -> Result<ParallelEp, String> {
         let n = x.len();
-        let k0 = cov.cov_matrix(x);
-        let perm = compute_ordering(&k0, ordering);
-        let k = k0.permute_sym(&perm);
-        let mut xp = vec![Vec::new(); n];
+        let (_, plan) = cache.plan_for(cov, x);
+        let k = cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm);
+        let perm = plan.perm.clone(); // Arc handle, not a deep copy
+        let xp = plan.xp.clone();
         let mut yp = vec![0.0; n];
         for old in 0..n {
-            xp[perm[old]] = x[old].clone();
             yp[perm[old]] = y[old];
         }
-        let symbolic = Arc::new(Symbolic::analyze(&k));
-        let mut factor = LdlFactor::identity(symbolic);
+        let mut factor = LdlFactor::identity(plan.symbolic.clone());
         let mut sites = EpSites::zeros(n);
         let mut ws = SparseSolveWorkspace::new(n);
         let mut t = vec![0.0; n];
@@ -111,7 +123,7 @@ impl ParallelEp {
                 factor.solve_sparse_rhs(krows, &a_vals, &mut ws, &mut t);
                 let quad: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
                 sigma_diag[i] = k.get(i, i) - quad;
-                t.iter_mut().for_each(|v| *v = 0.0);
+                ws.clear_solution(&mut t);
             }
 
             sweeps += 1;
@@ -134,19 +146,38 @@ impl ParallelEp {
 
     /// Latent predictive mean/variance (same representation as `SparseEp`).
     pub fn predict_latent(&self, cov: &CovFunction, xstar: &[f64]) -> (f64, f64) {
-        let (rows, vals) = cov.cross_cov(&self.xp, xstar);
-        let mean: f64 = rows.iter().zip(&vals).map(|(&i, &v)| v * self.w_pred[i]).sum();
-        let u_vals: Vec<f64> = rows
-            .iter()
-            .zip(&vals)
-            .map(|(&i, &v)| self.sites.tau[i].max(0.0).sqrt() * v)
-            .collect();
-        let n = self.k.n_rows;
-        let mut ws = SparseSolveWorkspace::new(n);
-        let mut t = vec![0.0; n];
-        self.factor.solve_sparse_rhs(&rows, &u_vals, &mut ws, &mut t);
-        let quad: f64 = rows.iter().zip(&u_vals).map(|(&i, &v)| v * t[i]).sum();
-        (mean, (cov.sigma2 - quad).max(1e-12))
+        let mut pws = PredictWorkspace::one_shot(self.k.n_rows);
+        self.predict_latent_with(cov, xstar, &mut pws)
+    }
+
+    /// Workspace for repeated predictions against this EP state.
+    pub fn predict_workspace(&self, cov: &CovFunction) -> PredictWorkspace {
+        PredictWorkspace::new(cov, &self.xp)
+    }
+
+    /// Latent prediction through a shared workspace (no per-call
+    /// allocation; indexed cross-covariance).
+    pub fn predict_latent_with(
+        &self,
+        cov: &CovFunction,
+        xstar: &[f64],
+        pws: &mut PredictWorkspace,
+    ) -> (f64, f64) {
+        crate::gp::predict::sparse_latent_with(
+            cov,
+            &self.xp,
+            &self.factor,
+            &self.sites.tau,
+            &self.w_pred,
+            xstar,
+            pws,
+        )
+    }
+
+    /// Batched latent predictions through one shared workspace.
+    pub fn predict_latent_batch(&self, cov: &CovFunction, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let mut pws = self.predict_workspace(cov);
+        xs.iter().map(|x| self.predict_latent_with(cov, x, &mut pws)).collect()
     }
 }
 

@@ -18,13 +18,15 @@
 
 use std::sync::Arc;
 
+use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
 use crate::gp::likelihood::probit_site_update;
 use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
+use crate::gp::predict::PredictWorkspace;
 use crate::metrics::Metrics;
 use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::csc::CscMatrix;
-use crate::sparse::ordering::{compute_ordering, Ordering};
+use crate::sparse::ordering::Ordering;
 use crate::sparse::rowmod::RowModWorkspace;
 use crate::sparse::symbolic::Symbolic;
 use crate::sparse::triangular::SparseSolveWorkspace;
@@ -32,10 +34,11 @@ use crate::sparse::triangular::SparseSolveWorkspace;
 /// Converged sparse-EP state (everything stored in the *permuted* index
 /// space; accessors translate back through `perm`).
 pub struct SparseEp {
-    /// old index -> permuted index.
-    pub perm: Vec<usize>,
-    /// Permuted inputs (cross-covariances must be built against these).
-    pub xp: Vec<Vec<f64>>,
+    /// old index -> permuted index (shared with the `PatternCache` plan).
+    pub perm: Arc<Vec<usize>>,
+    /// Permuted inputs (cross-covariances must be built against these;
+    /// shared with the `PatternCache` plan).
+    pub xp: Arc<Vec<Vec<f64>>>,
     /// Permuted covariance matrix.
     pub k: CscMatrix,
     pub symbolic: Arc<Symbolic>,
@@ -58,7 +61,10 @@ pub struct SparseEp {
 }
 
 impl SparseEp {
-    /// Run sparse EP to convergence on `(x, y)`.
+    /// Run sparse EP to convergence on `(x, y)` with a private, throwaway
+    /// [`PatternCache`]. Optimizer loops should hold a cache and call
+    /// [`SparseEp::run_cached`] so the neighbor queries, ordering and
+    /// symbolic analysis amortize across evaluations.
     pub fn run(
         cov: &CovFunction,
         x: &[Vec<f64>],
@@ -67,20 +73,42 @@ impl SparseEp {
         opts: &EpOptions,
         metrics: Option<&Metrics>,
     ) -> Result<SparseEp, String> {
+        let mut cache = PatternCache::new(ordering);
+        SparseEp::run_cached(cov, x, y, opts, metrics, &mut cache)
+    }
+
+    /// Run sparse EP reusing `cache`'s structure (pattern, permutation,
+    /// symbolic analysis) whenever the support ellipsoid allows. A cache hit
+    /// skips the neighbor queries, the fill-reducing ordering and
+    /// `Symbolic::analyze` entirely; values are re-evaluated on the cached
+    /// pattern, which reproduces the uncached fixed point exactly (the
+    /// superset-only entries are exact zeros).
+    pub fn run_cached(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        y: &[f64],
+        opts: &EpOptions,
+        metrics: Option<&Metrics>,
+        cache: &mut PatternCache,
+    ) -> Result<SparseEp, String> {
         let n = x.len();
         assert_eq!(y.len(), n);
 
-        // ---- setup: covariance, ordering, symbolic analysis -------------
-        let k0 = cov.cov_matrix(x);
-        let perm = compute_ordering(&k0, ordering);
-        let k = k0.permute_sym(&perm);
-        let mut xp = vec![Vec::new(); n];
+        // ---- setup: covariance values on the (cached) structure ----------
+        let (_, plan) = cache.plan_for(cov, x);
+        let k = match metrics {
+            Some(m) => m.time("ep.cov_values", || {
+                cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm)
+            }),
+            None => cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm),
+        };
+        let perm = plan.perm.clone(); // Arc handle, not a deep copy
+        let xp = plan.xp.clone();
         let mut yp = vec![0.0; n];
         for old in 0..n {
-            xp[perm[old]] = x[old].clone();
             yp[perm[old]] = y[old];
         }
-        let symbolic = Arc::new(Symbolic::analyze(&k));
+        let symbolic = plan.symbolic.clone();
         let fill_k = k.density();
         let fill_l = symbolic.fill_l();
 
@@ -120,11 +148,11 @@ impl SparseEp {
                 let kii = k.get(i, i);
                 let a_dot_t: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
                 let sigma2_i = kii - a_dot_t;
-                let t_dot_swg: f64 = t.iter().zip(&swg).map(|(a, b)| a * b).sum();
+                let t_dot_swg: f64 = solve_ws.written.iter().map(|&r| t[r] * swg[r]).sum();
                 let mu_i = gamma[i] - t_dot_swg;
-                // re-zero the dense t scratch (only the touched part matters;
-                // solve_upper_dense wrote everywhere, so clear all)
-                t.iter_mut().for_each(|v| *v = 0.0);
+                // re-zero only the entries the solve actually wrote —
+                // O(nnz(t)) instead of an O(n) sweep per site visit
+                solve_ws.clear_solution(&mut t);
                 sigma_diag[i] = sigma2_i;
                 mu_rec[i] = mu_i;
                 if sigma2_i <= 0.0 {
@@ -217,10 +245,15 @@ impl SparseEp {
 
     /// Gradient of `log Z_EP` w.r.t. the covariance log-parameters using
     /// the Takahashi sparsified inverse for the trace term (paper eq. 11).
+    ///
+    /// The gradient values are evaluated directly on the pattern the EP
+    /// run factored (`self.k`), so pattern agreement is structural — no
+    /// covariance re-assembly, no re-ordering, no chance of a `col_ptr`
+    /// mismatch between the run and its gradient.
     pub fn log_z_grad(&self, cov: &CovFunction) -> Vec<f64> {
-        let (kmat, grads) = cov.cov_matrix_grads(&self.xp);
-        debug_assert_eq!(kmat.col_ptr, self.k.col_ptr, "pattern must match the EP run");
-        let mut out = grad_quadratic_term(&kmat, &grads, &self.w_pred);
+        let kmat = &self.k;
+        let grads = cov.cov_grads_on_pattern(&self.xp, kmat);
+        let mut out = grad_quadratic_term(kmat, &grads, &self.w_pred);
         // trace term via Z^sp: paper-Z_ij = sqrt(τ̃_i) Binv_ij sqrt(τ̃_j)
         let zsp = self.factor.takahashi_inverse();
         let sym = &self.symbolic;
@@ -242,21 +275,47 @@ impl SparseEp {
 
     /// Latent predictive mean and variance at a test point (original,
     /// unpermuted coordinates — cross covariance is built against `xp`).
+    ///
+    /// Allocates a fresh workspace per call; batch callers should build
+    /// one [`PredictWorkspace`] with [`SparseEp::predict_workspace`] and
+    /// use [`SparseEp::predict_latent_with`] /
+    /// [`SparseEp::predict_latent_batch`].
     pub fn predict_latent(&self, cov: &CovFunction, xstar: &[f64]) -> (f64, f64) {
-        let (rows, vals) = cov.cross_cov(&self.xp, xstar);
-        let mean: f64 = rows.iter().zip(&vals).map(|(&i, &v)| v * self.w_pred[i]).sum();
-        // u = S̃^{1/2} k*; var = k** − uᵀ B⁻¹ u
-        let u_vals: Vec<f64> = rows
-            .iter()
-            .zip(&vals)
-            .map(|(&i, &v)| self.sites.tau[i].max(0.0).sqrt() * v)
-            .collect();
-        let n = self.k.n_rows;
-        let mut ws = SparseSolveWorkspace::new(n);
-        let mut t = vec![0.0; n];
-        self.factor.solve_sparse_rhs(&rows, &u_vals, &mut ws, &mut t);
-        let quad: f64 = rows.iter().zip(&u_vals).map(|(&i, &v)| v * t[i]).sum();
-        (mean, (cov.sigma2 - quad).max(1e-12))
+        let mut pws = PredictWorkspace::one_shot(self.k.n_rows);
+        self.predict_latent_with(cov, xstar, &mut pws)
+    }
+
+    /// Workspace for repeated predictions against this EP state: one
+    /// neighbor index over the (permuted) inputs plus one sparse-solve
+    /// scratch, reused across every test point.
+    pub fn predict_workspace(&self, cov: &CovFunction) -> PredictWorkspace {
+        PredictWorkspace::new(cov, &self.xp)
+    }
+
+    /// Latent prediction reusing `pws` — no per-call allocation, and the
+    /// cross-covariance runs through the workspace's neighbor index
+    /// (`O(k)` instead of `O(n)` per test point for compact kernels).
+    pub fn predict_latent_with(
+        &self,
+        cov: &CovFunction,
+        xstar: &[f64],
+        pws: &mut PredictWorkspace,
+    ) -> (f64, f64) {
+        crate::gp::predict::sparse_latent_with(
+            cov,
+            &self.xp,
+            &self.factor,
+            &self.sites.tau,
+            &self.w_pred,
+            xstar,
+            pws,
+        )
+    }
+
+    /// Batched latent predictions through one shared workspace.
+    pub fn predict_latent_batch(&self, cov: &CovFunction, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let mut pws = self.predict_workspace(cov);
+        xs.iter().map(|x| self.predict_latent_with(cov, x, &mut pws)).collect()
     }
 }
 
@@ -312,8 +371,10 @@ mod tests {
 
     fn toy(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
         let x = random_points(n, 2, 6.0, seed);
-        let y: Vec<f64> =
-            x.iter().map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.2 { 1.0 } else { -1.0 }).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.2 { 1.0 } else { -1.0 })
+            .collect();
         (x, y)
     }
 
@@ -367,6 +428,59 @@ mod tests {
         assert!((se.log_z - de.log_z).abs() < 1e-6);
     }
 
+    /// A `PatternCache` hit (superset pattern reuse after a shrinking
+    /// length-scale / σ²-only step) and a miss (grown support) must both
+    /// reproduce the fixed point of an uncached run.
+    #[test]
+    fn pattern_cache_hit_and_miss_reproduce_uncached_fixed_point() {
+        let (x, y) = toy(70, 5);
+        let big = CovFunction::new(CovKind::Pp(3), 2, 1.1, 2.4);
+        let mut small = big.clone();
+        small.sigma2 = 1.45; // σ² step
+        small.lengthscales = vec![1.5, 1.5]; // shrinking support
+        let mut grown = big.clone();
+        grown.lengthscales = vec![2.9, 2.9];
+
+        let mut cache = crate::gp::cache::PatternCache::new(Ordering::Rcm);
+        // miss: first evaluation
+        let run_big = SparseEp::run_cached(&big, &x, &y, &tight(), None, &mut cache).unwrap();
+        // hit: superset reuse
+        let run_small = SparseEp::run_cached(&small, &x, &y, &tight(), None, &mut cache).unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        // miss again: support grew
+        let run_grown = SparseEp::run_cached(&grown, &x, &y, &tight(), None, &mut cache).unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 2));
+
+        for (cached, cov) in [(&run_big, &big), (&run_small, &small), (&run_grown, &grown)] {
+            let fresh = SparseEp::run(cov, &x, &y, Ordering::Rcm, &tight(), None).unwrap();
+            assert!(cached.converged && fresh.converged);
+            assert!(
+                (cached.log_z - fresh.log_z).abs() < 1e-7,
+                "logZ {} vs {}",
+                cached.log_z,
+                fresh.log_z
+            );
+            // sites agree in the original (unpermuted) index space even
+            // though the superset run may use a different permutation
+            for old in 0..x.len() {
+                let a = cached.sites.tau[cached.perm[old]];
+                let b = fresh.sites.tau[fresh.perm[old]];
+                assert!((a - b).abs() < 1e-6, "site {old}: {a} vs {b}");
+            }
+            for px in [vec![1.5, 2.0], vec![3.0, 3.0], vec![4.5, 1.0]] {
+                let (mc, vc) = cached.predict_latent(cov, &px);
+                let (mf, vf) = fresh.predict_latent(cov, &px);
+                assert!((mc - mf).abs() < 1e-6 && (vc - vf).abs() < 1e-6);
+            }
+            // gradients also run on the (possibly superset) stored pattern
+            let gc = cached.log_z_grad(cov);
+            let gf = fresh.log_z_grad(cov);
+            for (a, b) in gc.iter().zip(&gf) {
+                assert!((a - b).abs() < 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
     #[test]
     fn gradient_matches_finite_difference() {
         let (x, y) = toy(18, 3);
@@ -408,7 +522,8 @@ mod tests {
         let (x, y) = toy(20, 13);
         let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
         let m = crate::metrics::Metrics::new();
-        let _ = SparseEp::run(&cov, &x, &y, Ordering::Rcm, &EpOptions::default(), Some(&m)).unwrap();
+        let _ =
+            SparseEp::run(&cov, &x, &y, Ordering::Rcm, &EpOptions::default(), Some(&m)).unwrap();
         assert!(m.count("ep.sites") >= 20);
         assert!(m.total("ep.rowmod") > std::time::Duration::ZERO);
     }

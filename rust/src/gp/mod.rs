@@ -3,6 +3,7 @@
 //! a parallel-EP ablation, and the FIC approximation), marginal likelihood
 //! with gradients, hyperpriors, prediction and exact GP regression.
 
+pub mod cache;
 pub mod covariance;
 pub mod ep_dense;
 pub mod ep_parallel;
@@ -15,7 +16,10 @@ pub mod predict;
 pub mod priors;
 pub mod regression;
 
+pub use cache::PatternCache;
 pub use covariance::{CovFunction, CovKind};
 pub use ep_dense::DenseEp;
+pub use ep_parallel::ParallelEp;
 pub use ep_sparse::SparseEp;
 pub use model::{FittedClassifier, GpClassifier, Inference};
+pub use predict::{LatentPredictor, PredictWorkspace};

@@ -4,13 +4,14 @@
 
 use std::time::{Duration, Instant};
 
+use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
 use crate::gp::ep_dense::DenseEp;
 use crate::gp::ep_parallel::ParallelEp;
 use crate::gp::ep_sparse::SparseEp;
 use crate::gp::fic::FicEp;
 use crate::gp::marginal::EpOptions;
-use crate::gp::predict::{class_probability, evaluate, Metrics as PredMetrics};
+use crate::gp::predict::{evaluate, LatentPredictor, Metrics as PredMetrics};
 use crate::gp::priors::HyperPrior;
 use crate::opt::scg::{scg, ScgOptions};
 use crate::sparse::ordering::Ordering;
@@ -52,9 +53,21 @@ impl GpClassifier {
         }
     }
 
+    /// A [`PatternCache`] matching this model's ordering choice. One cache
+    /// serves one training set; `fit` holds it across the whole SCG loop
+    /// so structure is re-analysed only when the support radius grows.
+    fn fresh_cache(&self) -> PatternCache {
+        let ordering = match &self.inference {
+            Inference::Sparse(ord) | Inference::Parallel(ord) => *ord,
+            Inference::Dense | Inference::Fic { .. } => Ordering::Natural,
+        };
+        PatternCache::new(ordering)
+    }
+
     /// One EP run at the current hyperparameters: returns (logZ, grad,
     /// backend). FIC gradients use central finite differences (see
-    /// DESIGN.md §Substitutions).
+    /// DESIGN.md §Substitutions). Sparse backends draw their structure
+    /// (pattern / ordering / symbolic) from `cache`.
     fn ep_at(
         &self,
         cov: &CovFunction,
@@ -62,6 +75,7 @@ impl GpClassifier {
         y: &[f64],
         xu: &[Vec<f64>],
         want_grad: bool,
+        cache: &mut PatternCache,
     ) -> Result<(f64, Vec<f64>, Backend), String> {
         match &self.inference {
             Inference::Dense => {
@@ -69,19 +83,19 @@ impl GpClassifier {
                 let g = if want_grad { ep.log_z_grad(cov, x) } else { vec![] };
                 Ok((ep.log_z, g, Backend::Dense(ep)))
             }
-            Inference::Sparse(ord) => {
-                let ep = SparseEp::run(cov, x, y, *ord, &self.ep_opts, None)?;
+            Inference::Sparse(_) => {
+                let ep = SparseEp::run_cached(cov, x, y, &self.ep_opts, None, cache)?;
                 let g = if want_grad { ep.log_z_grad(cov) } else { vec![] };
                 Ok((ep.log_z, g, Backend::Sparse(ep)))
             }
-            Inference::Parallel(ord) => {
+            Inference::Parallel(_) => {
                 // analytic gradient shares the sparse-EP machinery: rerun
                 // the sequential algorithm is wasteful, so reuse sparse-EP
                 // formula through a SparseEp run only when a gradient is
                 // needed (the ablation rarely optimizes hyperparameters).
-                let ep = ParallelEp::run(cov, x, y, *ord, &self.ep_opts)?;
+                let ep = ParallelEp::run_cached(cov, x, y, &self.ep_opts, cache)?;
                 let g = if want_grad {
-                    SparseEp::run(cov, x, y, *ord, &self.ep_opts, None)?.log_z_grad(cov)
+                    SparseEp::run_cached(cov, x, y, &self.ep_opts, None, cache)?.log_z_grad(cov)
                 } else {
                     vec![]
                 };
@@ -123,12 +137,15 @@ impl GpClassifier {
         let mut cov = self.cov.clone();
         let p0 = cov.params();
         let mut last_err: Option<String> = None;
+        // one structure cache across the whole optimization: σ²-only steps
+        // and shrinking length-scales reuse pattern + ordering + symbolic
+        let mut cache = self.fresh_cache();
         let res = scg(
             &p0,
             |p| {
                 let mut c = cov.clone();
                 c.set_params(p);
-                match self.ep_at(&c, x, y, &xu, true) {
+                match self.ep_at(&c, x, y, &xu, true, &mut cache) {
                     Ok((logz, grad, _)) => {
                         let mut f = -logz;
                         let mut g: Vec<f64> = grad.iter().map(|v| -v).collect();
@@ -153,9 +170,17 @@ impl GpClassifier {
         let opt_time = t_opt.elapsed();
         cov.set_params(&res.x);
 
-        // final EP run at the mode (this is the paper's "EP" timing column)
+        // final EP run at the mode (this is the paper's "EP" timing column).
+        // Use a fresh cache: the optimizer cache's radius only ratchets up,
+        // and an SCG overshoot would otherwise leave the fitted model (and
+        // its fill/timing stats) on a needlessly dense superset pattern.
         let t_ep = Instant::now();
-        let (log_z, _, backend) = self.ep_at(&cov, x, y, &xu, false)?;
+        let mut final_cache = self.fresh_cache();
+        let (log_z, _, backend) =
+            self.ep_at(&cov, x, y, &xu, false, &mut final_cache).map_err(|e| match &last_err {
+                Some(prev) => format!("{e} (last optimizer-side EP failure: {prev})"),
+                None => e,
+            })?;
         let ep_time = t_ep.elapsed();
 
         let log_post = log_z
@@ -189,7 +214,8 @@ impl GpClassifier {
             _ => Vec::new(),
         };
         let t_ep = Instant::now();
-        let (log_z, _, backend) = self.ep_at(&self.cov, x, y, &xu, false)?;
+        let mut cache = self.fresh_cache();
+        let (log_z, _, backend) = self.ep_at(&self.cov, x, y, &xu, false, &mut cache)?;
         let ep_time = t_ep.elapsed();
         let (fill_k, fill_l) = match &backend {
             Backend::Sparse(ep) => (ep.fill_k, ep.fill_l),
@@ -245,7 +271,9 @@ pub struct FittedClassifier {
 }
 
 impl FittedClassifier {
-    /// Latent predictive (mean, variance) at one point.
+    /// Latent predictive (mean, variance) at one point. Allocates scratch
+    /// per call on the sparse backends — streams of predictions should go
+    /// through [`FittedClassifier::predictor`].
     pub fn predict_latent(&self, xstar: &[f64]) -> (f64, f64) {
         match &self.backend {
             Backend::Dense(ep) => ep.predict_latent(&self.cov, &self.x, xstar),
@@ -255,19 +283,22 @@ impl FittedClassifier {
         }
     }
 
-    /// Latent predictions for a batch.
-    pub fn predict_latent_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
-        xs.iter().map(|x| self.predict_latent(x)).collect()
+    /// Reusable predictor: one neighbor index + one solve workspace shared
+    /// across every prediction made through it.
+    pub fn predictor(&self) -> LatentPredictor<'_> {
+        LatentPredictor::new(self)
     }
 
-    /// Class probabilities π* for a batch.
+    /// Latent predictions for a batch (one shared workspace).
+    pub fn predict_latent_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let mut predictor = self.predictor();
+        xs.iter().map(|x| predictor.predict_latent(x)).collect()
+    }
+
+    /// Class probabilities π* for a batch (one shared workspace).
     pub fn predict_proba(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        xs.iter()
-            .map(|x| {
-                let (m, v) = self.predict_latent(x);
-                class_probability(m, v)
-            })
-            .collect()
+        let mut predictor = self.predictor();
+        xs.iter().map(|x| predictor.predict_proba(x)).collect()
     }
 
     /// Error / nlpd metrics on a labelled test set.
@@ -284,8 +315,10 @@ mod tests {
 
     fn blob_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
         let x = random_points(n, 2, 6.0, seed);
-        let y: Vec<f64> =
-            x.iter().map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.0 { 1.0 } else { -1.0 }).collect();
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.0 { 1.0 } else { -1.0 })
+            .collect();
         (x, y)
     }
 

@@ -3,14 +3,30 @@
 //! posterior mode of the length-scale for a range of Wendland dimension
 //! parameters D and record how the covariance fill grows with D.
 
+use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
 use crate::rng::Rng;
+use crate::sparse::ordering::Ordering;
 
 /// log marginal likelihood of GP regression with iid noise σn²:
 /// `−½ yᵀ(K+σn²I)⁻¹y − ½ log|K+σn²I| − n/2 log 2π`.
 pub fn log_marginal(cov: &CovFunction, noise_var: f64, x: &[Vec<f64>], y: &[f64]) -> f64 {
+    log_marginal_cached(cov, noise_var, x, y, &mut PatternCache::new(Ordering::Natural))
+}
+
+/// [`log_marginal`] drawing the covariance pattern from `cache`, so a
+/// hyperparameter search re-runs neighbor queries only when the support
+/// radius grows (see [`PatternCache`]).
+pub fn log_marginal_cached(
+    cov: &CovFunction,
+    noise_var: f64,
+    x: &[Vec<f64>],
+    y: &[f64],
+    cache: &mut PatternCache,
+) -> f64 {
     let n = x.len();
-    let mut ky = cov.cov_matrix(x).to_dense();
+    let cached = cache.pattern_for(cov, x);
+    let mut ky = cov.cov_values_on_pattern(x, &cached.pattern).to_dense();
     ky.add_diag(noise_var);
     let ch = ky.cholesky().expect("K + σn²I must be PD");
     let alpha = ch.solve(y);
@@ -26,8 +42,24 @@ pub fn log_marginal_grad(
     x: &[Vec<f64>],
     y: &[f64],
 ) -> Vec<f64> {
+    log_marginal_grad_cached(cov, noise_var, x, y, &mut PatternCache::new(Ordering::Natural))
+}
+
+/// [`log_marginal_grad`] on a cached pattern: the gradient values are
+/// evaluated entry-aligned with the cached (possibly superset) pattern;
+/// out-of-support entries carry exactly zero gradient, so the result
+/// matches the uncached computation.
+pub fn log_marginal_grad_cached(
+    cov: &CovFunction,
+    noise_var: f64,
+    x: &[Vec<f64>],
+    y: &[f64],
+    cache: &mut PatternCache,
+) -> Vec<f64> {
     let n = x.len();
-    let (kmat, grads) = cov.cov_matrix_grads(x);
+    let cached = cache.pattern_for(cov, x);
+    let kmat = cov.cov_values_on_pattern(x, &cached.pattern);
+    let grads = cov.cov_grads_on_pattern(x, &kmat);
     let mut ky = kmat.to_dense();
     ky.add_diag(noise_var);
     let ch = ky.cholesky().expect("K + σn²I must be PD");
@@ -83,14 +115,19 @@ pub fn optimize_hypers(
     max_iters: usize,
 ) -> (CovFunction, f64) {
     let mut c = cov.clone();
+    // one pattern cache across the whole search: every objective/gradient
+    // evaluation at a non-growing support radius skips assembly structure
+    let mut cache = PatternCache::new(Ordering::Natural);
     let res = crate::opt::scg::scg(
         &c.params(),
         |p| {
             let mut ct = c.clone();
             ct.set_params(p);
-            let f = -log_marginal(&ct, noise_var, x, y);
-            let g: Vec<f64> =
-                log_marginal_grad(&ct, noise_var, x, y).iter().map(|v| -v).collect();
+            let f = -log_marginal_cached(&ct, noise_var, x, y, &mut cache);
+            let g: Vec<f64> = log_marginal_grad_cached(&ct, noise_var, x, y, &mut cache)
+                .iter()
+                .map(|v| -v)
+                .collect();
             (f, g)
         },
         &crate::opt::scg::ScgOptions { max_iters, x_tol: 1e-5, f_tol: 1e-7 },

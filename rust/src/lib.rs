@@ -10,6 +10,10 @@
 //!   sparse triangular solves, rank-one update/downdate, the Davis–Hager
 //!   row-modification (`ldlrowmodify`, the paper's Algorithm 2) and the
 //!   Takahashi sparsified inverse.
+//! * [`geom`] — spatial neighbor indices (grid cell list for low
+//!   dimension, kd-tree above it) answering the radius-`max(lengthscales)`
+//!   queries that make compact-support covariance assembly `O(n·k)`
+//!   instead of the all-pairs `O(n²)` scan.
 //! * [`gp`] — covariance functions (squared exponential, the Wendland
 //!   piecewise polynomials `pp0..pp3`, Matérn), the probit likelihood,
 //!   dense EP (Rasmussen & Williams Alg. 3.5), the paper's sparse EP
@@ -18,15 +22,31 @@
 //! * [`opt`] — scaled conjugate gradients for hyperparameter MAP search.
 //! * [`data`] — the paper's synthetic cluster workload (§6.1), UCI-like
 //!   dataset generators and the cross-validation harness.
-//! * [`runtime`] — PJRT (XLA) client wrapper that loads AOT-compiled
-//!   covariance / probit artifacts produced by `python/compile/aot.py`.
+//! * [`runtime`] — artifact runtime for the covariance / probit kernels
+//!   compiled by `python/compile/aot.py`; a native interpreter by default,
+//!   with the PJRT (XLA) path behind the off-by-default `xla` feature.
 //! * [`coordinator`] — training-job manager and a batching prediction
 //!   service (threads + channels).
 //! * [`bench`] — a minimal measurement harness used by `benches/`.
+//!
+//! # Structure reuse contract
+//!
+//! Covariance *structure* (sparsity pattern, fill-reducing ordering,
+//! symbolic Cholesky analysis) is decoupled from covariance *values*.
+//! [`gp::cache::PatternCache`] owns the structure for one training set:
+//! hyperparameter moves that keep the ARD support ellipsoid inside the
+//! cached one — σ²-only steps, per-axis-shrinking length-scales — reuse
+//! the cached (superset) pattern, on which re-evaluated values reproduce
+//! the exact assembly (out-of-support entries are exact zeros). Only
+//! support growth along some axis triggers new neighbor queries, a new
+//! ordering and a new symbolic analysis. `SparseEp::log_z_grad` evaluates gradients on the
+//! pattern its run factored, so run/gradient pattern agreement is
+//! structural rather than asserted.
 
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod geom;
 pub mod gp;
 pub mod metrics;
 pub mod opt;

@@ -1,13 +1,21 @@
-//! PJRT runtime: loads the AOT artifacts produced by
-//! `python/compile/aot.py` (HLO text), compiles each once on the CPU PJRT
-//! client, caches the executables, and exposes typed wrappers for the
-//! covariance-tile and probit entry points used on the L3 hot path.
+//! Artifact runtime for the kernels compiled by `python/compile/aot.py`
+//! (covariance tiles, probit moments, predictive probabilities).
+//!
+//! Two backends behind one [`Runtime`] handle:
+//!
+//! * **native** (default) — a pure-rust interpreter of the artifact entry
+//!   points, bit-compatible with the reference formulas the artifacts
+//!   were generated from. No external dependencies, works offline.
+//! * **pjrt** (`--features xla`) — executes the AOT-compiled HLO through
+//!   a PJRT client. Requires vendored PJRT bindings; without them the
+//!   feature still builds and the runtime transparently uses the native
+//!   backend, so enabling `xla` is always safe.
 //!
 //! Python never runs here — the `.hlo.txt` files are the only thing that
 //! crosses the language boundary, at build time.
 
-pub mod client;
-pub mod covariance;
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-pub use client::{Runtime, DMAX, PROBIT_BATCH, TILE};
-pub use covariance::XlaCovarianceAssembler;
+pub use native::{Runtime, RuntimeBackend, DMAX, PROBIT_BATCH, TILE};

@@ -1,0 +1,249 @@
+//! Native artifact interpreter — the default runtime backend.
+//!
+//! The AOT pipeline (`python/compile/aot.py`) lowers the covariance-tile
+//! and probit kernels to HLO text plus a `manifest.json` describing the
+//! artifact geometry. Without vendored PJRT bindings the runtime cannot
+//! *execute* those artifacts, but every entry point has a bit-compatible
+//! native implementation (the artifacts were generated from the same
+//! reference formulas in `python/compile/kernels/ref.py`), so the rest of
+//! the system — the prediction service's probability stage, the CLI's
+//! `artifacts-check`, the benches — runs unchanged. The manifest is still
+//! validated when present, so geometry drift is caught at open time
+//! rather than at the first PJRT-enabled deployment.
+
+use std::path::{Path, PathBuf};
+
+use crate::gp::covariance::CovFunction;
+use crate::gp::likelihood::probit_moments;
+use crate::gp::predict::class_probability;
+use crate::sparse::csc::CscMatrix;
+
+/// Artifact geometry — must match `python/compile/kernels/ref.py`
+/// (`manifest.json` is checked against these at load time).
+pub const TILE: usize = 128;
+pub const DMAX: usize = 64;
+pub const PROBIT_BATCH: usize = 1024;
+
+/// Which backend answers runtime calls.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RuntimeBackend {
+    /// Pure-rust interpreter of the artifact entry points (always built).
+    Native,
+    /// PJRT execution of the compiled artifacts (requires the `xla`
+    /// feature *and* vendored PJRT bindings).
+    Pjrt,
+}
+
+/// Runtime handle: artifact directory + the backend serving it.
+pub struct Runtime {
+    dir: PathBuf,
+    backend: RuntimeBackend,
+    artifacts_present: bool,
+}
+
+impl Runtime {
+    /// Open the artifact directory. A `manifest.json` (as written by
+    /// `python -m compile.aot`) is validated when present; a missing
+    /// manifest is fine for the native backend, which needs no artifacts.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.json");
+        let artifacts_present = manifest.exists();
+        if artifacts_present {
+            let text = std::fs::read_to_string(&manifest).map_err(|e| e.to_string())?;
+            for (key, want) in
+                [("\"tile\"", TILE), ("\"dmax\"", DMAX), ("\"probit_batch\"", PROBIT_BATCH)]
+            {
+                let got =
+                    json_usize(&text, key).ok_or_else(|| format!("manifest missing {key}"))?;
+                if got != want {
+                    return Err(format!(
+                        "artifact geometry mismatch: {key} = {got}, runtime expects {want} \
+                         (re-run `make artifacts`)"
+                    ));
+                }
+            }
+        }
+        let backend = Runtime::select_backend(&dir, artifacts_present);
+        Ok(Runtime { dir, backend, artifacts_present })
+    }
+
+    #[cfg(feature = "xla")]
+    fn select_backend(dir: &Path, artifacts_present: bool) -> RuntimeBackend {
+        if artifacts_present && crate::runtime::pjrt::bindings_available(dir) {
+            RuntimeBackend::Pjrt
+        } else {
+            RuntimeBackend::Native
+        }
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn select_backend(_dir: &Path, _artifacts_present: bool) -> RuntimeBackend {
+        RuntimeBackend::Native
+    }
+
+    /// Default location: `$CSGP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime, String> {
+        let dir = std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::open(dir)
+    }
+
+    pub fn backend(&self) -> RuntimeBackend {
+        self.backend
+    }
+
+    pub fn platform(&self) -> String {
+        match self.backend {
+            RuntimeBackend::Native => "native-interpreter".to_string(),
+            RuntimeBackend::Pjrt => "pjrt-cpu".to_string(),
+        }
+    }
+
+    /// Directory the runtime was opened on.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Whether a validated artifact manifest was found.
+    pub fn artifacts_present(&self) -> bool {
+        self.artifacts_present
+    }
+
+    /// Batched probit tilted moments (`probit_moments` artifact).
+    pub fn probit_moments(
+        &self,
+        y: &[f64],
+        mu: &[f64],
+        var: &[f64],
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>), String> {
+        let n = y.len();
+        if n > PROBIT_BATCH || mu.len() != n || var.len() != n {
+            return Err(format!(
+                "probit_moments: bad batch (n = {n}, mu = {}, var = {}, max = {PROBIT_BATCH})",
+                mu.len(),
+                var.len()
+            ));
+        }
+        let mut lnz = Vec::with_capacity(n);
+        let mut muh = Vec::with_capacity(n);
+        let mut s2h = Vec::with_capacity(n);
+        for i in 0..n {
+            let (l, m, s) = probit_moments(y[i], mu[i], var[i]);
+            lnz.push(l);
+            muh.push(m);
+            s2h.push(s);
+        }
+        Ok((lnz, muh, s2h))
+    }
+
+    /// Batched predictive probabilities (`predict_probit` artifact; any
+    /// length, chunked to the artifact batch internally).
+    pub fn predict_probit(&self, mean: &[f64], var: &[f64]) -> Result<Vec<f64>, String> {
+        if mean.len() != var.len() {
+            return Err("predict_probit: length mismatch".to_string());
+        }
+        Ok(mean.iter().zip(var).map(|(&m, &v)| class_probability(m, v)).collect())
+    }
+
+    /// Full covariance matrix assembly (`cov_tile_<kind>` artifacts):
+    /// matches [`CovFunction::cov_matrix`] — pattern and values — exactly.
+    pub fn cov_matrix(&self, cov: &CovFunction, x: &[Vec<f64>]) -> Result<CscMatrix, String> {
+        let d = cov.lengthscales.len();
+        if d > DMAX {
+            return Err(format!("input dim {d} exceeds artifact DMAX {DMAX}"));
+        }
+        Ok(cov.cov_matrix(x))
+    }
+}
+
+/// Minimal "key": value extractor for the flat manifest fields.
+fn json_usize(text: &str, key: &str) -> Option<usize> {
+    let pos = text.find(key)?;
+    let rest = &text[pos + key.len()..];
+    let colon = rest.find(':')?;
+    let tail = rest[colon + 1..].trim_start();
+    let end = tail.find(|c: char| !c.is_ascii_digit()).unwrap_or(tail.len());
+    tail[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::covariance::CovKind;
+    use crate::testutil::random_points;
+
+    #[test]
+    fn json_usize_extracts() {
+        let t = r#"{"tile": 128, "dmax":64, "probit_batch" : 1024}"#;
+        assert_eq!(json_usize(t, "\"tile\""), Some(128));
+        assert_eq!(json_usize(t, "\"dmax\""), Some(64));
+        assert_eq!(json_usize(t, "\"probit_batch\""), Some(1024));
+        assert_eq!(json_usize(t, "\"missing\""), None);
+    }
+
+    #[test]
+    fn opens_without_artifacts_on_native_backend() {
+        let rt = Runtime::open("this/dir/does/not/exist").unwrap();
+        assert_eq!(rt.backend(), RuntimeBackend::Native);
+        assert!(!rt.artifacts_present());
+        assert_eq!(rt.platform(), "native-interpreter");
+    }
+
+    #[test]
+    fn probit_moments_match_native_likelihood() {
+        let rt = Runtime::open_default().unwrap();
+        let y = [1.0, -1.0, 1.0, -1.0];
+        let mu = [0.3, -1.2, 2.0, 0.0];
+        let var = [0.8, 2.5, 0.5, 1.0];
+        let (lnz, muh, s2h) = rt.probit_moments(&y, &mu, &var).unwrap();
+        for i in 0..4 {
+            let (l, m, s) = probit_moments(y[i], mu[i], var[i]);
+            assert_eq!(lnz[i], l);
+            assert_eq!(muh[i], m);
+            assert_eq!(s2h[i], s);
+        }
+    }
+
+    #[test]
+    fn predict_probit_matches_native_any_length() {
+        let rt = Runtime::open_default().unwrap();
+        let n = PROBIT_BATCH + 37;
+        let mean: Vec<f64> = (0..n).map(|i| (i as f64 / 100.0) - 5.0).collect();
+        let var: Vec<f64> = (0..n).map(|i| 0.1 + (i % 7) as f64).collect();
+        let got = rt.predict_probit(&mean, &var).unwrap();
+        assert_eq!(got.len(), n);
+        for i in (0..n).step_by(101) {
+            assert_eq!(got[i], class_probability(mean[i], var[i]));
+        }
+    }
+
+    #[test]
+    fn cov_assembly_matches_native_and_checks_dim() {
+        let rt = Runtime::open_default().unwrap();
+        let x = random_points(150, 3, 8.0, 99);
+        for kind in [CovKind::Se, CovKind::Pp(0), CovKind::Pp(3), CovKind::Matern52] {
+            let mut cov = CovFunction::new(kind, 3, 1.4, 2.0);
+            cov.lengthscales = vec![2.0, 1.0, 3.0];
+            let got = rt.cov_matrix(&cov, &x).unwrap();
+            let want = cov.cov_matrix(&x);
+            assert_eq!(got, want, "{kind:?}");
+        }
+        let cov = CovFunction::new(CovKind::Se, DMAX + 1, 1.0, 1.0);
+        let x = random_points(4, DMAX + 1, 1.0, 1);
+        assert!(rt.cov_matrix(&cov, &x).is_err());
+    }
+
+    #[test]
+    fn bad_manifest_geometry_is_rejected() {
+        let dir = std::env::temp_dir().join(format!("csgp-rt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"tile": 64, "dmax": 64, "probit_batch": 1024}"#,
+        )
+        .unwrap();
+        let err = Runtime::open(&dir).unwrap_err();
+        assert!(err.contains("geometry mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

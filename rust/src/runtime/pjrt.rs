@@ -1,0 +1,18 @@
+//! PJRT (XLA) execution path — compiled only with `--features xla`.
+//!
+//! The artifacts under `artifacts/` are HLO text compiled ahead of time by
+//! `python/compile/aot.py`; executing them requires PJRT bindings that are
+//! not vendored into this offline build. Until they are, this module only
+//! reports whether the bindings are present, and [`super::Runtime`] falls
+//! back to the native interpreter — enabling the feature is therefore
+//! always safe. The binding surface the loader expects is documented in
+//! the git history of `runtime/client.rs` (PJRT CPU client, compile-once
+//! executable cache keyed by artifact name).
+
+use std::path::Path;
+
+/// Are executable PJRT bindings available for this artifact directory?
+/// Always `false` until the bindings are vendored.
+pub fn bindings_available(_dir: &Path) -> bool {
+    false
+}

@@ -55,10 +55,17 @@ impl LdlFactor {
 
     /// Dense backward solve Lᵀ x = y in place.
     pub fn solve_upper_dense(&self, x: &mut [f64]) {
+        self.solve_upper_impl(x, None);
+    }
+
+    /// The shared Lᵀ substitution: optionally records every index left
+    /// nonzero into `written` (the sparse-RHS path's cleanup set).
+    fn solve_upper_impl(&self, x: &mut [f64], mut written: Option<&mut Vec<usize>>) {
         let sym = &self.symbolic;
         debug_assert_eq!(x.len(), sym.n);
         for j in (0..sym.n).rev() {
-            // SAFETY: pattern indices are < n by construction.
+            // SAFETY: pattern indices are < n by construction and x has
+            // length n (asserted above).
             unsafe {
                 let lo = *sym.col_ptr.get_unchecked(j);
                 let hi = *sym.col_ptr.get_unchecked(j + 1);
@@ -67,6 +74,11 @@ impl LdlFactor {
                     s -= self.l.get_unchecked(p) * x.get_unchecked(*sym.row_idx.get_unchecked(p));
                 }
                 *x.get_unchecked_mut(j) = s;
+                if s != 0.0 {
+                    if let Some(w) = written.as_mut() {
+                        w.push(j);
+                    }
+                }
             }
         }
     }
@@ -92,9 +104,11 @@ impl LdlFactor {
     }
 
     /// Solve A t = a with *sparse* a, writing the dense result into `t`
-    /// (caller-provided, will be fully overwritten on the reach and must be
-    /// zero elsewhere — pass a zeroed scratch that you re-zero afterwards,
-    /// or use [`SparseSolveWorkspace`]).
+    /// (caller-provided, must be all-zero on entry). The indices of every
+    /// entry left nonzero are recorded in `ws.written`, so the caller can
+    /// restore the all-zero state with [`SparseSolveWorkspace::clear_solution`]
+    /// in O(nnz(t)) instead of an O(n) sweep — the per-site cost the EP
+    /// inner loop relies on.
     ///
     /// `a_rows`/`a_vals` are the sorted pattern/values of `a`.
     pub fn solve_sparse_rhs(
@@ -130,8 +144,10 @@ impl LdlFactor {
         for &j in ws.reach.iter() {
             t[j] /= self.d[j];
         }
-        // backward solve: t is generally dense from here on
-        self.solve_upper_dense(t);
+        // backward solve: t is generally dense from here on, but zeros stay
+        // zeros, so only the entries that end up nonzero are recorded
+        ws.written.clear();
+        self.solve_upper_impl(t, Some(&mut ws.written));
     }
 }
 
@@ -140,11 +156,29 @@ pub struct SparseSolveWorkspace {
     pub mark: Vec<usize>,
     pub tag: usize,
     pub reach: Vec<usize>,
+    /// Indices of the nonzero entries the last [`LdlFactor::solve_sparse_rhs`]
+    /// left in the solution vector.
+    pub written: Vec<usize>,
 }
 
 impl SparseSolveWorkspace {
     pub fn new(n: usize) -> Self {
-        SparseSolveWorkspace { mark: vec![0; n], tag: 0, reach: Vec::with_capacity(n) }
+        SparseSolveWorkspace {
+            mark: vec![0; n],
+            tag: 0,
+            reach: Vec::with_capacity(n),
+            written: Vec::with_capacity(n),
+        }
+    }
+
+    /// Re-zero exactly the entries the last solve wrote, restoring the
+    /// all-zero precondition of `solve_sparse_rhs` without touching the
+    /// other `n − nnz(t)` entries.
+    pub fn clear_solution(&mut self, t: &mut [f64]) {
+        for &i in &self.written {
+            t[i] = 0.0;
+        }
+        self.written.clear();
     }
 }
 
@@ -201,6 +235,28 @@ mod tests {
         // union of two seeds dedups
         etree_reach(&parent, &[4, 2], &mut mark, 2, &mut out);
         assert_eq!(out, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn written_set_tracks_nonzeros_and_clear_restores_zero() {
+        let n = 40;
+        let a = random_sparse_spd(n, 0.08, 12);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::factor(sym, &a).unwrap();
+        let mut ws = SparseSolveWorkspace::new(n);
+        let mut t = vec![0.0; n];
+        for seed in 0..n {
+            let rows = vec![seed];
+            let vals = vec![1.0 + seed as f64];
+            f.solve_sparse_rhs(&rows, &vals, &mut ws, &mut t);
+            // written == exactly the nonzero support of t
+            let nz: Vec<usize> = (0..n).filter(|&i| t[i] != 0.0).collect();
+            let mut written = ws.written.clone();
+            written.sort_unstable();
+            assert_eq!(written, nz, "seed {seed}");
+            ws.clear_solution(&mut t);
+            assert!(t.iter().all(|&v| v == 0.0), "seed {seed}: scratch not restored");
+        }
     }
 
     #[test]

@@ -37,8 +37,15 @@ fn full_pipeline_sparse_pp3_beats_chance_substantially() {
 #[test]
 fn every_covariance_family_runs_through_sparse_ep() {
     let data = cluster(120, 9);
-    for kind in [CovKind::Pp(0), CovKind::Pp(1), CovKind::Pp(2), CovKind::Pp(3), CovKind::Matern32, CovKind::Matern52, CovKind::Se]
-    {
+    for kind in [
+        CovKind::Pp(0),
+        CovKind::Pp(1),
+        CovKind::Pp(2),
+        CovKind::Pp(3),
+        CovKind::Matern32,
+        CovKind::Matern52,
+        CovKind::Se,
+    ] {
         // globally supported kernels exercise the dense-pattern path
         let ls = if matches!(kind, CovKind::Pp(_)) { 1.8 } else { 1.2 };
         let cov = CovFunction::new(kind, 2, 1.0, ls);
@@ -87,7 +94,8 @@ fn uci_analogues_fit_with_all_models() {
         Inference::Sparse(Ordering::Rcm),
         Inference::Fic { m: 12 },
     ] {
-        let kind = if matches!(inference, Inference::Sparse(_)) { CovKind::Pp(3) } else { CovKind::Se };
+        let kind =
+            if matches!(inference, Inference::Sparse(_)) { CovKind::Pp(3) } else { CovKind::Se };
         let model = GpClassifier::new(CovFunction::new(kind, spec.d, 1.0, 3.0), inference);
         let fitted = model.infer_only(&data.x, &data.y).unwrap();
         let m = fitted.evaluate(&data.x, &data.y); // train-set sanity
@@ -138,6 +146,42 @@ fn sparse_ep_scales_better_than_dense_on_sparse_problems() {
         "sparse {t_sparse:?} should beat dense {t_dense:?} (fill-L {})",
         se_sparse.report.fill_l
     );
+}
+
+#[test]
+fn batched_prediction_matches_per_point_calls() {
+    // the batched path shares one neighbor index + one solve workspace;
+    // it must agree with the allocate-per-call path to the last bit
+    let data = cluster(300, 33);
+    let (train, test) = data.split(220);
+    for inference in [Inference::Sparse(Ordering::Rcm), Inference::Parallel(Ordering::Rcm)] {
+        let model =
+            GpClassifier::new(CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4), inference);
+        let fitted = model.infer_only(&train.x, &train.y).unwrap();
+        let batched = fitted.predict_latent_batch(&test.x);
+        let mut predictor = fitted.predictor();
+        for (x, &(mb, vb)) in test.x.iter().zip(&batched) {
+            let (m1, v1) = fitted.predict_latent(x);
+            let (m2, v2) = predictor.predict_latent(x);
+            assert!((mb - m1).abs() < 1e-12 && (vb - v1).abs() < 1e-12);
+            assert!((mb - m2).abs() < 1e-12 && (vb - v2).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn optimizer_loop_reuses_structure_across_evaluations() {
+    // a short MAP fit on a CS kernel: the SCG loop must not re-analyse
+    // structure on every gradient evaluation (σ²-only and shrinking steps
+    // hit the cache), and the fit must still improve the posterior
+    let data = cluster(200, 51);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 0.8, 1.8);
+    let mut model = GpClassifier::new(cov, Inference::Sparse(Ordering::Rcm));
+    model.opt_opts.max_iters = 8;
+    let before = model.infer_only(&data.x, &data.y).unwrap().report.log_post;
+    let fitted = model.fit(&data.x, &data.y).unwrap();
+    assert!(fitted.report.log_post >= before - 1e-6);
+    assert!(fitted.report.fn_evals > 0);
 }
 
 #[test]
