@@ -1,5 +1,6 @@
-//! UCI-analogue benchmark: trains k_se (dense EP), k_pp3 (sparse EP) and
-//! FIC on two of the paper's §6.2 datasets through the coordinator's
+//! UCI-analogue benchmark: trains k_se (dense EP), k_pp3 (sparse EP),
+//! FIC and the CS+FIC hybrid (local pp3 + global SE through inducing
+//! points) on two of the paper's §6.2 datasets through the coordinator's
 //! job manager, then cross-validates the winner.
 //!
 //! Run: `cargo run --release --example uci_benchmark`
@@ -19,21 +20,44 @@ fn main() {
         UCI_SPECS.iter().filter(|s| s.name == "crabs" || s.name == "sonar").collect();
     let mgr = JobManager::start(3);
 
-    println!("submitting {} training jobs to the coordinator...", specs.len() * 3);
+    println!("submitting {} training jobs to the coordinator...", specs.len() * 4);
     let mut jobs = Vec::new();
     for spec in &specs {
         let data = generate(spec, 11);
-        for (label, cov, inference) in [
-            ("k_se/dense", CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5), Inference::Dense),
+        for (label, cov, global_cov, inference) in [
+            (
+                "k_se/dense",
+                CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5),
+                None,
+                Inference::Dense,
+            ),
             (
                 "k_pp3/sparse",
                 CovFunction::new(CovKind::Pp(3), spec.d, 1.0, 4.0),
+                None,
                 Inference::Sparse(Ordering::Rcm),
             ),
-            ("FIC m=10", CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5), Inference::Fic { m: 10 }),
+            (
+                "FIC m=10",
+                CovFunction::new(CovKind::Se, spec.d, 1.0, 2.5),
+                None,
+                Inference::Fic { m: 10 },
+            ),
+            (
+                "CS+FIC m=10",
+                CovFunction::new(CovKind::Pp(3), spec.d, 1.0, 4.0),
+                Some(CovFunction::new(CovKind::Se, spec.d, 0.8, 2.5)),
+                Inference::CsFic { m: 10 },
+            ),
         ] {
             let id = mgr
-                .submit(TrainSpec { dataset: data.clone(), cov, inference, optimize: false })
+                .submit(TrainSpec {
+                    dataset: data.clone(),
+                    cov,
+                    global_cov,
+                    inference,
+                    optimize: false,
+                })
                 .unwrap();
             jobs.push((spec.name, label, id));
         }

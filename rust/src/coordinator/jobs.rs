@@ -21,6 +21,8 @@ pub type JobId = u64;
 pub struct TrainSpec {
     pub dataset: Dataset,
     pub cov: CovFunction,
+    /// Global trend kernel for `Inference::CsFic` (None otherwise).
+    pub global_cov: Option<CovFunction>,
     pub inference: Inference,
     /// Optimize hyperparameters (vs a single EP run).
     pub optimize: bool,
@@ -70,12 +72,27 @@ impl JobManager {
                     Err(_) => return,
                 };
                 shared.status.lock().unwrap().insert(id, JobStatus::Running);
-                let model = GpClassifier::new(spec.cov.clone(), spec.inference.clone());
-                let outcome = if spec.optimize {
-                    model.fit(&spec.dataset.x, &spec.dataset.y)
-                } else {
-                    model.infer_only(&spec.dataset.x, &spec.dataset.y)
+                // CS+FIC jobs go through the dedicated constructor so the
+                // hyperprior covers the joint parameter vector; a global
+                // kernel on any other backend is a misconfiguration (it
+                // would be silently ignored), so fail the job instead
+                let model = match (&spec.inference, &spec.global_cov) {
+                    (Inference::CsFic { m }, Some(g)) => {
+                        GpClassifier::new_cs_fic(spec.cov.clone(), g.clone(), *m)
+                    }
+                    (_, Some(_)) => Err(format!(
+                        "global_cov is only meaningful with Inference::CsFic (got {:?})",
+                        spec.inference
+                    )),
+                    _ => Ok(GpClassifier::new(spec.cov.clone(), spec.inference.clone())),
                 };
+                let outcome = model.and_then(|model| {
+                    if spec.optimize {
+                        model.fit(&spec.dataset.x, &spec.dataset.y)
+                    } else {
+                        model.infer_only(&spec.dataset.x, &spec.dataset.y)
+                    }
+                });
                 match outcome {
                     Ok(fitted) => {
                         let st = JobStatus::Done {
@@ -169,6 +186,7 @@ mod tests {
         TrainSpec {
             dataset: Dataset { name: format!("toy{seed}"), x, y },
             cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            global_cov: None,
             inference: Inference::Sparse(Ordering::Rcm),
             optimize,
         }
@@ -196,6 +214,42 @@ mod tests {
     fn unknown_job_has_no_status() {
         let mgr = JobManager::start(1);
         assert!(mgr.status(999).is_none());
+        mgr.shutdown();
+    }
+
+    /// CS+FIC trains through the job manager like every other backend.
+    #[test]
+    fn cs_fic_jobs_train_and_serve() {
+        let x = random_points(40, 2, 6.0, 9);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let mgr = JobManager::start(1);
+        let id = mgr
+            .submit(TrainSpec {
+                dataset: Dataset { name: "hybrid".into(), x, y },
+                cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+                global_cov: Some(CovFunction::new(CovKind::Se, 2, 0.6, 3.0)),
+                inference: Inference::CsFic { m: 8 },
+                optimize: false,
+            })
+            .unwrap();
+        let st = mgr.wait(id, Duration::from_secs(60)).unwrap();
+        assert!(matches!(st, JobStatus::Done { .. }), "{st:?}");
+        let fitted = mgr.result(id).unwrap();
+        let (m, v) = fitted.predict_latent(&[1.0, 1.0]);
+        assert!(m.is_finite() && v > 0.0);
+        mgr.shutdown();
+    }
+
+    /// A global kernel on a non-hybrid backend would be silently ignored;
+    /// the job must fail loudly instead.
+    #[test]
+    fn global_cov_on_non_hybrid_backend_fails_the_job() {
+        let mut spec = toy_spec(3, false);
+        spec.global_cov = Some(CovFunction::new(CovKind::Se, 2, 1.0, 2.0));
+        let mgr = JobManager::start(1);
+        let id = mgr.submit(spec).unwrap();
+        let st = mgr.wait(id, Duration::from_secs(30)).unwrap();
+        assert!(matches!(st, JobStatus::Failed(_)), "{st:?}");
         mgr.shutdown();
     }
 }

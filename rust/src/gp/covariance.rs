@@ -460,6 +460,64 @@ impl CovFunction {
     }
 }
 
+/// Additive two-kernel composition for the CS+FIC hybrid prior:
+/// `k(x, x') = k_cs(x, x') + k_global(x, x')` with independent
+/// hyperparameters for each term.
+///
+/// The CS term is kept exact and sparse (it drives the covariance
+/// pattern, the cache and the symbolic factorization); the global term is
+/// approximated by FIC inducing points in `gp::csfic`. Log-space
+/// parameters are the concatenation `[cs: ln σ², ln l…, global: ln σ²,
+/// ln l…]`, matching the optimizer layout of `Inference::CsFic`.
+#[derive(Clone, Debug)]
+pub struct AdditiveCov {
+    /// Globally supported trend term (SE / Matérn).
+    pub global: CovFunction,
+    /// Compactly supported local term (Wendland pp0..pp3).
+    pub cs: CovFunction,
+}
+
+impl AdditiveCov {
+    pub fn new(global: CovFunction, cs: CovFunction) -> Result<AdditiveCov, String> {
+        if global.input_dim != cs.input_dim {
+            return Err(format!(
+                "AdditiveCov: input dims differ ({} vs {})",
+                global.input_dim, cs.input_dim
+            ));
+        }
+        if !cs.is_compact() {
+            return Err("AdditiveCov: the cs term must be compactly supported (pp0..pp3)".into());
+        }
+        if global.is_compact() {
+            return Err("AdditiveCov: the global term must be globally supported".into());
+        }
+        Ok(AdditiveCov { global, cs })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.cs.n_params() + self.global.n_params()
+    }
+
+    /// `[cs params…, global params…]` in log space.
+    pub fn params(&self) -> Vec<f64> {
+        let mut p = self.cs.params();
+        p.extend(self.global.params());
+        p
+    }
+
+    pub fn set_params(&mut self, p: &[f64]) {
+        assert_eq!(p.len(), self.n_params());
+        let nc = self.cs.n_params();
+        self.cs.set_params(&p[..nc]);
+        self.global.set_params(&p[nc..]);
+    }
+
+    /// k(x1, x2) = k_cs + k_global.
+    pub fn kernel(&self, x1: &[f64], x2: &[f64]) -> f64 {
+        self.cs.kernel(x1, x2) + self.global.kernel(x1, x2)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -715,6 +773,31 @@ mod tests {
                 assert_eq!(c.kernel(&x[i], &xs), 0.0);
             }
         }
+    }
+
+    #[test]
+    fn additive_cov_is_the_sum_and_roundtrips_params() {
+        let global = CovFunction::new(CovKind::Se, 2, 0.7, 3.0);
+        let cs = CovFunction::new(CovKind::Pp(3), 2, 1.3, 1.5);
+        let mut add = AdditiveCov::new(global.clone(), cs.clone()).unwrap();
+        assert_eq!(add.n_params(), 6);
+        let x = random_points(10, 2, 5.0, 3);
+        for i in 0..x.len() {
+            for j in 0..x.len() {
+                let want = cs.kernel(&x[i], &x[j]) + global.kernel(&x[i], &x[j]);
+                assert!((add.kernel(&x[i], &x[j]) - want).abs() < 1e-14);
+            }
+        }
+        let p = add.params();
+        assert_eq!(&p[..3], cs.params().as_slice());
+        assert_eq!(&p[3..], global.params().as_slice());
+        add.set_params(&p);
+        assert!((add.cs.sigma2 - 1.3).abs() < 1e-12);
+        assert!((add.global.sigma2 - 0.7).abs() < 1e-12);
+        // validation: both-compact or both-global compositions are rejected
+        assert!(AdditiveCov::new(cs.clone(), cs.clone()).is_err());
+        assert!(AdditiveCov::new(global.clone(), global.clone()).is_err());
+        assert!(AdditiveCov::new(CovFunction::new(CovKind::Se, 3, 1.0, 1.0), cs).is_err());
     }
 
     #[test]

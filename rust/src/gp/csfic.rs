@@ -1,0 +1,815 @@
+//! CS+FIC hybrid EP — local structure through a compactly supported
+//! kernel, global trends through FIC inducing points.
+//!
+//! Prior covariance (Vanhatalo & Vehtari 2008, *Modelling local and
+//! global phenomena with sparse Gaussian processes*):
+//!
+//! ```text
+//! P = K_cs + Λ + U Uᵀ,   U = K_fu L_uu⁻ᵀ  (so U Uᵀ = Q, the FIC
+//!                                          approximation of k_global)
+//! Λ = diag(k_g(xᵢ,xᵢ) − qᵢᵢ)              (exact global diagonal)
+//! ```
+//!
+//! `K_cs` is the sparse Wendland Gram matrix on the `PatternCache`
+//! structure; the global term is rank-m. EP runs parallel (batched,
+//! damped) site updates, and every posterior quantity flows through the
+//! [`SparseLowRank`] factorization of
+//! `B = I + S̃^{1/2} P S̃^{1/2} = S_B + Us Usᵀ` with
+//! `S_B = I + S̃^{1/2}(K_cs + Λ)S̃^{1/2}` on the CS pattern and
+//! `Us = S̃^{1/2} U`. A sweep costs `O(n·(solve + k·m + m²) + m·nnz(L))`
+//! — the n×n prior is never assembled and no dense n×n matrix is ever
+//! materialized.
+
+use std::sync::Arc;
+
+use crate::gp::cache::PatternCache;
+use crate::gp::covariance::AdditiveCov;
+use crate::gp::likelihood::probit_site_update;
+use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
+use crate::gp::predict::PredictWorkspace;
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::dense::{DenseCholesky, DenseMatrix};
+use crate::sparse::lowrank::SparseLowRank;
+use crate::sparse::ordering::Ordering;
+use crate::sparse::triangular::SparseSolveWorkspace;
+
+/// Converged CS+FIC EP state (sparse quantities live in the *permuted*
+/// index space, like `SparseEp`).
+pub struct CsFicEp {
+    /// old index -> permuted index (shared with the `PatternCache` plan).
+    pub perm: Arc<Vec<usize>>,
+    /// Permuted inputs (cross-covariances are built against these).
+    pub xp: Arc<Vec<Vec<f64>>>,
+    /// Both kernels at the hyperparameters EP ran at.
+    pub cov: AdditiveCov,
+    /// Sparse CS covariance on the (cached, possibly superset) pattern.
+    pub k_cs: CscMatrix,
+    /// FIC diagonal correction Λ (permuted order).
+    pub lambda: Vec<f64>,
+    /// Inducing inputs.
+    pub xu: Vec<Vec<f64>>,
+    /// Site state, permuted order.
+    pub sites: EpSites,
+    pub log_z: f64,
+    /// Posterior mean (permuted).
+    pub mu: Vec<f64>,
+    /// Posterior marginal variances (permuted).
+    pub sigma_diag: Vec<f64>,
+    /// Representer weights (permuted): latent mean is `p*ᵀ w_pred`.
+    pub w_pred: Vec<f64>,
+    pub sweeps: usize,
+    pub converged: bool,
+    /// fill statistics of the CS block (for the paper-style tables)
+    pub fill_k: f64,
+    pub fill_l: f64,
+    /// Cholesky of `K_uu + jitter`.
+    luu: DenseCholesky,
+    /// Woodbury solver of `B` at convergence.
+    solver: SparseLowRank,
+    /// `Uᵀ w_pred` (m) — low-rank half of the predictive mean.
+    p_mean: Vec<f64>,
+    /// `Usᵀ B⁻¹ Us` (m×m) — low-rank block of the predictive variance.
+    m2: DenseMatrix,
+}
+
+impl CsFicEp {
+    /// Run CS+FIC EP with a private, throwaway [`PatternCache`] (RCM
+    /// ordering on the CS block). Optimizer loops should hold a cache and
+    /// call [`CsFicEp::run_cached`].
+    pub fn run(
+        cov: &AdditiveCov,
+        x: &[Vec<f64>],
+        y: &[f64],
+        xu: &[Vec<f64>],
+        opts: &EpOptions,
+    ) -> Result<CsFicEp, String> {
+        let mut cache = PatternCache::new(Ordering::Rcm);
+        CsFicEp::run_cached(cov, x, y, xu, opts, None, &mut cache)
+    }
+
+    /// Run CS+FIC EP reusing `cache`'s CS structure (pattern, permutation,
+    /// symbolic analysis — keyed by `cov.cs` only; the global term never
+    /// affects the sparsity). `warm_start` sites are given in the
+    /// *original* index order (see [`CsFicEp::sites_unpermuted`]), so a
+    /// warm start stays valid even when a cache rebuild changes the
+    /// permutation.
+    pub fn run_cached(
+        cov: &AdditiveCov,
+        x: &[Vec<f64>],
+        y: &[f64],
+        xu: &[Vec<f64>],
+        opts: &EpOptions,
+        warm_start: Option<&EpSites>,
+        cache: &mut PatternCache,
+    ) -> Result<CsFicEp, String> {
+        let n = x.len();
+        assert_eq!(y.len(), n);
+        let m = xu.len();
+        assert!(m >= 1 && m <= n, "need 1 <= m <= n inducing inputs");
+
+        // ---- sparse CS structure through the shared pattern cache -------
+        let (_, plan) = cache.plan_for(&cov.cs, x);
+        let k_cs = cov.cs.cov_values_on_pattern(&plan.xp, &plan.pattern_perm);
+        let perm = plan.perm.clone(); // Arc handle, not a deep copy
+        let xp = plan.xp.clone();
+        let mut yp = vec![0.0; n];
+        for old in 0..n {
+            yp[perm[old]] = y[old];
+        }
+        let fill_k = k_cs.density();
+        let fill_l = plan.symbolic.fill_l();
+
+        // ---- global low-rank structure (FIC over the permuted inputs) ---
+        let jitter = 1e-8 * cov.global.sigma2;
+        let mut kuu = DenseMatrix::from_fn(m, m, |a, b| cov.global.kernel(&xu[a], &xu[b]));
+        kuu.add_diag(jitter);
+        let luu = kuu.cholesky().map_err(|e| format!("K_uu: {e}"))?;
+        let mut u = DenseMatrix::zeros(n, m);
+        let mut ksu = vec![0.0; m];
+        for i in 0..n {
+            for (a, k) in ksu.iter_mut().enumerate() {
+                *k = cov.global.kernel(&xp[i], &xu[a]);
+            }
+            let sol = luu.solve_lower(&ksu);
+            for (a, &s) in sol.iter().enumerate() {
+                *u.at_mut(i, a) = s;
+            }
+        }
+        let lambda: Vec<f64> = (0..n)
+            .map(|i| {
+                let q: f64 = u.row(i).iter().map(|v| v * v).sum();
+                (cov.global.sigma2 - q).max(1e-10)
+            })
+            .collect();
+
+        // ---- EP state ---------------------------------------------------
+        let mut sites = match warm_start {
+            Some(w) => {
+                assert_eq!(w.tau.len(), n, "warm-start sites must match n");
+                w.permuted(&perm)
+            }
+            None => EpSites::zeros(n),
+        };
+        let damping = opts.damping.min(0.8);
+        let mut mu = vec![0.0; n];
+        let mut sigma_diag = vec![0.0; n];
+        let mut gamma = vec![0.0; n];
+        let mut solve_ws = SparseSolveWorkspace::new(n);
+        let mut t = vec![0.0; n];
+
+        // B = S_B + Us Usᵀ; the initial refresh sets the prior (or
+        // warm-started) marginals — for all-zero sites S_B = I, Us = 0.
+        let sb = build_sparse_b(&k_cs, &lambda, &sites.tau);
+        let us0 = scaled_u(&u, &sites.tau);
+        let mut solver = SparseLowRank::new(&sb, plan.symbolic.clone(), us0)?;
+        let mut m2 = refresh_posterior(
+            &k_cs,
+            &lambda,
+            &u,
+            &solver,
+            &sites,
+            &mut gamma,
+            &mut mu,
+            &mut sigma_diag,
+            &mut solve_ws,
+            &mut t,
+        );
+
+        let mut log_z = f64::NEG_INFINITY;
+        let mut log_z_old = f64::NEG_INFINITY;
+        let mut sweeps = 0;
+        let mut converged = false;
+
+        while sweeps < opts.max_sweeps {
+            // batched (parallel-EP) site updates from the current marginals
+            let mut new_tau = sites.tau.clone();
+            let mut new_nu = sites.nu.clone();
+            for i in 0..n {
+                let Some((lz, tc, nc, tn, nn)) =
+                    probit_site_update(yp[i], mu[i], sigma_diag[i], sites.tau[i], sites.nu[i])
+                else {
+                    continue;
+                };
+                sites.ln_zhat[i] = lz;
+                sites.tau_cav[i] = tc;
+                sites.nu_cav[i] = nc;
+                new_tau[i] = damping * tn + (1.0 - damping) * sites.tau[i];
+                new_nu[i] = damping * nn + (1.0 - damping) * sites.nu[i];
+            }
+            sites.tau = new_tau;
+            sites.nu = new_nu;
+
+            // one refactor of B = S_B + Us Usᵀ for the whole batch
+            let sb = build_sparse_b(&k_cs, &lambda, &sites.tau);
+            solver.refresh(&sb, scaled_u(&u, &sites.tau))?;
+            m2 = refresh_posterior(
+                &k_cs,
+                &lambda,
+                &u,
+                &solver,
+                &sites,
+                &mut gamma,
+                &mut mu,
+                &mut sigma_diag,
+                &mut solve_ws,
+                &mut t,
+            );
+
+            sweeps += 1;
+            let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
+            log_z = ep_log_z(&sites, solver.logdet(), nu_dot_mu);
+            if (log_z - log_z_old).abs() < opts.tol {
+                converged = true;
+                break;
+            }
+            log_z_old = log_z;
+        }
+
+        // representer weights w = ν̃ − S̃^{1/2} B⁻¹ S̃^{1/2} γ and the
+        // low-rank prediction blocks
+        let sw: Vec<f64> = sites.tau.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
+        let bswg = solver.solve(&swg);
+        let w_pred: Vec<f64> = (0..n).map(|i| sites.nu[i] - sw[i] * bswg[i]).collect();
+        let p_mean: Vec<f64> =
+            (0..m).map(|a| (0..n).map(|i| u.at(i, a) * w_pred[i]).sum()).collect();
+
+        Ok(CsFicEp {
+            perm,
+            xp,
+            cov: cov.clone(),
+            k_cs,
+            lambda,
+            xu: xu.to_vec(),
+            sites,
+            log_z,
+            mu,
+            sigma_diag,
+            w_pred,
+            sweeps,
+            converged,
+            fill_k,
+            fill_l,
+            luu,
+            solver,
+            p_mean,
+            m2,
+        })
+    }
+
+    /// Sites in the original (unpermuted) index order — the warm-start
+    /// currency, valid across cache rebuilds that change the permutation.
+    pub fn sites_unpermuted(&self) -> EpSites {
+        self.sites.unpermuted(&self.perm)
+    }
+
+    /// Analytic gradient of `log Z_EP` w.r.t. the CS kernel's
+    /// log-parameters `[ln σ²_cs, ln l…]` (paper eqs. 6, 11 with
+    /// `∂P/∂θ = ∂K_cs/∂θ`): quadratic term through the representer
+    /// weights, trace term through `B⁻¹` on the CS pattern — the Takahashi
+    /// sparsified inverse of the sparse part minus the rank-m Woodbury
+    /// correction. The global kernel's parameters enter through `U` and
+    /// `Λ`; the model layer differentiates those with warm-started finite
+    /// differences.
+    pub fn log_z_grad_cs(&self) -> Vec<f64> {
+        let kmat = &self.k_cs;
+        let grads = self.cov.cs.cov_grads_on_pattern(&self.xp, kmat);
+        let mut out = grad_quadratic_term(kmat, &grads, &self.w_pred);
+        let binv = self.solver.inverse_on_pattern(kmat);
+        let sw: Vec<f64> = self.sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
+        for j in 0..kmat.n_cols {
+            for p in kmat.col_ptr[j]..kmat.col_ptr[j + 1] {
+                let i = kmat.row_idx[p];
+                let zij = sw[i] * binv[p] * sw[j];
+                for (g, o) in grads.iter().zip(out.iter_mut()) {
+                    *o -= 0.5 * zij * g[p];
+                }
+            }
+        }
+        out
+    }
+
+    /// Latent predictive mean and variance at a test point (original
+    /// coordinates). Allocates a fresh workspace per call; batch callers
+    /// should use [`CsFicEp::predict_workspace`] +
+    /// [`CsFicEp::predict_latent_with`].
+    pub fn predict_latent(&self, xstar: &[f64]) -> (f64, f64) {
+        let mut pws = PredictWorkspace::one_shot(self.k_cs.n_rows);
+        self.predict_latent_with(xstar, &mut pws)
+    }
+
+    /// Workspace for repeated predictions against this EP state: one
+    /// neighbor index over the (permuted) inputs for the sparse CS
+    /// cross-covariances plus one sparse-solve scratch.
+    pub fn predict_workspace(&self) -> PredictWorkspace {
+        PredictWorkspace::new(&self.cov.cs, &self.xp)
+    }
+
+    /// Latent prediction through a shared workspace: the CS half goes
+    /// through the neighbor index + a sparse-RHS solve, the global half
+    /// through `u* = L_uu⁻¹ k_u(x*)` and the precomputed m×m blocks —
+    /// `O(k + nnz(L) + m²)` per point, no n-vector densification.
+    pub fn predict_latent_with(&self, xstar: &[f64], pws: &mut PredictWorkspace) -> (f64, f64) {
+        let m = self.xu.len();
+        // CS half: sparse cross-covariance against the permuted inputs
+        self.cov.cs.cross_cov_into(
+            &self.xp,
+            xstar,
+            pws.index.as_ref(),
+            &mut pws.rows,
+            &mut pws.vals,
+        );
+        // global half: u* = L_uu⁻¹ k_u(x*); prior cross-cov is
+        // p*ᵢ = k_cs(xᵢ, x*) + uᵢ · u*  (Λ adds nothing off-sample)
+        let ksu: Vec<f64> = self.xu.iter().map(|p| self.cov.global.kernel(xstar, p)).collect();
+        let ustar = self.luu.solve_lower(&ksu);
+
+        let mean_cs: f64 =
+            pws.rows.iter().zip(&pws.vals).map(|(&i, &v)| v * self.w_pred[i]).sum();
+        let mean_lr: f64 = ustar.iter().zip(&self.p_mean).map(|(a, b)| a * b).sum();
+
+        // variance: p** − (a* + Us u*)ᵀ B⁻¹ (a* + Us u*), a* = S̃^{1/2} k_cs*
+        let tau = &self.sites.tau;
+        pws.u_vals.clear();
+        pws.u_vals
+            .extend(pws.rows.iter().zip(&pws.vals).map(|(&i, &v)| tau[i].max(0.0).sqrt() * v));
+        self.solver.factor.solve_sparse_rhs(&pws.rows, &pws.u_vals, &mut pws.ws, &mut pws.t);
+        let q1: f64 = pws.rows.iter().zip(&pws.u_vals).map(|(&i, &v)| v * pws.t[i]).sum();
+        pws.ws.clear_solution(&mut pws.t);
+        let g = self.solver.wt_sparse(&pws.rows, &pws.u_vals);
+        let z = self.solver.cap.solve(&g);
+        let q2: f64 = g.iter().zip(&z).map(|(a, b)| a * b).sum();
+        // cross: u*ᵀ (Usᵀ B⁻¹ a*) with Usᵀ B⁻¹ a* = g − M₁ z
+        let mut cross = 0.0;
+        let mut quad_lr = 0.0;
+        for a in 0..m {
+            let m1z: f64 = (0..m).map(|b| self.solver.m1.at(a, b) * z[b]).sum();
+            cross += ustar[a] * (g[a] - m1z);
+            let m2u: f64 = (0..m).map(|b| self.m2.at(a, b) * ustar[b]).sum();
+            quad_lr += ustar[a] * m2u;
+        }
+        let quad = (q1 - q2) + 2.0 * cross + quad_lr;
+        // p** = σ²_cs + k_g(x*,x*): FIC's Λ* makes the global test-point
+        // prior variance exact
+        let pss = self.cov.cs.sigma2 + self.cov.global.sigma2;
+        (mean_cs + mean_lr, (pss - quad).max(1e-12))
+    }
+
+    /// Batched latent predictions through one shared workspace.
+    pub fn predict_latent_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        let mut pws = self.predict_workspace();
+        xs.iter().map(|x| self.predict_latent_with(x, &mut pws)).collect()
+    }
+}
+
+/// `S_B = I + S̃^{1/2} (K_cs + Λ) S̃^{1/2}` on `k_cs`'s pattern.
+fn build_sparse_b(k_cs: &CscMatrix, lambda: &[f64], tau: &[f64]) -> CscMatrix {
+    let mut b = k_cs.clone();
+    for j in 0..b.n_cols {
+        let stj = tau[j].max(0.0).sqrt();
+        for p in b.col_ptr[j]..b.col_ptr[j + 1] {
+            let i = b.row_idx[p];
+            let sti = tau[i].max(0.0).sqrt();
+            b.values[p] = if i == j {
+                1.0 + sti * stj * (b.values[p] + lambda[j])
+            } else {
+                sti * stj * b.values[p]
+            };
+        }
+    }
+    b
+}
+
+/// `Us = S̃^{1/2} U`.
+fn scaled_u(u: &DenseMatrix, tau: &[f64]) -> DenseMatrix {
+    DenseMatrix::from_fn(u.n_rows, u.n_cols, |i, a| tau[i].max(0.0).sqrt() * u.at(i, a))
+}
+
+/// `v ↦ P v = K_cs v + Λ∘v + U (Uᵀ v)` — `O(nnz + n·m)`.
+fn apply_p(k_cs: &CscMatrix, lambda: &[f64], u: &DenseMatrix, v: &[f64]) -> Vec<f64> {
+    let (n, m) = (u.n_rows, u.n_cols);
+    let mut out = k_cs.matvec(v);
+    for i in 0..n {
+        out[i] += lambda[i] * v[i];
+    }
+    let mut utv = vec![0.0; m];
+    for (a, ua) in utv.iter_mut().enumerate() {
+        *ua = (0..n).map(|i| u.at(i, a) * v[i]).sum();
+    }
+    for i in 0..n {
+        out[i] += u.row(i).iter().zip(&utv).map(|(a, b)| a * b).sum::<f64>();
+    }
+    out
+}
+
+/// Recompute `γ = P ν̃`, `μ = γ − P S̃^{1/2} B⁻¹ S̃^{1/2} γ` and the
+/// marginal variances `Σᵢᵢ = Pᵢᵢ − (S̃^{1/2} P[:,i])ᵀ B⁻¹ (S̃^{1/2} P[:,i])`
+/// through the sparse-plus-low-rank structure.
+///
+/// Splitting `S̃^{1/2} P[:,i] = aᵢ + Us uᵢ` (aᵢ = S̃^{1/2}(K_cs+Λ)[:,i]
+/// sparse, uᵢ = row i of U) gives per site
+///
+/// ```text
+/// quadᵢ = aᵢᵀB⁻¹aᵢ + 2 uᵢᵀ(UsᵀB⁻¹aᵢ) + uᵢᵀ M₂ uᵢ
+/// ```
+///
+/// with `UsᵀB⁻¹aᵢ = g − M₁ C⁻¹ g` (g = Wᵀaᵢ) and the once-per-refresh
+/// `M₂ = UsᵀB⁻¹Us` — one sparse-RHS solve plus `O(k·m + m²)` per site.
+/// Returns the `M₂` it built so the converged state can keep it without
+/// recomputing.
+#[allow(clippy::too_many_arguments)]
+fn refresh_posterior(
+    k_cs: &CscMatrix,
+    lambda: &[f64],
+    u: &DenseMatrix,
+    solver: &SparseLowRank,
+    sites: &EpSites,
+    gamma: &mut Vec<f64>,
+    mu: &mut [f64],
+    sigma_diag: &mut [f64],
+    ws: &mut SparseSolveWorkspace,
+    t: &mut [f64],
+) -> DenseMatrix {
+    let n = k_cs.n_rows;
+    let m = u.n_cols;
+    let sw: Vec<f64> = sites.tau.iter().map(|&v| v.max(0.0).sqrt()).collect();
+
+    // posterior mean
+    *gamma = apply_p(k_cs, lambda, u, &sites.nu);
+    let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
+    let bswg = solver.solve(&swg);
+    let scaled: Vec<f64> = (0..n).map(|i| sw[i] * bswg[i]).collect();
+    let pscaled = apply_p(k_cs, lambda, u, &scaled);
+    for i in 0..n {
+        mu[i] = gamma[i] - pscaled[i];
+    }
+
+    // marginal variances
+    let m2 = solver.m2();
+    let mut a_vals: Vec<f64> = Vec::with_capacity(n);
+    for i in 0..n {
+        let (krows, kvals) = k_cs.col(i);
+        // aᵢ = S̃^{1/2} (K_cs + Λ)[:, i] — Λ only touches the diagonal
+        a_vals.clear();
+        a_vals.extend(krows.iter().zip(kvals).map(|(&r, &v)| {
+            sw[r] * (v + if r == i { lambda[i] } else { 0.0 })
+        }));
+        solver.factor.solve_sparse_rhs(krows, &a_vals, ws, t);
+        let q1: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
+        ws.clear_solution(t);
+        let g = solver.wt_sparse(krows, &a_vals);
+        let z = solver.cap.solve(&g);
+        let q2: f64 = g.iter().zip(&z).map(|(a, b)| a * b).sum();
+        let ui = u.row(i);
+        let mut cross = 0.0;
+        let mut quad_lr = 0.0;
+        for a in 0..m {
+            let m1z: f64 = (0..m).map(|b| solver.m1.at(a, b) * z[b]).sum();
+            cross += ui[a] * (g[a] - m1z);
+            let m2u: f64 = (0..m).map(|b| m2.at(a, b) * ui[b]).sum();
+            quad_lr += ui[a] * m2u;
+        }
+        let pii = k_cs.get(i, i) + lambda[i] + ui.iter().map(|v| v * v).sum::<f64>();
+        let quad = (q1 - q2) + 2.0 * cross + quad_lr;
+        sigma_diag[i] = (pii - quad).max(1e-12);
+    }
+    m2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::kmeans::kmeans;
+    use crate::gp::covariance::{CovFunction, CovKind};
+    use crate::gp::ep_dense::DenseEp;
+    use crate::testutil::random_points;
+
+    fn circle_labels(x: &[Vec<f64>]) -> Vec<f64> {
+        x.iter()
+            .map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.2 { 1.0 } else { -1.0 })
+            .collect()
+    }
+
+    fn hybrid_cov() -> AdditiveCov {
+        AdditiveCov::new(
+            CovFunction::new(CovKind::Se, 2, 0.8, 3.0),
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5),
+        )
+        .unwrap()
+    }
+
+    fn tight() -> EpOptions {
+        EpOptions { max_sweeps: 400, tol: 1e-11, damping: 0.8 }
+    }
+
+    /// Explicitly assembled dense prior `P = K_cs + Λ + U Uᵀ` over the
+    /// permuted inputs, plus the pieces needed for the dense prediction
+    /// reference.
+    fn dense_prior(
+        cov: &AdditiveCov,
+        xp: &[Vec<f64>],
+        xu: &[Vec<f64>],
+    ) -> (DenseMatrix, DenseMatrix, DenseCholesky) {
+        let n = xp.len();
+        let m = xu.len();
+        let jitter = 1e-8 * cov.global.sigma2;
+        let mut kuu = DenseMatrix::from_fn(m, m, |a, b| cov.global.kernel(&xu[a], &xu[b]));
+        kuu.add_diag(jitter);
+        let luu = kuu.cholesky().unwrap();
+        let mut u = DenseMatrix::zeros(n, m);
+        for i in 0..n {
+            let ksu: Vec<f64> = xu.iter().map(|p| cov.global.kernel(&xp[i], p)).collect();
+            let sol = luu.solve_lower(&ksu);
+            for (a, &s) in sol.iter().enumerate() {
+                *u.at_mut(i, a) = s;
+            }
+        }
+        let mut p = DenseMatrix::from_fn(n, n, |i, j| cov.cs.kernel(&xp[i], &xp[j]));
+        for i in 0..n {
+            for j in 0..n {
+                let qij: f64 = (0..m).map(|a| u.at(i, a) * u.at(j, a)).sum();
+                *p.at_mut(i, j) += qij;
+            }
+            let qii: f64 = (0..m).map(|a| u.at(i, a) * u.at(i, a)).sum();
+            *p.at_mut(i, i) += (cov.global.sigma2 - qii).max(1e-10);
+        }
+        (p, u, luu)
+    }
+
+    /// Dense reference EP: the *same* batched/damped schedule as
+    /// `CsFicEp::run`, but every step through a dense Cholesky of the
+    /// explicitly assembled prior.
+    struct DenseRef {
+        sites: EpSites,
+        log_z: f64,
+        mu: Vec<f64>,
+        sigma_diag: Vec<f64>,
+        w_pred: Vec<f64>,
+        chol_b: DenseCholesky,
+        sw: Vec<f64>,
+    }
+
+    fn dense_reference(p: &DenseMatrix, y: &[f64], opts: &EpOptions) -> DenseRef {
+        let n = y.len();
+        let damping = opts.damping.min(0.8);
+        let mut sites = EpSites::zeros(n);
+        let mut mu = vec![0.0; n];
+        let mut sigma_diag: Vec<f64> = (0..n).map(|i| p.at(i, i)).collect();
+        let mut gamma = vec![0.0; n];
+        let mut chol_b = DenseMatrix::identity(n).cholesky().unwrap();
+        let mut log_z = f64::NEG_INFINITY;
+        let mut log_z_old = f64::NEG_INFINITY;
+        let mut sweeps = 0;
+        while sweeps < opts.max_sweeps {
+            let mut new_tau = sites.tau.clone();
+            let mut new_nu = sites.nu.clone();
+            for i in 0..n {
+                let Some((lz, tc, nc, tn, nn)) =
+                    probit_site_update(y[i], mu[i], sigma_diag[i], sites.tau[i], sites.nu[i])
+                else {
+                    continue;
+                };
+                sites.ln_zhat[i] = lz;
+                sites.tau_cav[i] = tc;
+                sites.nu_cav[i] = nc;
+                new_tau[i] = damping * tn + (1.0 - damping) * sites.tau[i];
+                new_nu[i] = damping * nn + (1.0 - damping) * sites.nu[i];
+            }
+            sites.tau = new_tau;
+            sites.nu = new_nu;
+            let sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
+            let mut b = DenseMatrix::from_fn(n, n, |i, j| sw[i] * p.at(i, j) * sw[j]);
+            b.add_diag(1.0);
+            chol_b = b.cholesky().unwrap();
+            gamma = p.matvec(&sites.nu);
+            let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
+            let bswg = chol_b.solve(&swg);
+            let scaled: Vec<f64> = (0..n).map(|i| sw[i] * bswg[i]).collect();
+            let pscaled = p.matvec(&scaled);
+            for i in 0..n {
+                mu[i] = gamma[i] - pscaled[i];
+            }
+            for i in 0..n {
+                let a: Vec<f64> = (0..n).map(|r| sw[r] * p.at(r, i)).collect();
+                let bia = chol_b.solve(&a);
+                let quad: f64 = a.iter().zip(&bia).map(|(x, y)| x * y).sum();
+                sigma_diag[i] = (p.at(i, i) - quad).max(1e-12);
+            }
+            sweeps += 1;
+            let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
+            log_z = ep_log_z(&sites, chol_b.logdet(), nu_dot_mu);
+            if (log_z - log_z_old).abs() < opts.tol {
+                break;
+            }
+            log_z_old = log_z;
+        }
+        let sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
+        let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
+        let bswg = chol_b.solve(&swg);
+        let w_pred: Vec<f64> = (0..n).map(|i| sites.nu[i] - sw[i] * bswg[i]).collect();
+        DenseRef { sites, log_z, mu, sigma_diag, w_pred, chol_b, sw }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn reference_predict(
+        cov: &AdditiveCov,
+        xp: &[Vec<f64>],
+        xu: &[Vec<f64>],
+        u: &DenseMatrix,
+        luu: &DenseCholesky,
+        r: &DenseRef,
+        xstar: &[f64],
+    ) -> (f64, f64) {
+        let n = xp.len();
+        let m = xu.len();
+        let ksu: Vec<f64> = xu.iter().map(|p| cov.global.kernel(xstar, p)).collect();
+        let ustar = luu.solve_lower(&ksu);
+        let pstar: Vec<f64> = (0..n)
+            .map(|i| {
+                let q: f64 = (0..m).map(|a| u.at(i, a) * ustar[a]).sum();
+                cov.cs.kernel(&xp[i], xstar) + q
+            })
+            .collect();
+        let mean: f64 = pstar.iter().zip(&r.w_pred).map(|(a, b)| a * b).sum();
+        let a: Vec<f64> = (0..n).map(|i| r.sw[i] * pstar[i]).collect();
+        let bia = r.chol_b.solve(&a);
+        let quad: f64 = a.iter().zip(&bia).map(|(x, y)| x * y).sum();
+        let pss = cov.cs.sigma2 + cov.global.sigma2;
+        (mean, (pss - quad).max(1e-12))
+    }
+
+    /// The acceptance-criterion test: on a small problem the hybrid EP's
+    /// marginals, logZ and predictions match a dense EP run on the
+    /// explicitly assembled `K_cs + Λ + Q` prior to ≤ 1e-6 — while the
+    /// hybrid path never materializes that n×n matrix.
+    #[test]
+    fn matches_dense_ep_on_the_assembled_prior() {
+        let x = random_points(90, 2, 6.0, 13);
+        let y = circle_labels(&x);
+        let cov = hybrid_cov();
+        let xu = kmeans(&x, 10, 25, 0xf1c);
+        let ep = CsFicEp::run(&cov, &x, &y, &xu, &tight()).unwrap();
+        assert!(ep.converged, "hybrid EP did not converge");
+        let n = x.len();
+        let mut yp = vec![0.0; n];
+        for old in 0..n {
+            yp[ep.perm[old]] = y[old];
+        }
+        let (p, u, luu) = dense_prior(&cov, &ep.xp, &xu);
+        let r = dense_reference(&p, &yp, &tight());
+        assert!(
+            (ep.log_z - r.log_z).abs() < 1e-6,
+            "logZ hybrid {} vs dense {}",
+            ep.log_z,
+            r.log_z
+        );
+        for i in 0..n {
+            assert!((ep.mu[i] - r.mu[i]).abs() < 1e-6, "mu[{i}]");
+            assert!((ep.sigma_diag[i] - r.sigma_diag[i]).abs() < 1e-6, "sigma[{i}]");
+            assert!((ep.sites.tau[i] - r.sites.tau[i]).abs() < 1e-6, "tau[{i}]");
+        }
+        for xs in [vec![1.0, 1.0], vec![3.0, 3.0], vec![5.0, 2.0]] {
+            let (mh, vh) = ep.predict_latent(&xs);
+            let (mr, vr) = reference_predict(&cov, &ep.xp, &xu, &u, &luu, &r, &xs);
+            assert!((mh - mr).abs() < 1e-6, "pred mean {mh} vs {mr}");
+            assert!((vh - vr).abs() < 1e-6, "pred var {vh} vs {vr}");
+        }
+    }
+
+    /// With a vanishing global magnitude the hybrid prior collapses to
+    /// the plain CS GP, so CS+FIC EP must agree with dense EP on the CS
+    /// kernel alone (an independent implementation, sequential schedule).
+    #[test]
+    fn vanishing_global_term_reduces_to_the_cs_gp() {
+        let x = random_points(40, 2, 6.0, 3);
+        let y = circle_labels(&x);
+        let cs = CovFunction::new(CovKind::Pp(3), 2, 1.1, 2.0);
+        let cov =
+            AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 1e-10, 3.0), cs.clone()).unwrap();
+        let xu = kmeans(&x, 6, 25, 2);
+        let ep = CsFicEp::run(&cov, &x, &y, &xu, &tight()).unwrap();
+        let de = DenseEp::run(&cs, &x, &y, &tight()).unwrap();
+        assert!(ep.converged);
+        assert!(
+            (ep.log_z - de.log_z).abs() < 1e-4,
+            "logZ {} vs {}",
+            ep.log_z,
+            de.log_z
+        );
+        for xs in [vec![2.0, 2.0], vec![4.0, 3.5]] {
+            let (mh, vh) = ep.predict_latent(&xs);
+            let (md, vd) = de.predict_latent(&cs, &x, &xs);
+            assert!((mh - md).abs() < 1e-4, "{mh} vs {md}");
+            assert!((vh - vd).abs() < 1e-4, "{vh} vs {vd}");
+        }
+    }
+
+    /// Analytic CS-block gradient vs central finite differences of the
+    /// hybrid's own logZ.
+    #[test]
+    fn cs_gradient_matches_finite_difference() {
+        let x = random_points(40, 2, 6.0, 7);
+        let y = circle_labels(&x);
+        let mut cov = AdditiveCov::new(
+            CovFunction::new(CovKind::Se, 2, 0.7, 3.0),
+            CovFunction::new(CovKind::Pp(3), 2, 1.2, 1.8),
+        )
+        .unwrap();
+        let xu = kmeans(&x, 8, 25, 1);
+        let ep = CsFicEp::run(&cov, &x, &y, &xu, &tight()).unwrap();
+        let grad = ep.log_z_grad_cs();
+        let p0 = cov.cs.params();
+        for p in 0..cov.cs.n_params() {
+            let h = 1e-5;
+            let mut pp = p0.clone();
+            pp[p] += h;
+            cov.cs.set_params(&pp);
+            let zp = CsFicEp::run(&cov, &x, &y, &xu, &tight()).unwrap().log_z;
+            pp[p] -= 2.0 * h;
+            cov.cs.set_params(&pp);
+            let zm = CsFicEp::run(&cov, &x, &y, &xu, &tight()).unwrap().log_z;
+            cov.cs.set_params(&p0);
+            let fd = (zp - zm) / (2.0 * h);
+            assert!(
+                (fd - grad[p]).abs() < 5e-4 * (1.0 + grad[p].abs()),
+                "param {p}: fd={fd} analytic={}",
+                grad[p]
+            );
+        }
+    }
+
+    /// Warm-started re-runs (the global-hyper FD gradient path) reuse the
+    /// fixed point: immediate convergence at the same θ, and the cold
+    /// fixed point at a perturbed θ.
+    #[test]
+    fn warm_start_reuses_the_fixed_point() {
+        let x = random_points(60, 2, 6.0, 19);
+        let y = circle_labels(&x);
+        let cov = hybrid_cov();
+        let xu = kmeans(&x, 9, 25, 4);
+        let mut cache = PatternCache::new(Ordering::Rcm);
+        let cold = CsFicEp::run_cached(&cov, &x, &y, &xu, &tight(), None, &mut cache).unwrap();
+        assert!(cold.converged);
+        let warm_sites = cold.sites_unpermuted();
+        let warm =
+            CsFicEp::run_cached(&cov, &x, &y, &xu, &tight(), Some(&warm_sites), &mut cache)
+                .unwrap();
+        assert!(warm.sweeps <= 3, "warm sweeps {}", warm.sweeps);
+        assert!((warm.log_z - cold.log_z).abs() < 1e-7);
+        // perturbed global hypers: the warm run must land on the cold
+        // fixed point of the new θ
+        let mut c2 = cov.clone();
+        let mut p = c2.global.params();
+        p[1] += 1e-3;
+        c2.global.set_params(&p);
+        let warm2 =
+            CsFicEp::run_cached(&c2, &x, &y, &xu, &tight(), Some(&warm_sites), &mut cache)
+                .unwrap();
+        let cold2 = CsFicEp::run(&c2, &x, &y, &xu, &tight()).unwrap();
+        assert!(
+            (warm2.log_z - cold2.log_z).abs() < 1e-6,
+            "{} vs {}",
+            warm2.log_z,
+            cold2.log_z
+        );
+        assert!(warm2.sweeps <= cold2.sweeps);
+    }
+
+    /// A `PatternCache` hit (σ²-only CS step) must reproduce the uncached
+    /// fixed point, like the sparse backends.
+    #[test]
+    fn pattern_cache_hit_reproduces_uncached_fixed_point() {
+        let x = random_points(70, 2, 6.0, 23);
+        let y = circle_labels(&x);
+        let cov = hybrid_cov();
+        let xu = kmeans(&x, 8, 25, 5);
+        let mut cache = PatternCache::new(Ordering::Rcm);
+        let _ = CsFicEp::run_cached(&cov, &x, &y, &xu, &tight(), None, &mut cache).unwrap();
+        let mut c2 = cov.clone();
+        c2.cs.sigma2 = 1.4;
+        let cached = CsFicEp::run_cached(&c2, &x, &y, &xu, &tight(), None, &mut cache).unwrap();
+        assert_eq!((cache.hits, cache.misses), (1, 1));
+        let fresh = CsFicEp::run(&c2, &x, &y, &xu, &tight()).unwrap();
+        assert!((cached.log_z - fresh.log_z).abs() < 1e-7);
+        for xs in [vec![1.5, 2.0], vec![4.5, 1.0]] {
+            let (mc, vc) = cached.predict_latent(&xs);
+            let (mf, vf) = fresh.predict_latent(&xs);
+            assert!((mc - mf).abs() < 1e-6 && (vc - vf).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn batched_prediction_matches_one_shot() {
+        let x = random_points(80, 2, 6.0, 29);
+        let y = circle_labels(&x);
+        let cov = hybrid_cov();
+        let xu = kmeans(&x, 10, 25, 6);
+        let ep = CsFicEp::run(&cov, &x, &y, &xu, &EpOptions::default()).unwrap();
+        let probes = random_points(15, 2, 7.0, 31);
+        let batched = ep.predict_latent_batch(&probes);
+        for (xs, &(mb, vb)) in probes.iter().zip(&batched) {
+            let (m1, v1) = ep.predict_latent(xs);
+            assert!((mb - m1).abs() < 1e-12 && (vb - v1).abs() < 1e-12);
+        }
+    }
+}

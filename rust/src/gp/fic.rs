@@ -93,6 +93,21 @@ impl FicEp {
         xu: &[Vec<f64>],
         opts: &EpOptions,
     ) -> Result<FicEp, String> {
+        FicEp::run_warm(cov, x, y, xu, opts, None)
+    }
+
+    /// Like [`FicEp::run`], optionally warm-started from converged sites —
+    /// the finite-difference gradient loop re-runs EP at slightly
+    /// perturbed hyperparameters, where the old fixed point is one or two
+    /// sweeps from the new one instead of `max_sweeps` from zero sites.
+    pub fn run_warm(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        y: &[f64],
+        xu: &[Vec<f64>],
+        opts: &EpOptions,
+        warm_start: Option<&EpSites>,
+    ) -> Result<FicEp, String> {
         let n = x.len();
         let m = xu.len();
         assert!(m >= 1 && m <= n);
@@ -118,17 +133,23 @@ impl FicEp {
             })
             .collect();
 
-        let mut sites = EpSites::zeros(n);
+        let mut sites = match warm_start {
+            Some(w) => {
+                assert_eq!(w.tau.len(), n, "warm-start sites must match n");
+                w.clone()
+            }
+            None => EpSites::zeros(n),
+        };
         let mut mu = vec![0.0; n];
-        let mut sigma_diag = (0..n)
-            .map(|i| lambda[i] + (0..m).map(|a| u.at(i, a) * u.at(i, a)).sum::<f64>())
-            .collect::<Vec<f64>>();
+        let mut sigma_diag = vec![0.0; n];
         let damping = opts.damping.min(0.8);
         let mut log_z = f64::NEG_INFINITY;
         let mut log_z_old = f64::NEG_INFINITY;
         let mut sweeps = 0;
         let mut converged = false;
-        let mut wb_opt: Option<WoodburyB> = None;
+        // initial posterior refresh from the (possibly warm) sites; for
+        // zero sites this reproduces the prior marginals exactly
+        let mut wb = refresh_posterior(&lambda, &u, &sites, &mut mu, &mut sigma_diag);
 
         while sweeps < opts.max_sweeps {
             let mut new_tau = sites.tau.clone();
@@ -148,71 +169,10 @@ impl FicEp {
             sites.tau = new_tau;
             sites.nu = new_nu;
 
-            // refresh posterior: Σ = (P⁻¹+S̃)⁻¹ through B = D₀ + Us Usᵀ,
-            // D₀ = I + S̃Λ, Us = S̃^{1/2} U
-            let sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
-            let d0: Vec<f64> = (0..n).map(|i| 1.0 + sites.tau[i] * lambda[i]).collect();
-            let us = DenseMatrix::from_fn(n, m, |i, a| sw[i] * u.at(i, a));
-            let wb = WoodburyB::new(d0, us);
-
-            // μ = γ − P S̃^{1/2} B⁻¹ S̃^{1/2} γ with γ = P ν̃
-            let gamma = apply_p(&lambda, &u, &sites.nu);
-            let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
-            let bswg = wb.solve(&swg);
-            let scaled: Vec<f64> = (0..n).map(|i| sw[i] * bswg[i]).collect();
-            let pscaled = apply_p(&lambda, &u, &scaled);
-            for i in 0..n {
-                mu[i] = gamma[i] - pscaled[i];
-            }
-            // Σᵢᵢ = Pᵢᵢ − aᵢᵀ B⁻¹ aᵢ, aᵢ = S̃^{1/2} P[:, i].
-            // With P = Λ + UUᵀ: do it in O(n m²) via the Woodbury pieces:
-            // Σ = P − P S̃^{1/2} B⁻¹ S̃^{1/2} P. Write S̃^{1/2}P = S̃^{1/2}Λ + Us Uᵀ.
-            // Compute diag via per-column structure:
-            //   colᵢ = sw_i λ_i e_i + Us uᵢᵀ (n-vector)
-            // and B⁻¹ = D₀⁻¹ − D₀⁻¹ Us M⁻¹ Usᵀ D₀⁻¹ (M = inner).
-            // diag term = colᵢᵀ B⁻¹ colᵢ.
-            // Expand: with hᵢ = Usᵀ D₀⁻¹ colᵢ (m-vector):
-            //   colᵢᵀ D₀⁻¹ colᵢ − hᵢᵀ M⁻¹ hᵢ
-            // colᵢᵀD₀⁻¹colᵢ = sw²λ²/d₀ᵢ + 2 swλ (Us uᵢᵀ)ᵢ/d₀ᵢ + Σ_r (Usuᵢᵀ)r²/d₀r.
-            // To stay O(nm²) precompute T = UsᵀD₀⁻¹Us (m×m) and per-i work in O(m²).
-            let mut t_mat = DenseMatrix::zeros(m, m);
-            for a in 0..m {
-                for b in 0..m {
-                    let mut s = 0.0;
-                    for r in 0..n {
-                        s += wb.us.at(r, a) * wb.us.at(r, b) / wb.d0[r];
-                    }
-                    *t_mat.at_mut(a, b) = s;
-                }
-            }
-            for i in 0..n {
-                let swl = sw[i] * lambda[i];
-                let ui: Vec<f64> = (0..m).map(|a| u.at(i, a)).collect();
-                // q1 = colᵢᵀ D₀⁻¹ colᵢ
-                let usui_i: f64 = (0..m).map(|a| wb.us.at(i, a) * ui[a]).sum();
-                let mut q1 = swl * swl / wb.d0[i] + 2.0 * swl * usui_i / wb.d0[i];
-                // Σ_r (Us uᵢᵀ)_r² / d₀_r = uᵢ T uᵢᵀ
-                for a in 0..m {
-                    for b in 0..m {
-                        q1 += ui[a] * t_mat.at(a, b) * ui[b];
-                    }
-                }
-                // hᵢ = UsᵀD₀⁻¹colᵢ = swλ/d₀ᵢ · Usᵢ,: + T uᵢ
-                let mut h = vec![0.0; m];
-                for a in 0..m {
-                    h[a] = swl / wb.d0[i] * wb.us.at(i, a)
-                        + (0..m).map(|b| t_mat.at(a, b) * ui[b]).sum::<f64>();
-                }
-                let mih = wb.inner.solve(&h);
-                let q2: f64 = h.iter().zip(&mih).map(|(a, b)| a * b).sum();
-                let pii = lambda[i] + ui.iter().map(|v| v * v).sum::<f64>();
-                sigma_diag[i] = (pii - (q1 - q2)).max(1e-12);
-            }
-
+            wb = refresh_posterior(&lambda, &u, &sites, &mut mu, &mut sigma_diag);
             sweeps += 1;
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
             log_z = ep_log_z(&sites, wb.logdet(), nu_dot_mu);
-            wb_opt = Some(wb);
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 break;
@@ -221,7 +181,6 @@ impl FicEp {
         }
 
         // predictive weights: w = ν̃ − S̃^{1/2} B⁻¹ S̃^{1/2} P ν̃
-        let wb = wb_opt.ok_or("FIC EP ran zero sweeps")?;
         let sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
         let gamma = apply_p(&lambda, &u, &sites.nu);
         let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
@@ -274,6 +233,77 @@ impl FicEp {
     }
 }
 
+/// Posterior refresh from the current sites: rebuild the Woodbury factor
+/// of `B = D₀ + Us Usᵀ` (D₀ = I + S̃Λ, Us = S̃^{1/2} U) and recompute
+/// `μ = γ − P S̃^{1/2} B⁻¹ S̃^{1/2} γ` (γ = P ν̃) and the marginal
+/// variances — all in `O(n m²)`.
+///
+/// Σᵢᵢ = Pᵢᵢ − aᵢᵀ B⁻¹ aᵢ, aᵢ = S̃^{1/2} P[:, i]. With P = Λ + UUᵀ the
+/// diagonal works per-column structure:
+///   colᵢ = sw_i λ_i e_i + Us uᵢᵀ (n-vector)
+/// and B⁻¹ = D₀⁻¹ − D₀⁻¹ Us M⁻¹ Usᵀ D₀⁻¹ (M = inner), so the diag term is
+/// colᵢᵀ D₀⁻¹ colᵢ − hᵢᵀ M⁻¹ hᵢ with hᵢ = Usᵀ D₀⁻¹ colᵢ;
+/// colᵢᵀD₀⁻¹colᵢ = sw²λ²/d₀ᵢ + 2 swλ (Us uᵢᵀ)ᵢ/d₀ᵢ + uᵢ T uᵢᵀ with the
+/// precomputed T = UsᵀD₀⁻¹Us (m×m), keeping the per-i work at O(m²).
+fn refresh_posterior(
+    lambda: &[f64],
+    u: &DenseMatrix,
+    sites: &EpSites,
+    mu: &mut [f64],
+    sigma_diag: &mut [f64],
+) -> WoodburyB {
+    let (n, m) = (u.n_rows, u.n_cols);
+    let sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
+    let d0: Vec<f64> = (0..n).map(|i| 1.0 + sites.tau[i] * lambda[i]).collect();
+    let us = DenseMatrix::from_fn(n, m, |i, a| sw[i] * u.at(i, a));
+    let wb = WoodburyB::new(d0, us);
+
+    // μ = γ − P S̃^{1/2} B⁻¹ S̃^{1/2} γ with γ = P ν̃
+    let gamma = apply_p(lambda, u, &sites.nu);
+    let swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
+    let bswg = wb.solve(&swg);
+    let scaled: Vec<f64> = (0..n).map(|i| sw[i] * bswg[i]).collect();
+    let pscaled = apply_p(lambda, u, &scaled);
+    for i in 0..n {
+        mu[i] = gamma[i] - pscaled[i];
+    }
+
+    let mut t_mat = DenseMatrix::zeros(m, m);
+    for a in 0..m {
+        for b in 0..m {
+            let mut s = 0.0;
+            for r in 0..n {
+                s += wb.us.at(r, a) * wb.us.at(r, b) / wb.d0[r];
+            }
+            *t_mat.at_mut(a, b) = s;
+        }
+    }
+    for i in 0..n {
+        let swl = sw[i] * lambda[i];
+        let ui: Vec<f64> = (0..m).map(|a| u.at(i, a)).collect();
+        // q1 = colᵢᵀ D₀⁻¹ colᵢ
+        let usui_i: f64 = (0..m).map(|a| wb.us.at(i, a) * ui[a]).sum();
+        let mut q1 = swl * swl / wb.d0[i] + 2.0 * swl * usui_i / wb.d0[i];
+        // Σ_r (Us uᵢᵀ)_r² / d₀_r = uᵢ T uᵢᵀ
+        for a in 0..m {
+            for b in 0..m {
+                q1 += ui[a] * t_mat.at(a, b) * ui[b];
+            }
+        }
+        // hᵢ = UsᵀD₀⁻¹colᵢ = swλ/d₀ᵢ · Usᵢ,: + T uᵢ
+        let mut h = vec![0.0; m];
+        for a in 0..m {
+            h[a] = swl / wb.d0[i] * wb.us.at(i, a)
+                + (0..m).map(|b| t_mat.at(a, b) * ui[b]).sum::<f64>();
+        }
+        let mih = wb.inner.solve(&h);
+        let q2: f64 = h.iter().zip(&mih).map(|(a, b)| a * b).sum();
+        let pii = lambda[i] + ui.iter().map(|v| v * v).sum::<f64>();
+        sigma_diag[i] = (pii - (q1 - q2)).max(1e-12);
+    }
+    wb
+}
+
 /// v ↦ P v = Λv + U (Uᵀ v).
 fn apply_p(lambda: &[f64], u: &DenseMatrix, v: &[f64]) -> Vec<f64> {
     let (n, m) = (u.n_rows, u.n_cols);
@@ -316,6 +346,38 @@ mod tests {
             assert!((mf - md).abs() < 5e-3, "{mf} vs {md}");
             assert!((vf - vd).abs() < 5e-3, "{vf} vs {vd}");
         }
+    }
+
+    /// Warm-started re-runs (the finite-difference gradient path) must
+    /// land on the same fixed point, in far fewer sweeps.
+    #[test]
+    fn warm_start_reaches_the_same_fixed_point_in_fewer_sweeps() {
+        let x = random_points(50, 2, 6.0, 21);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let cov = CovFunction::new(CovKind::Se, 2, 1.0, 2.0);
+        let mut xu = Vec::new();
+        for a in 0..3 {
+            for b in 0..3 {
+                xu.push(vec![1.0 + 2.0 * a as f64, 1.0 + 2.0 * b as f64]);
+            }
+        }
+        let opts = EpOptions { max_sweeps: 300, tol: 1e-9, damping: 0.8 };
+        let cold = FicEp::run(&cov, &x, &y, &xu, &opts).unwrap();
+        assert!(cold.converged);
+        // same θ: the warm run must stop almost immediately at the same logZ
+        let warm = FicEp::run_warm(&cov, &x, &y, &xu, &opts, Some(&cold.sites)).unwrap();
+        assert!(warm.converged);
+        assert!(warm.sweeps <= 3, "warm sweeps {}", warm.sweeps);
+        assert!((warm.log_z - cold.log_z).abs() < 1e-7);
+        // perturbed θ: a warm-started run still reaches the cold fixed point
+        let mut c2 = cov.clone();
+        let mut p = c2.params();
+        p[0] += 1e-3;
+        c2.set_params(&p);
+        let warm2 = FicEp::run_warm(&c2, &x, &y, &xu, &opts, Some(&cold.sites)).unwrap();
+        let cold2 = FicEp::run(&c2, &x, &y, &xu, &opts).unwrap();
+        assert!((warm2.log_z - cold2.log_z).abs() < 1e-6);
+        assert!(warm2.sweeps <= cold2.sweeps, "{} !<= {}", warm2.sweeps, cold2.sweeps);
     }
 
     #[test]

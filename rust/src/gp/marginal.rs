@@ -26,6 +26,40 @@ impl EpSites {
             ln_zhat: vec![0.0; n],
         }
     }
+
+    /// Sites re-indexed by `perm` (old index → new index):
+    /// `out[perm[i]] = self[i]`. Used to carry warm-start sites from the
+    /// original index space into a permuted EP run.
+    pub fn permuted(&self, perm: &[usize]) -> EpSites {
+        let n = self.tau.len();
+        assert_eq!(perm.len(), n);
+        let mut out = EpSites::zeros(n);
+        for old in 0..n {
+            let new = perm[old];
+            out.tau[new] = self.tau[old];
+            out.nu[new] = self.nu[old];
+            out.tau_cav[new] = self.tau_cav[old];
+            out.nu_cav[new] = self.nu_cav[old];
+            out.ln_zhat[new] = self.ln_zhat[old];
+        }
+        out
+    }
+
+    /// Inverse of [`EpSites::permuted`]: `out[i] = self[perm[i]]`.
+    pub fn unpermuted(&self, perm: &[usize]) -> EpSites {
+        let n = self.tau.len();
+        assert_eq!(perm.len(), n);
+        let mut out = EpSites::zeros(n);
+        for old in 0..n {
+            let new = perm[old];
+            out.tau[old] = self.tau[new];
+            out.nu[old] = self.nu[new];
+            out.tau_cav[old] = self.tau_cav[new];
+            out.nu_cav[old] = self.nu_cav[new];
+            out.ln_zhat[old] = self.ln_zhat[new];
+        }
+        out
+    }
 }
 
 /// Options shared by every EP variant.
@@ -123,6 +157,27 @@ mod tests {
             "logZ = {logz}, want {}",
             0.5f64.ln()
         );
+    }
+
+    #[test]
+    fn permuted_unpermuted_roundtrip() {
+        let sites = EpSites {
+            tau: vec![1.0, 2.0, 3.0],
+            nu: vec![-1.0, 0.5, 0.25],
+            tau_cav: vec![4.0, 5.0, 6.0],
+            nu_cav: vec![0.1, 0.2, 0.3],
+            ln_zhat: vec![-0.5, -0.25, -0.125],
+        };
+        let perm = vec![2usize, 0, 1];
+        let p = sites.permuted(&perm);
+        assert_eq!(p.tau, vec![2.0, 3.0, 1.0]);
+        assert_eq!(p.nu[perm[0]], sites.nu[0]);
+        let back = p.unpermuted(&perm);
+        assert_eq!(back.tau, sites.tau);
+        assert_eq!(back.nu, sites.nu);
+        assert_eq!(back.tau_cav, sites.tau_cav);
+        assert_eq!(back.nu_cav, sites.nu_cav);
+        assert_eq!(back.ln_zhat, sites.ln_zhat);
     }
 
     #[test]

@@ -1,10 +1,12 @@
 //! Gaussian-process machinery: covariance functions, the probit
 //! likelihood, EP inference (dense baseline, the paper's sparse algorithm,
-//! a parallel-EP ablation, and the FIC approximation), marginal likelihood
-//! with gradients, hyperpriors, prediction and exact GP regression.
+//! a parallel-EP ablation, the FIC approximation, and the CS+FIC hybrid),
+//! marginal likelihood with gradients, hyperpriors, prediction and exact
+//! GP regression.
 
 pub mod cache;
 pub mod covariance;
+pub mod csfic;
 pub mod ep_dense;
 pub mod ep_parallel;
 pub mod ep_sparse;
@@ -17,7 +19,8 @@ pub mod priors;
 pub mod regression;
 
 pub use cache::PatternCache;
-pub use covariance::{CovFunction, CovKind};
+pub use covariance::{AdditiveCov, CovFunction, CovKind};
+pub use csfic::CsFicEp;
 pub use ep_dense::DenseEp;
 pub use ep_parallel::ParallelEp;
 pub use ep_sparse::SparseEp;

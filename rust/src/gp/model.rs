@@ -5,7 +5,8 @@
 use std::time::{Duration, Instant};
 
 use crate::gp::cache::PatternCache;
-use crate::gp::covariance::CovFunction;
+use crate::gp::covariance::{AdditiveCov, CovFunction};
+use crate::gp::csfic::CsFicEp;
 use crate::gp::ep_dense::DenseEp;
 use crate::gp::ep_parallel::ParallelEp;
 use crate::gp::ep_sparse::SparseEp;
@@ -28,6 +29,11 @@ pub enum Inference {
     Parallel(Ordering),
     /// FIC with `m` k-means inducing inputs.
     Fic { m: usize },
+    /// CS+FIC hybrid: `cov` is the sparse CS (local) term, the globally
+    /// supported trend term lives in `GpClassifier::global_cov`, FIC'd
+    /// through `m` k-means inducing inputs. The CS block uses an RCM
+    /// fill-reducing ordering. Build with [`GpClassifier::new_cs_fic`].
+    CsFic { m: usize },
 }
 
 /// Model configuration.
@@ -35,6 +41,9 @@ pub enum Inference {
 pub struct GpClassifier {
     pub cov: CovFunction,
     pub inference: Inference,
+    /// The globally supported trend kernel of the CS+FIC hybrid
+    /// (`Inference::CsFic`); `None` for every other backend.
+    pub global_cov: Option<CovFunction>,
     /// None = maximum (marginal) likelihood; Some = MAP with this prior.
     pub prior: Option<HyperPrior>,
     pub ep_opts: EpOptions,
@@ -47,10 +56,33 @@ impl GpClassifier {
         GpClassifier {
             cov,
             inference,
+            global_cov: None,
             prior: Some(HyperPrior::paper_default(n_params)),
             ep_opts: EpOptions::default(),
             opt_opts: ScgOptions { max_iters: 50, x_tol: 1e-4, f_tol: 1e-5 },
         }
+    }
+
+    /// CS+FIC hybrid classifier: `cs` is the compactly supported local
+    /// term (it drives the sparse structure), `global` the globally
+    /// supported trend term approximated by FIC with `m` k-means inducing
+    /// inputs. Hyperparameters of both kernels are optimized jointly
+    /// (`[cs params…, global params…]`).
+    pub fn new_cs_fic(
+        cs: CovFunction,
+        global: CovFunction,
+        m: usize,
+    ) -> Result<GpClassifier, String> {
+        let add = AdditiveCov::new(global, cs)?; // validates support + dims
+        let n_params = add.n_params();
+        Ok(GpClassifier {
+            cov: add.cs,
+            inference: Inference::CsFic { m },
+            global_cov: Some(add.global),
+            prior: Some(HyperPrior::paper_default(n_params)),
+            ep_opts: EpOptions::default(),
+            opt_opts: ScgOptions { max_iters: 50, x_tol: 1e-4, f_tol: 1e-5 },
+        })
     }
 
     /// A [`PatternCache`] matching this model's ordering choice. One cache
@@ -59,18 +91,35 @@ impl GpClassifier {
     fn fresh_cache(&self) -> PatternCache {
         let ordering = match &self.inference {
             Inference::Sparse(ord) | Inference::Parallel(ord) => *ord,
+            Inference::CsFic { .. } => Ordering::Rcm,
             Inference::Dense | Inference::Fic { .. } => Ordering::Natural,
         };
         PatternCache::new(ordering)
     }
 
+    /// Inducing inputs for the low-rank backends (k-means centres of the
+    /// training inputs); empty for the full-rank backends. One helper
+    /// shared by `fit` and `infer_only`, FIC and CS+FIC.
+    fn inducing_inputs(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        match &self.inference {
+            Inference::Fic { m } | Inference::CsFic { m } => {
+                crate::data::kmeans::kmeans(x, *m, 25, 0xf1c)
+            }
+            _ => Vec::new(),
+        }
+    }
+
     /// One EP run at the current hyperparameters: returns (logZ, grad,
     /// backend). FIC gradients use central finite differences (see
-    /// DESIGN.md §Substitutions). Sparse backends draw their structure
-    /// (pattern / ordering / symbolic) from `cache`.
+    /// DESIGN.md §Substitutions), warm-started from the converged sites.
+    /// CS+FIC gradients are analytic for the CS block and warm-started
+    /// finite differences for the global block. Sparse backends draw their
+    /// structure (pattern / ordering / symbolic) from `cache`.
+    #[allow(clippy::too_many_arguments)]
     fn ep_at(
         &self,
         cov: &CovFunction,
+        gcov: Option<&CovFunction>,
         x: &[Vec<f64>],
         y: &[f64],
         xu: &[Vec<f64>],
@@ -104,6 +153,10 @@ impl GpClassifier {
             Inference::Fic { .. } => {
                 let ep = FicEp::run(cov, x, y, xu, &self.ep_opts)?;
                 let g = if want_grad {
+                    // central finite differences, warm-started from the
+                    // converged sites: each perturbed run starts one or
+                    // two sweeps from its fixed point instead of
+                    // max_sweeps from zero sites
                     let p0 = cov.params();
                     let mut g = vec![0.0; cov.n_params()];
                     let h = 1e-4;
@@ -112,10 +165,12 @@ impl GpClassifier {
                         let mut pp = p0.clone();
                         pp[p] += h;
                         c.set_params(&pp);
-                        let zp = FicEp::run(&c, x, y, xu, &self.ep_opts)?.log_z;
+                        let zp =
+                            FicEp::run_warm(&c, x, y, xu, &self.ep_opts, Some(&ep.sites))?.log_z;
                         pp[p] -= 2.0 * h;
                         c.set_params(&pp);
-                        let zm = FicEp::run(&c, x, y, xu, &self.ep_opts)?.log_z;
+                        let zm =
+                            FicEp::run_warm(&c, x, y, xu, &self.ep_opts, Some(&ep.sites))?.log_z;
                         g[p] = (zp - zm) / (2.0 * h);
                     }
                     g
@@ -124,18 +179,84 @@ impl GpClassifier {
                 };
                 Ok((ep.log_z, g, Backend::Fic(ep)))
             }
+            Inference::CsFic { .. } => {
+                let global = gcov.ok_or(
+                    "Inference::CsFic requires global_cov (use GpClassifier::new_cs_fic)",
+                )?;
+                let add = AdditiveCov::new(global.clone(), cov.clone())?;
+                let ep = CsFicEp::run_cached(&add, x, y, xu, &self.ep_opts, None, cache)?;
+                let g = if want_grad {
+                    // CS block: analytic through the sparse-plus-low-rank
+                    // structure. Global block: warm-started central FDs
+                    // (the fixed CS hypers keep the pattern cache hitting,
+                    // and sites travel in unpermuted order).
+                    let mut g = ep.log_z_grad_cs();
+                    let warm = ep.sites_unpermuted();
+                    let p0 = global.params();
+                    let h = 1e-4;
+                    for p in 0..global.n_params() {
+                        let mut c = add.clone();
+                        let mut pp = p0.clone();
+                        pp[p] += h;
+                        c.global.set_params(&pp);
+                        let zp = CsFicEp::run_cached(
+                            &c,
+                            x,
+                            y,
+                            xu,
+                            &self.ep_opts,
+                            Some(&warm),
+                            cache,
+                        )?
+                        .log_z;
+                        pp[p] -= 2.0 * h;
+                        c.global.set_params(&pp);
+                        let zm = CsFicEp::run_cached(
+                            &c,
+                            x,
+                            y,
+                            xu,
+                            &self.ep_opts,
+                            Some(&warm),
+                            cache,
+                        )?
+                        .log_z;
+                        g.push((zp - zm) / (2.0 * h));
+                    }
+                    g
+                } else {
+                    vec![]
+                };
+                Ok((ep.log_z, g, Backend::CsFic(ep)))
+            }
+        }
+    }
+
+    /// The CS+FIC global kernel (cloned), validated against the inference
+    /// choice: `Some` iff the backend is `CsFic`.
+    fn global_for_inference(&self) -> Result<Option<CovFunction>, String> {
+        match (&self.inference, &self.global_cov) {
+            (Inference::CsFic { .. }, Some(g)) => Ok(Some(g.clone())),
+            (Inference::CsFic { .. }, None) => Err(
+                "Inference::CsFic requires global_cov (use GpClassifier::new_cs_fic)".into(),
+            ),
+            _ => Ok(None),
         }
     }
 
     /// Optimize hyperparameters (MAP) and return the fitted classifier.
+    /// For CS+FIC the SCG search runs jointly over both kernels'
+    /// log-parameters (`[cs…, global…]`).
     pub fn fit(&self, x: &[Vec<f64>], y: &[f64]) -> Result<FittedClassifier, String> {
-        let xu = match &self.inference {
-            Inference::Fic { m } => crate::data::kmeans::kmeans(x, *m, 25, 0xf1c),
-            _ => Vec::new(),
-        };
+        let xu = self.inducing_inputs(x);
         let t_opt = Instant::now();
         let mut cov = self.cov.clone();
-        let p0 = cov.params();
+        let mut gcov = self.global_for_inference()?;
+        let nc = cov.n_params();
+        let mut p0 = cov.params();
+        if let Some(g) = &gcov {
+            p0.extend(g.params());
+        }
         let mut last_err: Option<String> = None;
         // one structure cache across the whole optimization: σ²-only steps
         // and shrinking length-scales reuse pattern + ordering + symbolic
@@ -144,8 +265,12 @@ impl GpClassifier {
             &p0,
             |p| {
                 let mut c = cov.clone();
-                c.set_params(p);
-                match self.ep_at(&c, x, y, &xu, true, &mut cache) {
+                c.set_params(&p[..nc]);
+                let mut gc = gcov.clone();
+                if let Some(g) = gc.as_mut() {
+                    g.set_params(&p[nc..]);
+                }
+                match self.ep_at(&c, gc.as_ref(), x, y, &xu, true, &mut cache) {
                     Ok((logz, grad, _)) => {
                         let mut f = -logz;
                         let mut g: Vec<f64> = grad.iter().map(|v| -v).collect();
@@ -168,7 +293,10 @@ impl GpClassifier {
             &self.opt_opts,
         );
         let opt_time = t_opt.elapsed();
-        cov.set_params(&res.x);
+        cov.set_params(&res.x[..nc]);
+        if let Some(g) = gcov.as_mut() {
+            g.set_params(&res.x[nc..]);
+        }
 
         // final EP run at the mode (this is the paper's "EP" timing column).
         // Use a fresh cache: the optimizer cache's radius only ratchets up,
@@ -176,19 +304,24 @@ impl GpClassifier {
         // its fill/timing stats) on a needlessly dense superset pattern.
         let t_ep = Instant::now();
         let mut final_cache = self.fresh_cache();
-        let (log_z, _, backend) =
-            self.ep_at(&cov, x, y, &xu, false, &mut final_cache).map_err(|e| match &last_err {
+        let (log_z, _, backend) = self
+            .ep_at(&cov, gcov.as_ref(), x, y, &xu, false, &mut final_cache)
+            .map_err(|e| match &last_err {
                 Some(prev) => format!("{e} (last optimizer-side EP failure: {prev})"),
                 None => e,
             })?;
         let ep_time = t_ep.elapsed();
 
-        let log_post = log_z
-            + self.prior.as_ref().map(|pr| pr.ln_pdf(&cov.params())).unwrap_or(0.0);
-        let (fill_k, fill_l) = match &backend {
-            Backend::Sparse(ep) => (ep.fill_k, ep.fill_l),
-            _ => (1.0, 1.0),
+        let packed = {
+            let mut p = cov.params();
+            if let Some(g) = &gcov {
+                p.extend(g.params());
+            }
+            p
         };
+        let log_post =
+            log_z + self.prior.as_ref().map(|pr| pr.ln_pdf(&packed)).unwrap_or(0.0);
+        let (fill_k, fill_l) = fill_stats(&backend);
         Ok(FittedClassifier {
             cov,
             x: x.to_vec(),
@@ -209,18 +342,14 @@ impl GpClassifier {
 
     /// Run EP once at the current hyperparameters without optimizing.
     pub fn infer_only(&self, x: &[Vec<f64>], y: &[f64]) -> Result<FittedClassifier, String> {
-        let xu = match &self.inference {
-            Inference::Fic { m } => crate::data::kmeans::kmeans(x, *m, 25, 0xf1c),
-            _ => Vec::new(),
-        };
+        let xu = self.inducing_inputs(x);
+        let gcov = self.global_for_inference()?;
         let t_ep = Instant::now();
         let mut cache = self.fresh_cache();
-        let (log_z, _, backend) = self.ep_at(&self.cov, x, y, &xu, false, &mut cache)?;
+        let (log_z, _, backend) =
+            self.ep_at(&self.cov, gcov.as_ref(), x, y, &xu, false, &mut cache)?;
         let ep_time = t_ep.elapsed();
-        let (fill_k, fill_l) = match &backend {
-            Backend::Sparse(ep) => (ep.fill_k, ep.fill_l),
-            _ => (1.0, 1.0),
-        };
+        let (fill_k, fill_l) = fill_stats(&backend);
         Ok(FittedClassifier {
             cov: self.cov.clone(),
             x: x.to_vec(),
@@ -240,12 +369,22 @@ impl GpClassifier {
     }
 }
 
+/// Fill statistics of a fitted backend (1.0/1.0 for the dense ones).
+fn fill_stats(backend: &Backend) -> (f64, f64) {
+    match backend {
+        Backend::Sparse(ep) => (ep.fill_k, ep.fill_l),
+        Backend::CsFic(ep) => (ep.fill_k, ep.fill_l),
+        _ => (1.0, 1.0),
+    }
+}
+
 /// The fitted EP state, backend-specific.
 pub enum Backend {
     Dense(DenseEp),
     Sparse(SparseEp),
     Parallel(ParallelEp),
     Fic(FicEp),
+    CsFic(CsFicEp),
 }
 
 /// Timing/quality report of a fit — the raw material of Tables 2 & 3.
@@ -280,6 +419,8 @@ impl FittedClassifier {
             Backend::Sparse(ep) => ep.predict_latent(&self.cov, xstar),
             Backend::Parallel(ep) => ep.predict_latent(&self.cov, xstar),
             Backend::Fic(ep) => ep.predict_latent(&self.cov, xstar),
+            // the hybrid backend carries both kernels internally
+            Backend::CsFic(ep) => ep.predict_latent(xstar),
         }
     }
 
@@ -342,6 +483,7 @@ mod tests {
     fn all_backends_fit_and_predict() {
         let (x, y) = blob_data(30, 17);
         let (xt, yt) = blob_data(30, 18);
+        let mut models = vec![];
         for inference in [
             Inference::Dense,
             Inference::Sparse(Ordering::Rcm),
@@ -349,14 +491,67 @@ mod tests {
             Inference::Fic { m: 9 },
         ] {
             let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
-            let model = GpClassifier::new(cov, inference.clone());
+            models.push(GpClassifier::new(cov, inference));
+        }
+        models.push(
+            GpClassifier::new_cs_fic(
+                CovFunction::new(CovKind::Pp(3), 2, 0.8, 2.0),
+                CovFunction::new(CovKind::Se, 2, 0.6, 3.0),
+                9,
+            )
+            .unwrap(),
+        );
+        for model in models {
             let fitted = model.infer_only(&x, &y).unwrap();
             let m = fitted.evaluate(&xt, &yt);
-            assert!(m.err <= 0.5, "{inference:?}: err {}", m.err);
+            assert!(m.err <= 0.5, "{:?}: err {}", model.inference, m.err);
             assert!(m.nlpd.is_finite());
             let probs = fitted.predict_proba(&xt);
             assert!(probs.iter().all(|&p| (0.0..=1.0).contains(&p)));
             let _ = yt.len();
         }
+    }
+
+    /// CS+FIC without its global kernel is a configuration error, not a
+    /// panic or a silently degraded model.
+    #[test]
+    fn cs_fic_without_global_cov_errors() {
+        let (x, y) = blob_data(20, 5);
+        let model = GpClassifier::new(
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            Inference::CsFic { m: 5 },
+        );
+        assert!(model.infer_only(&x, &y).is_err());
+        assert!(model.fit(&x, &y).is_err());
+    }
+
+    /// Joint MAP over both kernels' hyperparameters (analytic CS gradient
+    /// + warm-started FD global gradient) must not make the posterior
+    /// worse.
+    #[test]
+    fn cs_fic_fit_improves_log_posterior() {
+        let (x, y) = blob_data(40, 91);
+        let mut model = GpClassifier::new_cs_fic(
+            CovFunction::new(CovKind::Pp(3), 2, 0.6, 0.9),
+            CovFunction::new(CovKind::Se, 2, 0.5, 3.0),
+            8,
+        )
+        .unwrap();
+        model.opt_opts.max_iters = 6;
+        // like-for-like MAP objective at the start: logZ + prior over the
+        // *joint* parameter vector (infer_only's log_post omits the prior)
+        let mut p0 = model.cov.params();
+        p0.extend(model.global_cov.as_ref().unwrap().params());
+        let before = model.infer_only(&x, &y).unwrap().report.log_z
+            + model.prior.as_ref().unwrap().ln_pdf(&p0);
+        let fitted = model.fit(&x, &y).unwrap();
+        assert!(
+            fitted.report.log_post >= before - 1e-6,
+            "fit made log posterior worse: {} -> {}",
+            before,
+            fitted.report.log_post
+        );
+        // both kernels' hypers were free to move and stayed positive
+        assert!(fitted.cov.sigma2 > 0.0);
     }
 }

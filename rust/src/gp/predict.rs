@@ -94,6 +94,7 @@ impl<'a> LatentPredictor<'a> {
         let ws = match &fitted.backend {
             Backend::Sparse(ep) => Some(ep.predict_workspace(&fitted.cov)),
             Backend::Parallel(ep) => Some(ep.predict_workspace(&fitted.cov)),
+            Backend::CsFic(ep) => Some(ep.predict_workspace()),
             Backend::Dense(_) | Backend::Fic(_) => None,
         };
         LatentPredictor { fitted, ws }
@@ -108,6 +109,7 @@ impl<'a> LatentPredictor<'a> {
             (Backend::Parallel(ep), Some(ws)) => {
                 ep.predict_latent_with(&self.fitted.cov, xstar, ws)
             }
+            (Backend::CsFic(ep), Some(ws)) => ep.predict_latent_with(xstar, ws),
             _ => self.fitted.predict_latent(xstar),
         }
     }

@@ -8,8 +8,9 @@
 //! * [`sparse`] — from-scratch sparse linear algebra: CSC matrices,
 //!   elimination trees, symbolic analysis, up-looking LDLᵀ factorization,
 //!   sparse triangular solves, rank-one update/downdate, the Davis–Hager
-//!   row-modification (`ldlrowmodify`, the paper's Algorithm 2) and the
-//!   Takahashi sparsified inverse.
+//!   row-modification (`ldlrowmodify`, the paper's Algorithm 2), the
+//!   Takahashi sparsified inverse, and a sparse-plus-low-rank Woodbury
+//!   solver (`lowrank`) for `S + U Uᵀ` systems.
 //! * [`geom`] — spatial neighbor indices (grid cell list for low
 //!   dimension, kd-tree above it) answering the radius-`max(lengthscales)`
 //!   queries that make compact-support covariance assembly `O(n·k)`
@@ -17,8 +18,9 @@
 //! * [`gp`] — covariance functions (squared exponential, the Wendland
 //!   piecewise polynomials `pp0..pp3`, Matérn), the probit likelihood,
 //!   dense EP (Rasmussen & Williams Alg. 3.5), the paper's sparse EP
-//!   (Algorithm 1), FIC + EP, marginal likelihood and gradients,
-//!   hyperpriors and prediction.
+//!   (Algorithm 1), FIC + EP, the CS+FIC hybrid (`csfic`: sparse local
+//!   term plus low-rank global term, never densified), marginal
+//!   likelihood and gradients, hyperpriors and prediction.
 //! * [`opt`] — scaled conjugate gradients for hyperparameter MAP search.
 //! * [`data`] — the paper's synthetic cluster workload (§6.1), UCI-like
 //!   dataset generators and the cross-validation harness.

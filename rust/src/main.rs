@@ -3,7 +3,9 @@
 //!
 //! Subcommands (argument parsing is hand-rolled; no clap offline):
 //!
-//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic>] [--optimize]`
+//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic|csfic>] [--optimize]`
+//!   (`csfic` pairs the compact `--cov` with a global SE term;
+//!   `--global-lengthscale` and `--m` tune the hybrid)
 //! * `cv        --data uci:<name> --cov pp3 --folds 10`
 //! * `serve     --n <train size> [--requests <r>] [--batch <b>]` — demo server + load
 //! * `artifacts-check` — verify the PJRT artifacts load and agree with native code
@@ -64,7 +66,19 @@ fn build_model(flags: &HashMap<String, String>, dim: usize) -> Result<GpClassifi
     let cov = CovFunction::new(kind, dim, s2, ls);
     let ordering: Ordering =
         flags.get("ordering").map(String::as_str).unwrap_or("rcm").parse()?;
-    let inference = match flags.get("inference").map(String::as_str).unwrap_or("sparse") {
+    let inference_str = flags.get("inference").map(String::as_str).unwrap_or("sparse");
+    if inference_str == "csfic" {
+        // CS+FIC hybrid: --cov is the compact local term, the global SE
+        // trend gets --global-lengthscale (default 2x the local one)
+        let m = flags.get("m").map(|s| s.parse().unwrap()).unwrap_or(64);
+        let gls: f64 = flags
+            .get("global-lengthscale")
+            .map(|s| s.parse().unwrap())
+            .unwrap_or(2.0 * ls);
+        let global = CovFunction::new(CovKind::Se, dim, s2, gls);
+        return GpClassifier::new_cs_fic(cov, global, m);
+    }
+    let inference = match inference_str {
         "dense" => Inference::Dense,
         "sparse" => Inference::Sparse(ordering),
         "parallel" => Inference::Parallel(ordering),

@@ -16,11 +16,14 @@
 //! * [`update`] — rank-one update/downdate (Method C) on the static pattern.
 //! * [`rowmod`] — `ldlrowmodify`, the paper's Algorithm 2.
 //! * [`takahashi`] — sparsified inverse on the factor pattern (paper eq. 11).
+//! * [`lowrank`] — Woodbury solver for `B = S + U Uᵀ` (sparse plus
+//!   low-rank, the CS+FIC hybrid prior's structure).
 
 pub mod cholesky;
 pub mod csc;
 pub mod dense;
 pub mod etree;
+pub mod lowrank;
 pub mod ordering;
 pub mod rowmod;
 pub mod symbolic;
@@ -31,4 +34,5 @@ pub mod update;
 pub use cholesky::LdlFactor;
 pub use csc::CscMatrix;
 pub use dense::DenseMatrix;
+pub use lowrank::SparseLowRank;
 pub use symbolic::Symbolic;

@@ -127,6 +127,38 @@ mod tests {
         }
     }
 
+    /// The patterns the EP gradient actually feeds this code: compact
+    /// Wendland covariances over random geometric points (plus a diagonal
+    /// shift, like EP's `B = I + S̃^{1/2}KS̃^{1/2}`), not just random
+    /// sparse SPD matrices.
+    #[test]
+    fn matches_dense_inverse_on_cs_covariance_patterns() {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::testutil::random_points;
+        for (seed, dim, ls) in [(1u64, 2usize, 1.6), (2, 2, 2.4), (3, 3, 2.8)] {
+            let x = random_points(70, dim, 6.0, seed);
+            let cov = CovFunction::new(CovKind::Pp(3), dim, 1.0, ls);
+            let mut k = cov.cov_matrix(&x);
+            for j in 0..k.n_cols {
+                *k.get_mut(j, j) += 1.0;
+            }
+            assert!(k.density() < 0.9, "pattern should be genuinely sparse");
+            let sym = Arc::new(Symbolic::analyze(&k));
+            let f = LdlFactor::factor(sym.clone(), &k).unwrap();
+            let zi = f.takahashi_inverse();
+            let dense_inv = k.to_dense().inverse_spd().unwrap();
+            for j in 0..x.len() {
+                let dd = (zi.z_diag[j] - dense_inv.at(j, j)).abs();
+                assert!(dd < 1e-8, "seed {seed} diag {j}: {dd}");
+                for p in sym.col_ptr[j]..sym.col_ptr[j + 1] {
+                    let i = sym.row_idx[p];
+                    let d = (zi.z_lower[p] - dense_inv.at(i, j)).abs();
+                    assert!(d < 1e-8, "seed {seed} ({i},{j}): {d}");
+                }
+            }
+        }
+    }
+
     #[test]
     fn identity_inverse_is_identity() {
         let a = crate::sparse::csc::CscMatrix::identity(6);

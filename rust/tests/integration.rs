@@ -101,6 +101,17 @@ fn uci_analogues_fit_with_all_models() {
         let m = fitted.evaluate(&data.x, &data.y); // train-set sanity
         assert!(m.err < 0.35, "{:?}: train err {}", fitted.report.log_z, m.err);
     }
+    // CS+FIC hybrid: local pp3 term plus a global SE trend through 12
+    // k-means inducing points
+    let model = GpClassifier::new_cs_fic(
+        CovFunction::new(CovKind::Pp(3), spec.d, 1.0, 3.0),
+        CovFunction::new(CovKind::Se, spec.d, 1.0, 3.0),
+        12,
+    )
+    .unwrap();
+    let fitted = model.infer_only(&data.x, &data.y).unwrap();
+    let m = fitted.evaluate(&data.x, &data.y);
+    assert!(m.err < 0.35, "cs+fic train err {}", m.err);
 }
 
 #[test]
@@ -154,9 +165,19 @@ fn batched_prediction_matches_per_point_calls() {
     // it must agree with the allocate-per-call path to the last bit
     let data = cluster(300, 33);
     let (train, test) = data.split(220);
+    let mut models = vec![];
     for inference in [Inference::Sparse(Ordering::Rcm), Inference::Parallel(Ordering::Rcm)] {
-        let model =
-            GpClassifier::new(CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4), inference);
+        models.push(GpClassifier::new(CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4), inference));
+    }
+    models.push(
+        GpClassifier::new_cs_fic(
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4),
+            CovFunction::new(CovKind::Se, 2, 0.7, 3.0),
+            16,
+        )
+        .unwrap(),
+    );
+    for model in models {
         let fitted = model.infer_only(&train.x, &train.y).unwrap();
         let batched = fitted.predict_latent_batch(&test.x);
         let mut predictor = fitted.predictor();
@@ -198,6 +219,7 @@ fn cv_and_jobs_compose() {
         .submit(csgp::coordinator::TrainSpec {
             dataset: data,
             cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5),
+            global_cov: None,
             inference: Inference::Sparse(Ordering::Rcm),
             optimize: false,
         })
