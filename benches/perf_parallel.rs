@@ -1,0 +1,117 @@
+//! Worker-pool scaling of the per-sweep hot loops: the parallel-EP /
+//! CS+FIC marginal-variance loops, the Takahashi-based gradient path and
+//! batched latent prediction, each measured at pool widths 1/2/4/8 on the
+//! same fitted state. Every measurement also asserts that the output is
+//! bitwise-identical to the width-1 (serial) path — the pool's
+//! determinism contract.
+//!
+//! Results are printed as a markdown table and written to
+//! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter) so the
+//! perf trajectory is tracked across PRs.
+//!
+//! Run: `cargo bench --bench perf_parallel` (`CSGP_FULL=1` for n = 8000).
+
+use csgp::bench::report::Report;
+use csgp::bench::{fmt_duration, Bencher};
+use csgp::data::kmeans::kmeans;
+use csgp::data::synthetic::{cluster_dataset, uniform_points, ClusterConfig};
+use csgp::gp::cache::GradScratch;
+use csgp::gp::covariance::{AdditiveCov, CovFunction, CovKind};
+use csgp::gp::csfic::CsFicEp;
+use csgp::gp::ep_parallel::ParallelEp;
+use csgp::gp::marginal::EpOptions;
+use csgp::sparse::ordering::Ordering;
+use csgp::sparse::takahashi::SparseInverse;
+
+const WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Measure `f` at every pool width, asserting output identity against the
+/// width-1 reference, pushing every measurement into the report, and
+/// returning (t1, t4) median nanoseconds for the speedup summary.
+fn measure<T: PartialEq>(
+    rep: &mut Report,
+    bench: &str,
+    backend: &str,
+    n: usize,
+    mut f: impl FnMut() -> T,
+) -> (f64, f64) {
+    let b = Bencher::quick();
+    let reference = csgp::par::with_max_threads(1, &mut f);
+    let (mut t1, mut t4) = (0.0f64, 0.0f64);
+    for &w in &WIDTHS {
+        let stats = csgp::par::with_max_threads(w, || {
+            let out = f();
+            assert!(
+                out == reference,
+                "{backend}/{bench}: width-{w} output differs from the serial path"
+            );
+            b.run(&mut f)
+        });
+        let ns = stats.median.as_nanos() as f64;
+        if w == 1 {
+            t1 = ns;
+        }
+        if w == 4 {
+            t4 = ns;
+        }
+        println!(
+            "| {n} | {backend} | {bench} | {w} | {} | {:.2}x |",
+            fmt_duration(stats.median),
+            t1 / ns
+        );
+        rep.push(bench, backend, n, w, &stats);
+    }
+    (t1, t4)
+}
+
+fn main() {
+    let full = std::env::var("CSGP_FULL").is_ok();
+    let n = if full { 8000 } else { 4000 };
+    let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let mut rep = Report::new("BENCH_parallel.json");
+
+    println!("# Worker-pool scaling (n = {n}, host cores = {cores})");
+    println!("| n | backend | loop | threads | median | speedup |");
+    println!("|---|---|---|---|---|---|");
+
+    // ---- CS backend: parallel EP on the pure Wendland prior -------------
+    let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.2);
+    let opts = EpOptions { max_sweeps: 40, tol: 1e-6, damping: 0.8 };
+    let ep = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap();
+    let probes = uniform_points(2000, 2, 10.0, 99);
+
+    let (cs_t1, cs_t4) = measure(&mut rep, "sweep", "cs", n, || ep.recompute_sigma_diag());
+    let mut zi = SparseInverse::default();
+    measure(&mut rep, "gradient", "cs", n, || {
+        ep.factor.takahashi_inverse_into(&mut zi);
+        (zi.z_lower.clone(), zi.z_diag.clone())
+    });
+    measure(&mut rep, "predict", "cs", n, || ep.predict_latent_batch(&cov, &probes));
+
+    // ---- CS+FIC backend: hybrid prior through the Woodbury solver -------
+    let hybrid = AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 0.6, 3.0), cov.clone()).unwrap();
+    let xu = kmeans(&data.x, 64, 25, 0xf1c);
+    let hopts = EpOptions { max_sweeps: 15, tol: 1e-6, damping: 0.8 };
+    let hep = CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &hopts).unwrap();
+
+    let hu = hep.fic_factor(); // rebuilt once, outside the timed loop
+    let (hy_t1, hy_t4) =
+        measure(&mut rep, "sweep", "csfic", n, || hep.recompute_sigma_diag_with(&hu));
+    let mut scratch = GradScratch::default();
+    measure(&mut rep, "gradient", "csfic", n, || hep.log_z_grad_cs_cached(&mut scratch));
+    measure(&mut rep, "predict", "csfic", n, || hep.predict_latent_batch(&probes));
+
+    rep.write().expect("writing BENCH_parallel.json");
+    println!();
+    println!(
+        "per-sweep variance loop, 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
+         (target >= 2.5x on a >= 4-core host)",
+        cs_t1 / cs_t4,
+        hy_t1 / hy_t4
+    );
+    println!("machine-readable results: BENCH_parallel.json ({} records)", rep.records().len());
+    if cores >= 4 && (cs_t1 / cs_t4 < 2.5 || hy_t1 / hy_t4 < 2.5) {
+        println!("WARNING: 4-thread speedup below the 2.5x target on this host");
+    }
+}

@@ -30,6 +30,10 @@ fn main() {
     );
     let use_xla = artifact_dir.join("manifest.json").exists();
     println!("probit stage: {}", if use_xla { "XLA artifact" } else { "native (no artifacts)" });
+    println!(
+        "latent stage: worker pool, {} threads (CSGP_THREADS to override)",
+        csgp::par::default_threads()
+    );
 
     for (clients, batch) in [(1usize, 1usize), (4, 64), (16, 256)] {
         let svc = Arc::new(PredictionService::start(

@@ -84,6 +84,94 @@ impl Bencher {
     }
 }
 
+/// Machine-readable bench results: the perf benches push one record per
+/// measured configuration and write a JSON file (hand-rolled — no external
+/// crates) next to the printed table, so the perf trajectory is tracked
+/// across PRs (`BENCH_parallel.json`, …).
+pub mod report {
+    use std::io::Write;
+    use std::path::{Path, PathBuf};
+
+    use super::Stats;
+
+    /// One measured configuration.
+    #[derive(Clone, Debug)]
+    pub struct Record {
+        /// Which loop was measured ("sweep", "gradient", "predict", …).
+        pub bench: String,
+        /// Which backend ran it ("cs", "csfic", …).
+        pub backend: String,
+        /// Problem size.
+        pub n: usize,
+        /// Pool width the measurement ran at.
+        pub threads: usize,
+        /// Median nanoseconds per iteration.
+        pub ns_per_iter: f64,
+    }
+
+    /// Accumulates records and serializes them as a JSON array.
+    pub struct Report {
+        path: PathBuf,
+        records: Vec<Record>,
+    }
+
+    impl Report {
+        pub fn new(path: impl AsRef<Path>) -> Report {
+            Report { path: path.as_ref().to_path_buf(), records: Vec::new() }
+        }
+
+        /// Record one measurement (median time of `stats`).
+        pub fn push(&mut self, bench: &str, backend: &str, n: usize, threads: usize, stats: &Stats) {
+            self.records.push(Record {
+                bench: bench.to_string(),
+                backend: backend.to_string(),
+                n,
+                threads,
+                ns_per_iter: stats.median.as_nanos() as f64,
+            });
+        }
+
+        /// Serialize every record. The field names are stable — downstream
+        /// tooling diffs these files across PRs.
+        pub fn write(&self) -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&self.path)?;
+            writeln!(f, "[")?;
+            for (i, r) in self.records.iter().enumerate() {
+                let comma = if i + 1 < self.records.len() { "," } else { "" };
+                writeln!(
+                    f,
+                    "  {{\"bench\": \"{}\", \"backend\": \"{}\", \"n\": {}, \
+                     \"threads\": {}, \"ns_per_iter\": {:.1}}}{comma}",
+                    json_escape(&r.bench),
+                    json_escape(&r.backend),
+                    r.n,
+                    r.threads,
+                    r.ns_per_iter,
+                )?;
+            }
+            writeln!(f, "]")?;
+            Ok(())
+        }
+
+        pub fn records(&self) -> &[Record] {
+            &self.records
+        }
+    }
+
+    /// Minimal string escape (the names are library-controlled ASCII, but
+    /// never emit structurally broken JSON).
+    fn json_escape(s: &str) -> String {
+        s.chars()
+            .flat_map(|c| match c {
+                '"' => "\\\"".chars().collect::<Vec<_>>(),
+                '\\' => "\\\\".chars().collect(),
+                c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+                c => vec![c],
+            })
+            .collect()
+    }
+}
+
 /// Render seconds compactly: "1.234 s", "12.3 ms", "45.6 µs".
 pub fn fmt_duration(d: Duration) -> String {
     let s = d.as_secs_f64();
@@ -135,6 +223,25 @@ mod tests {
         });
         assert_eq!(s.iters, 3);
         assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn report_writes_stable_json() {
+        let path = std::env::temp_dir().join("csgp-bench-report-test.json");
+        let mut rep = report::Report::new(&path);
+        let s = Stats::from_samples(vec![Duration::from_nanos(1500)]);
+        rep.push("sweep", "cs", 4000, 4, &s);
+        rep.push("pre\"dict", "csfic", 10, 1, &s);
+        rep.write().unwrap();
+        assert_eq!(rep.records().len(), 2);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.trim_start().starts_with('['), "{text}");
+        assert!(text.trim_end().ends_with(']'), "{text}");
+        assert!(text.contains("\"bench\": \"sweep\""));
+        assert!(text.contains("\"threads\": 4"));
+        assert!(text.contains("\"ns_per_iter\": 1500.0"));
+        assert!(text.contains("pre\\\"dict"), "quotes must be escaped: {text}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -120,7 +120,8 @@ fn serve_loop(
 ) {
     // one predictor for the worker's lifetime: the neighbor index over the
     // training inputs and the sparse-solve workspace are shared by every
-    // batch instead of rebuilt per request
+    // batch instead of rebuilt per request (large batches fan their
+    // solves out over the worker pool)
     let mut predictor = model.predictor();
     loop {
         // block for the first request of a batch
@@ -147,9 +148,13 @@ fn serve_loop(
             .batched_items_max
             .fetch_max(batch.len() as u64, AtomicOrdering::Relaxed);
 
-        // latent predictions (sparse solves in rust, shared workspace)
-        let latents: Vec<(f64, f64)> =
-            batch.iter().map(|r| predictor.predict_latent(&r.x)).collect();
+        // latent predictions: the batch's sparse solves fan out over the
+        // worker pool (forked workspaces sharing the predictor's neighbor
+        // index), identical to per-request serial calls; inputs move out
+        // of the requests (they are not needed for the replies)
+        let xs: Vec<Vec<f64>> =
+            batch.iter_mut().map(|r| std::mem::take(&mut r.x)).collect();
+        let latents: Vec<(f64, f64)> = predictor.predict_latent_batch(&xs);
         // probability stage: XLA artifact if available, else native probit
         let probs: Vec<f64> = match &runtime {
             Some(rt) => {
@@ -229,6 +234,41 @@ mod tests {
         let model = fitted_toy();
         let svc = PredictionService::start(model.clone(), None, ServiceConfig::default());
         for x in [vec![1.0, 1.0], vec![4.0, 2.0], vec![3.0, 5.5]] {
+            let served = svc.predict(x.clone()).unwrap();
+            let (m, v) = model.predict_latent(&x);
+            assert!((served.latent_mean - m).abs() < 1e-12);
+            assert!((served.latent_var - v).abs() < 1e-12);
+            assert!((served.probability - class_probability(m, v)).abs() < 1e-12);
+        }
+        svc.shutdown();
+    }
+
+    fn fitted_cs_fic_toy() -> Arc<FittedClassifier> {
+        let x = random_points(80, 2, 6.0, 11);
+        let y: Vec<f64> = x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
+        let model = GpClassifier::new_cs_fic(
+            CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+            CovFunction::new(CovKind::Se, 2, 0.6, 3.0),
+            8,
+        )
+        .unwrap();
+        Arc::new(model.infer_only(&x, &y).unwrap())
+    }
+
+    /// CS+FIC fits take the runtime's batched probit stage like sparse
+    /// fits: the service is started *with* an artifact directory (the
+    /// runtime falls back to its native interpreter when no manifest is
+    /// present), so the probability column flows through
+    /// `Runtime::predict_probit` — and must equal the native closed form.
+    #[test]
+    fn cs_fic_service_batches_probit_through_the_runtime() {
+        let model = fitted_cs_fic_toy();
+        let svc = PredictionService::start(
+            model.clone(),
+            Some(std::env::temp_dir().join("csgp-no-artifacts")),
+            ServiceConfig { max_batch: 32, max_wait: Duration::from_millis(5) },
+        );
+        for x in [vec![1.0, 1.0], vec![4.0, 2.0], vec![2.5, 5.0]] {
             let served = svc.predict(x.clone()).unwrap();
             let (m, v) = model.predict_latent(&x);
             assert!((served.latent_mean - m).abs() < 1e-12);

@@ -39,8 +39,32 @@ use std::sync::Arc;
 use crate::geom::NeighborIndex;
 use crate::gp::covariance::{CovFunction, INDEX_MIN_N};
 use crate::sparse::csc::CscMatrix;
+use crate::sparse::lowrank::InversePatternScratch;
 use crate::sparse::ordering::{compute_ordering, Ordering};
 use crate::sparse::symbolic::Symbolic;
+use crate::sparse::takahashi::SparseInverse;
+
+/// Buffers reused across gradient evaluations while the pattern holds.
+///
+/// Every SCG step evaluates `log Z` *and* its gradient; the gradient's
+/// trace term rebuilds the Takahashi sparsified inverse — `O(nnz(L))`
+/// values (plus, for CS+FIC, the n×m `V` block and the `B⁻¹`-on-pattern
+/// output). The *values* change with every site/hyperparameter move, but
+/// on a cache hit the *sizes* do not, so the optimizer loop keeps these
+/// buffers in its `PatternCache` instead of reallocating tens of
+/// megabytes per gradient evaluation. The compute methods
+/// (`LdlFactor::takahashi_inverse_into`,
+/// `SparseLowRank::inverse_on_pattern_into`) resize on demand, so a
+/// pattern rebuild simply regrows them — no invalidation hook needed.
+#[derive(Default)]
+pub struct GradScratch {
+    /// Takahashi z-buffers for `SparseEp::log_z_grad_cached`.
+    pub takahashi: SparseInverse,
+    /// Takahashi + V buffers for `CsFicEp::log_z_grad_cs_cached`.
+    pub lowrank: InversePatternScratch,
+    /// `B⁻¹` values on the CS pattern (CS+FIC trace term).
+    pub binv: Vec<f64>,
+}
 
 /// A covariance pattern valid for every ARD support ellipsoid contained
 /// in the one it was built at.
@@ -111,6 +135,9 @@ pub struct PatternCache {
     pub hits: usize,
     /// Evaluations that had to rebuild the pattern.
     pub misses: usize,
+    /// Gradient-evaluation buffers reused across SCG steps (see
+    /// [`GradScratch`]).
+    pub grad_scratch: GradScratch,
 }
 
 /// O(d) fingerprint of a point set: length plus the raw bits of the
@@ -139,6 +166,7 @@ impl PatternCache {
             data_fp: 0,
             hits: 0,
             misses: 0,
+            grad_scratch: GradScratch::default(),
         }
     }
 

@@ -322,6 +322,11 @@ impl CovFunction {
     /// the Euclidean support ball, then apply the exact `r < 1` test. For
     /// globally supported kernels this degenerates to the brute path (the
     /// pattern is dense anyway). `index` must have been built over `x`.
+    ///
+    /// Columns are independent (the index is read-only), so at pool width
+    /// > 1 they fan out over [`crate::par`] — each task produces its own
+    /// column, and the columns are concatenated in order, so the result is
+    /// identical to the serial sweep.
     pub fn cov_matrix_with(&self, x: &[Vec<f64>], index: &NeighborIndex) -> CscMatrix {
         let Some(radius) = self.support_radius() else {
             return self.cov_matrix_brute(x);
@@ -329,64 +334,137 @@ impl CovFunction {
         let n = x.len();
         debug_assert_eq!(index.len(), n, "index built over a different point set");
         let query_r = radius * (1.0 + RADIUS_PAD);
-        let mut col_ptr = Vec::with_capacity(n + 1);
-        let mut row_idx = Vec::new();
-        let mut values = Vec::new();
-        let mut cand: Vec<usize> = Vec::new();
-        col_ptr.push(0);
-        for (j, xj) in x.iter().enumerate() {
-            index.neighbors_sorted(xj, query_r, &mut cand);
-            for &i in cand.iter() {
-                if i == j {
-                    row_idx.push(i);
-                    values.push(self.sigma2);
-                    continue;
-                }
-                let r = self.r(&x[i], xj);
-                if r < 1.0 {
-                    row_idx.push(i);
-                    values.push(self.sigma2 * self.profile(r));
-                }
+        if crate::par::current_threads() <= 1 {
+            // serial sweep: one shared candidate buffer, zero per-column
+            // allocation
+            let mut col_ptr = Vec::with_capacity(n + 1);
+            let mut row_idx = Vec::new();
+            let mut values = Vec::new();
+            let mut cand: Vec<usize> = Vec::new();
+            col_ptr.push(0);
+            for (j, xj) in x.iter().enumerate() {
+                index.neighbors_sorted(xj, query_r, &mut cand);
+                self.fill_column(x, j, &cand, &mut row_idx, &mut values);
+                col_ptr.push(row_idx.len());
             }
+            return CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values };
+        }
+        // one (rows, values) pair per column, stitched in column order
+        let cols: Vec<(Vec<usize>, Vec<f64>)> = crate::par::map_indexed(
+            n,
+            16,
+            Vec::<usize>::new,
+            |cand, j| {
+                index.neighbors_sorted(&x[j], query_r, cand);
+                let mut rows = Vec::with_capacity(cand.len());
+                let mut vals = Vec::with_capacity(cand.len());
+                self.fill_column(x, j, cand, &mut rows, &mut vals);
+                (rows, vals)
+            },
+        );
+        let nnz: usize = cols.iter().map(|(r, _)| r.len()).sum();
+        let mut col_ptr = Vec::with_capacity(n + 1);
+        let mut row_idx = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        col_ptr.push(0);
+        for (rows, vals) in cols {
+            row_idx.extend(rows);
+            values.extend(vals);
             col_ptr.push(row_idx.len());
         }
         CscMatrix { n_rows: n, n_cols: n, col_ptr, row_idx, values }
+    }
+
+    /// Shared kernel of the serial and parallel index-backed assemblies:
+    /// evaluate column `j` over the candidate set, appending the surviving
+    /// entries (exact `r < 1` test plus the diagonal).
+    fn fill_column(
+        &self,
+        x: &[Vec<f64>],
+        j: usize,
+        cand: &[usize],
+        rows: &mut Vec<usize>,
+        vals: &mut Vec<f64>,
+    ) {
+        for &i in cand {
+            if i == j {
+                rows.push(i);
+                vals.push(self.sigma2);
+                continue;
+            }
+            let r = self.r(&x[i], &x[j]);
+            if r < 1.0 {
+                rows.push(i);
+                vals.push(self.sigma2 * self.profile(r));
+            }
+        }
     }
 
     /// Covariance values re-evaluated on a *fixed* pattern (which may be a
     /// superset of the current support — out-of-support entries come out
     /// as exact zeros). This is the `PatternCache` hit path: `O(nnz)`
     /// kernel evaluations, no neighbor queries, no re-sorting.
+    /// Each pattern entry is written by exactly one column task, so the
+    /// pool-parallel evaluation is bitwise-identical to the serial sweep.
     pub fn cov_values_on_pattern(&self, x: &[Vec<f64>], pattern: &CscMatrix) -> CscMatrix {
         debug_assert_eq!(pattern.n_cols, x.len());
         let mut k = pattern.clone();
-        for j in 0..k.n_cols {
-            for p in k.col_ptr[j]..k.col_ptr[j + 1] {
-                let i = k.row_idx[p];
-                k.values[p] = if i == j {
-                    self.sigma2
-                } else {
-                    self.sigma2 * self.profile(self.r(&x[i], &x[j]))
-                };
-            }
+        let n_cols = k.n_cols;
+        {
+            let (col_ptr, row_idx) = (&k.col_ptr, &k.row_idx);
+            let vs = crate::par::SyncSlice::new(&mut k.values);
+            crate::par::for_chunks(
+                n_cols,
+                64,
+                || (),
+                |_, range| {
+                    for j in range {
+                        for p in col_ptr[j]..col_ptr[j + 1] {
+                            let i = row_idx[p];
+                            let v = if i == j {
+                                self.sigma2
+                            } else {
+                                self.sigma2 * self.profile(self.r(&x[i], &x[j]))
+                            };
+                            // SAFETY: entry p lies in column j's range,
+                            // owned by exactly this chunk.
+                            unsafe { vs.set(p, v) };
+                        }
+                    }
+                },
+            );
         }
         k
     }
 
     /// Per-parameter gradient values aligned with an existing pattern:
-    /// `grads[p][e]` is `∂K/∂θ_p` at pattern entry `e`.
+    /// `grads[p][e]` is `∂K/∂θ_p` at pattern entry `e`. Entry slots are
+    /// owned by their column's task, so the pool-parallel evaluation is
+    /// bitwise-identical to the serial sweep.
     pub fn cov_grads_on_pattern(&self, x: &[Vec<f64>], pattern: &CscMatrix) -> Vec<Vec<f64>> {
         let np = self.n_params();
         let mut grads = vec![vec![0.0; pattern.nnz()]; np];
-        let mut g = vec![0.0; np];
-        for j in 0..pattern.n_cols {
-            for p in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
-                let i = pattern.row_idx[p];
-                self.kernel_grad(&x[i], &x[j], &mut g);
-                for (q, gq) in g.iter().enumerate() {
-                    grads[q][p] = *gq;
-                }
-            }
+        {
+            let slices: Vec<crate::par::SyncSlice<'_, f64>> =
+                grads.iter_mut().map(|g| crate::par::SyncSlice::new(g)).collect();
+            crate::par::for_chunks(
+                pattern.n_cols,
+                32,
+                || vec![0.0; np],
+                |g, range| {
+                    for j in range {
+                        for p in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
+                            let i = pattern.row_idx[p];
+                            self.kernel_grad(&x[i], &x[j], g);
+                            for (q, &gq) in g.iter().enumerate() {
+                                // SAFETY: entry p lies in column j's range,
+                                // owned by exactly this chunk.
+                                unsafe { slices[q].set(p, gq) };
+                            }
+                        }
+                    }
+                },
+            );
         }
         grads
     }

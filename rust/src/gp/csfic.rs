@@ -22,14 +22,14 @@
 
 use std::sync::Arc;
 
-use crate::gp::cache::PatternCache;
+use crate::gp::cache::{GradScratch, PatternCache};
 use crate::gp::covariance::AdditiveCov;
 use crate::gp::likelihood::probit_site_update;
 use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
 use crate::gp::predict::PredictWorkspace;
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::dense::{DenseCholesky, DenseMatrix};
-use crate::sparse::lowrank::SparseLowRank;
+use crate::sparse::lowrank::{InversePatternScratch, SparseLowRank};
 use crate::sparse::ordering::Ordering;
 use crate::sparse::triangular::SparseSolveWorkspace;
 
@@ -124,17 +124,7 @@ impl CsFicEp {
         let mut kuu = DenseMatrix::from_fn(m, m, |a, b| cov.global.kernel(&xu[a], &xu[b]));
         kuu.add_diag(jitter);
         let luu = kuu.cholesky().map_err(|e| format!("K_uu: {e}"))?;
-        let mut u = DenseMatrix::zeros(n, m);
-        let mut ksu = vec![0.0; m];
-        for i in 0..n {
-            for (a, k) in ksu.iter_mut().enumerate() {
-                *k = cov.global.kernel(&xp[i], &xu[a]);
-            }
-            let sol = luu.solve_lower(&ksu);
-            for (a, &s) in sol.iter().enumerate() {
-                *u.at_mut(i, a) = s;
-            }
-        }
+        let u = build_fic_factor(&cov.global, xp.as_slice(), xu, &luu);
         let lambda: Vec<f64> = (0..n)
             .map(|i| {
                 let q: f64 = u.row(i).iter().map(|v| v * v).sum();
@@ -154,8 +144,6 @@ impl CsFicEp {
         let mut mu = vec![0.0; n];
         let mut sigma_diag = vec![0.0; n];
         let mut gamma = vec![0.0; n];
-        let mut solve_ws = SparseSolveWorkspace::new(n);
-        let mut t = vec![0.0; n];
 
         // B = S_B + Us Usᵀ; the initial refresh sets the prior (or
         // warm-started) marginals — for all-zero sites S_B = I, Us = 0.
@@ -171,8 +159,6 @@ impl CsFicEp {
             &mut gamma,
             &mut mu,
             &mut sigma_diag,
-            &mut solve_ws,
-            &mut t,
         );
 
         let mut log_z = f64::NEG_INFINITY;
@@ -211,8 +197,6 @@ impl CsFicEp {
                 &mut gamma,
                 &mut mu,
                 &mut sigma_diag,
-                &mut solve_ws,
-                &mut t,
             );
 
             sweeps += 1;
@@ -270,12 +254,35 @@ impl CsFicEp {
     /// sparsified inverse of the sparse part minus the rank-m Woodbury
     /// correction. The global kernel's parameters enter through `U` and
     /// `Λ`; the model layer differentiates those with warm-started finite
-    /// differences.
+    /// differences. Allocates the Takahashi / `V` / `B⁻¹` buffers fresh;
+    /// optimizer loops should call [`CsFicEp::log_z_grad_cs_cached`] with
+    /// their cache's scratch.
     pub fn log_z_grad_cs(&self) -> Vec<f64> {
+        let mut lowrank = InversePatternScratch::default();
+        let mut binv = Vec::new();
+        self.log_z_grad_cs_with(&mut lowrank, &mut binv)
+    }
+
+    /// [`CsFicEp::log_z_grad_cs`] reusing the optimizer cache's
+    /// [`GradScratch`]: while the `PatternCache` hits (only site
+    /// parameters / covariance values changed), the `O(nnz(L))` Takahashi
+    /// z-arrays, the n×m `V` block and the `B⁻¹`-on-pattern output are
+    /// recycled across SCG steps instead of reallocated per gradient
+    /// evaluation.
+    pub fn log_z_grad_cs_cached(&self, scratch: &mut GradScratch) -> Vec<f64> {
+        let GradScratch { lowrank, binv, .. } = scratch;
+        self.log_z_grad_cs_with(lowrank, binv)
+    }
+
+    fn log_z_grad_cs_with(
+        &self,
+        lowrank: &mut InversePatternScratch,
+        binv: &mut Vec<f64>,
+    ) -> Vec<f64> {
         let kmat = &self.k_cs;
         let grads = self.cov.cs.cov_grads_on_pattern(&self.xp, kmat);
         let mut out = grad_quadratic_term(kmat, &grads, &self.w_pred);
-        let binv = self.solver.inverse_on_pattern(kmat);
+        self.solver.inverse_on_pattern_into(kmat, lowrank, binv);
         let sw: Vec<f64> = self.sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
         for j in 0..kmat.n_cols {
             for p in kmat.col_ptr[j]..kmat.col_ptr[j + 1] {
@@ -315,7 +322,7 @@ impl CsFicEp {
         self.cov.cs.cross_cov_into(
             &self.xp,
             xstar,
-            pws.index.as_ref(),
+            pws.index.as_deref(),
             &mut pws.rows,
             &mut pws.vals,
         );
@@ -355,11 +362,70 @@ impl CsFicEp {
         (mean_cs + mean_lr, (pss - quad).max(1e-12))
     }
 
-    /// Batched latent predictions through one shared workspace.
+    /// Batched latent predictions fanned out over the worker pool: one
+    /// neighbor index is built once and shared (`Arc`) by every worker's
+    /// forked workspace; each test point is an independent task, so the
+    /// results equal the per-point path bitwise.
     pub fn predict_latent_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
-        let mut pws = self.predict_workspace();
-        xs.iter().map(|x| self.predict_latent_with(x, &mut pws)).collect()
+        let proto = self.predict_workspace();
+        crate::gp::predict::batch_with_forks(&proto, xs.len(), |pws, i| {
+            self.predict_latent_with(&xs[i], pws)
+        })
     }
+
+    /// Rebuild the FIC factor `U = K_fu L_uu⁻ᵀ` (n×m, permuted rows).
+    /// `U` is *not* retained on the fitted state (no serving path reads
+    /// it, and it would add an n×m matrix to every long-lived model);
+    /// callers that re-run the variance loop build it once and pass it to
+    /// [`CsFicEp::recompute_sigma_diag_with`].
+    pub fn fic_factor(&self) -> DenseMatrix {
+        build_fic_factor(&self.cov.global, self.xp.as_slice(), &self.xu, &self.luu)
+    }
+
+    /// Recompute all marginal variances from the current solver/site
+    /// state and the given FIC factor (see [`CsFicEp::fic_factor`]) — the
+    /// per-sweep loop `perf_parallel` measures in isolation for the
+    /// CS+FIC backend.
+    pub fn recompute_sigma_diag_with(&self, u: &DenseMatrix) -> Vec<f64> {
+        let sw: Vec<f64> = self.sites.tau.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        posterior_variances(&self.k_cs, &self.lambda, u, &self.solver, &sw, &self.m2)
+    }
+}
+
+/// `U = K_fu L_uu⁻ᵀ` over the permuted inputs. Each row is an independent
+/// m-kernel-eval + m²-solve task, so the build fans out over the worker
+/// pool (the global-hyper FD gradient rebuilds U per perturbed run); row
+/// i's slots are written by exactly one chunk, so the result is
+/// bitwise-identical to the serial build.
+fn build_fic_factor(
+    global: &crate::gp::covariance::CovFunction,
+    xp: &[Vec<f64>],
+    xu: &[Vec<f64>],
+    luu: &DenseCholesky,
+) -> DenseMatrix {
+    let (n, m) = (xp.len(), xu.len());
+    let mut u = DenseMatrix::zeros(n, m);
+    {
+        let ud = crate::par::SyncSlice::new(&mut u.data);
+        crate::par::for_chunks(
+            n,
+            64,
+            || vec![0.0; m],
+            |ksu, range| {
+                for i in range {
+                    for (a, k) in ksu.iter_mut().enumerate() {
+                        *k = global.kernel(&xp[i], &xu[a]);
+                    }
+                    let sol = luu.solve_lower(ksu);
+                    for (a, &s) in sol.iter().enumerate() {
+                        // SAFETY: row i's slots belong to this chunk only.
+                        unsafe { ud.set(i * m + a, s) };
+                    }
+                }
+            },
+        );
+    }
+    u
 }
 
 /// `S_B = I + S̃^{1/2} (K_cs + Λ) S̃^{1/2}` on `k_cs`'s pattern.
@@ -414,7 +480,8 @@ fn apply_p(k_cs: &CscMatrix, lambda: &[f64], u: &DenseMatrix, v: &[f64]) -> Vec<
 /// ```
 ///
 /// with `UsᵀB⁻¹aᵢ = g − M₁ C⁻¹ g` (g = Wᵀaᵢ) and the once-per-refresh
-/// `M₂ = UsᵀB⁻¹Us` — one sparse-RHS solve plus `O(k·m + m²)` per site.
+/// `M₂ = UsᵀB⁻¹Us` — one sparse-RHS solve plus `O(k·m + m²)` per site,
+/// fanned out over the worker pool by [`posterior_variances`].
 /// Returns the `M₂` it built so the converged state can keep it without
 /// recomputing.
 #[allow(clippy::too_many_arguments)]
@@ -427,11 +494,8 @@ fn refresh_posterior(
     gamma: &mut Vec<f64>,
     mu: &mut [f64],
     sigma_diag: &mut [f64],
-    ws: &mut SparseSolveWorkspace,
-    t: &mut [f64],
 ) -> DenseMatrix {
     let n = k_cs.n_rows;
-    let m = u.n_cols;
     let sw: Vec<f64> = sites.tau.iter().map(|&v| v.max(0.0).sqrt()).collect();
 
     // posterior mean
@@ -446,34 +510,62 @@ fn refresh_posterior(
 
     // marginal variances
     let m2 = solver.m2();
-    let mut a_vals: Vec<f64> = Vec::with_capacity(n);
-    for i in 0..n {
-        let (krows, kvals) = k_cs.col(i);
-        // aᵢ = S̃^{1/2} (K_cs + Λ)[:, i] — Λ only touches the diagonal
-        a_vals.clear();
-        a_vals.extend(krows.iter().zip(kvals).map(|(&r, &v)| {
-            sw[r] * (v + if r == i { lambda[i] } else { 0.0 })
-        }));
-        solver.factor.solve_sparse_rhs(krows, &a_vals, ws, t);
-        let q1: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
-        ws.clear_solution(t);
-        let g = solver.wt_sparse(krows, &a_vals);
-        let z = solver.cap.solve(&g);
-        let q2: f64 = g.iter().zip(&z).map(|(a, b)| a * b).sum();
-        let ui = u.row(i);
-        let mut cross = 0.0;
-        let mut quad_lr = 0.0;
-        for a in 0..m {
-            let m1z: f64 = (0..m).map(|b| solver.m1.at(a, b) * z[b]).sum();
-            cross += ui[a] * (g[a] - m1z);
-            let m2u: f64 = (0..m).map(|b| m2.at(a, b) * ui[b]).sum();
-            quad_lr += ui[a] * m2u;
-        }
-        let pii = k_cs.get(i, i) + lambda[i] + ui.iter().map(|v| v * v).sum::<f64>();
-        let quad = (q1 - q2) + 2.0 * cross + quad_lr;
-        sigma_diag[i] = (pii - quad).max(1e-12);
-    }
+    sigma_diag.copy_from_slice(&posterior_variances(k_cs, lambda, u, solver, &sw, &m2));
     m2
+}
+
+/// All `n` hybrid marginal variances
+/// `Σᵢᵢ = Pᵢᵢ − (S̃^{1/2} P[:,i])ᵀ B⁻¹ (S̃^{1/2} P[:,i])` through the
+/// sparse-plus-low-rank split (see [`refresh_posterior`]) — one
+/// sparse-RHS solve plus `O(k·m + m²)` per site. Sites are independent,
+/// so the loop fans out over [`crate::par`]: each participant owns a
+/// `SparseSolveWorkspace` and a dense solution vector, and slot `i` is
+/// written by exactly one chunk — bitwise-identical to the serial loop at
+/// any thread count. Workspaces are built once per participant per call
+/// (`O(threads·n)` against `O(n·(nnz + m²))` solve work). This is the
+/// loop `perf_parallel` measures for the CS+FIC backend.
+pub(crate) fn posterior_variances(
+    k_cs: &CscMatrix,
+    lambda: &[f64],
+    u: &DenseMatrix,
+    solver: &SparseLowRank,
+    sw: &[f64],
+    m2: &DenseMatrix,
+) -> Vec<f64> {
+    let n = k_cs.n_rows;
+    let m = u.n_cols;
+    crate::par::map_indexed(
+        n,
+        64,
+        || (SparseSolveWorkspace::new(n), vec![0.0; n], Vec::with_capacity(64)),
+        |scratch, i| {
+            let (ws, t, a_vals) = scratch;
+            let (krows, kvals) = k_cs.col(i);
+            // aᵢ = S̃^{1/2} (K_cs + Λ)[:, i] — Λ only touches the diagonal
+            a_vals.clear();
+            a_vals.extend(krows.iter().zip(kvals).map(|(&r, &v)| {
+                sw[r] * (v + if r == i { lambda[i] } else { 0.0 })
+            }));
+            solver.factor.solve_sparse_rhs(krows, a_vals, ws, t);
+            let q1: f64 = krows.iter().zip(a_vals.iter()).map(|(&r, &v)| v * t[r]).sum();
+            ws.clear_solution(t);
+            let g = solver.wt_sparse(krows, a_vals);
+            let z = solver.cap.solve(&g);
+            let q2: f64 = g.iter().zip(&z).map(|(a, b)| a * b).sum();
+            let ui = u.row(i);
+            let mut cross = 0.0;
+            let mut quad_lr = 0.0;
+            for a in 0..m {
+                let m1z: f64 = (0..m).map(|b| solver.m1.at(a, b) * z[b]).sum();
+                cross += ui[a] * (g[a] - m1z);
+                let m2u: f64 = (0..m).map(|b| m2.at(a, b) * ui[b]).sum();
+                quad_lr += ui[a] * m2u;
+            }
+            let pii = k_cs.get(i, i) + lambda[i] + ui.iter().map(|v| v * v).sum::<f64>();
+            let quad = (q1 - q2) + 2.0 * cross + quad_lr;
+            (pii - quad).max(1e-12)
+        },
+    )
 }
 
 #[cfg(test)]

@@ -6,6 +6,12 @@
 //! one sparse refactorization per sweep, at the cost of needing damping to
 //! converge. The `abl_parallel_ep` bench quantifies the trade-off against
 //! Algorithm 1.
+//!
+//! The `n` per-site variance solves are independent, so they fan out over
+//! the [`crate::par`] worker pool ([`marginal_variances`]): each worker
+//! owns a `SparseSolveWorkspace` and writes disjoint `σᵢ²` slots, keeping
+//! the sweep bitwise-identical to the serial loop at any thread count
+//! (`perf_parallel` measures the scaling).
 
 use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
@@ -66,9 +72,6 @@ impl ParallelEp {
         }
         let mut factor = LdlFactor::identity(plan.symbolic.clone());
         let mut sites = EpSites::zeros(n);
-        let mut ws = SparseSolveWorkspace::new(n);
-        let mut t = vec![0.0; n];
-        let mut a_vals = Vec::with_capacity(n);
         // parallel EP needs damping; honour opts.damping but cap at 0.9
         let damping = opts.damping.min(0.9);
 
@@ -114,17 +117,7 @@ impl ParallelEp {
             for i in 0..n {
                 mu[i] = gamma[i] - kv[i];
             }
-            for i in 0..n {
-                let (krows, kvals) = k.col(i);
-                a_vals.clear();
-                a_vals.extend(
-                    krows.iter().zip(kvals).map(|(&r, &v)| sites.tau[r].max(0.0).sqrt() * v),
-                );
-                factor.solve_sparse_rhs(krows, &a_vals, &mut ws, &mut t);
-                let quad: f64 = krows.iter().zip(&a_vals).map(|(&r, &v)| v * t[r]).sum();
-                sigma_diag[i] = k.get(i, i) - quad;
-                ws.clear_solution(&mut t);
-            }
+            sigma_diag = marginal_variances(&k, &factor, &sites.tau);
 
             sweeps += 1;
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
@@ -174,11 +167,50 @@ impl ParallelEp {
         )
     }
 
-    /// Batched latent predictions through one shared workspace.
+    /// Batched latent predictions fanned out over the worker pool: one
+    /// neighbor index is built once and shared (`Arc`) by every worker's
+    /// forked workspace; each test point is an independent task, so the
+    /// results equal the per-point path bitwise.
     pub fn predict_latent_batch(&self, cov: &CovFunction, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
-        let mut pws = self.predict_workspace(cov);
-        xs.iter().map(|x| self.predict_latent_with(cov, x, &mut pws)).collect()
+        let proto = self.predict_workspace(cov);
+        crate::gp::predict::batch_with_forks(&proto, xs.len(), |pws, i| {
+            self.predict_latent_with(cov, &xs[i], pws)
+        })
     }
+
+    /// Recompute all marginal variances from the current factor/site
+    /// state — the per-sweep loop `perf_parallel` measures in isolation.
+    pub fn recompute_sigma_diag(&self) -> Vec<f64> {
+        marginal_variances(&self.k, &self.factor, &self.sites.tau)
+    }
+}
+
+/// All `n` marginal variances `σᵢ² = K_ii − aᵢᵀ B⁻¹ aᵢ` with
+/// `aᵢ = S̃^{1/2} K[:, i]` — the dominant per-sweep cost of parallel EP
+/// for CS kernels. The sites are independent, so the solves fan out over
+/// [`crate::par`]: each participant owns one `SparseSolveWorkspace` and
+/// one dense solution vector, and slot `i` is written by exactly one
+/// chunk, so the output is bitwise-identical to the serial loop at any
+/// thread count. The workspaces are built once per participant per call
+/// (not per site) — `O(threads·n)` against the loop's `O(n·nnz(L))`
+/// solve work, the price of keeping the per-sweep API stateless.
+pub(crate) fn marginal_variances(k: &CscMatrix, factor: &LdlFactor, tau: &[f64]) -> Vec<f64> {
+    let n = k.n_rows;
+    crate::par::map_indexed(
+        n,
+        64,
+        || (SparseSolveWorkspace::new(n), vec![0.0; n], Vec::with_capacity(64)),
+        |scratch, i| {
+            let (ws, t, a_vals) = scratch;
+            let (krows, kvals) = k.col(i);
+            a_vals.clear();
+            a_vals.extend(krows.iter().zip(kvals).map(|(&r, &v)| tau[r].max(0.0).sqrt() * v));
+            factor.solve_sparse_rhs(krows, a_vals, ws, t);
+            let quad: f64 = krows.iter().zip(a_vals.iter()).map(|(&r, &v)| v * t[r]).sum();
+            ws.clear_solution(t);
+            k.get(i, i) - quad
+        },
+    )
 }
 
 #[cfg(test)]

@@ -249,13 +249,38 @@ impl SparseEp {
     /// The gradient values are evaluated directly on the pattern the EP
     /// run factored (`self.k`), so pattern agreement is structural — no
     /// covariance re-assembly, no re-ordering, no chance of a `col_ptr`
-    /// mismatch between the run and its gradient.
+    /// mismatch between the run and its gradient. Allocates the Takahashi
+    /// buffers fresh; optimizer loops should call
+    /// [`SparseEp::log_z_grad_cached`] with their cache's scratch.
     pub fn log_z_grad(&self, cov: &CovFunction) -> Vec<f64> {
+        let mut zsp = crate::sparse::takahashi::SparseInverse::default();
+        self.factor.takahashi_inverse_into(&mut zsp);
+        self.log_z_grad_with(cov, &zsp)
+    }
+
+    /// [`SparseEp::log_z_grad`] reusing the optimizer cache's
+    /// [`GradScratch`](crate::gp::cache::GradScratch): while the
+    /// `PatternCache` hits (only site parameters / covariance values
+    /// changed), the `O(nnz(L))` Takahashi buffers are recycled across
+    /// SCG steps instead of reallocated per gradient evaluation.
+    pub fn log_z_grad_cached(
+        &self,
+        cov: &CovFunction,
+        scratch: &mut crate::gp::cache::GradScratch,
+    ) -> Vec<f64> {
+        self.factor.takahashi_inverse_into(&mut scratch.takahashi);
+        self.log_z_grad_with(cov, &scratch.takahashi)
+    }
+
+    fn log_z_grad_with(
+        &self,
+        cov: &CovFunction,
+        zsp: &crate::sparse::takahashi::SparseInverse,
+    ) -> Vec<f64> {
         let kmat = &self.k;
         let grads = cov.cov_grads_on_pattern(&self.xp, kmat);
         let mut out = grad_quadratic_term(kmat, &grads, &self.w_pred);
         // trace term via Z^sp: paper-Z_ij = sqrt(τ̃_i) Binv_ij sqrt(τ̃_j)
-        let zsp = self.factor.takahashi_inverse();
         let sym = &self.symbolic;
         let sw: Vec<f64> = self.sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
         for j in 0..kmat.n_cols {
@@ -312,10 +337,15 @@ impl SparseEp {
         )
     }
 
-    /// Batched latent predictions through one shared workspace.
+    /// Batched latent predictions fanned out over the worker pool: one
+    /// neighbor index is built once and shared (`Arc`) by every worker's
+    /// forked workspace; each test point is an independent task, so the
+    /// results equal the per-point path bitwise.
     pub fn predict_latent_batch(&self, cov: &CovFunction, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
-        let mut pws = self.predict_workspace(cov);
-        xs.iter().map(|x| self.predict_latent_with(cov, x, &mut pws)).collect()
+        let proto = self.predict_workspace(cov);
+        crate::gp::predict::batch_with_forks(&proto, xs.len(), |pws, i| {
+            self.predict_latent_with(cov, &xs[i], pws)
+        })
     }
 }
 

@@ -134,7 +134,12 @@ impl GpClassifier {
             }
             Inference::Sparse(_) => {
                 let ep = SparseEp::run_cached(cov, x, y, &self.ep_opts, None, cache)?;
-                let g = if want_grad { ep.log_z_grad(cov) } else { vec![] };
+                let g = if want_grad {
+                    // reuse the cache's Takahashi buffers across SCG steps
+                    ep.log_z_grad_cached(cov, &mut cache.grad_scratch)
+                } else {
+                    vec![]
+                };
                 Ok((ep.log_z, g, Backend::Sparse(ep)))
             }
             Inference::Parallel(_) => {
@@ -144,7 +149,8 @@ impl GpClassifier {
                 // needed (the ablation rarely optimizes hyperparameters).
                 let ep = ParallelEp::run_cached(cov, x, y, &self.ep_opts, cache)?;
                 let g = if want_grad {
-                    SparseEp::run_cached(cov, x, y, &self.ep_opts, None, cache)?.log_z_grad(cov)
+                    let sep = SparseEp::run_cached(cov, x, y, &self.ep_opts, None, cache)?;
+                    sep.log_z_grad_cached(cov, &mut cache.grad_scratch)
                 } else {
                     vec![]
                 };
@@ -190,7 +196,7 @@ impl GpClassifier {
                     // structure. Global block: warm-started central FDs
                     // (the fixed CS hypers keep the pattern cache hitting,
                     // and sites travel in unpermuted order).
-                    let mut g = ep.log_z_grad_cs();
+                    let mut g = ep.log_z_grad_cs_cached(&mut cache.grad_scratch);
                     let warm = ep.sites_unpermuted();
                     let p0 = global.params();
                     let h = 1e-4;
@@ -430,16 +436,24 @@ impl FittedClassifier {
         LatentPredictor::new(self)
     }
 
-    /// Latent predictions for a batch (one shared workspace).
+    /// Latent predictions for a batch: one shared neighbor index, with the
+    /// per-point solves fanned out over the worker pool on the
+    /// workspace-backed backends (see
+    /// [`LatentPredictor::predict_latent_batch`]).
     pub fn predict_latent_batch(&self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
         let mut predictor = self.predictor();
-        xs.iter().map(|x| predictor.predict_latent(x)).collect()
+        predictor.predict_latent_batch(xs)
     }
 
-    /// Class probabilities π* for a batch (one shared workspace).
+    /// Class probabilities π* for a batch — the latent stage fans out
+    /// over the worker pool like
+    /// [`predict_latent_batch`](FittedClassifier::predict_latent_batch);
+    /// the probit squash is a pure function of each `(μ*, σ*²)`.
     pub fn predict_proba(&self, xs: &[Vec<f64>]) -> Vec<f64> {
-        let mut predictor = self.predictor();
-        xs.iter().map(|x| predictor.predict_proba(x)).collect()
+        self.predict_latent_batch(xs)
+            .into_iter()
+            .map(|(m, v)| crate::gp::predict::class_probability(m, v))
+            .collect()
     }
 
     /// Error / nlpd metrics on a labelled test set.

@@ -11,6 +11,8 @@
 //! kernel's per-point cost is `O(k + nnz(L))` with zero allocation rather
 //! than a fresh index scan plus two `n`-vectors per call.
 
+use std::sync::Arc;
+
 use crate::geom::NeighborIndex;
 use crate::gp::covariance::{CovFunction, INDEX_MIN_N};
 use crate::gp::likelihood::{ln_norm_cdf, norm_cdf};
@@ -27,8 +29,10 @@ pub struct PredictWorkspace {
     pub(crate) vals: Vec<f64>,
     pub(crate) u_vals: Vec<f64>,
     /// Neighbor index over the training inputs the cross-covariances are
-    /// built against (only for compact kernels on large sets).
-    pub(crate) index: Option<NeighborIndex>,
+    /// built against (only for compact kernels on large sets). `Arc` so a
+    /// pool-parallel batch can [`fork`](PredictWorkspace::fork) one
+    /// workspace per worker without rebuilding or deep-copying the index.
+    pub(crate) index: Option<Arc<NeighborIndex>>,
 }
 
 impl PredictWorkspace {
@@ -37,7 +41,9 @@ impl PredictWorkspace {
     /// index to pay off.
     pub fn new(cov: &CovFunction, xp: &[Vec<f64>]) -> PredictWorkspace {
         let index = match cov.support_radius() {
-            Some(radius) if xp.len() >= INDEX_MIN_N => Some(NeighborIndex::build(xp, radius)),
+            Some(radius) if xp.len() >= INDEX_MIN_N => {
+                Some(Arc::new(NeighborIndex::build(xp, radius)))
+            }
             _ => None,
         };
         let mut pws = PredictWorkspace::one_shot(xp.len());
@@ -56,6 +62,39 @@ impl PredictWorkspace {
             index: None,
         }
     }
+
+    /// A fresh workspace sharing this one's neighbor index (`Arc` clone,
+    /// not a rebuild). The pool's batched-prediction paths create one fork
+    /// per participating worker; since every per-point computation clears
+    /// its scratch, a forked workspace produces bitwise-identical results
+    /// to the original.
+    pub fn fork(&self) -> PredictWorkspace {
+        PredictWorkspace {
+            ws: SparseSolveWorkspace::new(self.t.len()),
+            t: vec![0.0; self.t.len()],
+            rows: Vec::new(),
+            vals: Vec::new(),
+            u_vals: Vec::new(),
+            index: self.index.clone(),
+        }
+    }
+}
+
+/// The one batched-prediction fan-out every backend shares: run `f` for
+/// each index in `0..n` over the [`crate::par`] worker pool, each
+/// participant working through its own fork of `proto` (same `Arc`'d
+/// neighbor index, fresh solve scratch). Slot `i` is written by exactly
+/// one task and each per-point computation clears its scratch, so the
+/// result is bitwise-identical to a serial loop over one workspace.
+pub(crate) fn batch_with_forks<T>(
+    proto: &PredictWorkspace,
+    n: usize,
+    f: impl Fn(&mut PredictWorkspace, usize) -> T + Sync,
+) -> Vec<T>
+where
+    T: Send + Default + Clone,
+{
+    crate::par::map_indexed(n, 32, || proto.fork(), f)
 }
 
 /// Shared latent-prediction kernel for the sparse EP representations:
@@ -70,7 +109,7 @@ pub(crate) fn sparse_latent_with(
     xstar: &[f64],
     pws: &mut PredictWorkspace,
 ) -> (f64, f64) {
-    cov.cross_cov_into(xp, xstar, pws.index.as_ref(), &mut pws.rows, &mut pws.vals);
+    cov.cross_cov_into(xp, xstar, pws.index.as_deref(), &mut pws.rows, &mut pws.vals);
     let mean: f64 = pws.rows.iter().zip(&pws.vals).map(|(&i, &v)| v * w_pred[i]).sum();
     pws.u_vals.clear();
     pws.u_vals
@@ -118,6 +157,35 @@ impl<'a> LatentPredictor<'a> {
     pub fn predict_proba(&mut self, xstar: &[f64]) -> f64 {
         let (m, v) = self.predict_latent(xstar);
         class_probability(m, v)
+    }
+
+    /// Latent predictions for a batch of points, fanned out over the
+    /// [`crate::par`] worker pool on the workspace-backed backends: each
+    /// participant forks the predictor's workspace (sharing its neighbor
+    /// index by `Arc`) and owns a disjoint slice of output slots, so the
+    /// result is bitwise-identical to calling
+    /// [`predict_latent`](LatentPredictor::predict_latent) per point. The
+    /// dense backends fall back to the plain serial map.
+    ///
+    /// Batches too small to amortize a workspace fork (and width-1 pools)
+    /// run inline on the predictor's own held workspace — the
+    /// zero-allocation path single-request serving traffic takes.
+    pub fn predict_latent_batch(&mut self, xs: &[Vec<f64>]) -> Vec<(f64, f64)> {
+        if xs.len() < 32 || crate::par::current_threads() <= 1 {
+            return xs.iter().map(|x| self.predict_latent(x)).collect();
+        }
+        match (&self.fitted.backend, &self.ws) {
+            (Backend::Sparse(ep), Some(proto)) => batch_with_forks(proto, xs.len(), |pws, i| {
+                ep.predict_latent_with(&self.fitted.cov, &xs[i], pws)
+            }),
+            (Backend::Parallel(ep), Some(proto)) => batch_with_forks(proto, xs.len(), |pws, i| {
+                ep.predict_latent_with(&self.fitted.cov, &xs[i], pws)
+            }),
+            (Backend::CsFic(ep), Some(proto)) => {
+                batch_with_forks(proto, xs.len(), |pws, i| ep.predict_latent_with(&xs[i], pws))
+            }
+            _ => xs.iter().map(|x| self.fitted.predict_latent(x)).collect(),
+        }
     }
 }
 

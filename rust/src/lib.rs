@@ -29,6 +29,11 @@
 //!   with the PJRT (XLA) path behind the off-by-default `xla` feature.
 //! * [`coordinator`] — training-job manager and a batching prediction
 //!   service (threads + channels).
+//! * [`par`] — scoped, chunk-stealing worker pool (std threads +
+//!   channels) behind every data-parallel hot loop: per-site variance
+//!   solves, Takahashi gradient waves, covariance assembly, batched
+//!   prediction. Sized by `CSGP_THREADS` / available parallelism;
+//!   results are bitwise-identical to the serial path at any width.
 //! * [`bench`] — a minimal measurement harness used by `benches/`.
 //!
 //! # Structure reuse contract
@@ -52,6 +57,7 @@ pub mod geom;
 pub mod gp;
 pub mod metrics;
 pub mod opt;
+pub mod par;
 pub mod rng;
 pub mod runtime;
 pub mod sparse;

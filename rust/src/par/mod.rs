@@ -1,0 +1,482 @@
+//! Scoped, chunk-stealing worker pool for data-parallel loops.
+//!
+//! The coordinator's [`crate::coordinator::JobManager`] parallelizes
+//! *across models*; this module parallelizes *within* one model run: the
+//! per-site variance solves of a parallel-EP sweep, the Takahashi wave
+//! columns of a gradient evaluation, index-backed covariance assembly and
+//! batched prediction are all independent across sites / columns / test
+//! points. Std threads + channels only (no external crates), one
+//! process-wide pool shared by every caller.
+//!
+//! Design:
+//!
+//! * **Scoped.** [`for_chunks`] / [`map_indexed`] borrow their closures
+//!   and outputs from the caller's stack; the caller participates in the
+//!   work and does not return until every chunk is done *and* every pool
+//!   worker has left the closure (entrant-counted revocation), so no
+//!   `'static` bounds leak into the hot loops.
+//! * **Chunk-stealing.** Work is split into contiguous chunks of at least
+//!   `min_chunk` items; participants claim chunks from a shared atomic
+//!   cursor, so an unlucky slow chunk does not idle the other workers.
+//! * **Deterministic.** Each output slot is written by exactly one chunk
+//!   and every item is computed from the same inputs as the serial loop,
+//!   so results are bitwise-identical at any thread count (the property
+//!   test in `rust/tests/integration.rs` pins this down).
+//! * **Sized once.** The pool takes its default width from
+//!   `CSGP_THREADS` (if set) or `std::thread::available_parallelism`.
+//!   [`with_max_threads`] caps the width for parallel regions issued from
+//!   the current thread — the bench and the thread-invariance tests use
+//!   it to sweep widths inside one process. Workers are spawned lazily
+//!   and only up to the widest request seen.
+//!
+//! Per-worker state (a `SparseSolveWorkspace`, a forked
+//! `PredictWorkspace`, a dense scatter column, …) is created by the
+//! `init` closure once per participant per call and reused across the
+//! chunks that participant steals.
+
+pub mod slice;
+
+pub use slice::SyncSlice;
+
+use std::cell::Cell;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool workers, a backstop against absurd `CSGP_THREADS`
+/// values or runaway `with_max_threads` requests.
+const MAX_WORKERS: usize = 64;
+
+/// Chunks per participant the splitter aims for — enough slack for
+/// stealing to balance uneven chunks without drowning in cursor traffic.
+const CHUNKS_PER_THREAD: usize = 4;
+
+fn env_threads() -> Option<usize> {
+    let raw = std::env::var("CSGP_THREADS").ok()?;
+    raw.trim().parse::<usize>().ok().filter(|&k| k >= 1)
+}
+
+/// The process-wide default width: `CSGP_THREADS` if set (and >= 1),
+/// otherwise the machine's available parallelism.
+pub fn default_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        env_threads()
+            .unwrap_or_else(|| std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1))
+            .min(MAX_WORKERS)
+    })
+}
+
+thread_local! {
+    /// 0 = no override; otherwise the cap installed by `with_max_threads`.
+    static THREAD_CAP: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Width parallel regions issued from this thread will use.
+pub fn current_threads() -> usize {
+    let cap = THREAD_CAP.with(|c| c.get());
+    if cap == 0 {
+        default_threads()
+    } else {
+        cap
+    }
+}
+
+/// Run `f` with parallel regions issued from this thread capped at `k`
+/// participants (including the caller). `k = 1` forces the inline serial
+/// path; `k` larger than the machine oversubscribes (the bench uses this
+/// to measure 8-way scaling regardless of the host). The cap is
+/// thread-local, so concurrent tests cannot race on it, and it is
+/// restored even if `f` panics.
+pub fn with_max_threads<R>(k: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            THREAD_CAP.with(|c| c.set(self.0));
+        }
+    }
+    let prev = THREAD_CAP.with(|c| c.replace(k.clamp(1, MAX_WORKERS)));
+    let _restore = Restore(prev);
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// The pool: lazily spawned workers draining a shared queue of job handles.
+// ---------------------------------------------------------------------------
+
+/// Monomorphized trampoline to a borrowed `Fn()` — the type-erased form a
+/// worker can call without generics or `dyn` lifetime erasure.
+#[derive(Clone, Copy)]
+struct RunPtr {
+    data: *const (),
+    call: unsafe fn(*const ()),
+}
+
+// SAFETY: the pointee is a `Sync` closure (enforced by `erase`) that the
+// issuing thread keeps alive until every entrant has left (see `JobMsg`).
+unsafe impl Send for RunPtr {}
+
+fn erase<F: Fn() + Sync>(f: &F) -> RunPtr {
+    unsafe fn call<F: Fn()>(p: *const ()) {
+        // SAFETY: `p` was produced from `&F` by `erase` and the issuing
+        // thread blocks in `revoke_and_wait` until this call returns.
+        unsafe { (*(p as *const F))() }
+    }
+    RunPtr { data: f as *const F as *const (), call: call::<F> }
+}
+
+struct MsgState {
+    run: Option<RunPtr>,
+    entrants: usize,
+}
+
+/// One broadcast job handle. Workers *enter* under the lock (so the
+/// pointer is only ever dereferenced by registered entrants), and the
+/// issuing thread revokes the pointer and waits for `entrants == 0`
+/// before its stack frame — which owns the closure — goes away.
+struct JobMsg {
+    state: Mutex<MsgState>,
+    cv: Condvar,
+    /// The issuer's effective width, installed as the worker's
+    /// thread-local cap for the duration of the closure so nested
+    /// parallel regions issued from a chunk body honour the same
+    /// `with_max_threads` scope as the issuer.
+    cap: usize,
+}
+
+impl JobMsg {
+    fn new(run: RunPtr, cap: usize) -> JobMsg {
+        JobMsg {
+            state: Mutex::new(MsgState { run: Some(run), entrants: 0 }),
+            cv: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Worker side: join the job if it is still live, run the
+    /// participation closure (under the issuer's width cap), sign out.
+    fn participate(&self) {
+        let run = {
+            let mut st = self.state.lock().unwrap();
+            match st.run {
+                Some(run) => {
+                    st.entrants += 1;
+                    run
+                }
+                None => return, // stale broadcast; the job already finished
+            }
+        };
+        // The participation closure handles its own panics per chunk;
+        // this outer catch keeps a worker thread alive no matter what.
+        // SAFETY: entrant-registered above, so the closure is alive.
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            with_max_threads(self.cap, || unsafe { (run.call)(run.data) })
+        }));
+        let mut st = self.state.lock().unwrap();
+        st.entrants -= 1;
+        if st.entrants == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    /// Issuer side: stop new entrants, then wait out the current ones.
+    fn revoke_and_wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.run = None;
+        while st.entrants > 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+}
+
+struct Pool {
+    tx: Mutex<Sender<Arc<JobMsg>>>,
+    rx: Arc<Mutex<Receiver<Arc<JobMsg>>>>,
+    spawned: Mutex<usize>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let (tx, rx) = channel::<Arc<JobMsg>>();
+        Pool { tx: Mutex::new(tx), rx: Arc::new(Mutex::new(rx)), spawned: Mutex::new(0) }
+    })
+}
+
+impl Pool {
+    /// Make sure at least `want` workers exist (lazy, monotone, capped);
+    /// returns how many actually exist, so broadcasts never enqueue more
+    /// copies than there are consumers (spawn failure must not leak
+    /// messages into a channel no one drains).
+    fn ensure_workers(&self, want: usize) -> usize {
+        let want = want.min(MAX_WORKERS);
+        let mut spawned = self.spawned.lock().unwrap();
+        while *spawned < want {
+            let rx = self.rx.clone();
+            let name = format!("csgp-par-{}", *spawned);
+            let res = std::thread::Builder::new().name(name).spawn(move || worker_loop(rx));
+            if res.is_err() {
+                // Degraded but correct: the caller participates in every
+                // job, so fewer workers only means less parallelism.
+                break;
+            }
+            *spawned += 1;
+        }
+        *spawned
+    }
+
+    fn broadcast(&self, msg: &Arc<JobMsg>, copies: usize) {
+        let tx = self.tx.lock().unwrap();
+        for _ in 0..copies {
+            let _ = tx.send(msg.clone());
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<Arc<JobMsg>>>>) {
+    loop {
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        match msg {
+            Ok(m) => m.participate(),
+            Err(_) => return, // channel closed: process is shutting down
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Primitives.
+// ---------------------------------------------------------------------------
+
+/// Run `body` over contiguous chunk ranges covering `0..n`.
+///
+/// Each participant (the caller plus up to `current_threads() - 1` pool
+/// workers) builds its own state with `init` and steals chunks until the
+/// cursor runs dry. Chunks hold at least `min_chunk` items. With one
+/// thread (or one chunk) the body runs inline on the caller — the serial
+/// path *is* the parallel path at width 1.
+///
+/// Panics in `body`/`init` are caught per chunk, the remaining chunks are
+/// drained without executing, and the panic is re-raised on the caller
+/// once every participant has left.
+pub fn for_chunks<S, I, F>(n: usize, min_chunk: usize, init: I, body: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, Range<usize>) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = current_threads();
+    let min_chunk = min_chunk.max(1);
+    if threads <= 1 || n <= min_chunk {
+        let mut state = init();
+        body(&mut state, 0..n);
+        return;
+    }
+    let chunk = min_chunk.max(n.div_ceil(threads * CHUNKS_PER_THREAD));
+    let n_chunks = n.div_ceil(chunk);
+    if n_chunks <= 1 {
+        let mut state = init();
+        body(&mut state, 0..n);
+        return;
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+    let done = Mutex::new(0usize);
+    let done_cv = Condvar::new();
+
+    let participate = || {
+        let mut state: Option<S> = None;
+        loop {
+            let c = cursor.fetch_add(1, AtomicOrdering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            let lo = c * chunk;
+            let hi = ((c + 1) * chunk).min(n);
+            let bad = if poisoned.load(AtomicOrdering::Relaxed) {
+                true // drain the cursor without executing
+            } else {
+                catch_unwind(AssertUnwindSafe(|| {
+                    let s = state.get_or_insert_with(&init);
+                    body(s, lo..hi);
+                }))
+                .is_err()
+            };
+            if bad {
+                poisoned.store(true, AtomicOrdering::Relaxed);
+                state = None; // per-worker state may be mid-mutation
+            }
+            let mut g = done.lock().unwrap();
+            *g += 1;
+            if *g == n_chunks {
+                done_cv.notify_all();
+            }
+        }
+    };
+
+    let width = threads.min(n_chunks);
+    let p = pool();
+    let workers = p.ensure_workers(width - 1);
+    let msg = Arc::new(JobMsg::new(erase(&participate), threads));
+    p.broadcast(&msg, (width - 1).min(workers));
+
+    participate(); // the caller is always a participant
+
+    {
+        let mut g = done.lock().unwrap();
+        while *g < n_chunks {
+            g = done_cv.wait(g).unwrap();
+        }
+    }
+    // No worker may still be inside `participate` (it borrows this stack
+    // frame) once we return.
+    msg.revoke_and_wait();
+
+    if poisoned.load(AtomicOrdering::Relaxed) {
+        panic!("csgp::par: a worker panicked inside a parallel region");
+    }
+}
+
+/// Parallel indexed map: `out[i] = f(state, i)` for `i in 0..n`, with
+/// per-participant state from `init`. Slot `i` is written by exactly one
+/// chunk, so the result is identical to the serial map at any width.
+///
+/// `T: Default + Clone` keeps the output buffer initialized without any
+/// `unsafe` length games; the defaults are overwritten slot by slot.
+pub fn map_indexed<T, S, I, F>(n: usize, min_chunk: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice::new(&mut out);
+        for_chunks(n, min_chunk, init, |state, range| {
+            for i in range {
+                let v = f(state, i);
+                // SAFETY: chunk ranges partition 0..n, so slot i belongs
+                // to exactly this chunk; in-bounds by construction.
+                unsafe { slots.set(i, v) };
+            }
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_matches_serial_at_every_width() {
+        let n = 1000;
+        let serial: Vec<f64> = (0..n).map(|i| (i as f64).sqrt() * 1.5).collect();
+        for width in [1usize, 2, 3, 7, 16] {
+            let par = with_max_threads(width, || {
+                map_indexed(n, 8, || (), |_, i| (i as f64).sqrt() * 1.5)
+            });
+            assert_eq!(par, serial, "width {width}");
+        }
+    }
+
+    #[test]
+    fn for_chunks_covers_every_index_exactly_once() {
+        let n = 513;
+        for width in [1usize, 2, 5, 9] {
+            let mut hits = vec![0u8; n];
+            {
+                let slots = SyncSlice::new(&mut hits);
+                with_max_threads(width, || {
+                    for_chunks(n, 7, || (), |_, range| {
+                        for i in range {
+                            // SAFETY: ranges are disjoint chunks of 0..n.
+                            unsafe { slots.set(i, slots.get(i) + 1) };
+                        }
+                    });
+                });
+            }
+            assert!(hits.iter().all(|&h| h == 1), "width {width}");
+        }
+    }
+
+    #[test]
+    fn per_worker_state_is_reused_not_shared() {
+        // Each participant counts the items it processed in its own state;
+        // the grand total must be n even though states never synchronize.
+        let n = 4096;
+        let total = std::sync::atomic::AtomicUsize::new(0);
+        with_max_threads(4, || {
+            for_chunks(
+                n,
+                16,
+                || 0usize,
+                |count, range| {
+                    *count += range.len();
+                    total.fetch_add(range.len(), AtomicOrdering::Relaxed);
+                },
+            );
+        });
+        assert_eq!(total.load(AtomicOrdering::Relaxed), n);
+    }
+
+    #[test]
+    fn with_max_threads_nests_and_restores() {
+        let outer = current_threads();
+        with_max_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            with_max_threads(1, || assert_eq!(current_threads(), 1));
+            assert_eq!(current_threads(), 3);
+        });
+        assert_eq!(current_threads(), outer);
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs_are_fine() {
+        assert_eq!(map_indexed(0, 4, || (), |_, i| i), Vec::<usize>::new());
+        assert_eq!(map_indexed(1, 4, || (), |_, i| i + 41), vec![41]);
+    }
+
+    #[test]
+    fn panics_propagate_from_serial_and_parallel_paths() {
+        for width in [1usize, 4] {
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                with_max_threads(width, || {
+                    for_chunks(100, 4, || (), |_, range| {
+                        if range.contains(&37) {
+                            panic!("boom");
+                        }
+                    });
+                });
+            }));
+            assert!(caught.is_err(), "width {width} should propagate the panic");
+        }
+        // and the pool is still usable afterwards
+        let v = with_max_threads(4, || map_indexed(64, 4, || (), |_, i| i * 2));
+        assert_eq!(v[31], 62);
+    }
+
+    #[test]
+    fn concurrent_callers_share_the_pool() {
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    with_max_threads(3, || {
+                        map_indexed(500, 8, || (), |_, i| i as u64 + t as u64).iter().sum::<u64>()
+                    })
+                })
+            })
+            .collect();
+        for (t, h) in handles.into_iter().enumerate() {
+            let want: u64 = (0..500u64).map(|i| i + t as u64).sum();
+            assert_eq!(h.join().unwrap(), want);
+        }
+    }
+}

@@ -1,0 +1,92 @@
+//! Shared-slice write handle for the worker pool's disjoint-slot writes.
+//!
+//! The pool's determinism contract is that every output slot is written by
+//! exactly one chunk, so parallel results are bitwise-identical to the
+//! serial loop. Rust's borrow checker cannot see "disjoint indices across
+//! threads", so the hot loops coordinate through [`SyncSlice`]: a raw
+//! view of a `&mut [T]` whose per-element accessors are `unsafe` with the
+//! disjointness obligation stated at each call site.
+
+use std::marker::PhantomData;
+
+/// A `&mut [T]` that can be shared across pool workers for writes to
+/// *disjoint* indices (and reads of indices no one is writing).
+///
+/// The lifetime keeps the underlying borrow alive, so the view can never
+/// outlive the slice; all aliasing discipline is delegated to the
+/// `unsafe` accessors.
+pub struct SyncSlice<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the accessors require callers to keep concurrent accesses to
+// disjoint indices, which makes sharing the view across threads sound for
+// `T: Send` (elements are only ever owned/written by one thread at a time).
+unsafe impl<T: Send> Send for SyncSlice<'_, T> {}
+unsafe impl<T: Send> Sync for SyncSlice<'_, T> {}
+
+impl<'a, T> SyncSlice<'a, T> {
+    pub fn new(slice: &'a mut [T]) -> SyncSlice<'a, T> {
+        SyncSlice { ptr: slice.as_mut_ptr(), len: slice.len(), _marker: PhantomData }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Write `v` into slot `i` (dropping the previous value).
+    ///
+    /// # Safety
+    ///
+    /// `i < len()`, and no other thread reads or writes slot `i`
+    /// concurrently (the pool's one-chunk-per-slot contract).
+    #[inline]
+    pub unsafe fn set(&self, i: usize, v: T) {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i) = v;
+    }
+
+    /// Read slot `i`.
+    ///
+    /// # Safety
+    ///
+    /// `i < len()`, and no thread writes slot `i` concurrently. Reading
+    /// slots written by *earlier* parallel phases (e.g. previous Takahashi
+    /// waves, separated by the pool's completion barrier) is fine.
+    #[inline]
+    pub unsafe fn get(&self, i: usize) -> T
+    where
+        T: Copy,
+    {
+        debug_assert!(i < self.len);
+        *self.ptr.add(i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disjoint_writes_land() {
+        let mut v = vec![0.0f64; 100];
+        {
+            let s = SyncSlice::new(&mut v);
+            assert_eq!(s.len(), 100);
+            assert!(!s.is_empty());
+            for i in 0..100 {
+                // SAFETY: single-threaded, in-bounds.
+                unsafe { s.set(i, i as f64) };
+            }
+            // SAFETY: no concurrent writes.
+            assert_eq!(unsafe { s.get(7) }, 7.0);
+        }
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as f64));
+    }
+}

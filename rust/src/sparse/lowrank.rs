@@ -19,10 +19,12 @@
 
 use std::sync::Arc;
 
+use crate::par::SyncSlice;
 use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::dense::{DenseCholesky, DenseMatrix};
 use crate::sparse::symbolic::Symbolic;
+use crate::sparse::takahashi::SparseInverse;
 use crate::sparse::triangular::SparseSolveWorkspace;
 
 /// Factored representation of `B = S + U Uᵀ`.
@@ -40,21 +42,35 @@ pub struct SparseLowRank {
 }
 
 /// `(W, M₁, chol(C))` from a factored sparse part and the low-rank factor.
+/// The m columns of `W = S⁻¹ U` are independent dense solves, so they fan
+/// out over the worker pool — this is the `O(m·nnz(L))` capacitance
+/// refresh every CS+FIC sweep pays.
 fn low_rank_parts(
     factor: &LdlFactor,
     u: &DenseMatrix,
 ) -> Result<(DenseMatrix, DenseMatrix, DenseCholesky), String> {
     let (n, m) = (u.n_rows, u.n_cols);
     let mut w = DenseMatrix::zeros(n, m);
-    let mut col = vec![0.0; n];
-    for a in 0..m {
-        for (i, c) in col.iter_mut().enumerate() {
-            *c = u.at(i, a);
-        }
-        factor.solve_in_place(&mut col);
-        for (i, &c) in col.iter().enumerate() {
-            *w.at_mut(i, a) = c;
-        }
+    {
+        let wd = SyncSlice::new(&mut w.data);
+        crate::par::for_chunks(
+            m,
+            1,
+            || vec![0.0; n],
+            |col, range| {
+                for a in range {
+                    for (i, c) in col.iter_mut().enumerate() {
+                        *c = u.at(i, a);
+                    }
+                    factor.solve_in_place(col);
+                    for (i, &c) in col.iter().enumerate() {
+                        // SAFETY: column a's slots (stride m) belong to
+                        // exactly this chunk.
+                        unsafe { wd.set(i * m + a, c) };
+                    }
+                }
+            },
+        );
     }
     let mut m1 = DenseMatrix::zeros(m, m);
     for a in 0..m {
@@ -190,32 +206,91 @@ impl SparseLowRank {
     /// sparse part minus the low-rank correction `(W C⁻¹ Wᵀ)ᵢⱼ = vᵢ · vⱼ`
     /// with `V = W L_C⁻ᵀ`. Cost `O(takahashi + n·m² + nnz(pattern)·m)` —
     /// the dense inverse is never formed. Values are aligned with
-    /// `pattern`'s storage.
+    /// `pattern`'s storage. Allocates fresh buffers; repeated gradient
+    /// evaluations should hold an [`InversePatternScratch`] and call
+    /// [`inverse_on_pattern_into`](SparseLowRank::inverse_on_pattern_into).
     pub fn inverse_on_pattern(&self, pattern: &CscMatrix) -> Vec<f64> {
-        let (n, m) = (self.u.n_rows, self.u.n_cols);
-        assert_eq!(pattern.n_rows, n);
-        let zsp = self.factor.takahashi_inverse();
-        let sym = &self.factor.symbolic;
-        let mut v = DenseMatrix::zeros(n, m);
-        for i in 0..n {
-            let vi = self.cap.solve_lower(self.w.row(i));
-            for (a, &va) in vi.iter().enumerate() {
-                *v.at_mut(i, a) = va;
-            }
-        }
-        let mut out = vec![0.0; pattern.nnz()];
-        for j in 0..pattern.n_cols {
-            for p in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
-                let i = pattern.row_idx[p];
-                let sinv = zsp
-                    .get(sym, i, j)
-                    .expect("pattern must lie inside the sparse factor's pattern");
-                let corr: f64 = (0..m).map(|a| v.at(i, a) * v.at(j, a)).sum();
-                out[p] = sinv - corr;
-            }
-        }
+        let mut scratch = InversePatternScratch::default();
+        let mut out = Vec::new();
+        self.inverse_on_pattern_into(pattern, &mut scratch, &mut out);
         out
     }
+
+    /// [`inverse_on_pattern`](SparseLowRank::inverse_on_pattern) with
+    /// caller-held buffers: the Takahashi z-arrays, the n×m `V` scratch
+    /// and the output are all resized in place (no-ops while the pattern
+    /// is unchanged — the `PatternCache`-hit case of the optimizer loop).
+    /// The V rows and the pattern columns both fan out over the worker
+    /// pool; every slot is written by one task, so the values are
+    /// bitwise-identical to the serial path.
+    pub fn inverse_on_pattern_into(
+        &self,
+        pattern: &CscMatrix,
+        scratch: &mut InversePatternScratch,
+        out: &mut Vec<f64>,
+    ) {
+        let (n, m) = (self.u.n_rows, self.u.n_cols);
+        assert_eq!(pattern.n_rows, n);
+        self.factor.takahashi_inverse_into(&mut scratch.takahashi);
+        let sym = &self.factor.symbolic;
+        // V = W L_C⁻ᵀ, one independent m-solve per row (row-major n×m).
+        // Resize only — every slot is written below, so the
+        // unchanged-pattern case skips the memset.
+        scratch.v.resize(n * m, 0.0);
+        {
+            let vs = SyncSlice::new(&mut scratch.v);
+            crate::par::for_chunks(
+                n,
+                64,
+                || (),
+                |_, range| {
+                    for i in range {
+                        let vi = self.cap.solve_lower(self.w.row(i));
+                        for (a, &va) in vi.iter().enumerate() {
+                            // SAFETY: row i's slots belong to this chunk only.
+                            unsafe { vs.set(i * m + a, va) };
+                        }
+                    }
+                },
+            );
+        }
+        out.resize(pattern.nnz(), 0.0);
+        let zsp = &scratch.takahashi;
+        let v = &scratch.v;
+        let os = SyncSlice::new(out);
+        crate::par::for_chunks(
+            pattern.n_cols,
+            64,
+            || (),
+            |_, range| {
+                for j in range {
+                    for p in pattern.col_ptr[j]..pattern.col_ptr[j + 1] {
+                        let i = pattern.row_idx[p];
+                        let sinv = zsp
+                            .get(sym, i, j)
+                            .expect("pattern must lie inside the sparse factor's pattern");
+                        let corr: f64 = (0..m).map(|a| v[i * m + a] * v[j * m + a]).sum();
+                        // SAFETY: entry p lies in column j's range, owned
+                        // by exactly this chunk.
+                        unsafe { os.set(p, sinv - corr) };
+                    }
+                }
+            },
+        );
+    }
+}
+
+/// Reusable buffers for
+/// [`SparseLowRank::inverse_on_pattern_into`]: the Takahashi z-arrays
+/// (`O(nnz(L))`) and the n×m `V = W L_C⁻ᵀ` block. Cached by
+/// `gp::cache::PatternCache` so repeated CS+FIC gradient evaluations on a
+/// cache hit stop reallocating them.
+#[derive(Default)]
+pub struct InversePatternScratch {
+    /// Takahashi sparsified inverse of the sparse part.
+    pub takahashi: SparseInverse,
+    /// Row-major n×m `V` scratch.
+    v: Vec<f64>,
 }
 
 #[cfg(test)]
@@ -337,6 +412,22 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// Scratch-reusing, pool-parallel inverse is bitwise-identical to the
+    /// fresh single-thread evaluation at any width.
+    #[test]
+    fn inverse_on_pattern_scratch_reuse_is_bitwise_stable() {
+        let (s, _u, slr) = build(30, 4, 321);
+        let serial = crate::par::with_max_threads(1, || slr.inverse_on_pattern(&s));
+        let mut scratch = InversePatternScratch::default();
+        let mut out = Vec::new();
+        for width in [1usize, 3, 6] {
+            crate::par::with_max_threads(width, || {
+                slr.inverse_on_pattern_into(&s, &mut scratch, &mut out)
+            });
+            assert_eq!(out, serial, "width {width}");
         }
     }
 

@@ -11,80 +11,205 @@
 //! processed for j = n−1 .. 0. All referenced `Z[k,i]` pairs (k, i > j,
 //! both in column j's pattern) are themselves in the pattern by the
 //! Cholesky fill rule, so the recurrence closes over the sparse storage.
+//!
+//! # Parallel waves
+//!
+//! Column j only reads `Z` entries of columns in `pat(L:,j)`, and every
+//! row index in column j of `L` is an *ancestor* of j in the elimination
+//! tree. Columns at the same etree depth therefore never depend on each
+//! other, and the recurrence parallelizes as level waves processed from
+//! the roots (depth 0) downward: within a wave, each column is an
+//! independent task writing its own `z_lower` range and `z_diag` slot.
+//! Small waves (the path-like top of a typical CS etree) run inline on
+//! the caller; large waves fan out over [`crate::par`]. The arithmetic
+//! per column is identical either way, so the result is bitwise-equal to
+//! the serial recursion at any thread count.
 
+use crate::par::SyncSlice;
 use crate::sparse::cholesky::LdlFactor;
 
+/// Waves shorter than this run inline on the caller's scratch — a
+/// one-column wave (the etree's path-like top) gains nothing from the
+/// pool and would pay a dispatch per level.
+const PAR_WAVE_MIN: usize = 32;
+
+/// Columns per chunk when a wave does fan out (leaf columns are cheap).
+const WAVE_CHUNK: usize = 16;
+
 /// Sparsified inverse on the factor's pattern.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct SparseInverse {
     /// Strictly-lower entries aligned with `symbolic.row_idx`.
     pub z_lower: Vec<f64>,
     /// Diagonal of Z.
     pub z_diag: Vec<f64>,
+    /// Cached wave schedule: the etree parents it was computed from, the
+    /// columns grouped by depth (roots first, flat), and the wave
+    /// boundaries (`wave_cols[wave_ptr[d]..wave_ptr[d + 1]]` is wave d).
+    /// Rebuilt only when the factor's etree differs from `wave_parent` —
+    /// repeated gradient evaluations on one pattern (the
+    /// `PatternCache`-hit case) pay an `O(n)` comparison, zero
+    /// allocations.
+    wave_parent: Vec<usize>,
+    wave_cols: Vec<usize>,
+    wave_ptr: Vec<usize>,
+}
+
+/// Flat etree level sets (counting sort by depth), roots (depth 0) first.
+/// `parent[j] > j` always, so a single descending sweep computes depths.
+fn compute_waves(parent: &[usize], cols: &mut Vec<usize>, ptr: &mut Vec<usize>) {
+    let n = parent.len();
+    let mut depth = vec![0usize; n];
+    let mut max_depth = 0;
+    for j in (0..n).rev() {
+        let p = parent[j];
+        if p != usize::MAX {
+            depth[j] = depth[p] + 1;
+            max_depth = max_depth.max(depth[j]);
+        }
+    }
+    ptr.clear();
+    ptr.resize(max_depth + 2, 0);
+    for &d in &depth {
+        ptr[d + 1] += 1;
+    }
+    for d in 0..=max_depth {
+        ptr[d + 1] += ptr[d];
+    }
+    cols.clear();
+    cols.resize(n, 0);
+    let mut next = ptr[..=max_depth].to_vec();
+    for (j, &d) in depth.iter().enumerate() {
+        cols[next[d]] = j;
+        next[d] += 1;
+    }
 }
 
 impl LdlFactor {
-    /// Compute the Takahashi sparsified inverse.
-    ///
-    /// Per column j (descending), L(:,j) is scattered into a dense work
-    /// vector once; each entry `Z[j,i]` then gathers its sum from column i
-    /// and row i of the already-computed part of `Z` with plain array
-    /// walks — no per-entry searches. Every referenced `(k,i)` pair is in
-    /// the pattern by the Cholesky fill rule (`k,i ∈ pat(j), k≠i ⇒
-    /// (max,min) ∈ pattern`).
+    /// Compute the Takahashi sparsified inverse into fresh buffers.
+    /// Gradient loops that evaluate repeatedly on one pattern should hold
+    /// a [`SparseInverse`] and call
+    /// [`takahashi_inverse_into`](LdlFactor::takahashi_inverse_into) so
+    /// the `O(nnz(L))` buffers are reused instead of reallocated.
     pub fn takahashi_inverse(&self) -> SparseInverse {
+        let mut zi = SparseInverse::default();
+        self.takahashi_inverse_into(&mut zi);
+        zi
+    }
+
+    /// Compute the Takahashi sparsified inverse, reusing `zi`'s buffers
+    /// (resized as needed — a no-op when the pattern is unchanged, the
+    /// `PatternCache`-hit case of the optimizer loop).
+    ///
+    /// Per column, L(:,j) is scattered into a dense work vector once;
+    /// each entry `Z[j,i]` then gathers its sum from column i and row i
+    /// of the already-computed part of `Z` with plain array walks — no
+    /// per-entry searches. Every referenced `(k,i)` pair is in the
+    /// pattern by the Cholesky fill rule (`k,i ∈ pat(j), k≠i ⇒
+    /// (max,min) ∈ pattern`). Columns are processed in etree level waves
+    /// (see the module docs); each wave may fan out over the worker pool.
+    pub fn takahashi_inverse_into(&self, zi: &mut SparseInverse) {
         let sym = &self.symbolic;
         let n = sym.n;
-        let mut z_lower = vec![0.0; sym.row_idx.len()];
-        let mut z_diag = vec![0.0; n];
-        // dense scatter of L(:, j): w[k] = L[k, j], in_pat marks membership
+        // resize only (no clear): every slot is overwritten by the column
+        // loop below, so the unchanged-pattern case touches no memory here
+        zi.z_lower.resize(sym.row_idx.len(), 0.0);
+        zi.z_diag.resize(n, 0.0);
+        if zi.wave_parent != sym.parent {
+            zi.wave_parent.clear();
+            zi.wave_parent.extend_from_slice(&sym.parent);
+            compute_waves(&sym.parent, &mut zi.wave_cols, &mut zi.wave_ptr);
+        }
+        let (wave_cols, wave_ptr) = (&zi.wave_cols, &zi.wave_ptr);
+        let z_lower = SyncSlice::new(&mut zi.z_lower);
+        let z_diag = SyncSlice::new(&mut zi.z_diag);
+        // caller-owned scratch for the inline (small-wave) path
         let mut w = vec![0.0; n];
         let mut in_pat = vec![false; n];
-        for j in (0..n).rev() {
-            let lo = sym.col_ptr[j];
-            let hi = sym.col_ptr[j + 1];
-            for p in lo..hi {
-                w[sym.row_idx[p]] = self.l[p];
-                in_pat[sym.row_idx[p]] = true;
-            }
-            // off-diagonal entries Z[j, i], i ∈ pat(j):
-            //   Z[j,i] = − Σ_{k ∈ pat(j)} L[k,j] Z[k,i]
-            // split by k > i (column i of Z), k == i (diagonal),
-            // k < i (row i of Z via the rowmap).
-            for p in lo..hi {
-                let i = sym.row_idx[p];
-                let mut s = w[i] * z_diag[i];
-                // SAFETY: all pattern indices < n by construction.
-                unsafe {
-                    let ilo = *sym.col_ptr.get_unchecked(i);
-                    let ihi = *sym.col_ptr.get_unchecked(i + 1);
-                    for q in ilo..ihi {
-                        let k = *sym.row_idx.get_unchecked(q);
-                        if *in_pat.get_unchecked(k) {
-                            s += w.get_unchecked(k) * z_lower.get_unchecked(q);
-                        }
-                    }
-                    for &(k, q) in sym.row_pattern(i) {
-                        if k > j && *in_pat.get_unchecked(k) {
-                            s += w.get_unchecked(k) * z_lower.get_unchecked(q);
-                        }
-                    }
+        for d in 0..wave_ptr.len().saturating_sub(1) {
+            let wave = &wave_cols[wave_ptr[d]..wave_ptr[d + 1]];
+            if wave.len() < PAR_WAVE_MIN || crate::par::current_threads() <= 1 {
+                for &j in wave {
+                    self.takahashi_column(j, &mut w, &mut in_pat, &z_lower, &z_diag);
                 }
-                z_lower[p] = -s;
-            }
-            // diagonal, using the freshly computed column-j entries
-            let mut s = 1.0 / self.d[j];
-            for q in lo..hi {
-                s -= self.l[q] * z_lower[q];
-            }
-            z_diag[j] = s;
-            // clear the scatter
-            for p in lo..hi {
-                w[sym.row_idx[p]] = 0.0;
-                in_pat[sym.row_idx[p]] = false;
+            } else {
+                crate::par::for_chunks(
+                    wave.len(),
+                    WAVE_CHUNK,
+                    || (vec![0.0; n], vec![false; n]),
+                    |scratch, range| {
+                        let (w, in_pat) = scratch;
+                        for &j in &wave[range] {
+                            self.takahashi_column(j, w, in_pat, &z_lower, &z_diag);
+                        }
+                    },
+                );
             }
         }
-        SparseInverse { z_lower, z_diag }
+    }
+
+    /// One column of the recurrence. Requires every column in `pat(j)`
+    /// (all strict ancestors of j) to be finished; writes only column j's
+    /// `z_lower` range and `z_diag[j]`, which is what makes same-depth
+    /// columns safe to run concurrently. `w`/`in_pat` are length-n
+    /// scratch, all-zero / all-false on entry and restored on exit.
+    fn takahashi_column(
+        &self,
+        j: usize,
+        w: &mut [f64],
+        in_pat: &mut [bool],
+        z_lower: &SyncSlice<'_, f64>,
+        z_diag: &SyncSlice<'_, f64>,
+    ) {
+        let sym = &self.symbolic;
+        let lo = sym.col_ptr[j];
+        let hi = sym.col_ptr[j + 1];
+        // dense scatter of L(:, j): w[k] = L[k, j], in_pat marks membership
+        for p in lo..hi {
+            w[sym.row_idx[p]] = self.l[p];
+            in_pat[sym.row_idx[p]] = true;
+        }
+        // off-diagonal entries Z[j, i], i ∈ pat(j):
+        //   Z[j,i] = − Σ_{k ∈ pat(j)} L[k,j] Z[k,i]
+        // split by k > i (column i of Z), k == i (diagonal),
+        // k < i (row i of Z via the rowmap).
+        for p in lo..hi {
+            let i = sym.row_idx[p];
+            // SAFETY: all pattern indices < n by construction, and every
+            // Z entry read here lives in an ancestor column (an earlier,
+            // barrier-separated wave) — never written concurrently.
+            unsafe {
+                let mut s = w[i] * z_diag.get(i);
+                let ilo = *sym.col_ptr.get_unchecked(i);
+                let ihi = *sym.col_ptr.get_unchecked(i + 1);
+                for q in ilo..ihi {
+                    let k = *sym.row_idx.get_unchecked(q);
+                    if *in_pat.get_unchecked(k) {
+                        s += w.get_unchecked(k) * z_lower.get(q);
+                    }
+                }
+                for &(k, q) in sym.row_pattern(i) {
+                    if k > j && *in_pat.get_unchecked(k) {
+                        s += w.get_unchecked(k) * z_lower.get(q);
+                    }
+                }
+                z_lower.set(p, -s);
+            }
+        }
+        // diagonal, using the freshly computed column-j entries
+        let mut s = 1.0 / self.d[j];
+        for q in lo..hi {
+            // SAFETY: in-bounds; entries of column j were written above by
+            // this same call, and no other task touches column j.
+            s -= self.l[q] * unsafe { z_lower.get(q) };
+        }
+        // SAFETY: slot j belongs exclusively to this column's task.
+        unsafe { z_diag.set(j, s) };
+        // clear the scatter
+        for p in lo..hi {
+            w[sym.row_idx[p]] = 0.0;
+            in_pat[sym.row_idx[p]] = false;
+        }
     }
 }
 
@@ -157,6 +282,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Wave-parallel evaluation is bitwise-identical to the single-thread
+    /// path, and `takahashi_inverse_into` reuses buffers across calls.
+    #[test]
+    fn parallel_waves_are_bitwise_identical_and_buffers_reuse() {
+        let n = 220;
+        let a = random_sparse_spd(n, 0.06, 777);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let f = LdlFactor::factor(sym, &a).unwrap();
+        let serial = crate::par::with_max_threads(1, || f.takahashi_inverse());
+        let mut reused = SparseInverse::default();
+        for width in [2usize, 4, 7] {
+            crate::par::with_max_threads(width, || f.takahashi_inverse_into(&mut reused));
+            assert_eq!(reused.z_lower, serial.z_lower, "width {width}");
+            assert_eq!(reused.z_diag, serial.z_diag, "width {width}");
+        }
+    }
+
+    #[test]
+    fn wave_schedule_puts_roots_first() {
+        let (mut cols, mut ptr) = (Vec::new(), Vec::new());
+        // path etree 0 -> 1 -> 2 -> 3 (root): waves are singletons from
+        // the root down
+        compute_waves(&[1usize, 2, 3, usize::MAX], &mut cols, &mut ptr);
+        assert_eq!(ptr, vec![0, 1, 2, 3, 4]);
+        assert_eq!(cols, vec![3, 2, 1, 0]);
+        // star: everything hangs off the root -> one wide wave
+        compute_waves(&[4usize, 4, 4, 4, usize::MAX], &mut cols, &mut ptr);
+        assert_eq!(ptr, vec![0, 1, 5]);
+        assert_eq!(cols, vec![4, 0, 1, 2, 3]);
     }
 
     #[test]

@@ -191,6 +191,70 @@ fn batched_prediction_matches_per_point_calls() {
 }
 
 #[test]
+fn pool_width_never_changes_any_result() {
+    // The worker-pool contract: EP sweeps, gradients and batched
+    // prediction are bitwise-identical at every pool width, and width 1
+    // *is* the pre-pool serial path (one participant, inline execution).
+    // CI re-runs the whole suite under CSGP_THREADS=1 and =4 to exercise
+    // the process-wide default; this test sweeps widths in-process.
+    use csgp::data::kmeans::kmeans;
+    use csgp::gp::covariance::AdditiveCov;
+    use csgp::gp::{CsFicEp, ParallelEp};
+
+    let data = cluster(300, 41);
+    let (train, test) = data.split(220);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
+    let opts = EpOptions { max_sweeps: 200, tol: 1e-8, damping: 0.8 };
+    let hybrid =
+        AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 0.7, 3.0), cov.clone()).unwrap();
+    let xu = kmeans(&train.x, 12, 25, 3);
+
+    // width-1 references: the inline serial path, no pool participation
+    let (s_lz, s_mu, s_sig, s_grad, s_preds) = csgp::par::with_max_threads(1, || {
+        let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
+        let sep =
+            SparseEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts, None).unwrap();
+        (
+            ep.log_z,
+            ep.mu.clone(),
+            ep.recompute_sigma_diag(),
+            sep.log_z_grad(&cov),
+            ep.predict_latent_batch(&cov, &test.x),
+        )
+    });
+    let (h_lz, h_mu, h_sig, h_grad, h_preds) = csgp::par::with_max_threads(1, || {
+        let ep = CsFicEp::run(&hybrid, &train.x, &train.y, &xu, &opts).unwrap();
+        (
+            ep.log_z,
+            ep.mu.clone(),
+            ep.recompute_sigma_diag_with(&ep.fic_factor()),
+            ep.log_z_grad_cs(),
+            ep.predict_latent_batch(&test.x),
+        )
+    });
+
+    for width in [2usize, 7] {
+        csgp::par::with_max_threads(width, || {
+            let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
+            assert!(ep.log_z == s_lz, "width {width}: logZ {} vs {}", ep.log_z, s_lz);
+            assert_eq!(ep.mu, s_mu, "width {width}");
+            assert_eq!(ep.recompute_sigma_diag(), s_sig, "width {width}");
+            let sep =
+                SparseEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts, None).unwrap();
+            assert_eq!(sep.log_z_grad(&cov), s_grad, "width {width}");
+            assert_eq!(ep.predict_latent_batch(&cov, &test.x), s_preds, "width {width}");
+
+            let hep = CsFicEp::run(&hybrid, &train.x, &train.y, &xu, &opts).unwrap();
+            assert!(hep.log_z == h_lz, "width {width}: logZ {} vs {}", hep.log_z, h_lz);
+            assert_eq!(hep.mu, h_mu, "width {width}");
+            assert_eq!(hep.recompute_sigma_diag_with(&hep.fic_factor()), h_sig, "width {width}");
+            assert_eq!(hep.log_z_grad_cs(), h_grad, "width {width}");
+            assert_eq!(hep.predict_latent_batch(&test.x), h_preds, "width {width}");
+        });
+    }
+}
+
+#[test]
 fn optimizer_loop_reuses_structure_across_evaluations() {
     // a short MAP fit on a CS kernel: the SCG loop must not re-analyse
     // structure on every gradient evaluation (σ²-only and shrinking steps
