@@ -1,13 +1,14 @@
-//! Worker-pool scaling of the per-sweep hot loops: the parallel-EP /
-//! CS+FIC marginal-variance loops, the Takahashi-based gradient path and
-//! batched latent prediction, each measured at pool widths 1/2/4/8 on the
-//! same fitted state. Every measurement also asserts that the output is
-//! bitwise-identical to the width-1 (serial) path — the pool's
-//! determinism contract.
+//! Worker-pool scaling of the per-sweep hot loops: the supernodal numeric
+//! LDLᵀ factorization (`factor`), the parallel-EP / CS+FIC
+//! marginal-variance loops (`sweep`), the Takahashi-based gradient path
+//! (`gradient`) and batched latent prediction (`predict`), each measured
+//! at pool widths 1/2/4/8 on the same fitted state. Every measurement
+//! also asserts that the output is bitwise-identical to the width-1
+//! (serial) path — the pool's determinism contract.
 //!
 //! Results are printed as a markdown table and written to
-//! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter) so the
-//! perf trajectory is tracked across PRs.
+//! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter — see
+//! README "Solver stack") so the perf trajectory is tracked across PRs.
 //!
 //! Run: `cargo bench --bench perf_parallel` (`CSGP_FULL=1` for n = 8000).
 
@@ -20,10 +21,24 @@ use csgp::gp::covariance::{AdditiveCov, CovFunction, CovKind};
 use csgp::gp::csfic::CsFicEp;
 use csgp::gp::ep_parallel::ParallelEp;
 use csgp::gp::marginal::EpOptions;
-use csgp::sparse::ordering::Ordering;
+use csgp::sparse::cholesky::LdlFactor;
+use csgp::sparse::csc::CscMatrix;
+use csgp::sparse::ordering::{compute_ordering, Ordering};
+use csgp::sparse::symbolic::Symbolic;
 use csgp::sparse::takahashi::SparseInverse;
+use std::sync::Arc;
 
 const WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Min-degree-permute `b`, analyse the permuted pattern, and return an
+/// identity factor over it plus the permuted matrix — the refactor target
+/// the `factor` stage times.
+fn mindeg_factor(b: &CscMatrix) -> (LdlFactor, CscMatrix) {
+    let perm = compute_ordering(b, Ordering::MinDegree);
+    let b_perm = b.permute_sym(&perm);
+    let sym = Arc::new(Symbolic::analyze(&b_perm));
+    (LdlFactor::identity(sym), b_perm)
+}
 
 /// Measure `f` at every pool width, asserting output identity against the
 /// width-1 reference, pushing every measurement into the report, and
@@ -64,6 +79,51 @@ fn measure<T: PartialEq>(
     (t1, t4)
 }
 
+/// Like [`measure`] but for the factor stage: the width-vs-serial
+/// bitwise-identity check runs *outside* the timed region, so ns/iter
+/// times only `refactor` itself — cloning L/D per iteration would add a
+/// width-independent `O(nnz(L))` memcpy that dilutes the measured
+/// scaling of exactly the stage this bench gates on.
+fn measure_factor(
+    rep: &mut Report,
+    bench: &str,
+    backend: &str,
+    n: usize,
+    fac: &mut LdlFactor,
+    b: &CscMatrix,
+) -> (f64, f64) {
+    let harness = Bencher::quick();
+    let (ref_l, ref_d) = csgp::par::with_max_threads(1, || {
+        fac.refactor(b).unwrap();
+        (fac.l.clone(), fac.d.clone())
+    });
+    let (mut t1, mut t4) = (0.0f64, 0.0f64);
+    for &w in &WIDTHS {
+        let stats = csgp::par::with_max_threads(w, || {
+            fac.refactor(b).unwrap();
+            assert!(
+                fac.l == ref_l && fac.d == ref_d,
+                "{backend}/{bench}: width-{w} factor differs from the serial path"
+            );
+            harness.run(|| fac.refactor(b).unwrap())
+        });
+        let ns = stats.median.as_nanos() as f64;
+        if w == 1 {
+            t1 = ns;
+        }
+        if w == 4 {
+            t4 = ns;
+        }
+        println!(
+            "| {n} | {backend} | {bench} | {w} | {} | {:.2}x |",
+            fmt_duration(stats.median),
+            t1 / ns
+        );
+        rep.push(bench, backend, n, w, &stats);
+    }
+    (t1, t4)
+}
+
 fn main() {
     let full = std::env::var("CSGP_FULL").is_ok();
     let n = if full { 8000 } else { 4000 };
@@ -81,6 +141,17 @@ fn main() {
     let ep = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap();
     let probes = uniform_points(2000, 2, 10.0, 99);
 
+    // numeric LDLᵀ of B at the converged sites: the supernodal
+    // wave-scheduled kernel, in isolation. Wave width depends on the
+    // fill-reducing ordering: RCM's banded etrees are near-paths (little
+    // to fan out), so `factor` measures the min-degree (AMD-analogue)
+    // permutation of the same matrix — the ordering a factorization-bound
+    // deployment picks — and `factor_rcm` tracks the EP fit's own factor.
+    let b_cs = csgp::gp::ep_sparse::build_b(&ep.k, &ep.sites.tau);
+    let (mut fac_md, b_md) = mindeg_factor(&b_cs);
+    let (fac_t1, fac_t4) = measure_factor(&mut rep, "factor", "cs", n, &mut fac_md, &b_md);
+    let mut fac_cs = ep.factor.clone();
+    measure_factor(&mut rep, "factor_rcm", "cs", n, &mut fac_cs, &b_cs);
     let (cs_t1, cs_t4) = measure(&mut rep, "sweep", "cs", n, || ep.recompute_sigma_diag());
     let mut zi = SparseInverse::default();
     measure(&mut rep, "gradient", "cs", n, || {
@@ -95,6 +166,14 @@ fn main() {
     let hopts = EpOptions { max_sweeps: 15, tol: 1e-6, damping: 0.8 };
     let hep = CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &hopts).unwrap();
 
+    // numeric LDLᵀ of S_B (the sparse half of the Woodbury B) — same
+    // kernel, CS+FIC pattern, min-degree and RCM like the CS stage
+    let sb = hep.sparse_b();
+    let (mut hfac_md, sb_md) = mindeg_factor(&sb);
+    let (hfac_t1, hfac_t4) =
+        measure_factor(&mut rep, "factor", "csfic", n, &mut hfac_md, &sb_md);
+    let mut fac_hy = hep.sparse_factor().clone();
+    measure_factor(&mut rep, "factor_rcm", "csfic", n, &mut fac_hy, &sb);
     let hu = hep.fic_factor(); // rebuilt once, outside the timed loop
     let (hy_t1, hy_t4) =
         measure(&mut rep, "sweep", "csfic", n, || hep.recompute_sigma_diag_with(&hu));
@@ -110,8 +189,17 @@ fn main() {
         cs_t1 / cs_t4,
         hy_t1 / hy_t4
     );
+    println!(
+        "numeric LDL factorization, 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
+         (target > 1x on a >= 4-core host; wave structure caps the ideal)",
+        fac_t1 / fac_t4,
+        hfac_t1 / hfac_t4
+    );
     println!("machine-readable results: BENCH_parallel.json ({} records)", rep.records().len());
     if cores >= 4 && (cs_t1 / cs_t4 < 2.5 || hy_t1 / hy_t4 < 2.5) {
         println!("WARNING: 4-thread speedup below the 2.5x target on this host");
+    }
+    if cores >= 4 && (fac_t1 / fac_t4 <= 1.0 || hfac_t1 / hfac_t4 <= 1.0) {
+        println!("WARNING: factor stage not scaling beyond width 1 on this host");
     }
 }

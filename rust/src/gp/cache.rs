@@ -21,7 +21,13 @@
 //!   built at (`∞` for globally supported kernels),
 //! * the fill-reducing permutation, the permuted inputs, the permuted
 //!   pattern and its [`Symbolic`] analysis (the "factorization plan"),
-//!   computed lazily — exact-GP regression only needs the pattern.
+//!   computed lazily — exact-GP regression only needs the pattern. The
+//!   `Symbolic` carries the supernode partition and assembly-tree wave
+//!   schedule of the parallel numeric LDLᵀ
+//!   ([`SupernodeSchedule`](crate::sparse::symbolic::SupernodeSchedule)),
+//!   so — like the Takahashi wave schedule kept in [`GradScratch`] — the
+//!   factorization's parallel schedule is built once per pattern and
+//!   reused by every sweep of every EP run in the optimizer loop.
 //!
 //! The cache contract: one `PatternCache` serves one fixed point set `x`
 //! and one ordering choice. A hit requires the new ARD support ellipsoid
@@ -115,12 +121,35 @@ pub struct FactorPlan {
     pub xp: Arc<Vec<Vec<f64>>>,
     /// Permuted pattern `P K Pᵀ`.
     pub pattern_perm: CscMatrix,
-    /// Symbolic Cholesky analysis of `pattern_perm`.
+    /// Symbolic Cholesky analysis of `pattern_perm`, including the
+    /// supernode/wave schedule that drives the parallel numeric
+    /// factorization — every `LdlFactor` of this plan shares it by `Arc`.
     pub symbolic: Arc<Symbolic>,
 }
 
 /// Reusable covariance structure for repeated evaluations on one fixed
 /// training set. See the module docs for the reuse contract.
+///
+/// A σ²-only hyperparameter step keeps the whole plan — pattern,
+/// ordering, symbolic analysis and the factorization's supernode/wave
+/// schedule:
+///
+/// ```
+/// use csgp::gp::cache::PatternCache;
+/// use csgp::gp::covariance::{CovFunction, CovKind};
+/// use csgp::sparse::ordering::Ordering;
+///
+/// let x: Vec<Vec<f64>> =
+///     (0..50).map(|i| vec![(i % 10) as f64, (i / 10) as f64]).collect();
+/// let mut cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+/// let mut cache = PatternCache::new(Ordering::Rcm);
+///
+/// let (_, plan) = cache.plan_for(&cov, &x);  // miss: full analysis
+/// cov.sigma2 = 2.5;                          // σ²-only step
+/// let (_, plan2) = cache.plan_for(&cov, &x); // hit: same structure
+/// assert!(std::sync::Arc::ptr_eq(&plan, &plan2));
+/// assert_eq!((cache.hits, cache.misses), (1, 1));
+/// ```
 pub struct PatternCache {
     ordering: Ordering,
     index: Option<NeighborIndex>,

@@ -27,6 +27,7 @@ use crate::gp::covariance::AdditiveCov;
 use crate::gp::likelihood::probit_site_update;
 use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
 use crate::gp::predict::PredictWorkspace;
+use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::dense::{DenseCholesky, DenseMatrix};
 use crate::sparse::lowrank::{InversePatternScratch, SparseLowRank};
@@ -371,6 +372,25 @@ impl CsFicEp {
         crate::gp::predict::batch_with_forks(&proto, xs.len(), |pws, i| {
             self.predict_latent_with(&xs[i], pws)
         })
+    }
+
+    /// `S_B = I + S̃^{1/2}(K_cs + Λ)S̃^{1/2}` at the converged sites — the
+    /// sparse part of the Woodbury solver's `B`, the matrix every CS+FIC
+    /// sweep hands to the supernodal numeric LDLᵀ
+    /// ([`SparseLowRank::refresh`]). Rebuilt on demand (one pattern
+    /// clone); the `factor` stage of `perf_parallel` measures refactoring
+    /// it at several pool widths.
+    pub fn sparse_b(&self) -> CscMatrix {
+        build_sparse_b(&self.k_cs, &self.lambda, &self.sites.tau)
+    }
+
+    /// Read-only view of the converged sparse LDLᵀ factor inside the
+    /// Woodbury solver (benches clone it to time refactoring
+    /// [`CsFicEp::sparse_b`] in isolation; the fitted state itself stays
+    /// sealed — mutating the solver would desynchronize the cached
+    /// posterior blocks).
+    pub fn sparse_factor(&self) -> &LdlFactor {
+        &self.solver.factor
     }
 
     /// Rebuild the FIC factor `U = K_fu L_uu⁻ᵀ` (n×m, permuted rows).

@@ -8,10 +8,14 @@
 //! Algorithm 1.
 //!
 //! The `n` per-site variance solves are independent, so they fan out over
-//! the [`crate::par`] worker pool ([`marginal_variances`]): each worker
+//! the [`crate::par`] worker pool (`marginal_variances`): each worker
 //! owns a `SparseSolveWorkspace` and writes disjoint `σᵢ²` slots, keeping
 //! the sweep bitwise-identical to the serial loop at any thread count
-//! (`perf_parallel` measures the scaling).
+//! (`perf_parallel` measures the scaling). The once-per-sweep
+//! refactorization of `B` — the last serial chunk of this backend before
+//! the supernodal rewrite — now runs on the same pool through
+//! [`LdlFactor::refactor`]'s wave schedule, so a whole sweep is parallel
+//! end to end.
 
 use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;

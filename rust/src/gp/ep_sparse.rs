@@ -13,8 +13,12 @@
 //!
 //! No per-site allocation, no symbolic re-analysis: everything runs on the
 //! pattern computed once by [`Symbolic::analyze`]. The factor is refreshed
-//! by a full (sparse, cheap) refactorization once per sweep to cap the
-//! drift of several thousand row modifications.
+//! by a full refactorization once per sweep to cap the drift of several
+//! thousand row modifications — since the supernodal rewrite of
+//! [`LdlFactor::refactor`] that sweep-end step fans out over the worker
+//! pool on the `Symbolic`'s cached wave schedule (bitwise-identical to
+//! the serial path at any width), so even this backend's per-sweep serial
+//! work is just the sequential site visits themselves.
 
 use std::sync::Arc;
 

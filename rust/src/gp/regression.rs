@@ -1,22 +1,39 @@
-//! Exact GP regression (dense). Used by the Figure-2 reproduction: sample
-//! data from a GP with a `k_pp,q` covariance + noise, then find the
-//! posterior mode of the length-scale for a range of Wendland dimension
-//! parameters D and record how the covariance fill grows with D.
+//! Exact GP regression. Used by the Figure-2 reproduction: sample data
+//! from a GP with a `k_pp,q` covariance + noise, then find the posterior
+//! mode of the length-scale for a range of Wendland dimension parameters D
+//! and record how the covariance fill grows with D.
+//!
+//! Compactly supported kernels run entirely through the sparse stack: the
+//! [`PatternCache`]'s factorization plan, the supernodal (parallel)
+//! LDLᵀ of `K + σn²I`, and — for the gradient's `tr(K_y⁻¹ ∂K/∂θ)` term —
+//! the Takahashi sparsified inverse, which yields exactly the `K_y⁻¹`
+//! entries on `K`'s pattern that the trace needs. Globally supported
+//! kernels fall back to the dense Cholesky path; both paths compute the
+//! identical quantities (the sparse one without ever densifying).
 
 use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
 use crate::rng::Rng;
+use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::ordering::Ordering;
+
+/// Regression is factorization-bound, so its throwaway caches use the
+/// min-degree ordering: RCM's banded etrees are near-paths, while
+/// min-degree keeps fill down on irregular CS patterns *and* gives the
+/// supernodal kernel wide assembly-tree waves (docs/ARCHITECTURE.md §4).
+const REGRESSION_ORDERING: Ordering = Ordering::MinDegree;
 
 /// log marginal likelihood of GP regression with iid noise σn²:
 /// `−½ yᵀ(K+σn²I)⁻¹y − ½ log|K+σn²I| − n/2 log 2π`.
 pub fn log_marginal(cov: &CovFunction, noise_var: f64, x: &[Vec<f64>], y: &[f64]) -> f64 {
-    log_marginal_cached(cov, noise_var, x, y, &mut PatternCache::new(Ordering::Natural))
+    log_marginal_cached(cov, noise_var, x, y, &mut PatternCache::new(REGRESSION_ORDERING))
 }
 
 /// [`log_marginal`] drawing the covariance pattern from `cache`, so a
 /// hyperparameter search re-runs neighbor queries only when the support
-/// radius grows (see [`PatternCache`]).
+/// radius grows (see [`PatternCache`]). Compact kernels go through the
+/// cached factorization plan and the supernodal sparse LDLᵀ
+/// (`O(nnz(L))`-ish); dense kernels through a dense Cholesky.
 pub fn log_marginal_cached(
     cov: &CovFunction,
     noise_var: f64,
@@ -25,13 +42,60 @@ pub fn log_marginal_cached(
     cache: &mut PatternCache,
 ) -> f64 {
     let n = x.len();
+    let norm = -0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+    if cov.support_radius().is_some() {
+        return sparse_marginal(cov, noise_var, x, y, cache).value;
+    }
     let cached = cache.pattern_for(cov, x);
     let mut ky = cov.cov_values_on_pattern(x, &cached.pattern).to_dense();
     ky.add_diag(noise_var);
     let ch = ky.cholesky().expect("K + σn²I must be PD");
     let alpha = ch.solve(y);
     let quad: f64 = y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
-    -0.5 * quad - 0.5 * ch.logdet() - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln()
+    -0.5 * quad - 0.5 * ch.logdet() + norm
+}
+
+/// Everything the compact-kernel marginal needs, computed once: the
+/// supernodal factor of `K_y = K + σn²I` on the cached plan, the
+/// permuted `α = K_y⁻¹ y`, and the log marginal itself. Shared by the
+/// value-only and value+gradient entry points so the sparse likelihood
+/// evaluation lives in exactly one place.
+struct SparseMarginal {
+    /// Cached factorization plan (the gradient needs `xp`).
+    plan: std::sync::Arc<crate::gp::cache::FactorPlan>,
+    /// `K + σn²I` on the (permuted, possibly superset) pattern — the
+    /// gradient loops iterate its pattern, which equals `K`'s.
+    ky: crate::sparse::csc::CscMatrix,
+    factor: LdlFactor,
+    /// `K_y⁻¹ y` in permuted space.
+    alpha: Vec<f64>,
+    value: f64,
+}
+
+fn sparse_marginal(
+    cov: &CovFunction,
+    noise_var: f64,
+    x: &[Vec<f64>],
+    y: &[f64],
+    cache: &mut PatternCache,
+) -> SparseMarginal {
+    let n = x.len();
+    let norm = -0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+    let (_, plan) = cache.plan_for(cov, x);
+    let mut ky = cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm);
+    for j in 0..n {
+        *ky.get_mut(j, j) += noise_var;
+    }
+    let factor = LdlFactor::factor(plan.symbolic.clone(), &ky).expect("K + σn²I must be PD");
+    let mut yp = vec![0.0; n];
+    for old in 0..n {
+        yp[plan.perm[old]] = y[old];
+    }
+    let mut alpha = yp.clone();
+    factor.solve_in_place(&mut alpha);
+    let quad: f64 = yp.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+    let value = -0.5 * quad - 0.5 * factor.logdet() + norm;
+    SparseMarginal { plan, ky, factor, alpha, value }
 }
 
 /// Gradient of the log marginal w.r.t. the covariance log-parameters:
@@ -42,7 +106,7 @@ pub fn log_marginal_grad(
     x: &[Vec<f64>],
     y: &[f64],
 ) -> Vec<f64> {
-    log_marginal_grad_cached(cov, noise_var, x, y, &mut PatternCache::new(Ordering::Natural))
+    log_marginal_grad_cached(cov, noise_var, x, y, &mut PatternCache::new(REGRESSION_ORDERING))
 }
 
 /// [`log_marginal_grad`] on a cached pattern: the gradient values are
@@ -56,7 +120,51 @@ pub fn log_marginal_grad_cached(
     y: &[f64],
     cache: &mut PatternCache,
 ) -> Vec<f64> {
+    log_marginal_with_grad_cached(cov, noise_var, x, y, cache).1
+}
+
+/// Log marginal *and* its gradient from one assembly + one factorization
+/// — the form the SCG objective wants (calling the value and gradient
+/// entry points separately factors the identical `K + σn²I` twice per
+/// optimizer step).
+///
+/// For compact kernels the trace term `tr((ααᵀ − K_y⁻¹) ∂K/∂θ)` only
+/// reads `K_y⁻¹` where `K` is nonzero, and `K`'s pattern is inside the
+/// `L + Lᵀ` pattern — so the whole evaluation runs on the supernodal
+/// sparse factor plus its Takahashi inverse, with the `O(nnz(L))`
+/// z-buffers recycled across SCG steps through the cache's
+/// [`GradScratch`](crate::gp::cache::GradScratch).
+pub fn log_marginal_with_grad_cached(
+    cov: &CovFunction,
+    noise_var: f64,
+    x: &[Vec<f64>],
+    y: &[f64],
+    cache: &mut PatternCache,
+) -> (f64, Vec<f64>) {
     let n = x.len();
+    let norm = -0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+    if cov.support_radius().is_some() {
+        let sm = sparse_marginal(cov, noise_var, x, y, cache);
+        // ky's pattern equals K's (noise only shifts the diagonal), so
+        // the gradient values align entry-for-entry with its storage
+        let grads = cov.cov_grads_on_pattern(&sm.plan.xp, &sm.ky);
+        let zsp = &mut cache.grad_scratch.takahashi;
+        sm.factor.takahashi_inverse_into(zsp);
+        let sym = &sm.factor.symbolic;
+        let mut out = vec![0.0; grads.len()];
+        for j in 0..n {
+            for p in sm.ky.col_ptr[j]..sm.ky.col_ptr[j + 1] {
+                let i = sm.ky.row_idx[p];
+                let kinv_ij =
+                    zsp.get(sym, i, j).expect("K pattern must be inside the L+Lᵀ pattern");
+                let w = sm.alpha[i] * sm.alpha[j] - kinv_ij;
+                for (g, o) in grads.iter().zip(out.iter_mut()) {
+                    *o += 0.5 * w * g[p];
+                }
+            }
+        }
+        return (sm.value, out);
+    }
     let cached = cache.pattern_for(cov, x);
     let kmat = cov.cov_values_on_pattern(x, &cached.pattern);
     let grads = cov.cov_grads_on_pattern(x, &kmat);
@@ -64,6 +172,8 @@ pub fn log_marginal_grad_cached(
     ky.add_diag(noise_var);
     let ch = ky.cholesky().expect("K + σn²I must be PD");
     let alpha = ch.solve(y);
+    let quad: f64 = y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+    let value = -0.5 * quad - 0.5 * ch.logdet() + norm;
     let kinv = ky.inverse_spd().expect("PD");
     let mut out = vec![0.0; grads.len()];
     for j in 0..n {
@@ -75,7 +185,7 @@ pub fn log_marginal_grad_cached(
             }
         }
     }
-    out
+    (value, out)
 }
 
 /// Draw a sample from a zero-mean GP with covariance `cov` plus
@@ -115,20 +225,18 @@ pub fn optimize_hypers(
     max_iters: usize,
 ) -> (CovFunction, f64) {
     let mut c = cov.clone();
-    // one pattern cache across the whole search: every objective/gradient
-    // evaluation at a non-growing support radius skips assembly structure
-    let mut cache = PatternCache::new(Ordering::Natural);
+    // one pattern cache across the whole search (every evaluation at a
+    // non-growing support radius skips assembly structure), and one
+    // combined value+gradient evaluation per SCG step — a single
+    // assembly + supernodal factorization, not one of each
+    let mut cache = PatternCache::new(REGRESSION_ORDERING);
     let res = crate::opt::scg::scg(
         &c.params(),
         |p| {
             let mut ct = c.clone();
             ct.set_params(p);
-            let f = -log_marginal_cached(&ct, noise_var, x, y, &mut cache);
-            let g: Vec<f64> = log_marginal_grad_cached(&ct, noise_var, x, y, &mut cache)
-                .iter()
-                .map(|v| -v)
-                .collect();
-            (f, g)
+            let (f, g) = log_marginal_with_grad_cached(&ct, noise_var, x, y, &mut cache);
+            (-f, g.iter().map(|v| -v).collect())
         },
         &crate::opt::scg::ScgOptions { max_iters, x_tol: 1e-5, f_tol: 1e-7 },
     );
@@ -162,6 +270,49 @@ mod tests {
             cov.set_params(&p0);
             let fd = (fp - fm) / (2.0 * h);
             assert!((fd - g[p]).abs() < 1e-4 * (1.0 + g[p].abs()), "p{p}: {fd} vs {}", g[p]);
+        }
+    }
+
+    /// The compact-kernel path (supernodal sparse LDLᵀ + Takahashi
+    /// inverse) computes the same log marginal and gradient as a directly
+    /// assembled dense Cholesky oracle.
+    #[test]
+    fn sparse_path_matches_dense_oracle() {
+        let x = random_points(50, 2, 6.0, 9);
+        let mut rng = Rng::new(3);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.1, 1.8);
+        let noise = 0.1;
+        let y = sample_gp(&cov, noise, &x, &mut rng);
+
+        let lm = log_marginal(&cov, noise, &x, &y);
+        let g = log_marginal_grad(&cov, noise, &x, &y);
+
+        // dense oracle, assembled without the sparse machinery
+        let n = x.len();
+        let kmat = cov.cov_matrix(&x);
+        let mut ky = kmat.to_dense();
+        ky.add_diag(noise);
+        let ch = ky.cholesky().unwrap();
+        let alpha = ch.solve(&y);
+        let quad: f64 = y.iter().zip(&alpha).map(|(a, b)| a * b).sum();
+        let oracle =
+            -0.5 * quad - 0.5 * ch.logdet() - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+        assert!((lm - oracle).abs() < 1e-8, "logML {lm} vs {oracle}");
+
+        let kinv = ky.inverse_spd().unwrap();
+        let grads = cov.cov_grads_on_pattern(&x, &kmat);
+        let mut g_oracle = vec![0.0; grads.len()];
+        for j in 0..n {
+            for p in kmat.col_ptr[j]..kmat.col_ptr[j + 1] {
+                let i = kmat.row_idx[p];
+                let w = alpha[i] * alpha[j] - kinv.at(i, j);
+                for (gr, o) in grads.iter().zip(g_oracle.iter_mut()) {
+                    *o += 0.5 * w * gr[p];
+                }
+            }
+        }
+        for (a, b) in g.iter().zip(&g_oracle) {
+            assert!((a - b).abs() < 1e-7 * (1.0 + b.abs()), "grad {a} vs {b}");
         }
     }
 

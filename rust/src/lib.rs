@@ -6,11 +6,13 @@
 //! L3 (rust coordinator) layer of a three-layer rust + JAX + Pallas stack:
 //!
 //! * [`sparse`] — from-scratch sparse linear algebra: CSC matrices,
-//!   elimination trees, symbolic analysis, up-looking LDLᵀ factorization,
-//!   sparse triangular solves, rank-one update/downdate, the Davis–Hager
-//!   row-modification (`ldlrowmodify`, the paper's Algorithm 2), the
-//!   Takahashi sparsified inverse, and a sparse-plus-low-rank Woodbury
-//!   solver (`lowrank`) for `S + U Uᵀ` systems.
+//!   elimination trees, symbolic analysis with supernode detection, a
+//!   supernodal wave-parallel LDLᵀ factorization (with the serial
+//!   up-looking kernel kept as its oracle), sparse triangular solves,
+//!   rank-one update/downdate, the Davis–Hager row-modification
+//!   (`ldlrowmodify`, the paper's Algorithm 2), the Takahashi sparsified
+//!   inverse, and a sparse-plus-low-rank Woodbury solver (`lowrank`) for
+//!   `S + U Uᵀ` systems. See `docs/ARCHITECTURE.md` for the full tour.
 //! * [`geom`] — spatial neighbor indices (grid cell list for low
 //!   dimension, kd-tree above it) answering the radius-`max(lengthscales)`
 //!   queries that make compact-support covariance assembly `O(n·k)`

@@ -1,6 +1,6 @@
 //! Lightweight instrumentation: named counters and accumulated timers.
 //!
-//! The EP hot loop is instrumented with [`Section`] timers so the perf pass
+//! The EP hot loop is instrumented with [`Metrics::time`] sections so the perf pass
 //! (EXPERIMENTS.md §Perf) can attribute time to `rowmod`, `solve_t`,
 //! `moments`, etc. without an external profiler. Overhead is one `Instant`
 //! pair per section; disabled sections cost a branch.

@@ -263,6 +263,27 @@ fn worker_loop(rx: Arc<Mutex<Receiver<Arc<JobMsg>>>>) {
 /// Panics in `body`/`init` are caught per chunk, the remaining chunks are
 /// drained without executing, and the panic is re-raised on the caller
 /// once every participant has left.
+///
+/// Disjoint output slots go through [`SyncSlice`]; per-participant
+/// scratch comes from `init`:
+///
+/// ```
+/// use csgp::par::{for_chunks, SyncSlice};
+///
+/// let n = 100;
+/// let mut out = vec![0.0f64; n];
+/// {
+///     let slots = SyncSlice::new(&mut out);
+///     for_chunks(n, 16, || /* per-participant state */ (), |_, range| {
+///         for i in range {
+///             // SAFETY: chunk ranges partition 0..n, so slot i is
+///             // written by exactly this chunk.
+///             unsafe { slots.set(i, (i * i) as f64) };
+///         }
+///     });
+/// }
+/// assert_eq!(out[7], 49.0);
+/// ```
 pub fn for_chunks<S, I, F>(n: usize, min_chunk: usize, init: I, body: F)
 where
     I: Fn() -> S + Sync,

@@ -1,8 +1,13 @@
 //! Elimination tree of a symmetric sparse matrix (Davis 2006, §4.1).
 //!
 //! The etree drives everything downstream: symbolic row patterns
-//! (`row_pattern`), the reach computation of sparse triangular solves, and
-//! the column sequence visited by rank-one updates.
+//! (`row_pattern`), the reach computation of sparse triangular solves, the
+//! column sequence visited by rank-one updates, and — through the level
+//! waves computed here — the parallel schedules of both the Takahashi
+//! inverse ([`depth_waves`], roots first) and the supernodal numeric
+//! factorization ([`height_waves`], leaves first). Everything in this
+//! module is `O(n + nnz)` and allocation-light: the wave builders are
+//! counting sorts into caller-provided buffers.
 
 use crate::sparse::csc::CscMatrix;
 
@@ -69,6 +74,70 @@ pub fn postorder(parent: &[usize]) -> Vec<usize> {
         }
     }
     post
+}
+
+/// Group the nodes of the forest `parent` into *depth* level sets
+/// ("waves"): wave 0 holds the roots, wave d the nodes at etree depth d.
+/// `cols[ptr[d]..ptr[d + 1]]` is wave d. Nodes in one wave never lie on a
+/// common root-ward path, which is the independence the Takahashi inverse
+/// exploits (it recurs from the roots *down*). Counting sort; `parent[j] >
+/// j` for non-roots, so one descending sweep computes all depths.
+pub fn depth_waves(parent: &[usize], cols: &mut Vec<usize>, ptr: &mut Vec<usize>) {
+    let n = parent.len();
+    let mut depth = vec![0usize; n];
+    let mut max_depth = 0;
+    for j in (0..n).rev() {
+        let p = parent[j];
+        if p != usize::MAX {
+            depth[j] = depth[p] + 1;
+            max_depth = max_depth.max(depth[j]);
+        }
+    }
+    fill_waves(&depth, max_depth, cols, ptr);
+}
+
+/// Group the nodes of the forest `parent` into *height* level sets: wave 0
+/// holds the leaves, wave h the nodes whose tallest subtree has height h.
+/// `cols[ptr[h]..ptr[h + 1]]` is wave h. Every strict descendant of a node
+/// sits in an earlier wave, which is the independence the numeric
+/// factorization exploits (column j of L only depends on columns in j's
+/// etree subtree). Ascending sweep: all children of `p` are `< p`, so each
+/// node's height is final before it is read.
+pub fn height_waves(parent: &[usize], cols: &mut Vec<usize>, ptr: &mut Vec<usize>) {
+    let n = parent.len();
+    let mut height = vec![0usize; n];
+    let mut max_height = 0;
+    for j in 0..n {
+        let p = parent[j];
+        if p != usize::MAX {
+            height[p] = height[p].max(height[j] + 1);
+            max_height = max_height.max(height[p]);
+        }
+    }
+    fill_waves(&height, max_height, cols, ptr);
+}
+
+/// Counting sort of `0..n` by `level`, into `cols` with wave boundaries in
+/// `ptr`. Nodes within a wave stay in ascending index order, so wave
+/// iteration order — and with it every parallel chunking decision — is a
+/// pure function of the levels.
+fn fill_waves(level: &[usize], max_level: usize, cols: &mut Vec<usize>, ptr: &mut Vec<usize>) {
+    let n = level.len();
+    ptr.clear();
+    ptr.resize(max_level + 2, 0);
+    for &d in level {
+        ptr[d + 1] += 1;
+    }
+    for d in 0..=max_level {
+        ptr[d + 1] += ptr[d];
+    }
+    cols.clear();
+    cols.resize(n, 0);
+    let mut next = ptr[..=max_level].to_vec();
+    for (j, &d) in level.iter().enumerate() {
+        cols[next[d]] = j;
+        next[d] += 1;
+    }
 }
 
 /// Row pattern of row `k` of the Cholesky factor: the indices `i < k`
@@ -175,6 +244,47 @@ mod tests {
                 assert!(pos[i] < pos[parent[i]], "child {i} after parent");
             }
         }
+    }
+
+    #[test]
+    fn depth_waves_roots_first_height_waves_leaves_first() {
+        // path etree 0 -> 1 -> 2 -> 3 (root)
+        let parent = vec![1usize, 2, 3, usize::MAX];
+        let (mut cols, mut ptr) = (Vec::new(), Vec::new());
+        depth_waves(&parent, &mut cols, &mut ptr);
+        assert_eq!((cols.clone(), ptr.clone()), (vec![3, 2, 1, 0], vec![0, 1, 2, 3, 4]));
+        height_waves(&parent, &mut cols, &mut ptr);
+        assert_eq!((cols, ptr), (vec![0, 1, 2, 3], vec![0, 1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn height_waves_star_has_parallel_leaf_wave() {
+        // star: 0..3 hang off root 4 -> one wide leaf wave, then the root
+        let parent = vec![4usize, 4, 4, 4, usize::MAX];
+        let (mut cols, mut ptr) = (Vec::new(), Vec::new());
+        height_waves(&parent, &mut cols, &mut ptr);
+        assert_eq!(ptr, vec![0, 4, 5]);
+        assert_eq!(cols, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn height_waves_put_every_descendant_in_an_earlier_wave() {
+        // unbalanced forest: 0->2, 1->2, 2->5, 3->5, 4 root, 5 root
+        let parent = vec![2usize, 2, 5, 5, usize::MAX, usize::MAX];
+        let (mut cols, mut ptr) = (Vec::new(), Vec::new());
+        height_waves(&parent, &mut cols, &mut ptr);
+        let mut wave_of = vec![0usize; 6];
+        for w in 0..ptr.len() - 1 {
+            for &j in &cols[ptr[w]..ptr[w + 1]] {
+                wave_of[j] = w;
+            }
+        }
+        for j in 0..6 {
+            if parent[j] != usize::MAX {
+                assert!(wave_of[j] < wave_of[parent[j]], "node {j} not before its parent");
+            }
+        }
+        assert_eq!(wave_of[4], 0, "childless root is a leaf wave node");
     }
 
     #[test]

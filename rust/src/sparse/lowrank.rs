@@ -107,11 +107,13 @@ impl SparseLowRank {
 
     /// Refactor with new values of `S` (same pattern) and a new `U`. The
     /// symbolic analysis and the sparse factor's storage are reused in
-    /// place; the low-rank blocks (`W`, `M₁`, the capacitance factor) are
-    /// recomputed from scratch — they depend on every entry of the new
-    /// factor, so there is nothing incremental to salvage (`O(m·nnz(L) +
-    /// n·m²)` per call, and the old buffers are freed as the new ones
-    /// land).
+    /// place — the numeric refactorization is the supernodal,
+    /// wave-parallel [`LdlFactor::refactor`], so the CS+FIC sweep's
+    /// sparse step scales with the pool like its W-column solves do. The
+    /// low-rank blocks (`W`, `M₁`, the capacitance factor) are recomputed
+    /// from scratch — they depend on every entry of the new factor, so
+    /// there is nothing incremental to salvage (`O(m·nnz(L) + n·m²)` per
+    /// call, and the old buffers are freed as the new ones land).
     pub fn refresh(&mut self, s: &CscMatrix, u: DenseMatrix) -> Result<(), String> {
         assert_eq!(u.n_rows, self.factor.n());
         assert_eq!(u.n_cols, self.u.n_cols, "rank m must not change across refresh");

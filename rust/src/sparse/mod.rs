@@ -7,11 +7,15 @@
 //! * [`csc`] — compressed-sparse-column matrices (full symmetric storage).
 //! * [`dense`] — dense matrix + Cholesky oracle used by the dense-EP
 //!   baseline and by tests.
-//! * [`etree`] — elimination tree, postorder.
+//! * [`etree`] — elimination tree, postorder, depth/height level waves
+//!   (the parallel schedules of the Takahashi inverse and the numeric
+//!   factorization).
 //! * [`ordering`] — fill-reducing permutations (RCM, greedy min-degree).
 //! * [`symbolic`] — static symbolic Cholesky analysis (pattern incl. fill,
-//!   row-structure map used by the row-modification kernel).
-//! * [`cholesky`] — up-looking numeric LDLᵀ on the static pattern.
+//!   row-structure map used by the row-modification kernel, supernode
+//!   partition + assembly-tree wave schedule).
+//! * [`cholesky`] — numeric LDLᵀ on the static pattern: supernodal
+//!   wave-parallel kernel (default) plus the serial up-looking oracle.
 //! * [`triangular`] — dense- and sparse-RHS triangular solves.
 //! * [`update`] — rank-one update/downdate (Method C) on the static pattern.
 //! * [`rowmod`] — `ldlrowmodify`, the paper's Algorithm 2.

@@ -283,6 +283,76 @@ mod tests {
         }
     }
 
+    /// Regression guard between the two numeric paths EP interleaves: a
+    /// factor maintained by sequential-sweep row modifications must stay
+    /// consistent with a *fresh supernodal refactorization* of the same
+    /// matrix (the default parallel kernel) — and with the up-looking
+    /// serial oracle — after every site visit, on a real CS covariance
+    /// fixture (debug-tolerance 1e-8, same bound the rowmod-vs-oracle
+    /// tests use).
+    #[test]
+    fn rowmod_factor_matches_supernodal_and_uplooking_refactorization() {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::testutil::random_points;
+        let n = 60;
+        let x = random_points(n, 2, 6.0, 33);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.7);
+        let mut a = cov.cov_matrix(&x);
+        for j in 0..n {
+            *a.get_mut(j, j) += 1.0; // B = I + K shape
+        }
+        // Rescale off-diagonals so every row's off-diagonal sum stays
+        // below 0.8: site updates below only ever *shrink* off-diagonal
+        // magnitudes, so every intermediate matrix is strictly diagonally
+        // dominant (diag >= 2), hence SPD.
+        let mut max_row_sum = 0.0f64;
+        for j in 0..n {
+            let (rows, vals) = a.col(j);
+            let s: f64 =
+                rows.iter().zip(vals).filter(|(&r, _)| r != j).map(|(_, v)| v.abs()).sum();
+            max_row_sum = max_row_sum.max(s);
+        }
+        let scale = 0.8 / max_row_sum.max(1e-9);
+        for j in 0..n {
+            for p in a.col_ptr[j]..a.col_ptr[j + 1] {
+                if a.row_idx[p] != j {
+                    a.values[p] *= scale;
+                }
+            }
+        }
+        let a = a;
+
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let mut f = LdlFactor::factor(sym.clone(), &a).unwrap();
+        let mut ws = RowModWorkspace::new(n);
+        let mut rng = Rng::new(12);
+        let mut cur = a.clone();
+        for i in (0..n).step_by(5) {
+            // new column i: original pattern, off-diagonals damped by a
+            // random factor in [-0.9, 0.9], diagonal unchanged
+            let (rows_b, vals_b) = a.col(i);
+            let rows: Vec<usize> = rows_b.to_vec();
+            let vals: Vec<f64> = rows
+                .iter()
+                .zip(vals_b)
+                .map(|(&r, &v)| if r == i { v } else { v * rng.uniform_in(-0.9, 0.9) })
+                .collect();
+            f.ldl_row_modify(i, &rows, &vals, &mut ws).unwrap();
+            cur = apply_dense_rowmod(&cur, i, &rows, &vals);
+
+            let snodal = LdlFactor::factor(sym.clone(), &cur).unwrap();
+            let mut uplook = LdlFactor::identity(sym.clone());
+            uplook.refactor_uplooking(&cur).unwrap();
+            for (oracle, name) in [(&snodal, "supernodal"), (&uplook, "up-looking")] {
+                let dl: f64 =
+                    f.l.iter().zip(&oracle.l).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                let dd: f64 =
+                    f.d.iter().zip(&oracle.d).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                assert!(dl < 1e-8 && dd < 1e-8, "{name} after site {i}: dl={dl} dd={dd}");
+            }
+        }
+    }
+
     #[test]
     fn rowmod_rejects_indefinite() {
         let a = CscMatrix::from_triplets(

@@ -5,9 +5,115 @@
 //! (section 5.2): the pattern — including fill — is analysed once here, and
 //! every numeric kernel (factorization, row modification, rank-one
 //! update/downdate, Takahashi inverse) then works in-place on it.
+//!
+//! Besides the column/row pattern maps, the analysis derives the
+//! [`SupernodeSchedule`]: contiguous column blocks with nested sub-pattern
+//! (supernodes) grouped into assembly-tree level waves, the static
+//! parallel schedule of [`crate::sparse::cholesky`]'s numeric
+//! factorization. Everything here is computed once per pattern —
+//! `O(nnz(L))` beyond the two `ereach` passes — and shared through
+//! `Arc<Symbolic>` by every factor, so the optimizer loop's
+//! [`crate::gp::cache::PatternCache`] amortizes it across all
+//! hyperparameter evaluations that keep the pattern.
 
 use crate::sparse::csc::CscMatrix;
-use crate::sparse::etree::{ereach, etree};
+use crate::sparse::etree::{ereach, etree, height_waves};
+
+/// Supernode partition of the columns plus the assembly-tree wave
+/// schedule — the static scaffolding of the parallel numeric LDLᵀ.
+///
+/// A *supernode* is a maximal run of consecutive columns `j, j+1, …` where
+/// each column's strictly-lower pattern is the next column's pattern plus
+/// that next column itself (`pat(j) = {j+1} ∪ pat(j+1)`, detected as
+/// `parent[j] == j+1 && |pat(j)| == |pat(j+1)| + 1`). Such columns share
+/// one (suffix-nested) sub-pattern, always form a path in the etree, and
+/// are factored by a single task. Contracting each supernode to a node of
+/// the etree yields the *assembly tree*; its height-level waves
+/// ([`crate::sparse::etree::height_waves`], leaves first) are the parallel
+/// schedule: column j of L depends only on columns in j's etree subtree,
+/// so every supernode's dependencies complete in strictly earlier waves
+/// and the supernodes of one wave are independent tasks.
+///
+/// Invariants: `snode_ptr` is strictly increasing with
+/// `snode_ptr[0] == 0`, `snode_ptr[n_snodes] == n`; `wave_snodes` is a
+/// permutation of `0..n_snodes` ascending within each wave; a supernode's
+/// wave index is strictly greater than every child's.
+#[derive(Clone, Debug)]
+pub struct SupernodeSchedule {
+    /// Supernode s spans columns `snode_ptr[s]..snode_ptr[s + 1]`.
+    pub snode_ptr: Vec<usize>,
+    /// Supernode ids grouped by assembly-tree height, leaves first:
+    /// `wave_snodes[wave_ptr[w]..wave_ptr[w + 1]]` is wave w.
+    pub wave_snodes: Vec<usize>,
+    /// Wave boundaries into `wave_snodes` (`len == n_waves + 1`).
+    pub wave_ptr: Vec<usize>,
+}
+
+impl SupernodeSchedule {
+    /// Detect supernodes and build the wave schedule from the etree and
+    /// the strictly-lower column counts of L.
+    fn build(parent: &[usize], col_ptr: &[usize]) -> SupernodeSchedule {
+        let n = parent.len();
+        let count = |j: usize| col_ptr[j + 1] - col_ptr[j];
+        let mut snode_ptr = Vec::with_capacity(n + 1);
+        snode_ptr.push(0);
+        for j in 1..n {
+            let prev = j - 1;
+            let merges = parent[prev] == j && count(prev) == count(j) + 1;
+            if !merges {
+                snode_ptr.push(j);
+            }
+        }
+        if n > 0 {
+            snode_ptr.push(n);
+        }
+        let n_snodes = snode_ptr.len().saturating_sub(1);
+
+        // column -> supernode map, then the contracted (assembly) tree:
+        // the parent supernode is the one owning the etree parent of the
+        // supernode's last column.
+        let mut snode_of = vec![0usize; n];
+        for s in 0..n_snodes {
+            for j in snode_ptr[s]..snode_ptr[s + 1] {
+                snode_of[j] = s;
+            }
+        }
+        let mut sparent = vec![usize::MAX; n_snodes];
+        for s in 0..n_snodes {
+            let last = snode_ptr[s + 1] - 1;
+            let p = parent[last];
+            if p != usize::MAX {
+                sparent[s] = snode_of[p];
+            }
+        }
+
+        let (mut wave_snodes, mut wave_ptr) = (Vec::new(), Vec::new());
+        height_waves(&sparent, &mut wave_snodes, &mut wave_ptr);
+        SupernodeSchedule { snode_ptr, wave_snodes, wave_ptr }
+    }
+
+    /// Number of supernodes.
+    pub fn n_snodes(&self) -> usize {
+        self.snode_ptr.len().saturating_sub(1)
+    }
+
+    /// Number of level waves in the schedule.
+    pub fn n_waves(&self) -> usize {
+        self.wave_ptr.len().saturating_sub(1)
+    }
+
+    /// Columns of supernode `s`.
+    #[inline]
+    pub fn columns(&self, s: usize) -> std::ops::Range<usize> {
+        self.snode_ptr[s]..self.snode_ptr[s + 1]
+    }
+
+    /// Supernode ids of wave `w` (ascending).
+    #[inline]
+    pub fn wave(&self, w: usize) -> &[usize] {
+        &self.wave_snodes[self.wave_ptr[w]..self.wave_ptr[w + 1]]
+    }
+}
 
 /// Static symbolic factorization of a symmetric matrix pattern.
 #[derive(Clone, Debug)]
@@ -22,10 +128,14 @@ pub struct Symbolic {
     /// Row-structure map (CSR over the same pattern): for each row i, the
     /// positions `p` into `row_idx`/values such that `row_idx[p] == i`,
     /// together with the owning column. Lets `ldlrowmodify` write row i of
-    /// L without searching.
+    /// L without searching, and the left-pulling numeric factorization
+    /// walk row j's update sources in ascending column order.
     pub rowmap_ptr: Vec<usize>,
     /// (column j, position p) pairs, ordered by row then column.
     pub rowmap: Vec<(usize, usize)>,
+    /// Supernode partition + assembly-tree waves (see
+    /// [`SupernodeSchedule`]); the parallel schedule of the numeric LDLᵀ.
+    pub schedule: SupernodeSchedule,
 }
 
 impl Symbolic {
@@ -83,7 +193,8 @@ impl Symbolic {
             }
         }
 
-        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap }
+        let schedule = SupernodeSchedule::build(&parent, &col_ptr);
+        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap, schedule }
     }
 
     /// Number of nonzeros in L including the diagonal.
@@ -162,6 +273,119 @@ mod tests {
         // After eliminating node 0 the remainder is a clique: L is full.
         assert_eq!(s.nnz_l(), n * (n + 1) / 2);
         assert!((s.fill_l() - 1.0).abs() < 1e-12);
+    }
+
+    /// Dense pattern: every column's pattern is the suffix of the next ->
+    /// one supernode, one wave (a dense LDLᵀ is inherently sequential).
+    #[test]
+    fn dense_pattern_is_one_supernode() {
+        let n = 6;
+        let mut t = Vec::new();
+        for i in 0..n {
+            for j in 0..n {
+                t.push((i, j, if i == j { 4.0 } else { 0.5 }));
+            }
+        }
+        let s = Symbolic::analyze(&CscMatrix::from_triplets(n, n, &t));
+        assert_eq!(s.schedule.n_snodes(), 1);
+        assert_eq!(s.schedule.columns(0), 0..n);
+        assert_eq!(s.schedule.n_waves(), 1);
+    }
+
+    /// Tridiagonal: pat(j) = {j+1} is NOT `{j+1} ∪ pat(j+1)` for interior
+    /// columns (pat(j+1) = {j+2} ≠ ∅), so only the final pair merges
+    /// (pat(n−2) = {n−1} = {n−1} ∪ pat(n−1)); the bidiagonal dependency
+    /// chain makes every wave a singleton.
+    #[test]
+    fn tridiagonal_has_singleton_supernodes_in_a_chain() {
+        let n = 7;
+        let s = Symbolic::analyze(&tridiag(n));
+        assert_eq!(s.schedule.n_snodes(), n - 1, "last two columns merge");
+        assert_eq!(s.schedule.columns(n - 2), n - 2..n);
+        assert_eq!(s.schedule.n_waves(), n - 1);
+        for w in 0..n - 1 {
+            assert_eq!(s.schedule.wave(w), &[w]);
+        }
+    }
+
+    /// Arrow matrix (dense last row/col): columns 0..n-2 are independent
+    /// leaves in one wide wave; the last two columns share a pattern
+    /// suffix and merge into the root supernode.
+    #[test]
+    fn arrow_pattern_merges_the_tail_and_parallelizes_the_leaves() {
+        let n = 8;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i, n - 1, 1.0));
+                t.push((n - 1, i, 1.0));
+            }
+        }
+        let s = Symbolic::analyze(&CscMatrix::from_triplets(n, n, &t));
+        let sched = &s.schedule;
+        assert_eq!(sched.n_snodes(), n - 1, "n-2 leaves + merged {{n-2, n-1}} root");
+        assert_eq!(sched.columns(n - 2), n - 2..n);
+        assert_eq!(sched.n_waves(), 2);
+        assert_eq!(sched.wave(0).len(), n - 2);
+        assert_eq!(sched.wave(1), &[n - 2]);
+    }
+
+    /// Structural invariants on irregular (geometric CS covariance)
+    /// patterns: supernodes partition the columns, merged columns have the
+    /// promised suffix-nested pattern, and every column's update sources
+    /// (its row pattern) complete in an earlier wave or earlier in the
+    /// same supernode.
+    #[test]
+    fn schedule_invariants_on_cs_covariance_patterns() {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::testutil::random_points;
+        for (seed, ls) in [(1u64, 1.4), (2, 2.2)] {
+            let x = random_points(120, 2, 7.0, seed);
+            let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, ls);
+            let mut k = cov.cov_matrix(&x);
+            for j in 0..k.n_cols {
+                *k.get_mut(j, j) += 1.0;
+            }
+            let s = Symbolic::analyze(&k);
+            let sched = &s.schedule;
+            let n = s.n;
+            // partition + permutation
+            assert_eq!(*sched.snode_ptr.first().unwrap(), 0);
+            assert_eq!(*sched.snode_ptr.last().unwrap(), n);
+            assert!(sched.snode_ptr.windows(2).all(|w| w[0] < w[1]));
+            let mut seen: Vec<usize> = sched.wave_snodes.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..sched.n_snodes()).collect::<Vec<_>>());
+            // nested pattern inside each supernode
+            let mut snode_of = vec![0usize; n];
+            for sn in 0..sched.n_snodes() {
+                let cols = sched.columns(sn);
+                for j in cols.clone() {
+                    snode_of[j] = sn;
+                }
+                for j in cols.start..cols.end.saturating_sub(1) {
+                    let pat = s.col_pattern(j);
+                    assert_eq!(pat[0], j + 1, "first below-diagonal entry is the next column");
+                    assert_eq!(&pat[1..], s.col_pattern(j + 1), "suffix-nested supernode pattern");
+                }
+            }
+            let mut wave_of = vec![0usize; sched.n_snodes()];
+            for w in 0..sched.n_waves() {
+                for &sn in sched.wave(w) {
+                    wave_of[sn] = w;
+                }
+            }
+            for j in 0..n {
+                for &(k_src, _) in s.row_pattern(j) {
+                    let (ss, st) = (snode_of[k_src], snode_of[j]);
+                    assert!(
+                        wave_of[ss] < wave_of[st] || (ss == st && k_src < j),
+                        "source column {k_src} of {j} not scheduled before it"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -27,6 +27,7 @@
 
 use crate::par::SyncSlice;
 use crate::sparse::cholesky::LdlFactor;
+use crate::sparse::etree::depth_waves;
 
 /// Waves shorter than this run inline on the caller's scratch — a
 /// one-column wave (the etree's path-like top) gains nothing from the
@@ -53,36 +54,6 @@ pub struct SparseInverse {
     wave_parent: Vec<usize>,
     wave_cols: Vec<usize>,
     wave_ptr: Vec<usize>,
-}
-
-/// Flat etree level sets (counting sort by depth), roots (depth 0) first.
-/// `parent[j] > j` always, so a single descending sweep computes depths.
-fn compute_waves(parent: &[usize], cols: &mut Vec<usize>, ptr: &mut Vec<usize>) {
-    let n = parent.len();
-    let mut depth = vec![0usize; n];
-    let mut max_depth = 0;
-    for j in (0..n).rev() {
-        let p = parent[j];
-        if p != usize::MAX {
-            depth[j] = depth[p] + 1;
-            max_depth = max_depth.max(depth[j]);
-        }
-    }
-    ptr.clear();
-    ptr.resize(max_depth + 2, 0);
-    for &d in &depth {
-        ptr[d + 1] += 1;
-    }
-    for d in 0..=max_depth {
-        ptr[d + 1] += ptr[d];
-    }
-    cols.clear();
-    cols.resize(n, 0);
-    let mut next = ptr[..=max_depth].to_vec();
-    for (j, &d) in depth.iter().enumerate() {
-        cols[next[d]] = j;
-        next[d] += 1;
-    }
 }
 
 impl LdlFactor {
@@ -118,7 +89,7 @@ impl LdlFactor {
         if zi.wave_parent != sym.parent {
             zi.wave_parent.clear();
             zi.wave_parent.extend_from_slice(&sym.parent);
-            compute_waves(&sym.parent, &mut zi.wave_cols, &mut zi.wave_ptr);
+            depth_waves(&sym.parent, &mut zi.wave_cols, &mut zi.wave_ptr);
         }
         let (wave_cols, wave_ptr) = (&zi.wave_cols, &zi.wave_ptr);
         let z_lower = SyncSlice::new(&mut zi.z_lower);
@@ -306,11 +277,11 @@ mod tests {
         let (mut cols, mut ptr) = (Vec::new(), Vec::new());
         // path etree 0 -> 1 -> 2 -> 3 (root): waves are singletons from
         // the root down
-        compute_waves(&[1usize, 2, 3, usize::MAX], &mut cols, &mut ptr);
+        depth_waves(&[1usize, 2, 3, usize::MAX], &mut cols, &mut ptr);
         assert_eq!(ptr, vec![0, 1, 2, 3, 4]);
         assert_eq!(cols, vec![3, 2, 1, 0]);
         // star: everything hangs off the root -> one wide wave
-        compute_waves(&[4usize, 4, 4, 4, usize::MAX], &mut cols, &mut ptr);
+        depth_waves(&[4usize, 4, 4, 4, usize::MAX], &mut cols, &mut ptr);
         assert_eq!(ptr, vec![0, 1, 5]);
         assert_eq!(cols, vec![4, 0, 1, 2, 3]);
     }

@@ -210,16 +210,22 @@ fn pool_width_never_changes_any_result() {
     let xu = kmeans(&train.x, 12, 25, 3);
 
     // width-1 references: the inline serial path, no pool participation
-    let (s_lz, s_mu, s_sig, s_grad, s_preds) = csgp::par::with_max_threads(1, || {
+    let (s_lz, s_mu, s_sig, s_grad, s_preds, s_fac) = csgp::par::with_max_threads(1, || {
         let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
         let sep =
             SparseEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts, None).unwrap();
+        // the supernodal numeric LDLᵀ in isolation: refactor B at the
+        // converged sites and keep the raw factor bits
+        let b = csgp::gp::ep_sparse::build_b(&ep.k, &ep.sites.tau);
+        let mut fac = ep.factor.clone();
+        fac.refactor(&b).unwrap();
         (
             ep.log_z,
             ep.mu.clone(),
             ep.recompute_sigma_diag(),
             sep.log_z_grad(&cov),
             ep.predict_latent_batch(&cov, &test.x),
+            (fac.l.clone(), fac.d.clone()),
         )
     });
     let (h_lz, h_mu, h_sig, h_grad, h_preds) = csgp::par::with_max_threads(1, || {
@@ -243,6 +249,11 @@ fn pool_width_never_changes_any_result() {
                 SparseEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts, None).unwrap();
             assert_eq!(sep.log_z_grad(&cov), s_grad, "width {width}");
             assert_eq!(ep.predict_latent_batch(&cov, &test.x), s_preds, "width {width}");
+            let b = csgp::gp::ep_sparse::build_b(&ep.k, &ep.sites.tau);
+            let mut fac = ep.factor.clone();
+            fac.refactor(&b).unwrap();
+            assert_eq!(fac.l, s_fac.0, "width {width}: factor L bits differ");
+            assert_eq!(fac.d, s_fac.1, "width {width}: factor D bits differ");
 
             let hep = CsFicEp::run(&hybrid, &train.x, &train.y, &xu, &opts).unwrap();
             assert!(hep.log_z == h_lz, "width {width}: logZ {} vs {}", hep.log_z, h_lz);
