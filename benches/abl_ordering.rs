@@ -1,7 +1,14 @@
 //! Ablation: fill-reducing orderings (the paper's stated future work —
 //! "a detailed evaluation of different permutation algorithms"). Reports
-//! fill-L and the numeric factorization time under natural / RCM /
-//! greedy-min-degree orderings on the paper's geometric matrices.
+//! fill-L, ordering time, factor time and the supernodal wave shape under
+//! natural / RCM / quotient-min-degree / nested-dissection / auto
+//! orderings on the paper's geometric matrices. ND runs its geometric
+//! fast path (the data's coordinates are passed through), which is the
+//! configuration the `Ordering::Auto` policy deploys.
+//!
+//! `CSGP_SMOKE=1` shrinks the sweep to one tiny 2-D case — the CI smoke
+//! run that keeps the ND and Auto code paths from rotting.
+//! `CSGP_FULL=1` grows it to n = 4000.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -9,45 +16,69 @@ use std::time::Instant;
 use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
 use csgp::gp::covariance::{CovFunction, CovKind};
 use csgp::sparse::cholesky::LdlFactor;
-use csgp::sparse::ordering::{compute_ordering, Ordering};
+use csgp::sparse::ordering::{order, Ordering};
 use csgp::sparse::symbolic::Symbolic;
 
 fn main() {
+    let smoke = std::env::var("CSGP_SMOKE").is_ok();
     let full = std::env::var("CSGP_FULL").is_ok();
-    let ns: Vec<usize> = if full { vec![1000, 2000, 4000] } else { vec![500, 1000, 2000] };
+    let ns: Vec<usize> = if smoke {
+        vec![300]
+    } else if full {
+        vec![1000, 2000, 4000]
+    } else {
+        vec![500, 1000, 2000]
+    };
+    let dims: &[(usize, f64)] = if smoke { &[(2, 1.3)] } else { &[(2, 1.3), (5, 5.0)] };
     println!("# Ablation: ordering algorithms (pp3 covariance matrices)");
-    println!("| dim | n | ordering | fill-K | fill-L | ordering time | factor time |");
-    println!("|---|---|---|---|---|---|---|");
+    println!(
+        "| dim | n | ordering | fill-K | fill-L | order time | factor time | waves | max wave width |"
+    );
+    println!("|---|---|---|---|---|---|---|---|---|");
 
-    for (dim, ls) in [(2usize, 1.3), (5usize, 5.0)] {
+    for &(dim, ls) in dims {
         for &n in &ns {
             let cfg = if dim == 2 { ClusterConfig::paper_2d(n) } else { ClusterConfig::paper_5d(n) };
             let data = cluster_dataset(&cfg, 9);
             let cov = CovFunction::new(CovKind::Pp(3), dim, 1.0, ls);
             let k0 = cov.cov_matrix(&data.x);
-            for ord in [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree] {
-                if ord == Ordering::MinDegree && dim == 5 && n > 1000 {
-                    // greedy min-degree is quadratic on dense-ish graphs
-                    println!("| {dim}D | {n} | {ord:?} | — | skipped (quadratic) | | |");
-                    continue;
-                }
+            for ord in [
+                Ordering::Natural,
+                Ordering::Rcm,
+                Ordering::MinDegree,
+                Ordering::Nd,
+                Ordering::Auto,
+            ] {
                 let t0 = Instant::now();
-                let perm = compute_ordering(&k0, ord);
+                let res = order(&k0, ord, Some(&data.x));
                 let t_ord = t0.elapsed();
-                let kp = k0.permute_sym(&perm);
-                let sym = Arc::new(Symbolic::analyze(&kp));
+                let kp = k0.permute_sym(&res.perm);
+                let sym =
+                    Arc::new(Symbolic::analyze_with_septree(&kp, res.septree.map(Arc::new)));
                 let t0 = Instant::now();
                 let _f = LdlFactor::factor(sym.clone(), &kp).unwrap();
                 let t_fac = t0.elapsed();
+                let label = if ord == Ordering::Auto {
+                    format!("Auto->{:?}", res.resolved)
+                } else {
+                    format!("{ord:?}")
+                };
                 println!(
-                    "| {dim}D | {n} | {ord:?} | {:.3} | {:.3} | {} | {} |",
+                    "| {dim}D | {n} | {label} | {:.3} | {:.3} | {} | {} | {} | {} |",
                     k0.density(),
                     sym.fill_l(),
                     csgp::bench::fmt_duration(t_ord),
-                    csgp::bench::fmt_duration(t_fac)
+                    csgp::bench::fmt_duration(t_fac),
+                    sym.schedule.n_waves(),
+                    sym.schedule.wave_width_max(),
                 );
             }
         }
     }
-    println!("\nexpectation: RCM/min-degree beat natural; the fill gap drives the EP speedup (paper §5.4).");
+    println!(
+        "\nexpectation: RCM/min-degree/ND beat natural on fill (paper §5.4); ND's \
+         max wave width beats RCM's by an order of magnitude at n >= 2000 — the \
+         parallel factorization's headroom — and the quotient-graph min-degree \
+         orders n = 4000 in well under a second."
+    );
 }

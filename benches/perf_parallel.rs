@@ -1,14 +1,22 @@
 //! Worker-pool scaling of the per-sweep hot loops: the supernodal numeric
-//! LDLᵀ factorization (`factor`), the parallel-EP / CS+FIC
-//! marginal-variance loops (`sweep`), the Takahashi-based gradient path
-//! (`gradient`) and batched latent prediction (`predict`), each measured
-//! at pool widths 1/2/4/8 on the same fitted state. Every measurement
-//! also asserts that the output is bitwise-identical to the width-1
-//! (serial) path — the pool's determinism contract.
+//! LDLᵀ factorization (`factor*`, one row per fill-reducing ordering),
+//! the parallel-EP / CS+FIC marginal-variance loops (`sweep`), the
+//! Takahashi-based gradient path (`gradient`) and batched latent
+//! prediction (`predict`), each measured at pool widths 1/2/4/8 on the
+//! same fitted state. Every measurement also asserts that the output is
+//! bitwise-identical to the width-1 (serial) path — the pool's
+//! determinism contract.
+//!
+//! The factor stage runs the same matrix under min-degree (`factor`),
+//! the EP fit's own RCM plan (`factor_rcm`), nested dissection
+//! (`factor_nd`, geometric fast path on the permuted inputs) and the
+//! auto policy (`factor_auto`), recording per-ordering structure —
+//! `nnz_l`, supernode count, wave count, max wave width — next to the
+//! timings so ordering quality stays visible in the perf trajectory.
 //!
 //! Results are printed as a markdown table and written to
-//! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter — see
-//! README "Solver stack") so the perf trajectory is tracked across PRs.
+//! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter, plus the
+//! factor-stage structure fields — see README "Solver stack").
 //!
 //! Run: `cargo bench --bench perf_parallel` (`CSGP_FULL=1` for n = 8000).
 
@@ -23,36 +31,80 @@ use csgp::gp::ep_parallel::ParallelEp;
 use csgp::gp::marginal::EpOptions;
 use csgp::sparse::cholesky::LdlFactor;
 use csgp::sparse::csc::CscMatrix;
-use csgp::sparse::ordering::{compute_ordering, Ordering};
+use csgp::sparse::ordering::{order, Ordering};
 use csgp::sparse::symbolic::Symbolic;
-use csgp::sparse::takahashi::SparseInverse;
 use std::sync::Arc;
 
 const WIDTHS: [usize; 4] = [1, 2, 4, 8];
 
-/// Min-degree-permute `b`, analyse the permuted pattern, and return an
-/// identity factor over it plus the permuted matrix — the refactor target
-/// the `factor` stage times.
-fn mindeg_factor(b: &CscMatrix) -> (LdlFactor, CscMatrix) {
-    let perm = compute_ordering(b, Ordering::MinDegree);
-    let b_perm = b.permute_sym(&perm);
-    let sym = Arc::new(Symbolic::analyze(&b_perm));
-    (LdlFactor::identity(sym), b_perm)
+/// Median ns/iter at widths 1, 4 and 8 — the numbers the summary lines
+/// compare.
+#[derive(Clone, Copy, Default)]
+struct WidthTimes {
+    t1: f64,
+    t4: f64,
+    t8: f64,
+}
+
+/// Per-ordering structure of a factor target: what the fill-reducing
+/// ordering bought, recorded next to the timings.
+#[derive(Clone, Copy)]
+struct FactorShape {
+    nnz_l: usize,
+    snodes: usize,
+    waves: usize,
+    max_wave_width: usize,
+}
+
+impl FactorShape {
+    fn of(sym: &Symbolic) -> FactorShape {
+        FactorShape {
+            nnz_l: sym.nnz_l(),
+            snodes: sym.schedule.n_snodes(),
+            waves: sym.schedule.n_waves(),
+            max_wave_width: sym.schedule.wave_width_max(),
+        }
+    }
+
+    fn extra(&self) -> [(&'static str, f64); 4] {
+        [
+            ("nnz_l", self.nnz_l as f64),
+            ("snodes", self.snodes as f64),
+            ("waves", self.waves as f64),
+            ("max_wave_width", self.max_wave_width as f64),
+        ]
+    }
+}
+
+/// Permute `b` with `ord` (ND/Auto get the point coordinates for the
+/// geometric path), analyse the permuted pattern, and return an identity
+/// factor over it plus the permuted matrix — the refactor target the
+/// factor stage times — and the resulting structure.
+fn ordered_factor(
+    b: &CscMatrix,
+    ord: Ordering,
+    points: Option<&[Vec<f64>]>,
+) -> (LdlFactor, CscMatrix, FactorShape, Ordering) {
+    let res = order(b, ord, points);
+    let b_perm = b.permute_sym(&res.perm);
+    let sym = Arc::new(Symbolic::analyze_with_septree(&b_perm, res.septree.map(Arc::new)));
+    let shape = FactorShape::of(&sym);
+    (LdlFactor::identity(sym), b_perm, shape, res.resolved)
 }
 
 /// Measure `f` at every pool width, asserting output identity against the
 /// width-1 reference, pushing every measurement into the report, and
-/// returning (t1, t4) median nanoseconds for the speedup summary.
+/// returning the per-width medians for the speedup summary.
 fn measure<T: PartialEq>(
     rep: &mut Report,
     bench: &str,
     backend: &str,
     n: usize,
     mut f: impl FnMut() -> T,
-) -> (f64, f64) {
+) -> WidthTimes {
     let b = Bencher::quick();
     let reference = csgp::par::with_max_threads(1, &mut f);
-    let (mut t1, mut t4) = (0.0f64, 0.0f64);
+    let mut t = WidthTimes::default();
     for &w in &WIDTHS {
         let stats = csgp::par::with_max_threads(w, || {
             let out = f();
@@ -63,27 +115,28 @@ fn measure<T: PartialEq>(
             b.run(&mut f)
         });
         let ns = stats.median.as_nanos() as f64;
-        if w == 1 {
-            t1 = ns;
-        }
-        if w == 4 {
-            t4 = ns;
+        match w {
+            1 => t.t1 = ns,
+            4 => t.t4 = ns,
+            8 => t.t8 = ns,
+            _ => {}
         }
         println!(
             "| {n} | {backend} | {bench} | {w} | {} | {:.2}x |",
             fmt_duration(stats.median),
-            t1 / ns
+            t.t1 / ns
         );
         rep.push(bench, backend, n, w, &stats);
     }
-    (t1, t4)
+    t
 }
 
 /// Like [`measure`] but for the factor stage: the width-vs-serial
 /// bitwise-identity check runs *outside* the timed region, so ns/iter
 /// times only `refactor` itself — cloning L/D per iteration would add a
 /// width-independent `O(nnz(L))` memcpy that dilutes the measured
-/// scaling of exactly the stage this bench gates on.
+/// scaling of exactly the stage this bench gates on. Every record also
+/// carries the ordering's structure fields.
 fn measure_factor(
     rep: &mut Report,
     bench: &str,
@@ -91,13 +144,14 @@ fn measure_factor(
     n: usize,
     fac: &mut LdlFactor,
     b: &CscMatrix,
-) -> (f64, f64) {
+    shape: FactorShape,
+) -> WidthTimes {
     let harness = Bencher::quick();
     let (ref_l, ref_d) = csgp::par::with_max_threads(1, || {
         fac.refactor(b).unwrap();
         (fac.l.clone(), fac.d.clone())
     });
-    let (mut t1, mut t4) = (0.0f64, 0.0f64);
+    let mut t = WidthTimes::default();
     for &w in &WIDTHS {
         let stats = csgp::par::with_max_threads(w, || {
             fac.refactor(b).unwrap();
@@ -108,20 +162,85 @@ fn measure_factor(
             harness.run(|| fac.refactor(b).unwrap())
         });
         let ns = stats.median.as_nanos() as f64;
-        if w == 1 {
-            t1 = ns;
-        }
-        if w == 4 {
-            t4 = ns;
+        match w {
+            1 => t.t1 = ns,
+            4 => t.t4 = ns,
+            8 => t.t8 = ns,
+            _ => {}
         }
         println!(
             "| {n} | {backend} | {bench} | {w} | {} | {:.2}x |",
             fmt_duration(stats.median),
-            t1 / ns
+            t.t1 / ns
         );
-        rep.push(bench, backend, n, w, &stats);
+        rep.push_with(bench, backend, n, w, &stats, &shape.extra());
     }
-    (t1, t4)
+    t
+}
+
+/// All four factor-stage rows for one backend's sparse matrix `b` (given
+/// in the EP fit's RCM-permuted space, with `rcm_factor` the fit's own
+/// factor over it and `xp` the matching permuted inputs). Returns
+/// (per-ordering (name, shape, times)) for the summary.
+fn factor_stage(
+    rep: &mut Report,
+    backend: &str,
+    n: usize,
+    b: &CscMatrix,
+    rcm_factor: &LdlFactor,
+    xp: &[Vec<f64>],
+) -> Vec<(&'static str, FactorShape, WidthTimes)> {
+    let mut out = Vec::new();
+    for (name, ord) in [
+        ("factor", Ordering::MinDegree),
+        ("factor_nd", Ordering::Nd),
+        ("factor_auto", Ordering::Auto),
+    ] {
+        let (mut fac, b_ord, shape, resolved) = ordered_factor(b, ord, Some(xp));
+        println!(
+            "<!-- {backend}/{name} ({resolved:?}): nnz_l={} snodes={} waves={} \
+             max_wave_width={} -->",
+            shape.nnz_l, shape.snodes, shape.waves, shape.max_wave_width
+        );
+        let t = measure_factor(rep, name, backend, n, &mut fac, &b_ord, shape);
+        out.push((name, shape, t));
+    }
+    // the EP fit's own (RCM) factor of the same matrix
+    let mut fac = rcm_factor.clone();
+    let shape = FactorShape::of(&fac.symbolic);
+    println!(
+        "<!-- {backend}/factor_rcm (Rcm): nnz_l={} snodes={} waves={} max_wave_width={} -->",
+        shape.nnz_l, shape.snodes, shape.waves, shape.max_wave_width
+    );
+    let t = measure_factor(rep, "factor_rcm", backend, n, &mut fac, b, shape);
+    out.push(("factor_rcm", shape, t));
+    out
+}
+
+/// Print the ordering-quality summary for one backend's factor stage:
+/// ND-vs-RCM wave widths and the 8-thread nd-vs-best(md, rcm) gate,
+/// with WARNING lines when either target is missed.
+fn factor_summary(backend: &str, rows: &[(&'static str, FactorShape, WidthTimes)]) {
+    let get = |name: &str| rows.iter().find(|r| r.0 == name).unwrap();
+    let (_, nd_shape, nd_t) = get("factor_nd");
+    let (_, rcm_shape, rcm_t) = get("factor_rcm");
+    let (_, md_shape, md_t) = get("factor");
+    println!(
+        "{backend} factor orderings: nd max wave width {} vs rcm {} (md {}); \
+         8-thread factor nd {} vs best(md, rcm) {} \
+         (target: nd wider waves than rcm, nd time <= best)",
+        nd_shape.max_wave_width,
+        rcm_shape.max_wave_width,
+        md_shape.max_wave_width,
+        fmt_duration(std::time::Duration::from_nanos(nd_t.t8 as u64)),
+        fmt_duration(std::time::Duration::from_nanos(md_t.t8.min(rcm_t.t8) as u64)),
+    );
+    if nd_shape.max_wave_width <= rcm_shape.max_wave_width {
+        println!("WARNING: {backend}: ND waves not wider than RCM");
+    }
+    if nd_t.t8 > md_t.t8.min(rcm_t.t8) {
+        println!("WARNING: {backend}: 8-thread ND factor slower than best of md/rcm");
+    }
 }
 
 fn main() {
@@ -142,18 +261,19 @@ fn main() {
     let probes = uniform_points(2000, 2, 10.0, 99);
 
     // numeric LDLᵀ of B at the converged sites: the supernodal
-    // wave-scheduled kernel, in isolation. Wave width depends on the
-    // fill-reducing ordering: RCM's banded etrees are near-paths (little
-    // to fan out), so `factor` measures the min-degree (AMD-analogue)
-    // permutation of the same matrix — the ordering a factorization-bound
-    // deployment picks — and `factor_rcm` tracks the EP fit's own factor.
+    // wave-scheduled kernel, in isolation, under every ordering. Wave
+    // width depends on the fill-reducing ordering: RCM's banded etrees
+    // are near-paths (little to fan out), min-degree bushes out, and
+    // nested dissection's balanced separator tree fans out widest — the
+    // ordering a factorization-bound deployment (and the Auto policy)
+    // picks.
     let b_cs = csgp::gp::ep_sparse::build_b(&ep.k, &ep.sites.tau);
-    let (mut fac_md, b_md) = mindeg_factor(&b_cs);
-    let (fac_t1, fac_t4) = measure_factor(&mut rep, "factor", "cs", n, &mut fac_md, &b_md);
-    let mut fac_cs = ep.factor.clone();
-    measure_factor(&mut rep, "factor_rcm", "cs", n, &mut fac_cs, &b_cs);
-    let (cs_t1, cs_t4) = measure(&mut rep, "sweep", "cs", n, || ep.recompute_sigma_diag());
-    let mut zi = SparseInverse::default();
+    let cs_rows = factor_stage(&mut rep, "cs", n, &b_cs, &ep.factor, &ep.xp);
+    let (cs_t1, cs_t4) = {
+        let t = measure(&mut rep, "sweep", "cs", n, || ep.recompute_sigma_diag());
+        (t.t1, t.t4)
+    };
+    let mut zi = csgp::sparse::takahashi::SparseInverse::default();
     measure(&mut rep, "gradient", "cs", n, || {
         ep.factor.takahashi_inverse_into(&mut zi);
         (zi.z_lower.clone(), zi.z_diag.clone())
@@ -167,30 +287,38 @@ fn main() {
     let hep = CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &hopts).unwrap();
 
     // numeric LDLᵀ of S_B (the sparse half of the Woodbury B) — same
-    // kernel, CS+FIC pattern, min-degree and RCM like the CS stage
+    // kernel, CS+FIC pattern, same four orderings
     let sb = hep.sparse_b();
-    let (mut hfac_md, sb_md) = mindeg_factor(&sb);
-    let (hfac_t1, hfac_t4) =
-        measure_factor(&mut rep, "factor", "csfic", n, &mut hfac_md, &sb_md);
-    let mut fac_hy = hep.sparse_factor().clone();
-    measure_factor(&mut rep, "factor_rcm", "csfic", n, &mut fac_hy, &sb);
+    let hy_rows = factor_stage(&mut rep, "csfic", n, &sb, hep.sparse_factor(), &hep.xp);
     let hu = hep.fic_factor(); // rebuilt once, outside the timed loop
-    let (hy_t1, hy_t4) =
-        measure(&mut rep, "sweep", "csfic", n, || hep.recompute_sigma_diag_with(&hu));
+    let (hy_t1, hy_t4) = {
+        let t = measure(&mut rep, "sweep", "csfic", n, || hep.recompute_sigma_diag_with(&hu));
+        (t.t1, t.t4)
+    };
     let mut scratch = GradScratch::default();
     measure(&mut rep, "gradient", "csfic", n, || hep.log_z_grad_cs_cached(&mut scratch));
     measure(&mut rep, "predict", "csfic", n, || hep.predict_latent_batch(&probes));
 
     rep.write().expect("writing BENCH_parallel.json");
     println!();
+    factor_summary("cs", &cs_rows);
+    factor_summary("csfic", &hy_rows);
     println!(
         "per-sweep variance loop, 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
          (target >= 2.5x on a >= 4-core host)",
         cs_t1 / cs_t4,
         hy_t1 / hy_t4
     );
+    let (fac_t1, fac_t4) = {
+        let t = cs_rows.iter().find(|r| r.0 == "factor").unwrap().2;
+        (t.t1, t.t4)
+    };
+    let (hfac_t1, hfac_t4) = {
+        let t = hy_rows.iter().find(|r| r.0 == "factor").unwrap().2;
+        (t.t1, t.t4)
+    };
     println!(
-        "numeric LDL factorization, 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
+        "numeric LDL factorization (min-degree), 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
          (target > 1x on a >= 4-core host; wave structure caps the ideal)",
         fac_t1 / fac_t4,
         hfac_t1 / hfac_t4

@@ -15,9 +15,11 @@ fn main() {
     let (train, test) = data.split(400);
 
     // 2. model: k_pp3 compactly supported covariance + the paper's sparse
-    //    EP (Algorithm 1) with an RCM fill-reducing ordering
+    //    EP (Algorithm 1); Ordering::Auto picks the fill-reducing
+    //    ordering from the pattern (RCM / quotient min-degree / nested
+    //    dissection — see sparse::ordering)
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5);
-    let mut model = GpClassifier::new(cov, Inference::Sparse(Ordering::Rcm));
+    let mut model = GpClassifier::new(cov, Inference::Sparse(Ordering::Auto));
     model.opt_opts.max_iters = 10; // quick MAP-II search
 
     // 3. fit (optimizes [ln σ², ln l..] against logZ_EP + half-Student-t prior)

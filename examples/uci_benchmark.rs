@@ -47,7 +47,7 @@ fn main() {
                 "CS+FIC m=10",
                 CovFunction::new(CovKind::Pp(3), spec.d, 1.0, 4.0),
                 Some(CovFunction::new(CovKind::Se, spec.d, 0.8, 2.5)),
-                Inference::CsFic { m: 10 },
+                Inference::CsFic { m: 10, ordering: Ordering::Auto },
             ),
         ] {
             let id = mgr

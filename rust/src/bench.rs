@@ -107,6 +107,11 @@ pub mod report {
         pub threads: usize,
         /// Median nanoseconds per iteration.
         pub ns_per_iter: f64,
+        /// Extra per-record fields serialized alongside the fixed ones
+        /// (e.g. the factor stage's `nnz_l` / `snodes` / `waves` /
+        /// `max_wave_width` structure statistics). Values are emitted as
+        /// JSON numbers; keys must be plain ASCII identifiers.
+        pub extra: Vec<(String, f64)>,
     }
 
     /// Accumulates records and serializes them as a JSON array.
@@ -122,12 +127,29 @@ pub mod report {
 
         /// Record one measurement (median time of `stats`).
         pub fn push(&mut self, bench: &str, backend: &str, n: usize, threads: usize, stats: &Stats) {
+            self.push_with(bench, backend, n, threads, stats, &[]);
+        }
+
+        /// [`Report::push`] with extra numeric fields attached to the
+        /// record — how the factor stage reports per-ordering structure
+        /// (`nnz_l`, supernode count, wave count, max wave width) next to
+        /// its timing.
+        pub fn push_with(
+            &mut self,
+            bench: &str,
+            backend: &str,
+            n: usize,
+            threads: usize,
+            stats: &Stats,
+            extra: &[(&str, f64)],
+        ) {
             self.records.push(Record {
                 bench: bench.to_string(),
                 backend: backend.to_string(),
                 n,
                 threads,
                 ns_per_iter: stats.median.as_nanos() as f64,
+                extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
             });
         }
 
@@ -138,10 +160,15 @@ pub mod report {
             writeln!(f, "[")?;
             for (i, r) in self.records.iter().enumerate() {
                 let comma = if i + 1 < self.records.len() { "," } else { "" };
+                let extra: String = r
+                    .extra
+                    .iter()
+                    .map(|(k, v)| format!(", \"{}\": {}", json_escape(k), fmt_num(*v)))
+                    .collect();
                 writeln!(
                     f,
                     "  {{\"bench\": \"{}\", \"backend\": \"{}\", \"n\": {}, \
-                     \"threads\": {}, \"ns_per_iter\": {:.1}}}{comma}",
+                     \"threads\": {}, \"ns_per_iter\": {:.1}{extra}}}{comma}",
                     json_escape(&r.bench),
                     json_escape(&r.backend),
                     r.n,
@@ -155,6 +182,18 @@ pub mod report {
 
         pub fn records(&self) -> &[Record] {
             &self.records
+        }
+    }
+
+    /// Render an f64 as a JSON number: integral values drop the fraction
+    /// (counts stay counts), non-finite values become null.
+    fn fmt_num(v: f64) -> String {
+        if !v.is_finite() {
+            "null".to_string()
+        } else if v == v.trunc() && v.abs() < 1e15 {
+            format!("{}", v as i64)
+        } else {
+            format!("{v}")
         }
     }
 
@@ -232,8 +271,16 @@ mod tests {
         let s = Stats::from_samples(vec![Duration::from_nanos(1500)]);
         rep.push("sweep", "cs", 4000, 4, &s);
         rep.push("pre\"dict", "csfic", 10, 1, &s);
+        rep.push_with(
+            "factor_nd",
+            "cs",
+            4000,
+            8,
+            &s,
+            &[("nnz_l", 123456.0), ("max_wave_width", 41.0), ("frac", 0.25)],
+        );
         rep.write().unwrap();
-        assert_eq!(rep.records().len(), 2);
+        assert_eq!(rep.records().len(), 3);
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.trim_start().starts_with('['), "{text}");
         assert!(text.trim_end().ends_with(']'), "{text}");
@@ -241,6 +288,10 @@ mod tests {
         assert!(text.contains("\"threads\": 4"));
         assert!(text.contains("\"ns_per_iter\": 1500.0"));
         assert!(text.contains("pre\\\"dict"), "quotes must be escaped: {text}");
+        // extra fields: counts stay integral, fractions keep their point
+        assert!(text.contains("\"nnz_l\": 123456"), "{text}");
+        assert!(text.contains("\"max_wave_width\": 41"), "{text}");
+        assert!(text.contains("\"frac\": 0.25"), "{text}");
         let _ = std::fs::remove_file(&path);
     }
 

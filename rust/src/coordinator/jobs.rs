@@ -77,8 +77,13 @@ impl JobManager {
                 // kernel on any other backend is a misconfiguration (it
                 // would be silently ignored), so fail the job instead
                 let model = match (&spec.inference, &spec.global_cov) {
-                    (Inference::CsFic { m }, Some(g)) => {
-                        GpClassifier::new_cs_fic(spec.cov.clone(), g.clone(), *m)
+                    (Inference::CsFic { m, ordering }, Some(g)) => {
+                        GpClassifier::new_cs_fic_with_ordering(
+                            spec.cov.clone(),
+                            g.clone(),
+                            *m,
+                            *ordering,
+                        )
                     }
                     (_, Some(_)) => Err(format!(
                         "global_cov is only meaningful with Inference::CsFic (got {:?})",
@@ -228,7 +233,7 @@ mod tests {
                 dataset: Dataset { name: "hybrid".into(), x, y },
                 cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
                 global_cov: Some(CovFunction::new(CovKind::Se, 2, 0.6, 3.0)),
-                inference: Inference::CsFic { m: 8 },
+                inference: Inference::CsFic { m: 8, ordering: Ordering::Auto },
                 optimize: false,
             })
             .unwrap();

@@ -46,7 +46,7 @@ use crate::geom::NeighborIndex;
 use crate::gp::covariance::{CovFunction, INDEX_MIN_N};
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::lowrank::InversePatternScratch;
-use crate::sparse::ordering::{compute_ordering, Ordering};
+use crate::sparse::ordering::{self, Ordering};
 use crate::sparse::symbolic::Symbolic;
 use crate::sparse::takahashi::SparseInverse;
 
@@ -123,8 +123,15 @@ pub struct FactorPlan {
     pub pattern_perm: CscMatrix,
     /// Symbolic Cholesky analysis of `pattern_perm`, including the
     /// supernode/wave schedule that drives the parallel numeric
-    /// factorization — every `LdlFactor` of this plan shares it by `Arc`.
+    /// factorization — every `LdlFactor` of this plan shares it by `Arc` —
+    /// and, under nested dissection, the ordering's separator tree.
     pub symbolic: Arc<Symbolic>,
+    /// The concrete ordering this plan's permutation came from. The
+    /// cache's configured choice may be [`Ordering::Auto`]; this is what
+    /// the policy resolved it to at build time (re-resolved on every
+    /// pattern rebuild, since the statistics it reads come from the
+    /// pattern). Never `Auto`.
+    pub ordering: Ordering,
 }
 
 /// Reusable covariance structure for repeated evaluations on one fixed
@@ -186,6 +193,11 @@ fn point_set_fingerprint(x: &[Vec<f64>]) -> u64 {
 }
 
 impl PatternCache {
+    /// A cache computing its factorization plans with `ordering`.
+    /// [`Ordering::Auto`] is resolved per plan build (pattern statistics +
+    /// pool width, `CSGP_ORDERING` override); the concrete choice is
+    /// recorded in [`FactorPlan::ordering`], and a nested-dissection plan
+    /// carries its separator tree inside the symbolic analysis.
     pub fn new(ordering: Ordering) -> PatternCache {
         PatternCache {
             ordering,
@@ -254,18 +266,25 @@ impl PatternCache {
             return (cached, plan.clone());
         }
         let n = x.len();
-        let perm = compute_ordering(&cached.pattern, self.ordering);
-        let pattern_perm = cached.pattern.permute_sym(&perm);
+        // the training inputs are exactly the pattern's node coordinates,
+        // so nested dissection (chosen directly or by the Auto policy)
+        // always gets its geometric-bisection fast path here
+        let ordered = ordering::order(&cached.pattern, self.ordering, Some(x));
+        let pattern_perm = cached.pattern.permute_sym(&ordered.perm);
         let mut xp = vec![Vec::new(); n];
         for old in 0..n {
-            xp[perm[old]] = x[old].clone();
+            xp[ordered.perm[old]] = x[old].clone();
         }
-        let symbolic = Arc::new(Symbolic::analyze(&pattern_perm));
+        let symbolic = Arc::new(Symbolic::analyze_with_septree(
+            &pattern_perm,
+            ordered.septree.map(Arc::new),
+        ));
         let plan = Arc::new(FactorPlan {
-            perm: Arc::new(perm),
+            perm: Arc::new(ordered.perm),
             xp: Arc::new(xp),
             pattern_perm,
             symbolic,
+            ordering: ordered.resolved,
         });
         self.plan = Some(plan.clone());
         (cached, plan)
@@ -377,6 +396,30 @@ mod tests {
         assert_eq!((cache.hits, cache.misses), (0, 3));
         assert_eq!(p3.pattern.n_cols, 120);
         assert_eq!(p3.pattern, cov.cov_matrix(&x3));
+    }
+
+    /// Auto and ND plans: the resolved ordering is recorded (never
+    /// `Auto`), an ND plan threads its separator tree into the symbolic
+    /// analysis, and the structure still reuses across σ²-only steps.
+    #[test]
+    fn auto_and_nd_plans_resolve_and_carry_structure() {
+        let x = random_points(120, 2, 8.0, 31);
+        let mut cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let mut cache = PatternCache::new(Ordering::Nd);
+        let (_, plan) = cache.plan_for(&cov, &x);
+        assert_eq!(plan.ordering, Ordering::Nd);
+        let tree = plan.symbolic.septree.as_ref().expect("nd plan keeps its separator tree");
+        tree.validate(&plan.pattern_perm).unwrap();
+        cov.sigma2 = 2.0; // σ²-only step: same plan, same tree
+        let (_, plan2) = cache.plan_for(&cov, &x);
+        assert!(Arc::ptr_eq(&plan, &plan2));
+
+        let mut auto_cache = PatternCache::new(Ordering::Auto);
+        let (_, aplan) = auto_cache.plan_for(&cov, &x);
+        assert_ne!(aplan.ordering, Ordering::Auto, "Auto must resolve at build time");
+        // whatever it resolved to, the plan is a valid permutation setup
+        assert_eq!(aplan.perm.len(), x.len());
+        assert_eq!(aplan.pattern_perm.n_cols, x.len());
     }
 
     #[test]

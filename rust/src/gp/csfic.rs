@@ -74,9 +74,9 @@ pub struct CsFicEp {
 }
 
 impl CsFicEp {
-    /// Run CS+FIC EP with a private, throwaway [`PatternCache`] (RCM
-    /// ordering on the CS block). Optimizer loops should hold a cache and
-    /// call [`CsFicEp::run_cached`].
+    /// Run CS+FIC EP with a private, throwaway [`PatternCache`] (auto
+    /// ordering policy on the CS block). Optimizer loops should hold a
+    /// cache and call [`CsFicEp::run_cached`].
     pub fn run(
         cov: &AdditiveCov,
         x: &[Vec<f64>],
@@ -84,7 +84,7 @@ impl CsFicEp {
         xu: &[Vec<f64>],
         opts: &EpOptions,
     ) -> Result<CsFicEp, String> {
-        let mut cache = PatternCache::new(Ordering::Rcm);
+        let mut cache = PatternCache::new(Ordering::Auto);
         CsFicEp::run_cached(cov, x, y, xu, opts, None, &mut cache)
     }
 

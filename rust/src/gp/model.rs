@@ -23,7 +23,9 @@ pub enum Inference {
     /// Dense EP with full covariance (the k_se baseline).
     Dense,
     /// The paper's sparse EP (Algorithm 1) with the given fill-reducing
-    /// ordering.
+    /// ordering ([`Ordering::Auto`] lets the policy pick from pattern
+    /// statistics and pool width — the recommended default for this
+    /// factorization-bound backend).
     Sparse(Ordering),
     /// Parallel-EP ablation on the sparse representation.
     Parallel(Ordering),
@@ -31,9 +33,10 @@ pub enum Inference {
     Fic { m: usize },
     /// CS+FIC hybrid: `cov` is the sparse CS (local) term, the globally
     /// supported trend term lives in `GpClassifier::global_cov`, FIC'd
-    /// through `m` k-means inducing inputs. The CS block uses an RCM
-    /// fill-reducing ordering. Build with [`GpClassifier::new_cs_fic`].
-    CsFic { m: usize },
+    /// through `m` k-means inducing inputs. The CS block's fill-reducing
+    /// ordering defaults to [`Ordering::Auto`] (CLI: `--ordering`). Build
+    /// with [`GpClassifier::new_cs_fic`].
+    CsFic { m: usize, ordering: Ordering },
 }
 
 /// Model configuration.
@@ -73,11 +76,24 @@ impl GpClassifier {
         global: CovFunction,
         m: usize,
     ) -> Result<GpClassifier, String> {
+        GpClassifier::new_cs_fic_with_ordering(cs, global, m, Ordering::Auto)
+    }
+
+    /// [`GpClassifier::new_cs_fic`] with an explicit fill-reducing
+    /// ordering for the CS block (the plain constructor uses
+    /// [`Ordering::Auto`]) — the single place the choice enters, so
+    /// callers never patch `inference` after construction.
+    pub fn new_cs_fic_with_ordering(
+        cs: CovFunction,
+        global: CovFunction,
+        m: usize,
+        ordering: Ordering,
+    ) -> Result<GpClassifier, String> {
         let add = AdditiveCov::new(global, cs)?; // validates support + dims
         let n_params = add.n_params();
         Ok(GpClassifier {
             cov: add.cs,
-            inference: Inference::CsFic { m },
+            inference: Inference::CsFic { m, ordering },
             global_cov: Some(add.global),
             prior: Some(HyperPrior::paper_default(n_params)),
             ep_opts: EpOptions::default(),
@@ -90,8 +106,9 @@ impl GpClassifier {
     /// so structure is re-analysed only when the support radius grows.
     fn fresh_cache(&self) -> PatternCache {
         let ordering = match &self.inference {
-            Inference::Sparse(ord) | Inference::Parallel(ord) => *ord,
-            Inference::CsFic { .. } => Ordering::Rcm,
+            Inference::Sparse(ord)
+            | Inference::Parallel(ord)
+            | Inference::CsFic { ordering: ord, .. } => *ord,
             Inference::Dense | Inference::Fic { .. } => Ordering::Natural,
         };
         PatternCache::new(ordering)
@@ -102,7 +119,7 @@ impl GpClassifier {
     /// shared by `fit` and `infer_only`, FIC and CS+FIC.
     fn inducing_inputs(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
         match &self.inference {
-            Inference::Fic { m } | Inference::CsFic { m } => {
+            Inference::Fic { m } | Inference::CsFic { m, .. } => {
                 crate::data::kmeans::kmeans(x, *m, 25, 0xf1c)
             }
             _ => Vec::new(),
@@ -533,7 +550,7 @@ mod tests {
         let (x, y) = blob_data(20, 5);
         let model = GpClassifier::new(
             CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
-            Inference::CsFic { m: 5 },
+            Inference::CsFic { m: 5, ordering: Ordering::Auto },
         );
         assert!(model.infer_only(&x, &y).is_err());
         assert!(model.fit(&x, &y).is_err());

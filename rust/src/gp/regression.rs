@@ -17,11 +17,12 @@ use crate::rng::Rng;
 use crate::sparse::cholesky::LdlFactor;
 use crate::sparse::ordering::Ordering;
 
-/// Regression is factorization-bound, so its throwaway caches use the
-/// min-degree ordering: RCM's banded etrees are near-paths, while
-/// min-degree keeps fill down on irregular CS patterns *and* gives the
-/// supernodal kernel wide assembly-tree waves (docs/ARCHITECTURE.md §4).
-const REGRESSION_ORDERING: Ordering = Ordering::MinDegree;
+/// Regression is factorization-bound, so its throwaway caches let the
+/// auto policy pick the ordering from pattern statistics and pool width
+/// (quotient min-degree when serial, nested dissection when the
+/// supernodal kernel has threads to feed — docs/ARCHITECTURE.md
+/// §Ordering layer); `CSGP_ORDERING` overrides the choice.
+const REGRESSION_ORDERING: Ordering = Ordering::Auto;
 
 /// log marginal likelihood of GP regression with iid noise σn²:
 /// `−½ yᵀ(K+σn²I)⁻¹y − ½ log|K+σn²I| − n/2 log 2π`.

@@ -6,7 +6,10 @@
 //! L3 (rust coordinator) layer of a three-layer rust + JAX + Pallas stack:
 //!
 //! * [`sparse`] — from-scratch sparse linear algebra: CSC matrices,
-//!   elimination trees, symbolic analysis with supernode detection, a
+//!   elimination trees, the fill-reducing ordering subsystem (RCM,
+//!   quotient-graph min-degree, nested dissection with separator trees,
+//!   and the pattern-statistics `Auto` policy the factorization-bound
+//!   backends default to), symbolic analysis with supernode detection, a
 //!   supernodal wave-parallel LDLᵀ factorization (with the serial
 //!   up-looking kernel kept as its oracle), sparse triangular solves,
 //!   rank-one update/downdate, the Davis–Hager row-modification

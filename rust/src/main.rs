@@ -3,9 +3,11 @@
 //!
 //! Subcommands (argument parsing is hand-rolled; no clap offline):
 //!
-//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic|csfic>] [--optimize]`
+//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic|csfic>] [--ordering <natural|rcm|mindeg|nd|auto>] [--optimize]`
 //!   (`csfic` pairs the compact `--cov` with a global SE term;
-//!   `--global-lengthscale` and `--m` tune the hybrid)
+//!   `--global-lengthscale` and `--m` tune the hybrid; `--ordering`
+//!   defaults to `auto` — the pattern-statistics policy — and applies to
+//!   every sparse-factorization backend, `csfic` included)
 //! * `cv        --data uci:<name> --cov pp3 --folds 10`
 //! * `serve     --n <train size> [--requests <r>] [--batch <b>]` — demo server + load
 //! * `artifacts-check` — verify the PJRT artifacts load and agree with native code
@@ -65,7 +67,7 @@ fn build_model(flags: &HashMap<String, String>, dim: usize) -> Result<GpClassifi
     let s2: f64 = flags.get("magnitude").map(|s| s.parse().unwrap()).unwrap_or(1.0);
     let cov = CovFunction::new(kind, dim, s2, ls);
     let ordering: Ordering =
-        flags.get("ordering").map(String::as_str).unwrap_or("rcm").parse()?;
+        flags.get("ordering").map(String::as_str).unwrap_or("auto").parse()?;
     let inference_str = flags.get("inference").map(String::as_str).unwrap_or("sparse");
     if inference_str == "csfic" {
         // CS+FIC hybrid: --cov is the compact local term, the global SE
@@ -76,7 +78,8 @@ fn build_model(flags: &HashMap<String, String>, dim: usize) -> Result<GpClassifi
             .map(|s| s.parse().unwrap())
             .unwrap_or(2.0 * ls);
         let global = CovFunction::new(CovKind::Se, dim, s2, gls);
-        return GpClassifier::new_cs_fic(cov, global, m);
+        // the CLI ordering drives the hybrid's CS block too
+        return GpClassifier::new_cs_fic_with_ordering(cov, global, m, ordering);
     }
     let inference = match inference_str {
         "dense" => Inference::Dense,

@@ -10,10 +10,14 @@
 //! * [`etree`] — elimination tree, postorder, depth/height level waves
 //!   (the parallel schedules of the Takahashi inverse and the numeric
 //!   factorization).
-//! * [`ordering`] — fill-reducing permutations (RCM, greedy min-degree).
+//! * [`ordering`] — the fill-reducing ordering subsystem: RCM,
+//!   quotient-graph minimum degree, nested dissection with separator
+//!   trees, and the `Auto` policy that picks among them from pattern
+//!   statistics and pool width.
 //! * [`symbolic`] — static symbolic Cholesky analysis (pattern incl. fill,
 //!   row-structure map used by the row-modification kernel, supernode
-//!   partition + assembly-tree wave schedule).
+//!   partition + assembly-tree wave schedule, the threaded-through
+//!   separator tree of a nested-dissection ordering).
 //! * [`cholesky`] — numeric LDLᵀ on the static pattern: supernodal
 //!   wave-parallel kernel (default) plus the serial up-looking oracle.
 //! * [`triangular`] — dense- and sparse-RHS triangular solves.

@@ -1,0 +1,314 @@
+//! Fill-reducing ordering subsystem.
+//!
+//! The cost of every numeric stage downstream — symbolic analysis, the
+//! supernodal LDLᵀ, Takahashi, Woodbury — is set here: the permutation
+//! decides both the *fill* (`nnz(L)`) and the *shape* of the elimination
+//! tree, hence how wide the assembly-tree waves of the parallel
+//! factorization fan out. The paper uses AMD and lists an ordering
+//! comparison as future work; this module provides that comparison as a
+//! family of interchangeable algorithms plus a policy that picks among
+//! them:
+//!
+//! * [`rcm`] — reverse Cuthill–McKee (bandwidth reduction). Cheap and
+//!   solid on banded geometric problems, but its etrees are near-paths:
+//!   almost nothing for the wave-parallel factorization to fan out on.
+//! * [`mindeg`] — minimum degree on a **quotient graph** (external
+//!   degrees, element absorption, supervariable merging — the AMD
+//!   family). Near-linear in practice and usable at serving-scale `n`;
+//!   the old clique-forming greedy survives as
+//!   [`mindeg::min_degree_greedy`], the fill oracle it is tested against.
+//! * [`nd`] — nested dissection: recursive vertex bisection (geometric
+//!   median split when the caller has point coordinates, BFS level-set
+//!   plus Fiduccia-style boundary refinement on the bare pattern graph)
+//!   producing a permutation *and* an explicit [`SeparatorTree`]. ND's
+//!   balanced separator hierarchy is what gives the supernodal
+//!   factorization wide, balanced assembly-tree waves.
+//! * [`auto`] — the [`Ordering::Auto`] policy: picks among the three from
+//!   cheap pattern statistics (n, density, estimated bandwidth) and the
+//!   worker-pool width. Factorization-bound callers (`Inference::Sparse`,
+//!   `Parallel`, `CsFic`, `gp::regression`) default to it; the
+//!   `CSGP_ORDERING` environment variable overrides its choice (the CI
+//!   hook — see `testutil::forced_ordering`).
+//!
+//! All orderings are exact: they permute the problem, never approximate
+//! it, so EP results are identical up to the permutation and the
+//! bitwise-determinism contract of the parallel factorization holds under
+//! every one of them. The `abl_ordering` bench compares fill, ordering
+//! time, factor time and wave shape across the whole family.
+
+use crate::sparse::csc::CscMatrix;
+
+pub mod auto;
+pub mod mindeg;
+pub mod nd;
+pub mod rcm;
+
+pub use auto::{auto_select, PatternStats};
+pub use mindeg::{min_degree, min_degree_greedy};
+pub use nd::{nested_dissection, SepNode, SeparatorTree};
+pub use rcm::rcm;
+
+/// Which fill-reducing ordering to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ordering {
+    /// Identity permutation.
+    Natural,
+    /// Reverse Cuthill–McKee (bandwidth-reducing BFS).
+    Rcm,
+    /// Quotient-graph minimum degree (the AMD family).
+    MinDegree,
+    /// Nested dissection (recursive bisection + separator tree).
+    Nd,
+    /// Pick among the above from pattern statistics and pool width
+    /// (see [`auto_select`]); `CSGP_ORDERING` overrides the choice.
+    Auto,
+}
+
+/// Every name `FromStr for Ordering` accepts (canonical spelling first).
+pub const ORDERING_NAMES: &[&str] =
+    &["natural", "rcm", "mindeg", "min-degree", "nd", "nested-dissection", "auto"];
+
+impl std::str::FromStr for Ordering {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "natural" => Ok(Ordering::Natural),
+            "rcm" => Ok(Ordering::Rcm),
+            "mindeg" | "min-degree" => Ok(Ordering::MinDegree),
+            "nd" | "nested-dissection" => Ok(Ordering::Nd),
+            "auto" => Ok(Ordering::Auto),
+            other => Err(format!(
+                "unknown ordering '{other}' (valid: {})",
+                ORDERING_NAMES.join(", ")
+            )),
+        }
+    }
+}
+
+/// The outcome of [`order`]: the permutation, the concrete method that
+/// produced it (`Auto` resolved to one of the real algorithms), and —
+/// for nested dissection — the separator tree, which
+/// [`crate::sparse::symbolic::Symbolic`] threads through to the
+/// supernodal schedule.
+#[derive(Clone, Debug)]
+pub struct OrderingResult {
+    /// old index -> new index.
+    pub perm: Vec<usize>,
+    /// The algorithm that actually ran (never `Auto`).
+    pub resolved: Ordering,
+    /// ND's separator hierarchy, in *permuted* column coordinates.
+    pub septree: Option<SeparatorTree>,
+}
+
+/// Compute a fill-reducing ordering for symmetric `a`.
+///
+/// `points` are the geometric coordinates of the pattern's nodes in the
+/// *same index order as `a`'s columns*, when the caller has them (the
+/// covariance pipeline always does — they are the training inputs the
+/// `geom::NeighborIndex` was built over). Nested dissection uses them for
+/// its geometric-bisection fast path; every other method ignores them.
+pub fn order(a: &CscMatrix, method: Ordering, points: Option<&[Vec<f64>]>) -> OrderingResult {
+    // Auto reads the *configured* pool width (CSGP_THREADS / machine
+    // parallelism), not the scope-capped current width: a
+    // `with_max_threads` scope must never change which structure gets
+    // built, or the bitwise-at-any-width contract (and the width sweeps
+    // in `perf_parallel` / `pool_width_never_changes_any_result`) would
+    // silently compare different factorizations.
+    let resolved = match method {
+        Ordering::Auto => auto::resolve(a, crate::par::default_threads()),
+        m => m,
+    };
+    let (perm, septree) = match resolved {
+        Ordering::Natural => ((0..a.n_rows).collect(), None),
+        Ordering::Rcm => (rcm(a), None),
+        Ordering::MinDegree => (min_degree(a), None),
+        Ordering::Nd => {
+            let (perm, tree) = nested_dissection(a, points);
+            (perm, Some(tree))
+        }
+        Ordering::Auto => unreachable!("Auto resolves to a concrete method"),
+    };
+    OrderingResult { perm, resolved, septree }
+}
+
+/// Compute a permutation (old index -> new index) for symmetric `a`.
+/// Pattern-only entry point: nested dissection falls back to graph
+/// bisection and the separator tree is dropped — callers that want the
+/// geometric fast path or the tree use [`order`].
+pub fn compute_ordering(a: &CscMatrix, method: Ordering) -> Vec<usize> {
+    order(a, method, None).perm
+}
+
+/// Adjacency lists (excluding the diagonal) from a symmetric pattern.
+pub(crate) fn adjacency(a: &CscMatrix) -> Vec<Vec<usize>> {
+    let n = a.n_rows;
+    let mut adj = vec![Vec::new(); n];
+    for j in 0..n {
+        let (rows, _) = a.col(j);
+        for &i in rows {
+            if i != j {
+                adj[j].push(i);
+            }
+        }
+    }
+    adj
+}
+
+#[cfg(test)]
+pub(crate) mod testfix {
+    //! Shared fixtures for the ordering submodule tests.
+    use super::*;
+    use crate::sparse::symbolic::Symbolic;
+
+    pub fn is_permutation(p: &[usize]) -> bool {
+        let mut seen = vec![false; p.len()];
+        for &i in p {
+            if i >= p.len() || seen[i] {
+                return false;
+            }
+            seen[i] = true;
+        }
+        true
+    }
+
+    /// nnz(L) of `a` under ordering `ord` (pattern-only path).
+    pub fn fill_with(a: &CscMatrix, ord: Ordering) -> usize {
+        fill_of(a, &compute_ordering(a, ord))
+    }
+
+    /// nnz(L) of `a` under an explicit permutation.
+    pub fn fill_of(a: &CscMatrix, perm: &[usize]) -> usize {
+        Symbolic::analyze(&a.permute_sym(perm)).nnz_l()
+    }
+
+    /// A compact-support covariance pattern over random 2-D points — the
+    /// geometry the paper's matrices come from. Returns the SPD matrix
+    /// (`K + I`) and the points (for ND's geometric path).
+    pub fn cs_pattern(n: usize, ls: f64, seed: u64) -> (CscMatrix, Vec<Vec<f64>>) {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        let side = (n as f64).sqrt() * 0.45;
+        let x = crate::testutil::random_points(n, 2, side.max(4.0), seed);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, ls);
+        let mut k = cov.cov_matrix(&x);
+        for j in 0..k.n_cols {
+            *k.get_mut(j, j) += 1.0;
+        }
+        (k, x)
+    }
+
+    pub fn arrow(n: usize) -> CscMatrix {
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i > 0 {
+                t.push((0, i, 1.0));
+                t.push((i, 0, 1.0));
+            }
+        }
+        CscMatrix::from_triplets(n, n, &t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testfix::*;
+    use super::*;
+    use crate::testutil::random_sparse_spd;
+
+    const ALL: [Ordering; 4] =
+        [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree, Ordering::Nd];
+
+    #[test]
+    fn orderings_are_permutations() {
+        for seed in 0..4 {
+            let a = random_sparse_spd(40, 0.1, seed + 500);
+            for ord in ALL {
+                let p = compute_ordering(&a, ord);
+                assert!(is_permutation(&p), "{ord:?} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn orderings_are_deterministic() {
+        // same pattern -> bit-identical permutation, across repeated runs
+        // and on both random-SPD and CS-geometry patterns
+        for seed in 0..3 {
+            let a = random_sparse_spd(60, 0.08, seed + 40);
+            let (k, x) = cs_pattern(150, 1.5, seed);
+            for ord in ALL {
+                assert_eq!(
+                    compute_ordering(&a, ord),
+                    compute_ordering(&a, ord),
+                    "{ord:?} seed {seed} (spd)"
+                );
+                let r1 = order(&k, ord, Some(&x));
+                let r2 = order(&k, ord, Some(&x));
+                assert_eq!(r1.perm, r2.perm, "{ord:?} seed {seed} (cs)");
+            }
+        }
+    }
+
+    #[test]
+    fn from_str_roundtrip_and_error_lists_all_names() {
+        for name in ORDERING_NAMES {
+            let ord: Ordering = name.parse().unwrap_or_else(|e| panic!("{name}: {e}"));
+            let _ = ord;
+        }
+        assert_eq!("nd".parse::<Ordering>(), Ok(Ordering::Nd));
+        assert_eq!("auto".parse::<Ordering>(), Ok(Ordering::Auto));
+        let err = "bogus".parse::<Ordering>().unwrap_err();
+        for name in ORDERING_NAMES {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn arrow_matrix_reordering_kills_fill() {
+        // arrow pointing the wrong way: natural ordering gives full fill,
+        // the fill-reducing methods should order the hub last (exactly so
+        // for min-degree; ND puts the hub in the root separator).
+        let n = 30;
+        let a = arrow(n);
+        let natural = fill_with(&a, Ordering::Natural);
+        let rcm_fill = fill_with(&a, Ordering::Rcm);
+        let md_fill = fill_with(&a, Ordering::MinDegree);
+        let nd_fill = fill_with(&a, Ordering::Nd);
+        assert_eq!(natural, n * (n + 1) / 2); // dense
+        assert!(rcm_fill < natural / 2, "rcm {rcm_fill} vs natural {natural}");
+        assert_eq!(md_fill, 2 * n - 1, "min-degree should give no fill");
+        assert_eq!(nd_fill, 2 * n - 1, "nd should give no fill on a star");
+    }
+
+    #[test]
+    fn reordering_reduces_fill_on_geometric_like_matrices() {
+        let a = random_sparse_spd(60, 0.07, 77);
+        let natural = fill_with(&a, Ordering::Natural);
+        let best = fill_with(&a, Ordering::MinDegree);
+        assert!(best <= natural, "min-degree {best} vs natural {natural}");
+    }
+
+    #[test]
+    fn fill_comparison_on_cs_geometry() {
+        // the paper's workload: 2-D compact-support patterns. Both real
+        // fill reducers must beat natural by a wide margin, and ND must be
+        // in the same league as min-degree (its fill optimality class).
+        for seed in [3u64, 9] {
+            let (k, x) = cs_pattern(400, 1.6, seed);
+            let natural = fill_with(&k, Ordering::Natural);
+            let rcm_fill = fill_with(&k, Ordering::Rcm);
+            let md_fill = fill_with(&k, Ordering::MinDegree);
+            let nd_graph = fill_with(&k, Ordering::Nd);
+            let nd_geom = fill_of(&k, &order(&k, Ordering::Nd, Some(&x)).perm);
+            assert!(md_fill < natural, "seed {seed}: md {md_fill} vs natural {natural}");
+            assert!(rcm_fill < natural, "seed {seed}: rcm {rcm_fill} vs natural {natural}");
+            let best = md_fill.min(rcm_fill);
+            for (name, f) in [("nd/graph", nd_graph), ("nd/geom", nd_geom)] {
+                assert!(
+                    f <= natural && f <= best * 2,
+                    "seed {seed}: {name} fill {f} vs best {best}, natural {natural}"
+                );
+            }
+        }
+    }
+}

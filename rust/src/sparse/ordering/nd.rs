@@ -1,0 +1,689 @@
+//! Nested dissection: recursive vertex bisection with an explicit
+//! separator tree.
+//!
+//! ND orders each half of a bisected graph before the separator that
+//! disconnects them, recursively: eliminating a half never creates fill
+//! in the other half, so the elimination tree decomposes into the two
+//! halves' subtrees hanging under the separator's chain. The recursion
+//! therefore yields (a) near-optimal fill on geometric graphs and (b) a
+//! **balanced** assembly tree — wide leaf waves for the supernodal
+//! parallel factorization, where RCM's banded etrees degenerate to
+//! near-paths (see `docs/ARCHITECTURE.md` §Ordering layer).
+//!
+//! Two bisection strategies:
+//!
+//! * **geometric** (fast path, used when the caller passes point
+//!   coordinates — the covariance pipeline always has them): median split
+//!   along the widest-spread axis, then the boundary vertices of one side
+//!   become the separator. `O(len log len)` per level.
+//! * **graph** (pattern-only): BFS level sets from a pseudo-peripheral
+//!   vertex; the cut level with the smallest vertex count inside the
+//!   balanced band becomes the separator.
+//!
+//! Both cuts are polished by a few Fiduccia-style single-vertex passes
+//! (move separator vertices whose neighborhood lies on one side; shift
+//! zero-gain vertices toward the lighter side), and every subproblem at
+//! or below [`ND_LEAF`] vertices is ordered by the greedy min-degree —
+//! the classic ND leaf treatment.
+//!
+//! The returned [`SeparatorTree`] describes the recursion in *permuted*
+//! column coordinates; [`crate::sparse::symbolic::Symbolic`] carries it
+//! so schedulers and benches can see the block hierarchy behind the
+//! assembly-tree waves, and validates the separator invariant (no pattern
+//! edge between sibling branches) in debug builds.
+
+use crate::sparse::csc::CscMatrix;
+
+/// Subgraphs at or below this size are ordered directly (greedy
+/// min-degree) instead of being bisected further.
+pub const ND_LEAF: usize = 64;
+
+/// Recursion depth cap — a backstop for adversarial graphs where
+/// bisection keeps degenerating; the remainder is ordered as one leaf.
+const ND_MAX_DEPTH: usize = 64;
+
+/// One node of the dissection recursion, in permuted column coordinates.
+///
+/// The node's subtree owns columns `start..end`; its two children (when
+/// present) own the leading sub-ranges and the separator owns the tail
+/// `sep_start..end`. Leaves have no separator: `sep_start == start`, the
+/// whole range is the leaf block.
+#[derive(Clone, Debug)]
+pub struct SepNode {
+    pub start: usize,
+    pub end: usize,
+    pub sep_start: usize,
+    /// Child node ids (empty for leaves, otherwise exactly two).
+    pub children: Vec<usize>,
+    /// Parent node id (`usize::MAX` at the root).
+    pub parent: usize,
+}
+
+impl SepNode {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Columns of this node's own block: the separator for internal
+    /// nodes, the whole range for leaves.
+    pub fn block(&self) -> std::ops::Range<usize> {
+        self.sep_start..self.end
+    }
+}
+
+/// The dissection hierarchy: node 0 is the root; children always carry
+/// larger ids than their parent.
+#[derive(Clone, Debug)]
+pub struct SeparatorTree {
+    pub nodes: Vec<SepNode>,
+}
+
+impl SeparatorTree {
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of levels (a single leaf tree has depth 1).
+    pub fn depth(&self) -> usize {
+        let mut depth = vec![0usize; self.nodes.len()];
+        let mut max = 0;
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.parent != usize::MAX {
+                depth[id] = depth[node.parent] + 1;
+            }
+            max = max.max(depth[id]);
+        }
+        max + 1
+    }
+
+    /// Check the separator invariant on the *permuted* pattern: for every
+    /// internal node, no entry of `a_perm` connects the two children's
+    /// column ranges (the separator disconnects them, and elimination
+    /// preserves that — so the factor's fill cannot cross either).
+    pub fn validate(&self, a_perm: &CscMatrix) -> Result<(), String> {
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.is_leaf() {
+                continue;
+            }
+            let (l, r) = (&self.nodes[node.children[0]], &self.nodes[node.children[1]]);
+            if l.start != node.start || l.end != r.start || r.end != node.sep_start {
+                return Err(format!(
+                    "node {id}: child ranges [{}, {}) + [{}, {}) do not tile [{}, {})",
+                    l.start, l.end, r.start, r.end, node.start, node.sep_start
+                ));
+            }
+            for j in l.start..l.end {
+                let (rows, _) = a_perm.col(j);
+                for &i in rows {
+                    if i >= r.start && i < r.end {
+                        return Err(format!(
+                            "node {id}: pattern edge ({i}, {j}) crosses the cut \
+                             [{}, {}) x [{}, {})",
+                            l.start, l.end, r.start, r.end
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Where a vertex currently sits during one bisection.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Side {
+    A,
+    B,
+    Sep,
+}
+
+struct Dissector<'a> {
+    adj: Vec<Vec<usize>>,
+    points: Option<&'a [Vec<f64>]>,
+    perm: Vec<usize>,
+    nodes: Vec<SepNode>,
+    /// Scratch keyed by original vertex id, valid while stamped.
+    side: Vec<Side>,
+    in_set: Vec<usize>,
+    set_stamp: usize,
+    level: Vec<usize>,
+    visited: Vec<usize>,
+    visit_stamp: usize,
+}
+
+/// Compute the nested-dissection ordering of symmetric `a`. `points`
+/// (same index order as `a`'s columns) enable the geometric fast path.
+/// Returns the permutation (old -> new) and the separator tree in
+/// permuted coordinates.
+pub fn nested_dissection(
+    a: &CscMatrix,
+    points: Option<&[Vec<f64>]>,
+) -> (Vec<usize>, SeparatorTree) {
+    let n = a.n_rows;
+    if n == 0 {
+        let root =
+            SepNode { start: 0, end: 0, sep_start: 0, children: vec![], parent: usize::MAX };
+        return (Vec::new(), SeparatorTree { nodes: vec![root] });
+    }
+    let points = points.filter(|p| p.len() == n);
+    let mut d = Dissector {
+        adj: super::adjacency(a),
+        points,
+        perm: vec![0usize; n],
+        nodes: Vec::new(),
+        side: vec![Side::A; n],
+        in_set: vec![0usize; n],
+        set_stamp: 0,
+        level: vec![0usize; n],
+        visited: vec![0usize; n],
+        visit_stamp: 0,
+    };
+    let all: Vec<usize> = (0..n).collect();
+    d.dissect(all, 0, usize::MAX, 0);
+    let tree = SeparatorTree { nodes: d.nodes };
+    (d.perm, tree)
+}
+
+impl Dissector<'_> {
+    /// Order `verts` into permuted positions `base..base + verts.len()`;
+    /// returns the tree node id.
+    fn dissect(&mut self, verts: Vec<usize>, base: usize, parent: usize, depth: usize) -> usize {
+        let len = verts.len();
+        let id = self.nodes.len();
+        self.nodes.push(SepNode {
+            start: base,
+            end: base + len,
+            sep_start: base, // leaf layout until a split succeeds
+            children: Vec::new(),
+            parent,
+        });
+        if len <= ND_LEAF || depth >= ND_MAX_DEPTH {
+            self.order_leaf(&verts, base);
+            return id;
+        }
+        match self.bisect(&verts) {
+            None => {
+                self.order_leaf(&verts, base);
+                id
+            }
+            Some((aset, bset, sset)) => {
+                let (alen, blen) = (aset.len(), bset.len());
+                let left = self.dissect(aset, base, id, depth + 1);
+                let right = self.dissect(bset, base + alen, id, depth + 1);
+                // separator columns take the tail of the range, in
+                // ascending original order (deterministic)
+                let sep_start = base + alen + blen;
+                let mut sep = sset;
+                sep.sort_unstable();
+                for (k, &v) in sep.iter().enumerate() {
+                    self.perm[v] = sep_start + k;
+                }
+                let node = &mut self.nodes[id];
+                node.sep_start = sep_start;
+                node.children = vec![left, right];
+                id
+            }
+        }
+    }
+
+    /// Order a leaf block with min-degree on the subgraph — the classic
+    /// ND leaf treatment. Small leaves use the greedy (cheap, exact
+    /// degrees); the rare large leaf (depth-cap or clique-ish fallback)
+    /// goes through the quotient-graph method to stay off the greedy's
+    /// quadratic path.
+    fn order_leaf(&mut self, verts: &[usize], base: usize) {
+        let len = verts.len();
+        self.mark_set(verts);
+        let mut local_of = std::collections::HashMap::with_capacity(len);
+        for (li, &v) in verts.iter().enumerate() {
+            local_of.insert(v, li);
+        }
+        let mut t: Vec<(usize, usize, f64)> = (0..len).map(|i| (i, i, 1.0)).collect();
+        for (li, &v) in verts.iter().enumerate() {
+            for &u in &self.adj[v] {
+                if self.contains(u) {
+                    t.push((li, local_of[&u], 1.0));
+                }
+            }
+        }
+        let sub = CscMatrix::from_triplets(len, len, &t);
+        let lperm = if len <= ND_LEAF {
+            super::mindeg::min_degree_greedy(&sub)
+        } else {
+            super::mindeg::min_degree(&sub)
+        };
+        for (li, &v) in verts.iter().enumerate() {
+            self.perm[v] = base + lperm[li];
+        }
+    }
+
+    fn mark_set(&mut self, verts: &[usize]) {
+        self.set_stamp += 1;
+        for &v in verts {
+            self.in_set[v] = self.set_stamp;
+        }
+    }
+
+    #[inline]
+    fn contains(&self, v: usize) -> bool {
+        self.in_set[v] == self.set_stamp
+    }
+
+    /// Split `verts` into (A, B, separator). `None` when no useful split
+    /// exists (e.g. a clique). A and B are non-empty on success.
+    fn bisect(&mut self, verts: &[usize]) -> Option<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+        self.mark_set(verts);
+        // Disconnected subgraph: pack components into two halves, no
+        // separator needed.
+        let comps = self.components(verts);
+        if comps.len() > 1 {
+            let (mut aset, mut bset) = (Vec::new(), Vec::new());
+            for comp in comps {
+                if aset.len() <= bset.len() {
+                    aset.extend(comp);
+                } else {
+                    bset.extend(comp);
+                }
+            }
+            aset.sort_unstable();
+            bset.sort_unstable();
+            return Some((aset, bset, Vec::new()));
+        }
+        let split = match self.points {
+            Some(points) => self.geometric_split(verts, points),
+            None => self.levelset_split(verts),
+        };
+        split.or_else(|| self.half_split(verts))?;
+        self.refine(verts)
+    }
+
+    /// Connected components of the marked subgraph, each sorted. Uses the
+    /// stamped `visited` scratch — no allocation or hashing per call.
+    fn components(&mut self, verts: &[usize]) -> Vec<Vec<usize>> {
+        self.visit_stamp += 1;
+        let mut comps = Vec::new();
+        for &s in verts {
+            if self.visited[s] == self.visit_stamp {
+                continue;
+            }
+            self.visited[s] = self.visit_stamp;
+            let mut comp = vec![s];
+            let mut head = 0;
+            while head < comp.len() {
+                let u = comp[head];
+                head += 1;
+                for k in 0..self.adj[u].len() {
+                    let v = self.adj[u][k];
+                    if self.contains(v) && self.visited[v] != self.visit_stamp {
+                        self.visited[v] = self.visit_stamp;
+                        comp.push(v);
+                    }
+                }
+            }
+            comp.sort_unstable();
+            comps.push(comp);
+        }
+        comps
+    }
+
+    /// Geometric bisection: median split on the widest-spread axis, ties
+    /// broken by vertex id so the cut is a pure function of the input.
+    /// The A-side boundary becomes the separator candidate.
+    fn geometric_split(&mut self, verts: &[usize], points: &[Vec<f64>]) -> Option<()> {
+        let dim = points[verts[0]].len();
+        if dim == 0 {
+            return None;
+        }
+        let mut best_axis = 0;
+        let mut best_spread = f64::NEG_INFINITY;
+        for d in 0..dim {
+            let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            for &v in verts {
+                lo = lo.min(points[v][d]);
+                hi = hi.max(points[v][d]);
+            }
+            if hi - lo > best_spread {
+                best_spread = hi - lo;
+                best_axis = d;
+            }
+        }
+        let mut by_coord: Vec<usize> = verts.to_vec();
+        by_coord.sort_by(|&u, &v| {
+            points[u][best_axis]
+                .partial_cmp(&points[v][best_axis])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(u.cmp(&v))
+        });
+        let half = verts.len() / 2;
+        for &v in &by_coord[..half] {
+            self.side[v] = Side::A;
+        }
+        for &v in &by_coord[half..] {
+            self.side[v] = Side::B;
+        }
+        self.seed_separator_from_boundary(verts);
+        Some(())
+    }
+
+    /// Graph bisection: BFS level sets from a pseudo-peripheral vertex;
+    /// the smallest level inside the balance band `[1/5, 4/5]` becomes
+    /// the separator.
+    fn levelset_split(&mut self, verts: &[usize]) -> Option<()> {
+        let len = verts.len();
+        // pseudo-peripheral start: BFS from the min-degree vertex, then
+        // restart from the last vertex reached
+        let s0 = *verts
+            .iter()
+            .min_by_key(|&&v| (self.adj[v].iter().filter(|&&u| self.contains(u)).count(), v))?;
+        let far = *self.bfs_levels(s0).last().unwrap();
+        let order = self.bfs_levels(far);
+        debug_assert_eq!(order.len(), len, "subgraph must be connected here");
+        let n_levels = self.level[*order.last().unwrap()] + 1;
+        if n_levels < 3 {
+            return None; // diameter too small to cut by levels (clique-ish)
+        }
+        let mut level_count = vec![0usize; n_levels];
+        for &v in &order {
+            level_count[self.level[v]] += 1;
+        }
+        let (mut best_cut, mut best_size) = (usize::MAX, usize::MAX);
+        let mut prefix = 0usize;
+        for (cut, &c) in level_count.iter().enumerate() {
+            if prefix >= len / 5 && prefix + c <= len - len / 5 && c < best_size {
+                best_size = c;
+                best_cut = cut;
+            }
+            prefix += c;
+        }
+        if best_cut == usize::MAX {
+            // no level inside the band: cut at the level holding the median
+            let mut prefix = 0usize;
+            for (cut, &c) in level_count.iter().enumerate() {
+                if prefix + c > len / 2 {
+                    best_cut = cut;
+                    break;
+                }
+                prefix += c;
+            }
+        }
+        for &v in &order {
+            self.side[v] = match self.level[v].cmp(&best_cut) {
+                std::cmp::Ordering::Less => Side::A,
+                std::cmp::Ordering::Equal => Side::Sep,
+                std::cmp::Ordering::Greater => Side::B,
+            };
+        }
+        Some(())
+    }
+
+    /// Last-resort split: halve the BFS order (connected, but balance is
+    /// forced) and seed the separator from the boundary.
+    fn half_split(&mut self, verts: &[usize]) -> Option<()> {
+        let order = self.bfs_levels(*verts.first()?);
+        let half = order.len() / 2;
+        if half == 0 {
+            return None;
+        }
+        for (k, &v) in order.iter().enumerate() {
+            self.side[v] = if k < half { Side::A } else { Side::B };
+        }
+        self.seed_separator_from_boundary(verts);
+        Some(())
+    }
+
+    /// BFS over the marked subgraph from `start`, writing `self.level`
+    /// and returning the visit order. Stamped `visited` scratch — no
+    /// allocation or hashing in the hot loop.
+    fn bfs_levels(&mut self, start: usize) -> Vec<usize> {
+        self.visit_stamp += 1;
+        self.visited[start] = self.visit_stamp;
+        self.level[start] = 0;
+        let mut order = vec![start];
+        let mut head = 0;
+        while head < order.len() {
+            let u = order[head];
+            head += 1;
+            for k in 0..self.adj[u].len() {
+                let v = self.adj[u][k];
+                if self.contains(v) && self.visited[v] != self.visit_stamp {
+                    self.visited[v] = self.visit_stamp;
+                    self.level[v] = self.level[u] + 1;
+                    order.push(v);
+                }
+            }
+        }
+        order
+    }
+
+    /// Move every A vertex with a B neighbor into the separator
+    /// (A/B-only splits -> a valid vertex separator).
+    fn seed_separator_from_boundary(&mut self, verts: &[usize]) {
+        for &v in verts {
+            if self.side[v] != Side::A {
+                continue;
+            }
+            if self.adj[v].iter().any(|&u| self.contains(u) && self.side[u] == Side::B) {
+                self.side[v] = Side::Sep;
+            }
+        }
+    }
+
+    /// Fiduccia-style polish of the cut in `self.side`, then package the
+    /// three sets. Bails out (None) when refinement cannot keep both
+    /// sides meaningfully populated.
+    fn refine(&mut self, verts: &[usize]) -> Option<(Vec<usize>, Vec<usize>, Vec<usize>)> {
+        let len = verts.len();
+        for _pass in 0..4 {
+            let mut moved = false;
+            let (mut na_tot, mut nb_tot) = (0usize, 0usize);
+            for &v in verts {
+                match self.side[v] {
+                    Side::A => na_tot += 1,
+                    Side::B => nb_tot += 1,
+                    Side::Sep => {}
+                }
+            }
+            for &v in verts {
+                if self.side[v] != Side::Sep {
+                    continue;
+                }
+                let (mut na, mut nb) = (0usize, 0usize);
+                for &u in &self.adj[v] {
+                    if !self.contains(u) {
+                        continue;
+                    }
+                    match self.side[u] {
+                        Side::A => na += 1,
+                        Side::B => nb += 1,
+                        Side::Sep => {}
+                    }
+                }
+                // free moves: the vertex only touches one side
+                if na == 0 && nb == 0 {
+                    let to_a = na_tot <= nb_tot;
+                    self.side[v] = if to_a { Side::A } else { Side::B };
+                    if to_a {
+                        na_tot += 1
+                    } else {
+                        nb_tot += 1
+                    }
+                    moved = true;
+                } else if nb == 0 {
+                    self.side[v] = Side::A;
+                    na_tot += 1;
+                    moved = true;
+                } else if na == 0 {
+                    self.side[v] = Side::B;
+                    nb_tot += 1;
+                    moved = true;
+                } else if nb == 1 && na_tot + 1 < nb_tot {
+                    // zero-gain rebalance: v -> A, its single B neighbor
+                    // joins the separator (|S| unchanged, balance better)
+                    let u = *self
+                        .adj[v]
+                        .iter()
+                        .find(|&&u| self.contains(u) && self.side[u] == Side::B)
+                        .unwrap();
+                    self.side[v] = Side::A;
+                    self.side[u] = Side::Sep;
+                    na_tot += 1;
+                    nb_tot -= 1;
+                    moved = true;
+                } else if na == 1 && nb_tot + 1 < na_tot {
+                    let u = *self
+                        .adj[v]
+                        .iter()
+                        .find(|&&u| self.contains(u) && self.side[u] == Side::A)
+                        .unwrap();
+                    self.side[v] = Side::B;
+                    self.side[u] = Side::Sep;
+                    nb_tot += 1;
+                    na_tot -= 1;
+                    moved = true;
+                }
+            }
+            if !moved {
+                break;
+            }
+        }
+        let (mut aset, mut bset, mut sset) = (Vec::new(), Vec::new(), Vec::new());
+        for &v in verts {
+            match self.side[v] {
+                Side::A => aset.push(v),
+                Side::B => bset.push(v),
+                Side::Sep => sset.push(v),
+            }
+        }
+        // a useful split keeps both halves populated; a separator that
+        // swallowed a side (clique-ish graphs) means "stop dissecting"
+        if aset.is_empty() || bset.is_empty() || sset.len() * 2 >= len {
+            return None;
+        }
+        aset.sort_unstable();
+        bset.sort_unstable();
+        Some((aset, bset, sset))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testfix::{cs_pattern, fill_of, is_permutation};
+    use super::*;
+    use crate::sparse::symbolic::Symbolic;
+    use crate::testutil::{random_points, random_sparse_spd};
+
+    fn tree_and_perm(a: &CscMatrix, pts: Option<&[Vec<f64>]>) -> (Vec<usize>, SeparatorTree) {
+        let (perm, tree) = nested_dissection(a, pts);
+        assert!(is_permutation(&perm));
+        (perm, tree)
+    }
+
+    #[test]
+    fn nd_is_a_valid_permutation_on_random_patterns() {
+        for seed in 0..5 {
+            let a = random_sparse_spd(90, 0.05, seed + 10);
+            let (_, tree) = tree_and_perm(&a, None);
+            assert!(tree.n_nodes() >= 1);
+        }
+    }
+
+    /// The defining invariant: no pattern edge crosses the two halves of
+    /// any dissection cut, for both the graph and the geometric path.
+    #[test]
+    fn separator_disconnects_the_halves() {
+        for seed in [1u64, 5, 9] {
+            let (k, x) = cs_pattern(350, 1.5, seed);
+            for pts in [None, Some(x.as_slice())] {
+                let (perm, tree) = tree_and_perm(&k, pts);
+                let kp = k.permute_sym(&perm);
+                tree.validate(&kp).unwrap_or_else(|e| {
+                    panic!("seed {seed} geometric={}: {e}", pts.is_some())
+                });
+                assert!(tree.depth() > 1, "n = 350 must actually dissect");
+            }
+        }
+        // pattern-only path on a non-geometric matrix
+        let a = random_sparse_spd(200, 0.03, 77);
+        let (perm, tree) = tree_and_perm(&a, None);
+        tree.validate(&a.permute_sym(&perm)).unwrap();
+    }
+
+    #[test]
+    fn tree_ranges_tile_the_column_space() {
+        let (k, x) = cs_pattern(400, 1.4, 2);
+        let (_, tree) = tree_and_perm(&k, Some(&x));
+        let root = &tree.nodes[0];
+        assert_eq!((root.start, root.end), (0, 400));
+        for (id, node) in tree.nodes.iter().enumerate() {
+            if node.is_leaf() {
+                assert_eq!(node.sep_start, node.start, "leaf {id} owns its whole range");
+            } else {
+                assert_eq!(node.children.len(), 2, "internal node {id}");
+                assert!(node.sep_start <= node.end);
+            }
+            if node.parent != usize::MAX {
+                let p = &tree.nodes[node.parent];
+                assert!(p.start <= node.start && node.end <= p.sep_start);
+            }
+        }
+    }
+
+    /// ND's point: a wide, balanced assembly tree. On a 2-D CS pattern
+    /// the widest supernode wave must fan out far beyond RCM's near-path
+    /// etree.
+    #[test]
+    fn nd_waves_fan_out_wider_than_rcm() {
+        let (k, x) = cs_pattern(800, 1.4, 6);
+        let nd = super::super::order(&k, super::super::Ordering::Nd, Some(&x));
+        let rcm = super::super::order(&k, super::super::Ordering::Rcm, None);
+        let s_nd = Symbolic::analyze(&k.permute_sym(&nd.perm));
+        let s_rcm = Symbolic::analyze(&k.permute_sym(&rcm.perm));
+        let w_nd = s_nd.schedule.wave_width_max();
+        let w_rcm = s_rcm.schedule.wave_width_max();
+        assert!(
+            w_nd > w_rcm,
+            "nd max wave width {w_nd} must beat rcm {w_rcm} \
+             (nd waves {}, rcm waves {})",
+            s_nd.schedule.n_waves(),
+            s_rcm.schedule.n_waves()
+        );
+    }
+
+    #[test]
+    fn disconnected_graphs_split_by_component() {
+        // two far-apart clusters: the root split needs no separator
+        let mut x = random_points(60, 2, 3.0, 8);
+        x.extend(random_points(60, 2, 3.0, 9).into_iter().map(|mut p| {
+            p[0] += 100.0;
+            p
+        }));
+        use crate::gp::covariance::{CovFunction, CovKind};
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.5);
+        let mut k = cov.cov_matrix(&x);
+        for j in 0..k.n_cols {
+            *k.get_mut(j, j) += 1.0;
+        }
+        let (perm, tree) = tree_and_perm(&k, Some(&x));
+        tree.validate(&k.permute_sym(&perm)).unwrap();
+        let root = &tree.nodes[0];
+        assert_eq!(root.block().len(), 0, "component split has an empty separator");
+    }
+
+    #[test]
+    fn small_problems_are_a_single_leaf() {
+        let a = random_sparse_spd(ND_LEAF - 1, 0.2, 3);
+        let (_, tree) = tree_and_perm(&a, None);
+        assert_eq!(tree.n_nodes(), 1);
+        assert!(tree.nodes[0].is_leaf());
+    }
+
+    #[test]
+    fn geometric_and_graph_paths_both_reduce_fill() {
+        let (k, x) = cs_pattern(500, 1.5, 12);
+        let natural: usize = Symbolic::analyze(&k).nnz_l();
+        let (pg, _) = nested_dissection(&k, Some(&x));
+        let (pp, _) = nested_dissection(&k, None);
+        assert!(fill_of(&k, &pg) < natural);
+        assert!(fill_of(&k, &pp) < natural);
+    }
+}

@@ -16,8 +16,11 @@
 //! [`crate::gp::cache::PatternCache`] amortizes it across all
 //! hyperparameter evaluations that keep the pattern.
 
+use std::sync::Arc;
+
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::etree::{ereach, etree, height_waves};
+use crate::sparse::ordering::SeparatorTree;
 
 /// Supernode partition of the columns plus the assembly-tree wave
 /// schedule — the static scaffolding of the parallel numeric LDLᵀ.
@@ -113,6 +116,25 @@ impl SupernodeSchedule {
     pub fn wave(&self, w: usize) -> &[usize] {
         &self.wave_snodes[self.wave_ptr[w]..self.wave_ptr[w + 1]]
     }
+
+    /// Widest wave, in supernodes — the schedule's peak task parallelism.
+    /// This is the number the fill-reducing ordering controls: RCM's
+    /// near-path etrees cap it near 1, nested dissection's balanced
+    /// separator hierarchy fans it out (see `sparse::ordering`).
+    pub fn wave_width_max(&self) -> usize {
+        (0..self.n_waves()).map(|w| self.wave(w).len()).max().unwrap_or(0)
+    }
+
+    /// Widest wave, in columns — the work (not task) width, a load-balance
+    /// ceiling for the chunked dispatch.
+    pub fn wave_cols_max(&self) -> usize {
+        (0..self.n_waves())
+            .map(|w| {
+                self.wave(w).iter().map(|&s| self.columns(s).len()).sum::<usize>()
+            })
+            .max()
+            .unwrap_or(0)
+    }
 }
 
 /// Static symbolic factorization of a symmetric matrix pattern.
@@ -136,12 +158,42 @@ pub struct Symbolic {
     /// Supernode partition + assembly-tree waves (see
     /// [`SupernodeSchedule`]); the parallel schedule of the numeric LDLᵀ.
     pub schedule: SupernodeSchedule,
+    /// The nested-dissection separator tree behind the permutation this
+    /// pattern was analysed in, when the ordering produced one. The
+    /// assembly tree the [`SupernodeSchedule`] waves over is exactly this
+    /// hierarchy refined into supernode chains — eliminating one dissection
+    /// half never reaches into the other, so sibling branches land in
+    /// disjoint etree subtrees and fan out as independent wave tasks. Kept
+    /// here (rather than in the ordering layer) so every factor, bench and
+    /// scheduler holding an `Arc<Symbolic>` can see the block hierarchy
+    /// its waves came from; the separator invariant is re-validated against
+    /// the analysed pattern in debug builds.
+    pub septree: Option<Arc<SeparatorTree>>,
 }
 
 impl Symbolic {
     /// Analyse the pattern of symmetric `a` (full storage, diagonal present).
     pub fn analyze(a: &CscMatrix) -> Symbolic {
+        Symbolic::analyze_with_septree(a, None)
+    }
+
+    /// [`Symbolic::analyze`], threading through the separator tree of the
+    /// (nested-dissection) ordering `a` was permuted with. Debug builds
+    /// re-check the separator invariant — no pattern edge between sibling
+    /// branches — against `a` itself, so a mismatched tree/permutation
+    /// pair fails loudly instead of silently mis-describing the factor.
+    pub fn analyze_with_septree(
+        a: &CscMatrix,
+        septree: Option<Arc<SeparatorTree>>,
+    ) -> Symbolic {
         assert_eq!(a.n_rows, a.n_cols);
+        if let Some(tree) = &septree {
+            debug_assert!(
+                tree.validate(a).is_ok(),
+                "separator tree does not match the permuted pattern: {:?}",
+                tree.validate(a)
+            );
+        }
         let n = a.n_rows;
         let parent = etree(a);
         let mut mark = vec![usize::MAX; n];
@@ -194,7 +246,7 @@ impl Symbolic {
         }
 
         let schedule = SupernodeSchedule::build(&parent, &col_ptr);
-        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap, schedule }
+        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap, schedule, septree }
     }
 
     /// Number of nonzeros in L including the diagonal.
@@ -386,6 +438,57 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Arrow: one wave of n−2 singleton-column supernode leaves, then the
+    /// merged root — the width helpers must read exactly that off the
+    /// schedule.
+    #[test]
+    fn wave_width_helpers_measure_the_schedule() {
+        let n = 8;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, i, 4.0));
+            if i + 1 < n {
+                t.push((i, n - 1, 1.0));
+                t.push((n - 1, i, 1.0));
+            }
+        }
+        let s = Symbolic::analyze(&CscMatrix::from_triplets(n, n, &t));
+        assert_eq!(s.schedule.wave_width_max(), n - 2);
+        assert_eq!(s.schedule.wave_cols_max(), n - 2);
+        assert!(s.septree.is_none(), "plain analyze carries no separator tree");
+    }
+
+    /// A nested-dissection plan threads its separator tree into the
+    /// analysis; the schedule built on it fans out wider than the same
+    /// pattern under RCM (the balanced-assembly-tree claim, checked at
+    /// unit scale — `benches/perf_parallel.rs` tracks it at n >= 4000).
+    #[test]
+    fn separator_tree_threads_into_the_analysis() {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::sparse::ordering::{order, Ordering};
+        use crate::testutil::random_points;
+        let x = random_points(400, 2, 9.0, 3);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3);
+        let mut k = cov.cov_matrix(&x);
+        for j in 0..k.n_cols {
+            *k.get_mut(j, j) += 1.0;
+        }
+        let nd = order(&k, Ordering::Nd, Some(&x));
+        let tree = Arc::new(nd.septree.expect("nd must produce a separator tree"));
+        let s_nd =
+            Symbolic::analyze_with_septree(&k.permute_sym(&nd.perm), Some(tree.clone()));
+        assert!(Arc::ptr_eq(s_nd.septree.as_ref().unwrap(), &tree));
+        s_nd.septree.as_ref().unwrap().validate(&k.permute_sym(&nd.perm)).unwrap();
+        let rcm = order(&k, Ordering::Rcm, None);
+        let s_rcm = Symbolic::analyze(&k.permute_sym(&rcm.perm));
+        assert!(
+            s_nd.schedule.wave_width_max() > s_rcm.schedule.wave_width_max(),
+            "nd wave width {} vs rcm {}",
+            s_nd.schedule.wave_width_max(),
+            s_rcm.schedule.wave_width_max()
+        );
     }
 
     #[test]

@@ -5,6 +5,20 @@
 
 use crate::rng::Rng;
 use crate::sparse::csc::CscMatrix;
+use crate::sparse::ordering::Ordering;
+
+/// The `CSGP_ORDERING` override the `Ordering::Auto` policy honors —
+/// the CI hook that lets one run of the whole suite pin every
+/// Auto-defaulted pipeline to a specific ordering (CI runs the suite
+/// once under `CSGP_ORDERING=nd` so the nested-dissection paths cannot
+/// rot). Explicitly requested orderings are never affected, and every
+/// ordering is exact, so the override can only change structure, never
+/// results. Returns `None` when the variable is unset, `auto`, or
+/// unparsable — this is the same `parse_override` the resolution path
+/// itself runs, so what this reports is what the pipelines do.
+pub fn forced_ordering() -> Option<Ordering> {
+    crate::sparse::ordering::auto::parse_override(std::env::var("CSGP_ORDERING").ok().as_deref())
+}
 
 /// Random sparse symmetric positive-definite matrix: a random sparse
 /// symmetric pattern with `density` off-diagonal fill, values in
@@ -57,6 +71,20 @@ pub fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The hook must report exactly what `Auto` resolution does in this
+    /// process (unset locally; `nd` in the dedicated CI run) — checked
+    /// against a real `order()` call, not a re-derivation of the parse.
+    #[test]
+    fn forced_ordering_matches_live_auto_resolution() {
+        let a = random_sparse_spd(30, 0.2, 1);
+        let resolved = crate::sparse::ordering::order(&a, Ordering::Auto, None).resolved;
+        match forced_ordering() {
+            Some(forced) => assert_eq!(resolved, forced, "override must drive resolution"),
+            // no override: the policy answers RCM at this tiny n
+            None => assert_eq!(resolved, Ordering::Rcm),
+        }
+    }
 
     #[test]
     fn spd_generator_is_spd_and_symmetric() {

@@ -58,13 +58,17 @@ fn every_covariance_family_runs_through_sparse_ep() {
 
 #[test]
 fn ordering_choice_does_not_change_the_answer() {
+    // every ordering — the new nested-dissection and quotient min-degree
+    // included — is exact: EP reaches the same fixed point up to the
+    // permutation, only the fill differs
     let data = cluster(150, 21);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
     let opts = EpOptions { max_sweeps: 100, tol: 1e-10, damping: 1.0 };
-    let runs: Vec<SparseEp> = [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree]
-        .iter()
-        .map(|&o| SparseEp::run(&cov, &data.x, &data.y, o, &opts, None).unwrap())
-        .collect();
+    let runs: Vec<SparseEp> =
+        [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree, Ordering::Nd, Ordering::Auto]
+            .iter()
+            .map(|&o| SparseEp::run(&cov, &data.x, &data.y, o, &opts, None).unwrap())
+            .collect();
     for pair in runs.windows(2) {
         assert!(
             (pair[0].log_z - pair[1].log_z).abs() < 1e-7,
@@ -228,6 +232,20 @@ fn pool_width_never_changes_any_result() {
             (fac.l.clone(), fac.d.clone()),
         )
     });
+    // the same factorization under nested dissection: ND's wide waves put
+    // far more supernodes in flight per wave than RCM, so it is the
+    // ordering that stresses the determinism contract hardest
+    let (nd_lz, nd_fac) = csgp::par::with_max_threads(1, || {
+        let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Nd, &opts).unwrap();
+        let b = csgp::gp::ep_sparse::build_b(&ep.k, &ep.sites.tau);
+        let mut fac = ep.factor.clone();
+        fac.refactor(&b).unwrap();
+        (ep.log_z, (fac.l.clone(), fac.d.clone()))
+    });
+    assert!(
+        (nd_lz - s_lz).abs() < 1e-7,
+        "orderings must agree on logZ: nd {nd_lz} vs rcm {s_lz}"
+    );
     let (h_lz, h_mu, h_sig, h_grad, h_preds) = csgp::par::with_max_threads(1, || {
         let ep = CsFicEp::run(&hybrid, &train.x, &train.y, &xu, &opts).unwrap();
         (
@@ -254,6 +272,15 @@ fn pool_width_never_changes_any_result() {
             fac.refactor(&b).unwrap();
             assert_eq!(fac.l, s_fac.0, "width {width}: factor L bits differ");
             assert_eq!(fac.d, s_fac.1, "width {width}: factor D bits differ");
+
+            let nd_ep =
+                ParallelEp::run(&cov, &train.x, &train.y, Ordering::Nd, &opts).unwrap();
+            assert!(nd_ep.log_z == nd_lz, "width {width}: nd logZ drifted");
+            let nd_b = csgp::gp::ep_sparse::build_b(&nd_ep.k, &nd_ep.sites.tau);
+            let mut fac_nd = nd_ep.factor.clone();
+            fac_nd.refactor(&nd_b).unwrap();
+            assert_eq!(fac_nd.l, nd_fac.0, "width {width}: nd factor L bits differ");
+            assert_eq!(fac_nd.d, nd_fac.1, "width {width}: nd factor D bits differ");
 
             let hep = CsFicEp::run(&hybrid, &train.x, &train.y, &xu, &opts).unwrap();
             assert!(hep.log_z == h_lz, "width {width}: logZ {} vs {}", hep.log_z, h_lz);
