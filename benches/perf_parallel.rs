@@ -9,10 +9,13 @@
 //!
 //! The factor stage runs the same matrix under min-degree (`factor`),
 //! the EP fit's own RCM plan (`factor_rcm`), nested dissection
-//! (`factor_nd`, geometric fast path on the permuted inputs) and the
-//! auto policy (`factor_auto`), recording per-ordering structure —
-//! `nnz_l`, supernode count, wave count, max wave width — next to the
-//! timings so ordering quality stays visible in the perf trajectory.
+//! (`factor_nd`, geometric fast path on the permuted inputs), the auto
+//! policy (`factor_auto`) and ND with relaxed amalgamation disabled
+//! (`factor_nd_strict`, the `CSGP_AMALG=0` configuration), recording
+//! per-ordering structure — `nnz_l`, `padded_nnz`, supernode count and
+//! width, wave count, max wave width, the dense-equivalent `flops` — and
+//! `ns_per_col` next to the timings so ordering and amalgamation quality
+//! stay visible in the perf trajectory.
 //!
 //! Results are printed as a markdown table and written to
 //! `BENCH_parallel.json` (bench, backend, n, threads, ns/iter, plus the
@@ -32,7 +35,7 @@ use csgp::gp::marginal::EpOptions;
 use csgp::sparse::cholesky::LdlFactor;
 use csgp::sparse::csc::CscMatrix;
 use csgp::sparse::ordering::{order, Ordering};
-use csgp::sparse::symbolic::Symbolic;
+use csgp::sparse::symbolic::{AmalgConfig, Symbolic};
 use std::sync::Arc;
 
 const WIDTHS: [usize; 4] = [1, 2, 4, 8];
@@ -47,31 +50,53 @@ struct WidthTimes {
 }
 
 /// Per-ordering structure of a factor target: what the fill-reducing
-/// ordering bought, recorded next to the timings.
+/// ordering and the relaxed amalgamation bought, recorded next to the
+/// timings.
 #[derive(Clone, Copy)]
 struct FactorShape {
     nnz_l: usize,
+    padded_nnz: usize,
     snodes: usize,
+    max_snode_cols: usize,
     waves: usize,
     max_wave_width: usize,
+    /// Dense-equivalent factor work on the stored pattern,
+    /// `Σ_j c_j (c_j + 3)` with `c_j` column j's stored off-diagonals —
+    /// the classic right-looking count, so `flops / time` tracks kernel
+    /// throughput across orderings and amalgamation settings.
+    flops: f64,
 }
 
 impl FactorShape {
     fn of(sym: &Symbolic) -> FactorShape {
+        let flops: f64 = sym
+            .col_ptr
+            .windows(2)
+            .map(|w| {
+                let c = (w[1] - w[0]) as f64;
+                c * (c + 3.0)
+            })
+            .sum();
         FactorShape {
             nnz_l: sym.nnz_l(),
+            padded_nnz: sym.padded_nnz(),
             snodes: sym.schedule.n_snodes(),
+            max_snode_cols: sym.schedule.max_snode_cols(),
             waves: sym.schedule.n_waves(),
             max_wave_width: sym.schedule.wave_width_max(),
+            flops,
         }
     }
 
-    fn extra(&self) -> [(&'static str, f64); 4] {
+    fn extra(&self) -> [(&'static str, f64); 7] {
         [
             ("nnz_l", self.nnz_l as f64),
+            ("padded_nnz", self.padded_nnz as f64),
             ("snodes", self.snodes as f64),
+            ("max_snode_cols", self.max_snode_cols as f64),
             ("waves", self.waves as f64),
             ("max_wave_width", self.max_wave_width as f64),
+            ("flops", self.flops),
         ]
     }
 }
@@ -84,10 +109,15 @@ fn ordered_factor(
     b: &CscMatrix,
     ord: Ordering,
     points: Option<&[Vec<f64>]>,
+    amalg: Option<&AmalgConfig>,
 ) -> (LdlFactor, CscMatrix, FactorShape, Ordering) {
     let res = order(b, ord, points);
     let b_perm = b.permute_sym(&res.perm);
-    let sym = Arc::new(Symbolic::analyze_with_septree(&b_perm, res.septree.map(Arc::new)));
+    let septree = res.septree.map(Arc::new);
+    let sym = Arc::new(match amalg {
+        Some(cfg) => Symbolic::analyze_with(&b_perm, septree, cfg),
+        None => Symbolic::analyze_with_septree(&b_perm, septree),
+    });
     let shape = FactorShape::of(&sym);
     (LdlFactor::identity(sym), b_perm, shape, res.resolved)
 }
@@ -173,7 +203,9 @@ fn measure_factor(
             fmt_duration(stats.median),
             t.t1 / ns
         );
-        rep.push_with(bench, backend, n, w, &stats, &shape.extra());
+        let mut extra: Vec<(&str, f64)> = shape.extra().to_vec();
+        extra.push(("ns_per_col", ns / n as f64));
+        rep.push_with(bench, backend, n, w, &stats, &extra);
     }
     t
 }
@@ -191,16 +223,25 @@ fn factor_stage(
     xp: &[Vec<f64>],
 ) -> Vec<(&'static str, FactorShape, WidthTimes)> {
     let mut out = Vec::new();
-    for (name, ord) in [
-        ("factor", Ordering::MinDegree),
-        ("factor_nd", Ordering::Nd),
-        ("factor_auto", Ordering::Auto),
+    let strict = AmalgConfig::disabled();
+    for (name, ord, amalg) in [
+        ("factor", Ordering::MinDegree, None),
+        ("factor_nd", Ordering::Nd, None),
+        // same ND plan, relaxed amalgamation off: isolates what the
+        // fattened supernodes buy the blocked kernel
+        ("factor_nd_strict", Ordering::Nd, Some(&strict)),
+        ("factor_auto", Ordering::Auto, None),
     ] {
-        let (mut fac, b_ord, shape, resolved) = ordered_factor(b, ord, Some(xp));
+        let (mut fac, b_ord, shape, resolved) = ordered_factor(b, ord, Some(xp), amalg);
         println!(
-            "<!-- {backend}/{name} ({resolved:?}): nnz_l={} snodes={} waves={} \
-             max_wave_width={} -->",
-            shape.nnz_l, shape.snodes, shape.waves, shape.max_wave_width
+            "<!-- {backend}/{name} ({resolved:?}): nnz_l={} padded_nnz={} snodes={} \
+             max_snode_cols={} waves={} max_wave_width={} -->",
+            shape.nnz_l,
+            shape.padded_nnz,
+            shape.snodes,
+            shape.max_snode_cols,
+            shape.waves,
+            shape.max_wave_width
         );
         let t = measure_factor(rep, name, backend, n, &mut fac, &b_ord, shape);
         out.push((name, shape, t));
@@ -209,8 +250,14 @@ fn factor_stage(
     let mut fac = rcm_factor.clone();
     let shape = FactorShape::of(&fac.symbolic);
     println!(
-        "<!-- {backend}/factor_rcm (Rcm): nnz_l={} snodes={} waves={} max_wave_width={} -->",
-        shape.nnz_l, shape.snodes, shape.waves, shape.max_wave_width
+        "<!-- {backend}/factor_rcm (Rcm): nnz_l={} padded_nnz={} snodes={} max_snode_cols={} \
+         waves={} max_wave_width={} -->",
+        shape.nnz_l,
+        shape.padded_nnz,
+        shape.snodes,
+        shape.max_snode_cols,
+        shape.waves,
+        shape.max_wave_width
     );
     let t = measure_factor(rep, "factor_rcm", backend, n, &mut fac, b, shape);
     out.push(("factor_rcm", shape, t));
@@ -220,11 +267,24 @@ fn factor_stage(
 /// Print the ordering-quality summary for one backend's factor stage:
 /// ND-vs-RCM wave widths and the 8-thread nd-vs-best(md, rcm) gate,
 /// with WARNING lines when either target is missed.
-fn factor_summary(backend: &str, rows: &[(&'static str, FactorShape, WidthTimes)]) {
+fn factor_summary(backend: &str, n: usize, rows: &[(&'static str, FactorShape, WidthTimes)]) {
     let get = |name: &str| rows.iter().find(|r| r.0 == name).unwrap();
     let (_, nd_shape, nd_t) = get("factor_nd");
     let (_, rcm_shape, rcm_t) = get("factor_rcm");
     let (_, md_shape, md_t) = get("factor");
+    let (_, strict_shape, strict_t) = get("factor_nd_strict");
+    println!(
+        "{backend} factor nd amalgamation: {:.0} ns/col (snodes {}, padded_nnz {}) vs \
+         strict {:.0} ns/col (snodes {}, padded_nnz {}) at width 1 -> {:.2}x; width 8 {:.2}x",
+        nd_t.t1 / n as f64,
+        nd_shape.snodes,
+        nd_shape.padded_nnz,
+        strict_t.t1 / n as f64,
+        strict_shape.snodes,
+        strict_shape.padded_nnz,
+        strict_t.t1 / nd_t.t1,
+        strict_t.t8 / nd_t.t8,
+    );
     println!(
         "{backend} factor orderings: nd max wave width {} vs rcm {} (md {}); \
          8-thread factor nd {} vs best(md, rcm) {} \
@@ -301,8 +361,8 @@ fn main() {
 
     rep.write().expect("writing BENCH_parallel.json");
     println!();
-    factor_summary("cs", &cs_rows);
-    factor_summary("csfic", &hy_rows);
+    factor_summary("cs", n, &cs_rows);
+    factor_summary("csfic", n, &hy_rows);
     println!(
         "per-sweep variance loop, 4 threads vs 1: cs {:.2}x, csfic {:.2}x \
          (target >= 2.5x on a >= 4-core host)",

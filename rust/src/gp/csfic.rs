@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use crate::gp::cache::{GradScratch, PatternCache};
 use crate::gp::covariance::AdditiveCov;
-use crate::gp::likelihood::probit_site_update;
+use crate::gp::likelihood::SiteBatch;
 use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
 use crate::gp::predict::PredictWorkspace;
 use crate::sparse::cholesky::LdlFactor;
@@ -166,25 +166,21 @@ impl CsFicEp {
         let mut log_z_old = f64::NEG_INFINITY;
         let mut sweeps = 0;
         let mut converged = false;
+        let mut batch = SiteBatch::new();
 
         while sweeps < opts.max_sweeps {
             // batched (parallel-EP) site updates from the current marginals
-            let mut new_tau = sites.tau.clone();
-            let mut new_nu = sites.nu.clone();
+            batch.update(&yp, &mu, &sigma_diag, &sites.tau, &sites.nu);
             for i in 0..n {
-                let Some((lz, tc, nc, tn, nn)) =
-                    probit_site_update(yp[i], mu[i], sigma_diag[i], sites.tau[i], sites.nu[i])
-                else {
+                if !batch.valid[i] {
                     continue;
-                };
-                sites.ln_zhat[i] = lz;
-                sites.tau_cav[i] = tc;
-                sites.nu_cav[i] = nc;
-                new_tau[i] = damping * tn + (1.0 - damping) * sites.tau[i];
-                new_nu[i] = damping * nn + (1.0 - damping) * sites.nu[i];
+                }
+                sites.ln_zhat[i] = batch.ln_zhat[i];
+                sites.tau_cav[i] = batch.tau_cav[i];
+                sites.nu_cav[i] = batch.nu_cav[i];
+                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * sites.tau[i];
+                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * sites.nu[i];
             }
-            sites.tau = new_tau;
-            sites.nu = new_nu;
 
             // one refactor of B = S_B + Us Usᵀ for the whole batch
             let sb = build_sparse_b(&k_cs, &lambda, &sites.tau);
@@ -594,6 +590,7 @@ mod tests {
     use crate::data::kmeans::kmeans;
     use crate::gp::covariance::{CovFunction, CovKind};
     use crate::gp::ep_dense::DenseEp;
+    use crate::gp::likelihood::probit_site_update;
     use crate::testutil::random_points;
 
     fn circle_labels(x: &[Vec<f64>]) -> Vec<f64> {

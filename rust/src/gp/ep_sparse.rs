@@ -24,7 +24,7 @@ use std::sync::Arc;
 
 use crate::gp::cache::PatternCache;
 use crate::gp::covariance::CovFunction;
-use crate::gp::likelihood::probit_site_update;
+use crate::gp::likelihood::probit_site_update_fast;
 use crate::gp::marginal::{ep_log_z, grad_quadratic_term, EpOptions, EpSites};
 use crate::gp::predict::PredictWorkspace;
 use crate::metrics::Metrics;
@@ -163,9 +163,10 @@ impl SparseEp {
                     return Err(format!("negative marginal variance at site {i}: {sigma2_i}"));
                 }
 
-                // probit site update
+                // probit site update (Cody-kernel fast path — the
+                // sequential sweep calls this once per site visit)
                 let Some((lz, tc, nc, mut tn, mut nn)) =
-                    probit_site_update(yp[i], mu_i, sigma2_i, sites.tau[i], sites.nu[i])
+                    probit_site_update_fast(yp[i], mu_i, sigma2_i, sites.tau[i], sites.nu[i])
                 else {
                     continue;
                 };

@@ -13,7 +13,7 @@
 //! k-means placement if anything *favours* FIC in the timing comparison).
 
 use crate::gp::covariance::CovFunction;
-use crate::gp::likelihood::probit_site_update;
+use crate::gp::likelihood::SiteBatch;
 use crate::gp::marginal::{ep_log_z, EpOptions, EpSites};
 use crate::sparse::dense::{DenseCholesky, DenseMatrix};
 
@@ -151,23 +151,20 @@ impl FicEp {
         // zero sites this reproduces the prior marginals exactly
         let mut wb = refresh_posterior(&lambda, &u, &sites, &mut mu, &mut sigma_diag);
 
+        let mut batch = SiteBatch::new();
         while sweeps < opts.max_sweeps {
-            let mut new_tau = sites.tau.clone();
-            let mut new_nu = sites.nu.clone();
+            // batched site updates: one transcendental pass per sweep
+            batch.update(y, &mu, &sigma_diag, &sites.tau, &sites.nu);
             for i in 0..n {
-                let Some((lz, tc, nc, tn, nn)) =
-                    probit_site_update(y[i], mu[i], sigma_diag[i], sites.tau[i], sites.nu[i])
-                else {
+                if !batch.valid[i] {
                     continue;
-                };
-                sites.ln_zhat[i] = lz;
-                sites.tau_cav[i] = tc;
-                sites.nu_cav[i] = nc;
-                new_tau[i] = damping * tn + (1.0 - damping) * sites.tau[i];
-                new_nu[i] = damping * nn + (1.0 - damping) * sites.nu[i];
+                }
+                sites.ln_zhat[i] = batch.ln_zhat[i];
+                sites.tau_cav[i] = batch.tau_cav[i];
+                sites.nu_cav[i] = batch.nu_cav[i];
+                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * sites.tau[i];
+                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * sites.nu[i];
             }
-            sites.tau = new_tau;
-            sites.nu = new_nu;
 
             wb = refresh_posterior(&lambda, &u, &sites, &mut mu, &mut sigma_diag);
             sweeps += 1;

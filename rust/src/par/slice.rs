@@ -67,6 +67,37 @@ impl<'a, T> SyncSlice<'a, T> {
         debug_assert!(i < self.len);
         *self.ptr.add(i)
     }
+
+    /// Borrow `len` contiguous slots starting at `i` as a shared slice —
+    /// the blocked numeric kernels read finished source columns this way
+    /// so the dense inner loops see real slices the compiler can
+    /// autovectorize.
+    ///
+    /// # Safety
+    ///
+    /// `i + len <= len()`, and no thread writes any of those slots for
+    /// the lifetime of the returned borrow (slots finished in earlier
+    /// waves, behind the pool's completion barrier, qualify).
+    #[inline]
+    pub unsafe fn slice(&self, i: usize, len: usize) -> &[T] {
+        debug_assert!(i.checked_add(len).is_some_and(|e| e <= self.len));
+        std::slice::from_raw_parts(self.ptr.add(i), len)
+    }
+
+    /// Borrow `len` contiguous slots starting at `i` mutably — the blocked
+    /// scatter-back writes a whole column in one `copy_from_slice`.
+    ///
+    /// # Safety
+    ///
+    /// `i + len <= len()`, and no other thread reads or writes any of
+    /// those slots for the lifetime of the returned borrow (the pool's
+    /// one-chunk-per-slot contract).
+    #[inline]
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice_mut(&self, i: usize, len: usize) -> &mut [T] {
+        debug_assert!(i.checked_add(len).is_some_and(|e| e <= self.len));
+        std::slice::from_raw_parts_mut(self.ptr.add(i), len)
+    }
 }
 
 #[cfg(test)]

@@ -29,7 +29,11 @@
 //! makes the factor bitwise-identical at any `CSGP_THREADS` width, the
 //! invariant the EP determinism contract (README "Parallelism") rests on.
 //! Width 1 runs the same per-column code inline, so the serial path *is*
-//! the parallel path.
+//! the parallel path. Multi-column supernodes run a dense-panel
+//! micro-kernel instead of the scalar per-column pull (see
+//! `factor_supernode_blocked` — same source order, contiguous
+//! arithmetic); the kernel *choice* depends only on the supernode's
+//! shape, never on the pool, so it cannot perturb width invariance.
 //!
 //! Cost: identical flop count to the up-looking kernel (`Σⱼ |pat(j)|²`
 //! over the fill pattern); the wave barriers add `O(n_waves)` pool
@@ -48,9 +52,13 @@ use crate::sparse::symbolic::Symbolic;
 /// pay a broadcast per level.
 const PAR_WAVE_MIN: usize = 8;
 
-/// Supernodes per chunk when a wave does fan out (leaf supernodes are
-/// cheap; stealing balances the skewed interior ones).
-const SNODE_CHUNK: usize = 4;
+/// Supernodes per chunk when a wave does fan out, scaled with the wave
+/// width: narrow waves take singleton chunks so work stealing can balance
+/// the skewed interior supernodes, wide leaf waves take coarse chunks so
+/// the chunk-cursor traffic stays off the critical path.
+fn snode_chunk(wave_len: usize) -> usize {
+    (wave_len / 32).clamp(1, 8)
+}
 
 /// LDLᵀ factor: unit lower-triangular `L` (strict lower part stored on the
 /// symbolic pattern) and diagonal `D`.
@@ -92,9 +100,8 @@ impl LdlFactor {
     /// of `a` outside it will panic in debug, give wrong results in
     /// release — callers always pass the analysed matrix).
     pub fn factor(symbolic: Arc<Symbolic>, a: &CscMatrix) -> Result<LdlFactor, String> {
-        let n = symbolic.n;
-        let mut f = LdlFactor { symbolic, l: vec![0.0; 0], d: vec![0.0; n] };
-        f.l = vec![0.0; f.symbolic.row_idx.len()];
+        let (n, nnz) = (symbolic.n, symbolic.row_idx.len());
+        let mut f = LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![0.0; n] };
         f.refactor(a)?;
         Ok(f)
     }
@@ -132,21 +139,21 @@ impl LdlFactor {
         {
             let l = SyncSlice::new(&mut self.l);
             let d = SyncSlice::new(&mut self.d);
-            let mut y_inline = vec![0.0; n]; // caller's scratch column
+            let mut ws_inline = FactorScratch::new(&sym); // caller's scratch
             for w in 0..sched.n_waves() {
                 let wave = sched.wave(w);
                 if wave.len() < PAR_WAVE_MIN || crate::par::current_threads() <= 1 {
                     for &s in wave {
-                        factor_supernode(&sym, a, s, &mut y_inline, &l, &d, &failed);
+                        factor_supernode(&sym, a, s, &mut ws_inline, &l, &d, &failed);
                     }
                 } else {
                     crate::par::for_chunks(
                         wave.len(),
-                        SNODE_CHUNK,
-                        || vec![0.0; n],
-                        |y, range| {
+                        snode_chunk(wave.len()),
+                        || FactorScratch::new(&sym),
+                        |ws, range| {
                             for &s in &wave[range] {
-                                factor_supernode(&sym, a, s, y, &l, &d, &failed);
+                                factor_supernode(&sym, a, s, ws, &l, &d, &failed);
                             }
                         },
                     );
@@ -207,10 +214,20 @@ impl LdlFactor {
                 }
                 let lkj = yj / self.d[j];
                 dk -= lkj * yj;
-                let slot = lo + lnz[j];
-                debug_assert_eq!(sym.row_idx[slot], k, "pattern mismatch at ({k},{j})");
+                // `ereach` walks the *true* pattern; the stored column may
+                // interleave amalgamation padding. Advance the cursor past
+                // padded slots — `l` is pre-zeroed, so they stay exactly
+                // 0.0, which is their defined value.
+                let mut slot = lo + lnz[j];
+                while sym.row_idx[slot] != k {
+                    debug_assert!(
+                        sym.row_idx[slot] < k,
+                        "pattern mismatch at ({k},{j})"
+                    );
+                    slot += 1;
+                }
                 self.l[slot] = lkj;
-                lnz[j] += 1;
+                lnz[j] = slot + 1 - lo;
             }
             if dk <= 0.0 {
                 return Err(format!("matrix not positive definite at pivot {k} (d = {dk})"));
@@ -257,20 +274,72 @@ impl LdlFactor {
     }
 }
 
-/// Factor the columns of supernode `s` (ascending). For each column j:
-/// scatter the lower part of `A(:, j)` into the dense scratch `y`, pull
-/// the updates `y ← y − L[:,k] · (L[j,k] d_k)` from every finished source
-/// column `k ∈ row_pattern(j)` in ascending-k order, then emit
-/// `d_j = y_j`, `L[i,j] = y_i / d_j` and re-zero exactly the touched
-/// entries. The ascending-k gather order is what pins bitwise determinism
-/// (see the module docs); the fill rule guarantees every update target is
-/// inside `pat(j)`, so the scratch stays clean.
+/// Per-participant scratch of the numeric factorization: the dense
+/// accumulator column of the scalar (width-1) path plus the frontal-panel
+/// buffers of the blocked path, allocated once per pool participant and
+/// reused across every supernode that participant factors.
+struct FactorScratch {
+    /// Dense scratch column for width-1 supernodes.
+    y: Vec<f64>,
+    /// Global row index → panel row, refreshed per supernode (only the
+    /// supernode's own rows are ever read, so no clearing).
+    map: Vec<usize>,
+    /// Column-major `(w+t) × w` frontal panel, `ld = w + t`.
+    panel: Vec<f64>,
+    /// Panel rows of the current source supernode's update rows.
+    prow: Vec<usize>,
+    /// One update column accumulated densely before the panel scatter.
+    acc: Vec<f64>,
+}
+
+impl FactorScratch {
+    fn new(sym: &Symbolic) -> FactorScratch {
+        FactorScratch {
+            y: vec![0.0; sym.n],
+            map: vec![0; sym.n],
+            panel: Vec::new(),
+            prow: Vec::new(),
+            acc: Vec::new(),
+        }
+    }
+}
+
+/// Factor the columns of supernode `s`. Width-1 supernodes run the scalar
+/// per-column pull ([`factor_supernode_scalar`]); wider supernodes run the
+/// dense-panel kernel ([`factor_supernode_blocked`]). The choice depends
+/// only on the pattern, never on thread count or chunk shape, so the
+/// factor stays bitwise-identical at any pool width.
+fn factor_supernode(
+    sym: &Symbolic,
+    a: &CscMatrix,
+    s: usize,
+    ws: &mut FactorScratch,
+    l: &SyncSlice<'_, f64>,
+    d: &SyncSlice<'_, f64>,
+    failed: &AtomicUsize,
+) {
+    if sym.schedule.columns(s).len() == 1 {
+        factor_supernode_scalar(sym, a, s, &mut ws.y, l, d, failed);
+    } else {
+        factor_supernode_blocked(sym, a, s, ws, l, d, failed);
+    }
+}
+
+/// The scalar path, for singleton supernodes (the panel setup would cost
+/// more than it saves). For its column j: scatter the lower part of
+/// `A(:, j)` into the dense scratch `y`, pull the updates
+/// `y ← y − L[:,k] · (L[j,k] d_k)` from every finished source column
+/// `k ∈ row_pattern(j)` in ascending-k order, then emit `d_j = y_j`,
+/// `L[i,j] = y_i / d_j` and re-zero exactly the touched entries. The
+/// ascending-k gather order is what pins bitwise determinism (see the
+/// module docs); the fill rule guarantees every update target is inside
+/// `pat(j)`, so the scratch stays clean.
 ///
 /// A non-positive pivot is recorded into `failed` (`fetch_min`, so
 /// concurrent failures resolve to the smallest column) and the division
 /// proceeds — IEEE inf/NaN arithmetic is deterministic, the caller stops
 /// scheduling at the wave barrier, and the factor is unspecified on error.
-fn factor_supernode(
+fn factor_supernode_scalar(
     sym: &Symbolic,
     a: &CscMatrix,
     s: usize,
@@ -319,6 +388,142 @@ fn factor_supernode(
             unsafe { l.set(p, y[i] / dj) };
             y[i] = 0.0;
         }
+    }
+}
+
+/// The dense-panel kernel for supernodes of width ≥ 2.
+///
+/// Every column of supernode `[j0, jend)` stores the trapezoidal pattern
+/// `{j+1..jend-1} ∪ T` with `T = pat(jend-1)` (strict supernodes by
+/// suffix nesting, amalgamated ones by padding), so the whole supernode is
+/// one `(w+t) × w` column-major panel with leading dimension `ld = w+t`:
+/// panel rows `0..w` are the supernode's own columns, rows `w..w+t` are
+/// `T`. The kernel gathers `A`, pulls every external update, factors the
+/// panel in place, and scatters back — and because column `j0+c`'s storage
+/// order equals panel rows `c+1..ld`, the scatter is one contiguous copy
+/// per column.
+///
+/// External updates pull per *source supernode* `q` (ascending, from the
+/// schedule's precomputed source list): the update rows are the suffix of
+/// `q`'s top pattern at `≥ j0`, which every column of `q` stores as its
+/// last `m` entries — contiguous slices, so the rank-`w_q` accumulation
+/// `acc += L[rows,k] · (L[j,k] d_k)` runs over real slices the compiler
+/// autovectorizes, with one indexed scatter into the panel per target
+/// column. Summation order (sources ascending, then columns ascending,
+/// then internal elimination ascending) is a pure function of the
+/// pattern, preserving bitwise identity at any pool width.
+///
+/// Pivot failures are recorded exactly as in the scalar path.
+fn factor_supernode_blocked(
+    sym: &Symbolic,
+    a: &CscMatrix,
+    s: usize,
+    ws: &mut FactorScratch,
+    l: &SyncSlice<'_, f64>,
+    d: &SyncSlice<'_, f64>,
+    failed: &AtomicUsize,
+) {
+    let sched = &sym.schedule;
+    let (j0, jend) = (sched.snode_ptr[s], sched.snode_ptr[s + 1]);
+    let w = jend - j0;
+    let ext = &sym.row_idx[sym.col_ptr[jend - 1]..sym.col_ptr[jend]];
+    let t = ext.len();
+    let ld = w + t;
+    let FactorScratch { map, panel, prow, acc, .. } = ws;
+    panel.clear();
+    panel.resize(ld * w, 0.0);
+    for (c, j) in (j0..jend).enumerate() {
+        map[j] = c;
+    }
+    for (r, &i) in ext.iter().enumerate() {
+        map[i] = w + r;
+    }
+
+    // Gather A's lower columns into the panel (diagonal at (c, c)).
+    for c in 0..w {
+        let j = j0 + c;
+        let col = &mut panel[c * ld..(c + 1) * ld];
+        let (arows, avals) = a.col(j);
+        for (&i, &v) in arows.iter().zip(avals) {
+            if i == j {
+                col[c] = v;
+            } else if i > j {
+                debug_assert!(
+                    sym.find(i, j).is_some(),
+                    "A entry ({i},{j}) outside the analysed pattern"
+                );
+                col[map[i]] = v;
+            }
+        }
+    }
+
+    // External rank-k updates, one source supernode at a time, ascending.
+    for &q in sched.sources(s) {
+        let (q0, qend) = (sched.snode_ptr[q], sched.snode_ptr[q + 1]);
+        let tq = &sym.row_idx[sym.col_ptr[qend - 1]..sym.col_ptr[qend]];
+        let i0 = tq.partition_point(|&i| i < j0);
+        let rows = &tq[i0..];
+        let m = rows.len();
+        // Rows ≥ j0 of q's top pattern all live in this panel (fill rule),
+        // and the first nc of them are this supernode's own columns — the
+        // update's target columns.
+        let nc = rows.partition_point(|&i| i < jend);
+        debug_assert!(nc > 0, "source list edge without target columns");
+        prow.clear();
+        prow.extend(rows.iter().map(|&i| map[i]));
+        if acc.len() < m {
+            acc.resize(m, 0.0);
+        }
+        for r in 0..nc {
+            let cj = rows[r] - j0;
+            let accs = &mut acc[r..m];
+            accs.fill(0.0);
+            for k in q0..qend {
+                let hi = sym.col_ptr[k + 1];
+                // SAFETY: column k's last `m` slots are its copy of the
+                // top-pattern suffix; the column finished in an earlier
+                // wave (q is a strict assembly-tree descendant), so reads
+                // race with nothing.
+                let sk = unsafe { l.slice(hi - m, m) };
+                // SAFETY: same earlier-wave argument for d[k].
+                let coef = sk[r] * unsafe { d.get(k) };
+                for (av, &sv) in accs.iter_mut().zip(&sk[r..]) {
+                    *av += sv * coef;
+                }
+            }
+            let col = cj * ld;
+            for (r2, &av) in (r..m).zip(accs.iter()) {
+                panel[col + prow[r2]] -= av;
+            }
+        }
+    }
+
+    // Dense right-looking LDLᵀ of the panel; scatter each finished column.
+    for c in 0..w {
+        let j = j0 + c;
+        let (head, tail) = panel.split_at_mut((c + 1) * ld);
+        let colc = &mut head[c * ld..];
+        let dj = colc[c];
+        if dj <= 0.0 {
+            failed.fetch_min(j, AtomicOrdering::Relaxed);
+        }
+        // SAFETY: slot j of D belongs to this task alone.
+        unsafe { d.set(j, dj) };
+        for v in &mut colc[c + 1..] {
+            *v /= dj;
+        }
+        for c2 in c + 1..w {
+            let coef = colc[c2] * dj;
+            let col2 = &mut tail[(c2 - c - 1) * ld..(c2 - c) * ld];
+            for (o, &v) in col2[c2..].iter_mut().zip(&colc[c2..]) {
+                *o -= v * coef;
+            }
+        }
+        // SAFETY: column j's slots are this task's; its storage order is
+        // exactly panel rows c+1..ld.
+        let lo = sym.col_ptr[j];
+        debug_assert_eq!(sym.col_ptr[j + 1] - lo, ld - c - 1);
+        unsafe { l.slice_mut(lo, ld - c - 1) }.copy_from_slice(&colc[c + 1..]);
     }
 }
 
@@ -425,42 +630,113 @@ mod tests {
 
     /// The supernodal wave-scheduled kernel against the up-looking serial
     /// oracle, on both random SPD patterns and real CS covariance
-    /// patterns: same factor within rounding.
+    /// patterns, with amalgamation on *and* off: same factor within
+    /// rounding (the oracle runs on the same padded pattern — its cursor
+    /// skips padded slots).
     #[test]
     fn supernodal_matches_uplooking_oracle() {
+        use crate::sparse::symbolic::AmalgConfig;
         let cases: Vec<CscMatrix> = (0..4)
             .map(|s| random_sparse_spd(60, 0.12, 900 + s))
             .chain([cs_b_matrix(150, 1.6, 5), cs_b_matrix(150, 2.6, 6)])
             .collect();
         for (c, a) in cases.iter().enumerate() {
-            let sym = Arc::new(Symbolic::analyze(a));
-            let f = LdlFactor::factor(sym.clone(), a).unwrap();
-            let mut oracle = LdlFactor::identity(sym);
-            oracle.refactor_uplooking(a).unwrap();
-            let dl = f.l.iter().zip(&oracle.l).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
-            let dd = f.d.iter().zip(&oracle.d).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
-            assert!(dl < 1e-10 && dd < 1e-10, "case {c}: dl={dl} dd={dd}");
+            for cfg in [AmalgConfig::default(), AmalgConfig::disabled()] {
+                let sym = Arc::new(Symbolic::analyze_with(a, None, &cfg));
+                let f = LdlFactor::factor(sym.clone(), a).unwrap();
+                let mut oracle = LdlFactor::identity(sym);
+                oracle.refactor_uplooking(a).unwrap();
+                let dl =
+                    f.l.iter().zip(&oracle.l).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                let dd =
+                    f.d.iter().zip(&oracle.d).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+                assert!(
+                    dl < 1e-10 && dd < 1e-10,
+                    "case {c} (amalg={}): dl={dl} dd={dd}",
+                    cfg.enabled
+                );
+            }
+        }
+    }
+
+    /// The amalgamated factor agrees with the strict-supernode factor
+    /// entrywise (looked up through each pattern, so the padded layout
+    /// difference is invisible) on random-SPD and CS fixtures.
+    #[test]
+    fn amalgamated_factor_matches_strict_factor() {
+        use crate::sparse::symbolic::AmalgConfig;
+        let cases: Vec<CscMatrix> = (0..3)
+            .map(|s| random_sparse_spd(50, 0.15, 300 + s))
+            .chain([cs_b_matrix(200, 1.8, 8)])
+            .collect();
+        for (c, a) in cases.iter().enumerate() {
+            let sym_a = Arc::new(Symbolic::analyze_with(a, None, &AmalgConfig::default()));
+            let sym_s = Arc::new(Symbolic::analyze_with(a, None, &AmalgConfig::disabled()));
+            let fa = LdlFactor::factor(sym_a.clone(), a).unwrap();
+            let fs = LdlFactor::factor(sym_s.clone(), a).unwrap();
+            for (j, (da, ds)) in fa.d.iter().zip(&fs.d).enumerate() {
+                assert!((da - ds).abs() < 1e-10, "case {c}: d[{j}]: {da} vs {ds}");
+            }
+            for j in 0..sym_s.n {
+                for (&i, &vs) in sym_s.col_pattern(j).iter().zip(fs.col_values(j)) {
+                    let p = sym_a.find(i, j).expect("strict entry missing from padded");
+                    let va = fa.l[p];
+                    assert!((va - vs).abs() < 1e-10, "case {c}: L({i},{j}): {va} vs {vs}");
+                }
+            }
+        }
+    }
+
+    /// Amalgamation padding is *structural* zero: every padded slot (in
+    /// the padded pattern but not the strict one) holds exactly 0.0 after
+    /// factoring — the invariant that keeps the solves, Takahashi
+    /// recursion and rank-one updates semantically unchanged.
+    #[test]
+    fn padded_entries_are_exactly_zero() {
+        use crate::sparse::symbolic::AmalgConfig;
+        for a in [cs_b_matrix(200, 1.4, 13), random_sparse_spd(80, 0.1, 77)] {
+            let sym_a = Arc::new(Symbolic::analyze_with(&a, None, &AmalgConfig::default()));
+            let sym_s = Arc::new(Symbolic::analyze_with(&a, None, &AmalgConfig::disabled()));
+            assert!(
+                sym_a.row_idx.len() > sym_s.row_idx.len(),
+                "fixture produced no padding"
+            );
+            let f = LdlFactor::factor(sym_a.clone(), &a).unwrap();
+            let mut padded = 0usize;
+            for j in 0..sym_a.n {
+                for (&i, &v) in sym_a.col_pattern(j).iter().zip(f.col_values(j)) {
+                    if sym_s.find(i, j).is_none() {
+                        padded += 1;
+                        assert!(v == 0.0, "padded slot ({i},{j}) = {v}");
+                    }
+                }
+            }
+            assert_eq!(padded, sym_a.row_idx.len() - sym_s.row_idx.len());
         }
     }
 
     /// The determinism contract of the parallel factorization: identical
     /// L and D *bits* at widths 1, 2 and 7 (width 1 is the inline serial
-    /// path), on a pattern large enough that waves genuinely fan out.
+    /// path), on a pattern large enough that waves genuinely fan out —
+    /// with amalgamation on (the blocked kernel) and off (strict panels).
     #[test]
     fn parallel_refactor_is_bitwise_identical_across_widths() {
+        use crate::sparse::symbolic::AmalgConfig;
         let a = cs_b_matrix(500, 1.2, 11);
-        let sym = Arc::new(Symbolic::analyze(&a));
-        assert!(
-            sym.schedule.wave(0).len() >= super::PAR_WAVE_MIN,
-            "fixture too small to exercise the parallel path"
-        );
-        let reference =
-            crate::par::with_max_threads(1, || LdlFactor::factor(sym.clone(), &a).unwrap());
-        let mut f = LdlFactor::identity(sym.clone());
-        for width in [2usize, 7] {
-            crate::par::with_max_threads(width, || f.refactor(&a).unwrap());
-            assert_eq!(f.l, reference.l, "width {width}: L bits differ");
-            assert_eq!(f.d, reference.d, "width {width}: D bits differ");
+        for cfg in [AmalgConfig::default(), AmalgConfig::disabled()] {
+            let sym = Arc::new(Symbolic::analyze_with(&a, None, &cfg));
+            assert!(
+                sym.schedule.wave(0).len() >= super::PAR_WAVE_MIN,
+                "fixture too small to exercise the parallel path"
+            );
+            let reference =
+                crate::par::with_max_threads(1, || LdlFactor::factor(sym.clone(), &a).unwrap());
+            let mut f = LdlFactor::identity(sym.clone());
+            for width in [2usize, 7] {
+                crate::par::with_max_threads(width, || f.refactor(&a).unwrap());
+                assert_eq!(f.l, reference.l, "width {width}: L bits differ");
+                assert_eq!(f.d, reference.d, "width {width}: D bits differ");
+            }
         }
     }
 

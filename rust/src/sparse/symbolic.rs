@@ -16,11 +16,91 @@
 //! [`crate::gp::cache::PatternCache`] amortizes it across all
 //! hyperparameter evaluations that keep the pattern.
 
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use crate::sparse::csc::CscMatrix;
 use crate::sparse::etree::{ereach, etree, height_waves};
 use crate::sparse::ordering::SeparatorTree;
+
+/// Relaxed-amalgamation policy: how much *explicit zero fill* the analysis
+/// may pad into the factor pattern to fatten thin supernodes.
+///
+/// Strict supernodes (`pat(j) = {j+1} ∪ pat(j+1)`) on covariance-sparse
+/// patterns are mostly 1–3 columns wide, which starves the blocked numeric
+/// kernels of panel width. Amalgamation merges a supernode into its
+/// assembly-tree parent when the padding cost stays under
+/// `abs + rel · strict_nnz(merged)` entries — the classical relaxed
+/// supernode idea (Ashcraft/Grimes, CHOLMOD), except the padded entries
+/// here are *structural* zeros that stay exactly `0.0` through every
+/// refactorization, so all downstream consumers (solves, Takahashi,
+/// rank-one updates, row modification) keep their semantics.
+///
+/// The process-wide default is tunable via `CSGP_AMALG`:
+/// `0`/`off` disables, `rel` or `rel,abs` tunes the budget, anything else
+/// (or unset) keeps the defaults. Tests and benches pin an explicit
+/// config through [`Symbolic::analyze_with`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct AmalgConfig {
+    /// `false` = keep exactly the strict supernodes (no padding).
+    pub enabled: bool,
+    /// Padded entries allowed per merged supernode, relative to its
+    /// strict entry count.
+    pub rel: f64,
+    /// Flat padded-entry allowance per merged supernode (lets tiny
+    /// supernodes merge even when `rel` rounds to nothing).
+    pub abs: usize,
+    /// Hard cap on merged supernode width, bounding panel scratch.
+    pub max_cols: usize,
+}
+
+impl Default for AmalgConfig {
+    fn default() -> Self {
+        AmalgConfig { enabled: true, rel: 0.25, abs: 16, max_cols: 192 }
+    }
+}
+
+impl AmalgConfig {
+    /// Strict supernodes only — the pre-amalgamation behavior.
+    pub fn disabled() -> Self {
+        AmalgConfig { enabled: false, ..Default::default() }
+    }
+
+    /// Parse a `CSGP_AMALG` value: `0`/`off`/`false` disables, `1`/`on`
+    /// keeps the defaults, `rel` or `rel,abs` tunes the budget. `None`
+    /// (or an unparsable value) means "no override".
+    pub fn parse_override(var: Option<&str>) -> Option<AmalgConfig> {
+        let s = var?.trim();
+        if s.is_empty() {
+            return None;
+        }
+        match s.to_ascii_lowercase().as_str() {
+            "0" | "off" | "false" => return Some(AmalgConfig::disabled()),
+            "1" | "on" | "true" => return Some(AmalgConfig::default()),
+            _ => {}
+        }
+        let mut parts = s.split(',');
+        let rel: f64 = parts.next()?.trim().parse().ok()?;
+        let abs: usize = match parts.next() {
+            Some(t) => t.trim().parse().ok()?,
+            None => AmalgConfig::default().abs,
+        };
+        if parts.next().is_some() || !rel.is_finite() || rel < 0.0 {
+            return None;
+        }
+        Some(AmalgConfig { enabled: true, rel, abs, ..Default::default() })
+    }
+
+    /// The process-wide policy: `CSGP_AMALG` if set and parsable, the
+    /// defaults otherwise. Read once (same contract as `CSGP_THREADS` /
+    /// `CSGP_ORDERING`).
+    pub fn global() -> &'static AmalgConfig {
+        static G: OnceLock<AmalgConfig> = OnceLock::new();
+        G.get_or_init(|| {
+            AmalgConfig::parse_override(std::env::var("CSGP_AMALG").ok().as_deref())
+                .unwrap_or_default()
+        })
+    }
+}
 
 /// Supernode partition of the columns plus the assembly-tree wave
 /// schedule — the static scaffolding of the parallel numeric LDLᵀ.
@@ -45,31 +125,35 @@ use crate::sparse::ordering::SeparatorTree;
 pub struct SupernodeSchedule {
     /// Supernode s spans columns `snode_ptr[s]..snode_ptr[s + 1]`.
     pub snode_ptr: Vec<usize>,
+    /// Supernode owning each column (inverse of `snode_ptr`).
+    pub snode_of: Vec<usize>,
+    /// Assembly-tree parent of each supernode (usize::MAX at roots) — the
+    /// supernode owning the etree parent of this supernode's last column.
+    pub sparent: Vec<usize>,
     /// Supernode ids grouped by assembly-tree height, leaves first:
     /// `wave_snodes[wave_ptr[w]..wave_ptr[w + 1]]` is wave w.
     pub wave_snodes: Vec<usize>,
     /// Wave boundaries into `wave_snodes` (`len == n_waves + 1`).
     pub wave_ptr: Vec<usize>,
+    /// Per-supernode update sources, CSR by target: supernode s pulls
+    /// rank-k updates from supernodes
+    /// `src_snodes[src_ptr[s]..src_ptr[s + 1]]` (ascending — the order
+    /// that pins the blocked kernel's deterministic summation).
+    pub src_ptr: Vec<usize>,
+    /// Concatenated ascending source-supernode lists.
+    pub src_snodes: Vec<usize>,
 }
 
 impl SupernodeSchedule {
-    /// Detect supernodes and build the wave schedule from the etree and
-    /// the strictly-lower column counts of L.
-    fn build(parent: &[usize], col_ptr: &[usize]) -> SupernodeSchedule {
+    /// Build the wave schedule and the source lists for an arbitrary
+    /// supernode partition of the pattern `(col_ptr, row_idx)`.
+    fn build(
+        parent: &[usize],
+        snode_ptr: Vec<usize>,
+        col_ptr: &[usize],
+        row_idx: &[usize],
+    ) -> SupernodeSchedule {
         let n = parent.len();
-        let count = |j: usize| col_ptr[j + 1] - col_ptr[j];
-        let mut snode_ptr = Vec::with_capacity(n + 1);
-        snode_ptr.push(0);
-        for j in 1..n {
-            let prev = j - 1;
-            let merges = parent[prev] == j && count(prev) == count(j) + 1;
-            if !merges {
-                snode_ptr.push(j);
-            }
-        }
-        if n > 0 {
-            snode_ptr.push(n);
-        }
         let n_snodes = snode_ptr.len().saturating_sub(1);
 
         // column -> supernode map, then the contracted (assembly) tree:
@@ -92,7 +176,61 @@ impl SupernodeSchedule {
 
         let (mut wave_snodes, mut wave_ptr) = (Vec::new(), Vec::new());
         height_waves(&sparent, &mut wave_snodes, &mut wave_ptr);
-        SupernodeSchedule { snode_ptr, wave_snodes, wave_ptr }
+
+        // Source lists: supernode q updates supernode s iff q's top-column
+        // pattern (which every column of q stores as its suffix) reaches
+        // into s's column range. The pattern is sorted, so the distinct
+        // targets are a run-length pass; pushing edges with q ascending
+        // makes each target's source list ascending after the counting
+        // sort — exactly the pull order the numeric kernel must keep.
+        let mut edges: Vec<(usize, usize)> = Vec::new();
+        for q in 0..n_snodes {
+            let top = snode_ptr[q + 1] - 1;
+            let mut prev = usize::MAX;
+            for &i in &row_idx[col_ptr[top]..col_ptr[top + 1]] {
+                let s = snode_of[i];
+                if s != prev {
+                    edges.push((s, q));
+                    prev = s;
+                }
+            }
+        }
+        let mut src_ptr = vec![0usize; n_snodes + 1];
+        for &(s, _) in &edges {
+            src_ptr[s + 1] += 1;
+        }
+        for s in 0..n_snodes {
+            src_ptr[s + 1] += src_ptr[s];
+        }
+        let mut next = src_ptr.clone();
+        let mut src_snodes = vec![0usize; edges.len()];
+        for &(s, q) in &edges {
+            src_snodes[next[s]] = q;
+            next[s] += 1;
+        }
+
+        SupernodeSchedule { snode_ptr, snode_of, sparent, wave_snodes, wave_ptr, src_ptr, src_snodes }
+    }
+
+    /// Detect the *strict* supernode partition: maximal runs where each
+    /// column's strictly-lower pattern is the next column's pattern plus
+    /// that column (`parent[j] == j+1 && |pat(j)| == |pat(j+1)| + 1`).
+    fn strict_partition(parent: &[usize], col_ptr: &[usize]) -> Vec<usize> {
+        let n = parent.len();
+        let count = |j: usize| col_ptr[j + 1] - col_ptr[j];
+        let mut snode_ptr = Vec::with_capacity(n + 1);
+        snode_ptr.push(0);
+        for j in 1..n {
+            let prev = j - 1;
+            let merges = parent[prev] == j && count(prev) == count(j) + 1;
+            if !merges {
+                snode_ptr.push(j);
+            }
+        }
+        if n > 0 {
+            snode_ptr.push(n);
+        }
+        snode_ptr
     }
 
     /// Number of supernodes.
@@ -135,18 +273,126 @@ impl SupernodeSchedule {
             .max()
             .unwrap_or(0)
     }
+
+    /// Ascending source supernodes of `s` — the supernodes whose columns
+    /// carry rank-k updates into `s`'s panel.
+    #[inline]
+    pub fn sources(&self, s: usize) -> &[usize] {
+        &self.src_snodes[self.src_ptr[s]..self.src_ptr[s + 1]]
+    }
+
+    /// Widest supernode, in columns — the amalgamation result the blocked
+    /// kernels' panel scratch is sized by.
+    pub fn max_snode_cols(&self) -> usize {
+        self.snode_ptr.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0)
+    }
+}
+
+/// Greedy left-to-right relaxed amalgamation over the strict partition.
+///
+/// A group `[g0, b)` absorbs the next strict supernode `[b, e)` only when
+/// all of:
+///
+/// * **assembly adjacency** — `parent[b-1] ∈ [b, e)`: the candidate is the
+///   assembly-tree parent of the group, so the etree path out of any group
+///   column runs through the candidate's column chain and the padded
+///   pattern `{j+1..e-1} ∪ pat(e-1)` stays closed under the fill rule
+///   (this is also what keeps the rank-one update's path walk covering);
+/// * **width cap** — the merged supernode stays within `cfg.max_cols`;
+/// * **fill budget** — the padding
+///   `(t·u + u(u-1)/2) − strict_nnz ≤ abs + rel · strict_nnz`, where `u`
+///   is the merged width and `t = |pat(e-1)|` the merged top count.
+///
+/// Returns the merged `snode_ptr` (the strict one when disabled).
+fn amalgamate(parent: &[usize], col_ptr: &[usize], strict: Vec<usize>, cfg: &AmalgConfig) -> Vec<usize> {
+    let ns = strict.len().saturating_sub(1);
+    if !cfg.enabled || ns <= 1 {
+        return strict;
+    }
+    let n = parent.len();
+    let mut out = Vec::with_capacity(strict.len());
+    out.push(0usize);
+    let mut g0 = 0usize;
+    for s in 1..ns {
+        let b = strict[s];
+        let e = strict[s + 1];
+        let u = e - g0;
+        let adjacent = parent[b - 1] != usize::MAX && parent[b - 1] < e;
+        let strict_nnz = col_ptr[e] - col_ptr[g0];
+        let t = col_ptr[e] - col_ptr[e - 1];
+        let padded = t * u + u * (u - 1) / 2;
+        // `padded >= strict_nnz` holds whenever `adjacent` does (pattern
+        // closure); saturate so the non-adjacent evaluation can't wrap.
+        let extra = padded.saturating_sub(strict_nnz);
+        let within = extra as f64 <= cfg.abs as f64 + cfg.rel * strict_nnz as f64;
+        if !(adjacent && u <= cfg.max_cols && within) {
+            out.push(b);
+            g0 = b;
+        }
+    }
+    out.push(n);
+    out
+}
+
+/// Rebuild `(col_ptr, row_idx)` with every supernode's columns padded to
+/// the trapezoidal panel pattern `{j+1..jend-1} ∪ pat(jend-1)`. For a
+/// strict supernode this reproduces its pattern exactly (suffix nesting),
+/// so only genuinely merged columns gain (structurally zero) slots.
+fn pad_pattern(
+    snode_ptr: &[usize],
+    col_ptr: &[usize],
+    row_idx: &[usize],
+    n: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    let ns = snode_ptr.len() - 1;
+    let mut pcol = vec![0usize; n + 1];
+    for s in 0..ns {
+        let (j0, jend) = (snode_ptr[s], snode_ptr[s + 1]);
+        let t = col_ptr[jend] - col_ptr[jend - 1];
+        for j in j0..jend {
+            pcol[j + 1] = (jend - 1 - j) + t;
+        }
+    }
+    for j in 0..n {
+        pcol[j + 1] += pcol[j];
+    }
+    let mut pidx = vec![0usize; pcol[n]];
+    for s in 0..ns {
+        let (j0, jend) = (snode_ptr[s], snode_ptr[s + 1]);
+        let top = &row_idx[col_ptr[jend - 1]..col_ptr[jend]];
+        for j in j0..jend {
+            let mut p = pcol[j];
+            for i in j + 1..jend {
+                pidx[p] = i;
+                p += 1;
+            }
+            pidx[p..p + top.len()].copy_from_slice(top);
+        }
+    }
+    (pcol, pidx)
 }
 
 /// Static symbolic factorization of a symmetric matrix pattern.
+///
+/// With amalgamation enabled (the default) the stored pattern is the
+/// *padded* pattern: every column of a supernode `[j0, jend)` stores
+/// `{j+1..jend-1} ∪ pat(jend-1)` so the supernode is a dense trapezoidal
+/// panel. Padded slots are structural zeros — every refactorization
+/// computes them as exactly `0.0` — and `nnz_strict` keeps the true
+/// (unpadded) count for fill statistics and ordering comparisons.
 #[derive(Clone, Debug)]
 pub struct Symbolic {
     pub n: usize,
     /// Elimination-tree parent (usize::MAX at roots).
     pub parent: Vec<usize>,
-    /// Column pointers of the strictly-lower-triangular pattern of L.
+    /// Column pointers of the strictly-lower-triangular pattern of L
+    /// (padded when amalgamation merged supernodes).
     pub col_ptr: Vec<usize>,
     /// Row indices (sorted, all > column index) of the L pattern.
     pub row_idx: Vec<usize>,
+    /// Strictly-lower nonzero count of the *strict* (unpadded) pattern —
+    /// what the factor would store with amalgamation off.
+    pub nnz_strict: usize,
     /// Row-structure map (CSR over the same pattern): for each row i, the
     /// positions `p` into `row_idx`/values such that `row_idx[p] == i`,
     /// together with the owning column. Lets `ldlrowmodify` write row i of
@@ -174,17 +420,29 @@ pub struct Symbolic {
 impl Symbolic {
     /// Analyse the pattern of symmetric `a` (full storage, diagonal present).
     pub fn analyze(a: &CscMatrix) -> Symbolic {
-        Symbolic::analyze_with_septree(a, None)
+        Symbolic::analyze_with(a, None, AmalgConfig::global())
     }
 
     /// [`Symbolic::analyze`], threading through the separator tree of the
-    /// (nested-dissection) ordering `a` was permuted with. Debug builds
-    /// re-check the separator invariant — no pattern edge between sibling
-    /// branches — against `a` itself, so a mismatched tree/permutation
-    /// pair fails loudly instead of silently mis-describing the factor.
+    /// (nested-dissection) ordering `a` was permuted with.
     pub fn analyze_with_septree(
         a: &CscMatrix,
         septree: Option<Arc<SeparatorTree>>,
+    ) -> Symbolic {
+        Symbolic::analyze_with(a, septree, AmalgConfig::global())
+    }
+
+    /// The full analysis with an explicit amalgamation policy (tests and
+    /// benches pin `AmalgConfig::disabled()` / tuned budgets here; the
+    /// public wrappers use the process-wide `CSGP_AMALG` policy). Debug
+    /// builds re-check the separator invariant — no pattern edge between
+    /// sibling branches — against `a` itself, so a mismatched
+    /// tree/permutation pair fails loudly instead of silently
+    /// mis-describing the factor.
+    pub fn analyze_with(
+        a: &CscMatrix,
+        septree: Option<Arc<SeparatorTree>>,
+        amalg: &AmalgConfig,
     ) -> Symbolic {
         assert_eq!(a.n_rows, a.n_cols);
         if let Some(tree) = &septree {
@@ -226,6 +484,20 @@ impl Symbolic {
             }
         }
 
+        let nnz_strict = nnz;
+
+        // Supernode partition: strict detection, then relaxed
+        // amalgamation, then (when anything merged) the padded pattern
+        // `{j+1..jend-1} ∪ pat(jend-1)` per merged column.
+        let strict_ptr = SupernodeSchedule::strict_partition(&parent, &col_ptr);
+        let snode_ptr = amalgamate(&parent, &col_ptr, strict_ptr.clone(), amalg);
+        let (col_ptr, row_idx) = if snode_ptr.len() == strict_ptr.len() {
+            (col_ptr, row_idx)
+        } else {
+            pad_pattern(&snode_ptr, &col_ptr, &row_idx, n)
+        };
+        let nnz = row_idx.len();
+
         // Row-structure map: CSR over (row -> [(col, pos)]).
         let mut rcount = vec![0usize; n + 1];
         for &i in &row_idx {
@@ -245,12 +517,22 @@ impl Symbolic {
             }
         }
 
-        let schedule = SupernodeSchedule::build(&parent, &col_ptr);
-        Symbolic { n, parent, col_ptr, row_idx, rowmap_ptr, rowmap, schedule, septree }
+        let schedule = SupernodeSchedule::build(&parent, snode_ptr, &col_ptr, &row_idx);
+        Symbolic { n, parent, col_ptr, row_idx, nnz_strict, rowmap_ptr, rowmap, schedule, septree }
     }
 
-    /// Number of nonzeros in L including the diagonal.
+    /// Number of nonzeros in L including the diagonal — the *strict*
+    /// count (padding excluded), so fill statistics and ordering-quality
+    /// comparisons measure true fill regardless of the amalgamation
+    /// policy. Storage sizing goes through `row_idx.len()` /
+    /// [`Symbolic::padded_nnz`].
     pub fn nnz_l(&self) -> usize {
+        self.nnz_strict + self.n
+    }
+
+    /// Stored nonzeros of L including the diagonal and any amalgamation
+    /// padding — the factor's actual allocation size.
+    pub fn padded_nnz(&self) -> usize {
         self.row_idx.len() + self.n
     }
 
@@ -296,9 +578,15 @@ mod tests {
         CscMatrix::from_triplets(n, n, &t)
     }
 
+    /// Analyse with amalgamation pinned off — the strict-supernode shape
+    /// the structural tests below assert.
+    fn analyze_strict(a: &CscMatrix) -> Symbolic {
+        Symbolic::analyze_with(a, None, &AmalgConfig::disabled())
+    }
+
     #[test]
     fn tridiagonal_no_fill() {
-        let s = Symbolic::analyze(&tridiag(6));
+        let s = analyze_strict(&tridiag(6));
         // strictly lower: one entry per column except the last
         assert_eq!(s.row_idx.len(), 5);
         for j in 0..5 {
@@ -351,7 +639,7 @@ mod tests {
     #[test]
     fn tridiagonal_has_singleton_supernodes_in_a_chain() {
         let n = 7;
-        let s = Symbolic::analyze(&tridiag(n));
+        let s = analyze_strict(&tridiag(n));
         assert_eq!(s.schedule.n_snodes(), n - 1, "last two columns merge");
         assert_eq!(s.schedule.columns(n - 2), n - 2..n);
         assert_eq!(s.schedule.n_waves(), n - 1);
@@ -374,7 +662,7 @@ mod tests {
                 t.push((n - 1, i, 1.0));
             }
         }
-        let s = Symbolic::analyze(&CscMatrix::from_triplets(n, n, &t));
+        let s = analyze_strict(&CscMatrix::from_triplets(n, n, &t));
         let sched = &s.schedule;
         assert_eq!(sched.n_snodes(), n - 1, "n-2 leaves + merged {{n-2, n-1}} root");
         assert_eq!(sched.columns(n - 2), n - 2..n);
@@ -454,7 +742,7 @@ mod tests {
                 t.push((n - 1, i, 1.0));
             }
         }
-        let s = Symbolic::analyze(&CscMatrix::from_triplets(n, n, &t));
+        let s = analyze_strict(&CscMatrix::from_triplets(n, n, &t));
         assert_eq!(s.schedule.wave_width_max(), n - 2);
         assert_eq!(s.schedule.wave_cols_max(), n - 2);
         assert!(s.septree.is_none(), "plain analyze carries no separator tree");
@@ -505,8 +793,135 @@ mod tests {
 
     #[test]
     fn find_locates_entries() {
-        let s = Symbolic::analyze(&tridiag(5));
+        let s = analyze_strict(&tridiag(5));
         assert!(s.find(1, 0).is_some());
         assert!(s.find(2, 0).is_none());
+    }
+
+    /// A geometric CS covariance pattern — the fixture the amalgamation
+    /// tests run on (thin strict supernodes, real fill).
+    fn cs_pattern(n: usize, ls: f64, seed: u64) -> CscMatrix {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::testutil::random_points;
+        let x = random_points(n, 2, 7.0, seed);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, ls);
+        let mut k = cov.cov_matrix(&x);
+        for j in 0..k.n_cols {
+            *k.get_mut(j, j) += 1.0;
+        }
+        k
+    }
+
+    /// Relaxed amalgamation fattens the strict chain of a tridiagonal
+    /// pattern into multi-column panels, the padding stays within the
+    /// budget, and `nnz_l` keeps reporting strict fill.
+    #[test]
+    fn amalgamation_fattens_thin_supernodes_within_budget() {
+        let n = 40;
+        let cfg = AmalgConfig::default();
+        let s = Symbolic::analyze_with(&tridiag(n), None, &cfg);
+        let strict = analyze_strict(&tridiag(n));
+        assert!(
+            s.schedule.max_snode_cols() > strict.schedule.max_snode_cols(),
+            "amalgamation must widen some supernode ({} vs {})",
+            s.schedule.max_snode_cols(),
+            strict.schedule.max_snode_cols()
+        );
+        assert_eq!(s.nnz_l(), strict.nnz_l(), "nnz_l reports strict fill");
+        assert!(s.padded_nnz() > s.nnz_l(), "tridiag padding is real fill");
+        // per-supernode budget: padded − strict ≤ abs + rel·strict
+        for sn in 0..s.schedule.n_snodes() {
+            let cols = s.schedule.columns(sn);
+            let padded: usize = cols.clone().map(|j| s.col_pattern(j).len()).sum();
+            let strict_nnz: usize =
+                cols.clone().map(|j| strict.col_pattern(j).len()).sum();
+            assert!(
+                (padded - strict_nnz) as f64
+                    <= cfg.abs as f64 + cfg.rel * strict_nnz as f64,
+                "supernode {sn} over budget: {padded} padded vs {strict_nnz} strict"
+            );
+            assert!(cols.len() <= cfg.max_cols);
+        }
+    }
+
+    /// Every padded column is the trapezoidal panel pattern
+    /// `{j+1..jend-1} ∪ pat(jend-1)`, and contains its strict pattern.
+    #[test]
+    fn padded_pattern_is_trapezoidal_and_contains_strict() {
+        let k = cs_pattern(140, 1.8, 9);
+        let s = Symbolic::analyze_with(&k, None, &AmalgConfig::default());
+        let strict = analyze_strict(&k);
+        assert!(s.padded_nnz() >= strict.padded_nnz());
+        for sn in 0..s.schedule.n_snodes() {
+            let cols = s.schedule.columns(sn);
+            let jend = cols.end;
+            let top = s.col_pattern(jend - 1);
+            for j in cols {
+                let pat = s.col_pattern(j);
+                let expect: Vec<usize> =
+                    (j + 1..jend).chain(top.iter().copied()).collect();
+                assert_eq!(pat, &expect[..], "column {j} not trapezoidal");
+                for &i in strict.col_pattern(j) {
+                    assert!(
+                        pat.binary_search(&i).is_ok(),
+                        "strict entry ({i},{j}) missing from padded pattern"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The source lists are exactly the cross-supernode edges of the row
+    /// patterns, ascending — the pull order the numeric kernel keys on.
+    #[test]
+    fn source_lists_cover_row_pattern_edges() {
+        let k = cs_pattern(140, 2.2, 4);
+        for cfg in [AmalgConfig::default(), AmalgConfig::disabled()] {
+            let s = Symbolic::analyze_with(&k, None, &cfg);
+            let sched = &s.schedule;
+            for sn in 0..sched.n_snodes() {
+                let srcs = sched.sources(sn);
+                assert!(srcs.windows(2).all(|w| w[0] < w[1]), "sources not ascending");
+                assert!(srcs.iter().all(|&q| q < sn), "source after target");
+            }
+            for j in 0..s.n {
+                let sj = sched.snode_of[j];
+                assert!(sched.columns(sj).contains(&j));
+                for &(ksrc, _) in s.row_pattern(j) {
+                    let sk = sched.snode_of[ksrc];
+                    if sk != sj {
+                        assert!(
+                            sched.sources(sj).binary_search(&sk).is_ok(),
+                            "supernode {sk} updates {sj} but is not a listed source"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn amalg_env_override_parses() {
+        assert_eq!(AmalgConfig::parse_override(None), None);
+        assert_eq!(AmalgConfig::parse_override(Some("")), None);
+        assert_eq!(AmalgConfig::parse_override(Some("junk")), None);
+        assert_eq!(AmalgConfig::parse_override(Some("-1")), None);
+        assert_eq!(
+            AmalgConfig::parse_override(Some("0")),
+            Some(AmalgConfig::disabled())
+        );
+        assert_eq!(
+            AmalgConfig::parse_override(Some("off")),
+            Some(AmalgConfig::disabled())
+        );
+        assert_eq!(
+            AmalgConfig::parse_override(Some("on")),
+            Some(AmalgConfig::default())
+        );
+        let tuned = AmalgConfig::parse_override(Some("0.5,32")).unwrap();
+        assert!(tuned.enabled && tuned.rel == 0.5 && tuned.abs == 32);
+        let rel_only = AmalgConfig::parse_override(Some("0.1")).unwrap();
+        assert!(rel_only.enabled && rel_only.rel == 0.1);
+        assert_eq!(rel_only.abs, AmalgConfig::default().abs);
     }
 }

@@ -11,31 +11,47 @@
 //! processed for j = n−1 .. 0. All referenced `Z[k,i]` pairs (k, i > j,
 //! both in column j's pattern) are themselves in the pattern by the
 //! Cholesky fill rule, so the recurrence closes over the sparse storage.
+//! The (relaxed) supernodal pattern is closed under the same rule — each
+//! padded column is a suffix of its supernode's trapezoid — so the
+//! recurrence computes true `B⁻¹` entries at the padded slots too.
 //!
-//! # Parallel waves
+//! # Blocked supernode waves
 //!
-//! Column j only reads `Z` entries of columns in `pat(L:,j)`, and every
-//! row index in column j of `L` is an *ancestor* of j in the elimination
-//! tree. Columns at the same etree depth therefore never depend on each
-//! other, and the recurrence parallelizes as level waves processed from
-//! the roots (depth 0) downward: within a wave, each column is an
-//! independent task writing its own `z_lower` range and `z_diag` slot.
-//! Small waves (the path-like top of a typical CS etree) run inline on
-//! the caller; large waves fan out over [`crate::par`]. The arithmetic
-//! per column is identical either way, so the result is bitwise-equal to
-//! the serial recursion at any thread count.
+//! The recurrence is evaluated one *supernode* at a time. For a supernode
+//! spanning columns `[j0, jend)` with top row set `T` (the pattern of its
+//! last column), every `Z` entry the recurrence touches lies in the dense
+//! symmetric panel over `{j0..jend} ∪ T`. The kernel gathers `Z[T, T]`
+//! from the already-finished ancestor columns once, then walks the
+//! supernode's columns from `jend−1` down to `j0` as dense contiguous
+//! matrix–vector products against the trailing block of that panel,
+//! writing each finished column straight back to the sparse storage (a
+//! supernode column's stored rows are exactly the panel's trailing rows,
+//! in order). This replaces the per-column masked pattern walks — and the
+//! row-map scans — of the scalar kernel with autovectorizable dense loops.
+//!
+//! Column j only reads columns in `pat(L:,j)`, which lie in supernode
+//! ancestors of j's supernode in the assembly tree (amalgamation keeps
+//! every non-final column's etree parent inside its supernode, so etree
+//! ancestor paths exit a supernode only through `sparent`). Supernodes of
+//! equal assembly-tree height are therefore independent, and the factor's
+//! wave schedule — run in *reverse*, roots first — is a valid parallel
+//! schedule here: within a wave each supernode's task writes only its own
+//! `z_lower` ranges and `z_diag` slots. Small waves run inline on the
+//! caller; large waves fan out over [`crate::par`]. The arithmetic per
+//! supernode is identical either way, so the result is bitwise-equal to
+//! the serial evaluation at any thread count.
 
 use crate::par::SyncSlice;
 use crate::sparse::cholesky::LdlFactor;
-use crate::sparse::etree::depth_waves;
 
-/// Waves shorter than this run inline on the caller's scratch — a
-/// one-column wave (the etree's path-like top) gains nothing from the
-/// pool and would pay a dispatch per level.
-const PAR_WAVE_MIN: usize = 32;
+/// Waves with fewer supernodes than this run inline on the caller's
+/// scratch — a one-supernode wave (the assembly tree's path-like top)
+/// gains nothing from the pool and would pay a dispatch per level.
+const PAR_WAVE_MIN: usize = 16;
 
-/// Columns per chunk when a wave does fan out (leaf columns are cheap).
-const WAVE_CHUNK: usize = 16;
+/// Supernodes per chunk when a wave does fan out (leaf supernodes are
+/// cheap; a few per task amortizes the queue hop).
+const WAVE_CHUNK: usize = 4;
 
 /// Sparsified inverse on the factor's pattern.
 #[derive(Clone, Debug, Default)]
@@ -44,16 +60,20 @@ pub struct SparseInverse {
     pub z_lower: Vec<f64>,
     /// Diagonal of Z.
     pub z_diag: Vec<f64>,
-    /// Cached wave schedule: the etree parents it was computed from, the
-    /// columns grouped by depth (roots first, flat), and the wave
-    /// boundaries (`wave_cols[wave_ptr[d]..wave_ptr[d + 1]]` is wave d).
-    /// Rebuilt only when the factor's etree differs from `wave_parent` —
-    /// repeated gradient evaluations on one pattern (the
-    /// `PatternCache`-hit case) pay an `O(n)` comparison, zero
-    /// allocations.
-    wave_parent: Vec<usize>,
-    wave_cols: Vec<usize>,
-    wave_ptr: Vec<usize>,
+}
+
+/// Per-task scratch for the blocked kernel: a panel-row map (`usize::MAX`
+/// when unmapped), the dense symmetric panel, and one panel column.
+struct TakahashiScratch {
+    pos: Vec<usize>,
+    panel: Vec<f64>,
+    zcol: Vec<f64>,
+}
+
+impl TakahashiScratch {
+    fn new(n: usize) -> TakahashiScratch {
+        TakahashiScratch { pos: vec![usize::MAX; n], panel: Vec::new(), zcol: Vec::new() }
+    }
 }
 
 impl LdlFactor {
@@ -72,46 +92,38 @@ impl LdlFactor {
     /// (resized as needed — a no-op when the pattern is unchanged, the
     /// `PatternCache`-hit case of the optimizer loop).
     ///
-    /// Per column, L(:,j) is scattered into a dense work vector once;
-    /// each entry `Z[j,i]` then gathers its sum from column i and row i
-    /// of the already-computed part of `Z` with plain array walks — no
-    /// per-entry searches. Every referenced `(k,i)` pair is in the
-    /// pattern by the Cholesky fill rule (`k,i ∈ pat(j), k≠i ⇒
-    /// (max,min) ∈ pattern`). Columns are processed in etree level waves
-    /// (see the module docs); each wave may fan out over the worker pool.
+    /// Supernodes are processed in the factor's wave schedule run in
+    /// reverse (roots first, see the module docs); each wave may fan out
+    /// over the worker pool, and the per-supernode kernel is the blocked
+    /// dense-panel recurrence either way.
     pub fn takahashi_inverse_into(&self, zi: &mut SparseInverse) {
         let sym = &self.symbolic;
         let n = sym.n;
-        // resize only (no clear): every slot is overwritten by the column
-        // loop below, so the unchanged-pattern case touches no memory here
+        // resize only (no clear): every slot is overwritten by the
+        // supernode loop below, so the unchanged-pattern case touches no
+        // memory here
         zi.z_lower.resize(sym.row_idx.len(), 0.0);
         zi.z_diag.resize(n, 0.0);
-        if zi.wave_parent != sym.parent {
-            zi.wave_parent.clear();
-            zi.wave_parent.extend_from_slice(&sym.parent);
-            depth_waves(&sym.parent, &mut zi.wave_cols, &mut zi.wave_ptr);
-        }
-        let (wave_cols, wave_ptr) = (&zi.wave_cols, &zi.wave_ptr);
+        let sched = &sym.schedule;
         let z_lower = SyncSlice::new(&mut zi.z_lower);
         let z_diag = SyncSlice::new(&mut zi.z_diag);
         // caller-owned scratch for the inline (small-wave) path
-        let mut w = vec![0.0; n];
-        let mut in_pat = vec![false; n];
-        for d in 0..wave_ptr.len().saturating_sub(1) {
-            let wave = &wave_cols[wave_ptr[d]..wave_ptr[d + 1]];
+        let mut ws_inline = TakahashiScratch::new(n);
+        let n_waves = sched.wave_ptr.len().saturating_sub(1);
+        for d in (0..n_waves).rev() {
+            let wave = &sched.wave_snodes[sched.wave_ptr[d]..sched.wave_ptr[d + 1]];
             if wave.len() < PAR_WAVE_MIN || crate::par::current_threads() <= 1 {
-                for &j in wave {
-                    self.takahashi_column(j, &mut w, &mut in_pat, &z_lower, &z_diag);
+                for &s in wave {
+                    self.takahashi_supernode(s, &mut ws_inline, &z_lower, &z_diag);
                 }
             } else {
                 crate::par::for_chunks(
                     wave.len(),
                     WAVE_CHUNK,
-                    || (vec![0.0; n], vec![false; n]),
-                    |scratch, range| {
-                        let (w, in_pat) = scratch;
-                        for &j in &wave[range] {
-                            self.takahashi_column(j, w, in_pat, &z_lower, &z_diag);
+                    || TakahashiScratch::new(n),
+                    |ws, range| {
+                        for &s in &wave[range] {
+                            self.takahashi_supernode(s, ws, &z_lower, &z_diag);
                         }
                     },
                 );
@@ -119,67 +131,88 @@ impl LdlFactor {
         }
     }
 
-    /// One column of the recurrence. Requires every column in `pat(j)`
-    /// (all strict ancestors of j) to be finished; writes only column j's
-    /// `z_lower` range and `z_diag[j]`, which is what makes same-depth
-    /// columns safe to run concurrently. `w`/`in_pat` are length-n
-    /// scratch, all-zero / all-false on entry and restored on exit.
-    fn takahashi_column(
+    /// One supernode of the blocked recurrence. Requires every
+    /// assembly-tree ancestor supernode to be finished; writes only this
+    /// supernode's `z_lower` column ranges and `z_diag` slots, which is
+    /// what makes same-height supernodes safe to run concurrently.
+    fn takahashi_supernode(
         &self,
-        j: usize,
-        w: &mut [f64],
-        in_pat: &mut [bool],
+        s: usize,
+        ws: &mut TakahashiScratch,
         z_lower: &SyncSlice<'_, f64>,
         z_diag: &SyncSlice<'_, f64>,
     ) {
         let sym = &self.symbolic;
-        let lo = sym.col_ptr[j];
-        let hi = sym.col_ptr[j + 1];
-        // dense scatter of L(:, j): w[k] = L[k, j], in_pat marks membership
-        for p in lo..hi {
-            w[sym.row_idx[p]] = self.l[p];
-            in_pat[sym.row_idx[p]] = true;
+        let cols = sym.schedule.columns(s);
+        let (j0, jend) = (cols.start, cols.end);
+        let w = jend - j0;
+        // top row set T = pattern of the last column (every other column's
+        // pattern is its intra suffix followed by exactly T)
+        let top = &sym.row_idx[sym.col_ptr[jend - 1]..sym.col_ptr[jend]];
+        let t = top.len();
+        let m = w + t;
+        let TakahashiScratch { pos, panel, zcol } = ws;
+        panel.clear();
+        panel.resize(m * m, 0.0);
+        zcol.resize(m, 0.0);
+        // gather Z[T, T] into the trailing t×t block of the panel. Every
+        // pair (T[b], T[a]), b > a, is on column T[a]'s stored pattern by
+        // the fill rule, so one masked walk of each ancestor column finds
+        // them all — once per supernode, not once per column.
+        for (b, &i) in top.iter().enumerate() {
+            pos[i] = b;
         }
-        // off-diagonal entries Z[j, i], i ∈ pat(j):
-        //   Z[j,i] = − Σ_{k ∈ pat(j)} L[k,j] Z[k,i]
-        // split by k > i (column i of Z), k == i (diagonal),
-        // k < i (row i of Z via the rowmap).
-        for p in lo..hi {
-            let i = sym.row_idx[p];
-            // SAFETY: all pattern indices < n by construction, and every
-            // Z entry read here lives in an ancestor column (an earlier,
-            // barrier-separated wave) — never written concurrently.
-            unsafe {
-                let mut s = w[i] * z_diag.get(i);
-                let ilo = *sym.col_ptr.get_unchecked(i);
-                let ihi = *sym.col_ptr.get_unchecked(i + 1);
-                for q in ilo..ihi {
-                    let k = *sym.row_idx.get_unchecked(q);
-                    if *in_pat.get_unchecked(k) {
-                        s += w.get_unchecked(k) * z_lower.get(q);
-                    }
+        for (a, &i) in top.iter().enumerate() {
+            // SAFETY: column i belongs to an assembly-tree ancestor,
+            // finished in an earlier, barrier-separated wave.
+            panel[(w + a) * m + (w + a)] = unsafe { z_diag.get(i) };
+            for q in sym.col_ptr[i]..sym.col_ptr[i + 1] {
+                let b = pos[sym.row_idx[q]];
+                if b != usize::MAX {
+                    // SAFETY: same ancestor column as above.
+                    let v = unsafe { z_lower.get(q) };
+                    panel[(w + b) * m + (w + a)] = v;
+                    panel[(w + a) * m + (w + b)] = v;
                 }
-                for &(k, q) in sym.row_pattern(i) {
-                    if k > j && *in_pat.get_unchecked(k) {
-                        s += w.get_unchecked(k) * z_lower.get(q);
-                    }
-                }
-                z_lower.set(p, -s);
             }
         }
-        // diagonal, using the freshly computed column-j entries
-        let mut s = 1.0 / self.d[j];
-        for q in lo..hi {
-            // SAFETY: in-bounds; entries of column j were written above by
-            // this same call, and no other task touches column j.
-            s -= self.l[q] * unsafe { z_lower.get(q) };
+        for &i in top {
+            pos[i] = usize::MAX;
         }
-        // SAFETY: slot j belongs exclusively to this column's task.
-        unsafe { z_diag.set(j, s) };
-        // clear the scatter
-        for p in lo..hi {
-            w[sym.row_idx[p]] = 0.0;
-            in_pat[sym.row_idx[p]] = false;
+        // columns from jend−1 down to j0: at step c the trailing
+        // (m−c−1)² block of the panel is complete, and column j's stored
+        // L values are exactly panel rows c+1..m, in order
+        for c in (0..w).rev() {
+            let j = j0 + c;
+            let lo = sym.col_ptr[j];
+            let lcol = &self.l[lo..sym.col_ptr[j + 1]];
+            debug_assert_eq!(lcol.len(), m - c - 1);
+            // Z[a,j] = −Σ_b Z[a,b] L[b,j]: one contiguous dot per row
+            for a in c + 1..m {
+                let row = &panel[a * m + c + 1..a * m + m];
+                let mut acc = 0.0;
+                for (zv, lv) in row.iter().zip(lcol) {
+                    acc += zv * lv;
+                }
+                zcol[a] = -acc;
+            }
+            // Z[j,j] = 1/d_j − Σ_a L[a,j] Z[a,j]
+            let mut diag = 1.0 / self.d[j];
+            for (lv, zv) in lcol.iter().zip(&zcol[c + 1..]) {
+                diag -= lv * zv;
+            }
+            // mirror the finished column into the panel for the next steps
+            for a in c + 1..m {
+                panel[a * m + c] = zcol[a];
+                panel[c * m + a] = zcol[a];
+            }
+            panel[c * m + c] = diag;
+            // SAFETY: column j's range and z_diag[j] belong exclusively to
+            // this supernode's task.
+            unsafe {
+                z_lower.slice_mut(lo, m - c - 1).copy_from_slice(&zcol[c + 1..]);
+                z_diag.set(j, diag);
+            }
         }
     }
 }
@@ -198,7 +231,7 @@ impl SparseInverse {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::sparse::symbolic::Symbolic;
+    use crate::sparse::symbolic::{AmalgConfig, Symbolic};
     use crate::testutil::random_sparse_spd;
     use std::sync::Arc;
 
@@ -207,17 +240,19 @@ mod tests {
         for seed in 0..8 {
             let n = 30;
             let a = random_sparse_spd(n, 0.12, seed + 400);
-            let sym = Arc::new(Symbolic::analyze(&a));
-            let f = LdlFactor::factor(sym.clone(), &a).unwrap();
-            let zi = f.takahashi_inverse();
-            let dense_inv = a.to_dense().inverse_spd().unwrap();
-            for j in 0..n {
-                let dd = (zi.z_diag[j] - dense_inv.at(j, j)).abs();
-                assert!(dd < 1e-8, "seed {seed} diag {j}: {dd}");
-                for p in sym.col_ptr[j]..sym.col_ptr[j + 1] {
-                    let i = sym.row_idx[p];
-                    let d = (zi.z_lower[p] - dense_inv.at(i, j)).abs();
-                    assert!(d < 1e-8, "seed {seed} ({i},{j}): {d}");
+            for cfg in [AmalgConfig::default(), AmalgConfig::disabled()] {
+                let sym = Arc::new(Symbolic::analyze_with(&a, None, &cfg));
+                let f = LdlFactor::factor(sym.clone(), &a).unwrap();
+                let zi = f.takahashi_inverse();
+                let dense_inv = a.to_dense().inverse_spd().unwrap();
+                for j in 0..n {
+                    let dd = (zi.z_diag[j] - dense_inv.at(j, j)).abs();
+                    assert!(dd < 1e-8, "seed {seed} diag {j}: {dd}");
+                    for p in sym.col_ptr[j]..sym.col_ptr[j + 1] {
+                        let i = sym.row_idx[p];
+                        let d = (zi.z_lower[p] - dense_inv.at(i, j)).abs();
+                        assert!(d < 1e-8, "seed {seed} ({i},{j}): {d}");
+                    }
                 }
             }
         }
@@ -256,24 +291,28 @@ mod tests {
     }
 
     /// Wave-parallel evaluation is bitwise-identical to the single-thread
-    /// path, and `takahashi_inverse_into` reuses buffers across calls.
+    /// path — with amalgamation on and off — and `takahashi_inverse_into`
+    /// reuses buffers across calls.
     #[test]
     fn parallel_waves_are_bitwise_identical_and_buffers_reuse() {
         let n = 220;
         let a = random_sparse_spd(n, 0.06, 777);
-        let sym = Arc::new(Symbolic::analyze(&a));
-        let f = LdlFactor::factor(sym, &a).unwrap();
-        let serial = crate::par::with_max_threads(1, || f.takahashi_inverse());
-        let mut reused = SparseInverse::default();
-        for width in [2usize, 4, 7] {
-            crate::par::with_max_threads(width, || f.takahashi_inverse_into(&mut reused));
-            assert_eq!(reused.z_lower, serial.z_lower, "width {width}");
-            assert_eq!(reused.z_diag, serial.z_diag, "width {width}");
+        for cfg in [AmalgConfig::default(), AmalgConfig::disabled()] {
+            let sym = Arc::new(Symbolic::analyze_with(&a, None, &cfg));
+            let f = LdlFactor::factor(sym, &a).unwrap();
+            let serial = crate::par::with_max_threads(1, || f.takahashi_inverse());
+            let mut reused = SparseInverse::default();
+            for width in [2usize, 4, 7] {
+                crate::par::with_max_threads(width, || f.takahashi_inverse_into(&mut reused));
+                assert_eq!(reused.z_lower, serial.z_lower, "width {width}");
+                assert_eq!(reused.z_diag, serial.z_diag, "width {width}");
+            }
         }
     }
 
     #[test]
     fn wave_schedule_puts_roots_first() {
+        use crate::sparse::etree::depth_waves;
         let (mut cols, mut ptr) = (Vec::new(), Vec::new());
         // path etree 0 -> 1 -> 2 -> 3 (root): waves are singletons from
         // the root down

@@ -32,51 +32,111 @@ pub fn etree_reach(
 }
 
 impl LdlFactor {
-    /// Dense forward solve L y = b in place (L unit lower).
+    /// Dense forward solve L y = b in place (L unit lower), blocked by
+    /// supernode: each supernode's intra-panel updates are contiguous
+    /// axpys (`x[j+1..jend] -= xⱼ · L`), and its below-panel updates
+    /// accumulate into a dense scratch over the shared top pattern before
+    /// one indexed scatter — `O(t)` pattern lookups per supernode instead
+    /// of per column. Allocates the `O(max t)` scratch; the hot sparse-RHS
+    /// path reuses a workspace instead.
     pub fn solve_lower_dense(&self, x: &mut [f64]) {
+        let mut ext = Vec::new();
+        self.solve_lower_blocked(x, &mut ext);
+    }
+
+    fn solve_lower_blocked(&self, x: &mut [f64], ext: &mut Vec<f64>) {
         let sym = &self.symbolic;
         debug_assert_eq!(x.len(), sym.n);
-        for j in 0..sym.n {
-            let xj = x[j];
-            if xj == 0.0 {
-                continue;
+        let sched = &sym.schedule;
+        for s in 0..sched.n_snodes() {
+            let (j0, jend) = (sched.snode_ptr[s], sched.snode_ptr[s + 1]);
+            let w = jend - j0;
+            let t = sym.col_ptr[jend] - sym.col_ptr[jend - 1];
+            if ext.len() < t {
+                ext.resize(t, 0.0);
             }
-            // SAFETY: pattern indices are < n by construction.
-            unsafe {
-                let lo = *sym.col_ptr.get_unchecked(j);
-                let hi = *sym.col_ptr.get_unchecked(j + 1);
-                for p in lo..hi {
-                    let i = *sym.row_idx.get_unchecked(p);
-                    *x.get_unchecked_mut(i) -= self.l.get_unchecked(p) * xj;
+            let acc = &mut ext[..t];
+            acc.fill(0.0);
+            let mut any = false;
+            for c in 0..w {
+                let j = j0 + c;
+                let xj = x[j];
+                if xj == 0.0 {
+                    continue;
+                }
+                any = true;
+                let lo = sym.col_ptr[j];
+                // intra rows j+1..jend are the column's first w-1-c slots
+                let (intra, below) = self.l[lo..sym.col_ptr[j + 1]].split_at(w - 1 - c);
+                for (xi, &lv) in x[j + 1..jend].iter_mut().zip(intra) {
+                    *xi -= lv * xj;
+                }
+                // the remaining t slots align with the shared top pattern
+                for (av, &lv) in acc.iter_mut().zip(below) {
+                    *av += lv * xj;
+                }
+            }
+            if any && t > 0 {
+                let top = &sym.row_idx[sym.col_ptr[jend - 1]..sym.col_ptr[jend]];
+                for (&i, &av) in top.iter().zip(acc.iter()) {
+                    x[i] -= av;
                 }
             }
         }
     }
 
-    /// Dense backward solve Lᵀ x = y in place.
+    /// Dense backward solve Lᵀ x = y in place (blocked by supernode; see
+    /// [`LdlFactor::solve_lower_dense`]).
     pub fn solve_upper_dense(&self, x: &mut [f64]) {
-        self.solve_upper_impl(x, None);
+        let mut ext = Vec::new();
+        self.solve_upper_impl(x, None, &mut ext);
     }
 
-    /// The shared Lᵀ substitution: optionally records every index left
-    /// nonzero into `written` (the sparse-RHS path's cleanup set).
-    fn solve_upper_impl(&self, x: &mut [f64], mut written: Option<&mut Vec<usize>>) {
+    /// The shared Lᵀ substitution, blocked by supernode: the supernode's
+    /// top-pattern entries of `x` are gathered once into a dense scratch,
+    /// then every column's update is two contiguous dot products (the
+    /// intra-panel tail and the gathered top), descending so each column
+    /// sees its successors' finished values. Optionally records every
+    /// index left nonzero into `written` (the sparse-RHS path's cleanup
+    /// set), in the same descending order as the scalar kernel.
+    fn solve_upper_impl(
+        &self,
+        x: &mut [f64],
+        mut written: Option<&mut Vec<usize>>,
+        ext: &mut Vec<f64>,
+    ) {
         let sym = &self.symbolic;
         debug_assert_eq!(x.len(), sym.n);
-        for j in (0..sym.n).rev() {
-            // SAFETY: pattern indices are < n by construction and x has
-            // length n (asserted above).
-            unsafe {
-                let lo = *sym.col_ptr.get_unchecked(j);
-                let hi = *sym.col_ptr.get_unchecked(j + 1);
-                let mut s = *x.get_unchecked(j);
-                for p in lo..hi {
-                    s -= self.l.get_unchecked(p) * x.get_unchecked(*sym.row_idx.get_unchecked(p));
+        let sched = &sym.schedule;
+        for s in (0..sched.n_snodes()).rev() {
+            let (j0, jend) = (sched.snode_ptr[s], sched.snode_ptr[s + 1]);
+            let w = jend - j0;
+            let top = &sym.row_idx[sym.col_ptr[jend - 1]..sym.col_ptr[jend]];
+            let t = top.len();
+            if ext.len() < t {
+                ext.resize(t, 0.0);
+            }
+            let xt = &mut ext[..t];
+            for (xv, &i) in xt.iter_mut().zip(top) {
+                *xv = x[i];
+            }
+            for c in (0..w).rev() {
+                let j = j0 + c;
+                let lo = sym.col_ptr[j];
+                let (intra, below) = self.l[lo..sym.col_ptr[j + 1]].split_at(w - 1 - c);
+                let mut s_intra = 0.0;
+                for (&lv, &xv) in intra.iter().zip(&x[j + 1..jend]) {
+                    s_intra += lv * xv;
                 }
-                *x.get_unchecked_mut(j) = s;
-                if s != 0.0 {
-                    if let Some(w) = written.as_mut() {
-                        w.push(j);
+                let mut s_ext = 0.0;
+                for (&lv, &xv) in below.iter().zip(xt.iter()) {
+                    s_ext += lv * xv;
+                }
+                let v = x[j] - s_intra - s_ext;
+                x[j] = v;
+                if v != 0.0 {
+                    if let Some(wr) = written.as_mut() {
+                        wr.push(j);
                     }
                 }
             }
@@ -147,7 +207,7 @@ impl LdlFactor {
         // backward solve: t is generally dense from here on, but zeros stay
         // zeros, so only the entries that end up nonzero are recorded
         ws.written.clear();
-        self.solve_upper_impl(t, Some(&mut ws.written));
+        self.solve_upper_impl(t, Some(&mut ws.written), &mut ws.ext);
     }
 }
 
@@ -159,6 +219,8 @@ pub struct SparseSolveWorkspace {
     /// Indices of the nonzero entries the last [`LdlFactor::solve_sparse_rhs`]
     /// left in the solution vector.
     pub written: Vec<usize>,
+    /// Dense gather buffer of the blocked backward solve (`O(max t)`).
+    ext: Vec<f64>,
 }
 
 impl SparseSolveWorkspace {
@@ -168,6 +230,7 @@ impl SparseSolveWorkspace {
             tag: 0,
             reach: Vec::with_capacity(n),
             written: Vec::with_capacity(n),
+            ext: Vec::new(),
         }
     }
 

@@ -257,6 +257,30 @@ fn pool_width_never_changes_any_result() {
         )
     });
 
+    // relaxed amalgamation pinned ON regardless of the CSGP_AMALG env (CI
+    // also runs this suite under CSGP_AMALG=0): the blocked factor,
+    // solves and Takahashi inverse over a padded pattern must be
+    // bitwise width-invariant too
+    use csgp::sparse::cholesky::LdlFactor;
+    use csgp::sparse::symbolic::{AmalgConfig, Symbolic};
+    let mut kmat = cov.cov_matrix(&train.x);
+    for j in 0..kmat.n_cols {
+        *kmat.get_mut(j, j) += 1.0;
+    }
+    let sym_am =
+        std::sync::Arc::new(Symbolic::analyze_with(&kmat, None, &AmalgConfig::default()));
+    assert!(
+        sym_am.padded_nnz() >= sym_am.nnz_l(),
+        "padded storage can never be smaller than the strict pattern"
+    );
+    let (am_fac, am_z, am_solve) = csgp::par::with_max_threads(1, || {
+        let f = LdlFactor::factor(sym_am.clone(), &kmat).unwrap();
+        let z = f.takahashi_inverse();
+        let mut v: Vec<f64> = (0..kmat.n_rows).map(|i| (i as f64 * 0.37).sin()).collect();
+        f.solve_in_place(&mut v);
+        ((f.l.clone(), f.d.clone()), (z.z_lower, z.z_diag), v)
+    });
+
     for width in [2usize, 7] {
         csgp::par::with_max_threads(width, || {
             let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
@@ -288,6 +312,17 @@ fn pool_width_never_changes_any_result() {
             assert_eq!(hep.recompute_sigma_diag_with(&hep.fic_factor()), h_sig, "width {width}");
             assert_eq!(hep.log_z_grad_cs(), h_grad, "width {width}");
             assert_eq!(hep.predict_latent_batch(&test.x), h_preds, "width {width}");
+
+            // amalgamation-on factor / solve / Takahashi, bit for bit
+            let f = LdlFactor::factor(sym_am.clone(), &kmat).unwrap();
+            assert_eq!(f.l, am_fac.0, "width {width}: amalg factor L bits differ");
+            assert_eq!(f.d, am_fac.1, "width {width}: amalg factor D bits differ");
+            let z = f.takahashi_inverse();
+            assert_eq!(z.z_lower, am_z.0, "width {width}: amalg takahashi differs");
+            assert_eq!(z.z_diag, am_z.1, "width {width}: amalg takahashi diag differs");
+            let mut v: Vec<f64> = (0..kmat.n_rows).map(|i| (i as f64 * 0.37).sin()).collect();
+            f.solve_in_place(&mut v);
+            assert_eq!(v, am_solve, "width {width}: amalg solve differs");
         });
     }
 }
