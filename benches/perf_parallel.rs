@@ -122,6 +122,30 @@ fn ordered_factor(
     (LdlFactor::identity(sym), b_perm, shape, res.resolved)
 }
 
+/// Delta of the pool/cache obs counters across one measured row, rendered
+/// as report extras. Call [`obs_row_start`] before the timed region; the
+/// imbalance gauge is reset there so its watermark is per-row.
+fn obs_row_start() -> csgp::obs::Snapshot {
+    csgp::obs::counters::POOL_IMBALANCE_MAX_PERMILLE.reset();
+    csgp::obs::snapshot()
+}
+
+fn obs_row_extras(before: csgp::obs::Snapshot) -> Vec<(&'static str, f64)> {
+    let after = csgp::obs::snapshot();
+    let hits = (after.cache_hit - before.cache_hit) as f64;
+    let lookups = hits + (after.cache_miss - before.cache_miss) as f64;
+    vec![
+        ("pool_chunks", (after.pool_chunks - before.pool_chunks) as f64),
+        ("pool_steals", (after.pool_steals - before.pool_steals) as f64),
+        (
+            "pool_imbalance_max_permille",
+            csgp::obs::counters::POOL_IMBALANCE_MAX_PERMILLE.get() as f64,
+        ),
+        // serialized as null when the row did no cache lookups
+        ("cache_hit_rate", if lookups > 0.0 { hits / lookups } else { f64::NAN }),
+    ]
+}
+
 /// Measure `f` at every pool width, asserting output identity against the
 /// width-1 reference, pushing every measurement into the report, and
 /// returning the per-width medians for the speedup summary.
@@ -136,13 +160,14 @@ fn measure<T: PartialEq>(
     let reference = csgp::par::with_max_threads(1, &mut f);
     let mut t = WidthTimes::default();
     for &w in &WIDTHS {
-        let stats = csgp::par::with_max_threads(w, || {
+        let (stats, obs_before) = csgp::par::with_max_threads(w, || {
             let out = f();
             assert!(
                 out == reference,
                 "{backend}/{bench}: width-{w} output differs from the serial path"
             );
-            b.run(&mut f)
+            let before = obs_row_start();
+            (b.run(&mut f), before)
         });
         let ns = stats.median.as_nanos() as f64;
         match w {
@@ -156,7 +181,7 @@ fn measure<T: PartialEq>(
             fmt_duration(stats.median),
             t.t1 / ns
         );
-        rep.push(bench, backend, n, w, &stats);
+        rep.push_with(bench, backend, n, w, &stats, &obs_row_extras(obs_before));
     }
     t
 }
@@ -183,13 +208,14 @@ fn measure_factor(
     });
     let mut t = WidthTimes::default();
     for &w in &WIDTHS {
-        let stats = csgp::par::with_max_threads(w, || {
+        let (stats, obs_before) = csgp::par::with_max_threads(w, || {
             fac.refactor(b).unwrap();
             assert!(
                 fac.l == ref_l && fac.d == ref_d,
                 "{backend}/{bench}: width-{w} factor differs from the serial path"
             );
-            harness.run(|| fac.refactor(b).unwrap())
+            let before = obs_row_start();
+            (harness.run(|| fac.refactor(b).unwrap()), before)
         });
         let ns = stats.median.as_nanos() as f64;
         match w {
@@ -205,6 +231,7 @@ fn measure_factor(
         );
         let mut extra: Vec<(&str, f64)> = shape.extra().to_vec();
         extra.push(("ns_per_col", ns / n as f64));
+        extra.extend(obs_row_extras(obs_before));
         rep.push_with(bench, backend, n, w, &stats, &extra);
     }
     t
@@ -304,6 +331,11 @@ fn factor_summary(backend: &str, n: usize, rows: &[(&'static str, FactorShape, W
 }
 
 fn main() {
+    // counters-only tracing for the whole bench: every row snapshots the
+    // pool/cache counters so steal counts, per-region imbalance and cache
+    // behaviour land in BENCH_parallel.json next to the timings (spans
+    // stay off — the bench measures the hot loops, not the trace path)
+    csgp::obs::set_mode(csgp::obs::TraceMode::Counters);
     let full = std::env::var("CSGP_FULL").is_ok();
     let n = if full { 8000 } else { 4000 };
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);

@@ -3,6 +3,10 @@
 //! predict.
 //!
 //! Run: `cargo run --release --example quickstart`
+//!
+//! Pass `--trace [path]` to record a full span trace of the fit to a
+//! JSONL file (default `trace.jsonl`) — the CI trace-schema smoke runs
+//! exactly this.
 
 use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
 use csgp::gp::covariance::{CovFunction, CovKind};
@@ -10,6 +14,19 @@ use csgp::gp::model::{GpClassifier, Inference};
 use csgp::sparse::ordering::Ordering;
 
 fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let trace_path = args.iter().position(|a| a == "--trace").map(|i| {
+        args.get(i + 1)
+            .filter(|v| !v.starts_with("--"))
+            .map(String::as_str)
+            .unwrap_or("trace.jsonl")
+            .to_string()
+    });
+    if let Some(path) = &trace_path {
+        csgp::obs::set_mode(csgp::obs::TraceMode::Full);
+        csgp::obs::set_sink(path).expect("cannot open trace sink");
+        eprintln!("tracing to {path}");
+    }
     // 1. data: the paper's nearest-centre cluster workload, 2-D
     let data = cluster_dataset(&ClusterConfig::paper_2d(600), 1);
     let (train, test) = data.split(400);
@@ -43,4 +60,10 @@ fn main() {
     let probs = fitted.predict_proba(&test.x[..5]);
     println!("first five class probabilities: {probs:.3?}");
     assert!(metrics.err < 0.4, "quickstart model should beat chance comfortably");
+
+    if trace_path.is_some() {
+        let n = csgp::obs::flush().expect("trace flush failed");
+        eprintln!("{}", csgp::obs::summary());
+        eprintln!("flushed {n} trace spans");
+    }
 }

@@ -15,6 +15,9 @@ pub struct Stats {
     pub min: Duration,
     pub max: Duration,
     pub stddev: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
 }
 
 impl Stats {
@@ -33,15 +36,35 @@ impl Stats {
             })
             .sum::<f64>()
             / n as f64;
+        // even n: midpoint of the two middle samples (samples[n/2] alone is
+        // the *upper* middle and biases the median high)
+        let median = if n % 2 == 1 {
+            samples[n / 2]
+        } else {
+            (samples[n / 2 - 1] + samples[n / 2]) / 2
+        };
         Stats {
             iters: n,
             mean,
-            median: samples[n / 2],
+            median,
             min: samples[0],
             max: samples[n - 1],
             stddev: Duration::from_secs_f64(var.sqrt()),
+            p50: percentile_sorted(&samples, 50.0),
+            p90: percentile_sorted(&samples, 90.0),
+            p99: percentile_sorted(&samples, 99.0),
         }
     }
+}
+
+/// Nearest-rank percentile of an already-sorted sample set. The same
+/// convention as `obs::Histogram::percentile_ns`, but exact (no bucketing):
+/// rank ⌈p/100 · n⌉, clamped to [1, n].
+pub fn percentile_sorted(sorted: &[Duration], p: f64) -> Duration {
+    assert!(!sorted.is_empty());
+    let n = sorted.len();
+    let rank = ((p / 100.0) * n as f64).ceil() as usize;
+    sorted[rank.clamp(1, n) - 1]
 }
 
 /// Harness configuration: `warmup` unmeasured runs then up to `max_iters`
@@ -250,6 +273,35 @@ mod tests {
         assert_eq!(s.min, Duration::from_millis(1));
         assert_eq!(s.max, Duration::from_millis(3));
         assert_eq!(s.mean, Duration::from_millis(2));
+        assert_eq!(s.p50, Duration::from_millis(2));
+        assert_eq!(s.p99, Duration::from_millis(3));
+    }
+
+    /// Even sample counts take the midpoint of the two middle samples —
+    /// `samples[n/2]` alone is the upper middle and biased the median high.
+    #[test]
+    fn even_sample_median_is_the_midpoint() {
+        let s = Stats::from_samples(vec![
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+            Duration::from_millis(4),
+            Duration::from_millis(8),
+        ]);
+        assert_eq!(s.median, Duration::from_millis(3));
+        // nearest-rank percentiles stay actual samples
+        assert_eq!(s.p50, Duration::from_millis(2));
+        assert_eq!(s.p90, Duration::from_millis(8));
+        assert_eq!(s.p99, Duration::from_millis(8));
+    }
+
+    #[test]
+    fn percentile_sorted_nearest_rank() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_nanos).collect();
+        assert_eq!(percentile_sorted(&samples, 50.0), Duration::from_nanos(50));
+        assert_eq!(percentile_sorted(&samples, 90.0), Duration::from_nanos(90));
+        assert_eq!(percentile_sorted(&samples, 99.0), Duration::from_nanos(99));
+        assert_eq!(percentile_sorted(&samples, 0.0), Duration::from_nanos(1));
+        assert_eq!(percentile_sorted(&samples, 100.0), Duration::from_nanos(100));
     }
 
     #[test]

@@ -7,14 +7,99 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::data::Dataset;
 use crate::gp::covariance::CovFunction;
 use crate::gp::model::{FittedClassifier, GpClassifier, Inference};
+use crate::obs;
 
 /// Job identifier.
 pub type JobId = u64;
+
+/// Where in its lifecycle a job failed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStage {
+    /// Constructing the model from the [`TrainSpec`].
+    BuildSpec,
+    /// The EP run at fixed hyperparameters (`infer_only`).
+    Ep,
+    /// Hyperparameter optimization (`fit`: SCG over EP evaluations).
+    Optimize,
+}
+
+impl JobStage {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobStage::BuildSpec => "build_spec",
+            JobStage::Ep => "ep",
+            JobStage::Optimize => "optimize",
+        }
+    }
+}
+
+/// Why a job failed — structured so traces and callers can tell a
+/// numeric pivot failure apart from a misconfigured spec without
+/// grepping message strings.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobErrorKind {
+    /// The spec itself is invalid (e.g. a global kernel on a non-hybrid
+    /// backend, a bad inducing-point count).
+    BadSpec,
+    /// The LDLᵀ factorization hit a non-positive pivot.
+    PivotFailure,
+    /// EP produced a non-positive marginal variance at some site.
+    NegativeVariance,
+    /// Any other numeric failure from the model layer.
+    Numeric,
+}
+
+impl JobErrorKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobErrorKind::BadSpec => "bad_spec",
+            JobErrorKind::PivotFailure => "pivot_failure",
+            JobErrorKind::NegativeVariance => "negative_variance",
+            JobErrorKind::Numeric => "numeric",
+        }
+    }
+}
+
+/// A structured job failure: kind × stage plus the underlying message.
+/// Recorded as `error_kind` / `error_stage` fields on the job's obs span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobError {
+    pub kind: JobErrorKind,
+    pub stage: JobStage,
+    pub message: String,
+}
+
+impl JobError {
+    /// Classify a stringly error bubbling up from the model layer. Build
+    /// errors are spec problems by construction; fit/infer errors are
+    /// recognized by the stable phrases the solver stack uses
+    /// (`cholesky.rs`'s pivot error, `ep_sparse.rs`'s variance error).
+    pub fn classify(stage: JobStage, message: String) -> JobError {
+        let kind = if stage == JobStage::BuildSpec {
+            JobErrorKind::BadSpec
+        } else if message.contains("not positive definite") {
+            JobErrorKind::PivotFailure
+        } else if message.contains("negative marginal variance") {
+            JobErrorKind::NegativeVariance
+        } else {
+            JobErrorKind::Numeric
+        };
+        JobError { kind, stage, message }
+    }
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} during {}: {}", self.kind.as_str(), self.stage.as_str(), self.message)
+    }
+}
+
+impl std::error::Error for JobError {}
 
 /// What to train.
 #[derive(Clone)]
@@ -34,7 +119,7 @@ pub enum JobStatus {
     Queued,
     Running,
     Done { log_post: f64, ep_time: Duration, opt_time: Duration },
-    Failed(String),
+    Failed(JobError),
 }
 
 struct Shared {
@@ -72,6 +157,13 @@ impl JobManager {
                     Err(_) => return,
                 };
                 shared.status.lock().unwrap().insert(id, JobStatus::Running);
+                let track = obs::counters_on();
+                let t_job = if track { Some(Instant::now()) } else { None };
+                let mut jspan = obs::span("job");
+                if jspan.is_active() {
+                    jspan.field_u64("id", id);
+                    jspan.field_bool("optimize", spec.optimize);
+                }
                 // CS+FIC jobs go through the dedicated constructor so the
                 // hyperprior covers the joint parameter vector; a global
                 // kernel on any other backend is a misconfiguration (it
@@ -91,15 +183,31 @@ impl JobManager {
                     )),
                     _ => Ok(GpClassifier::new(spec.cov.clone(), spec.inference.clone())),
                 };
-                let outcome = model.and_then(|model| {
-                    if spec.optimize {
-                        model.fit(&spec.dataset.x, &spec.dataset.y)
-                    } else {
-                        model.infer_only(&spec.dataset.x, &spec.dataset.y)
-                    }
-                });
+                let fit_stage = if spec.optimize { JobStage::Optimize } else { JobStage::Ep };
+                let outcome = model
+                    .map_err(|e| JobError::classify(JobStage::BuildSpec, e))
+                    .and_then(|model| {
+                        let fitted = if spec.optimize {
+                            model.fit(&spec.dataset.x, &spec.dataset.y)
+                        } else {
+                            model.infer_only(&spec.dataset.x, &spec.dataset.y)
+                        };
+                        fitted.map_err(|e| JobError::classify(fit_stage, e))
+                    });
                 match outcome {
                     Ok(fitted) => {
+                        if let Some(t0) = t_job {
+                            let hist = if spec.optimize {
+                                &obs::counters::JOB_FIT_NS
+                            } else {
+                                &obs::counters::JOB_INFER_NS
+                            };
+                            hist.record(t0.elapsed());
+                        }
+                        obs::counters::JOBS_DONE.add(1);
+                        if jspan.is_active() {
+                            jspan.field_str("status", "done");
+                        }
                         let st = JobStatus::Done {
                             log_post: fitted.report.log_post,
                             ep_time: fitted.report.ep_time,
@@ -109,6 +217,12 @@ impl JobManager {
                         shared.status.lock().unwrap().insert(id, st);
                     }
                     Err(e) => {
+                        obs::counters::JOBS_FAILED.add(1);
+                        if jspan.is_active() {
+                            jspan.field_str("status", "failed");
+                            jspan.field_str("error_kind", e.kind.as_str());
+                            jspan.field_str("error_stage", e.stage.as_str());
+                        }
                         shared.status.lock().unwrap().insert(id, JobStatus::Failed(e));
                     }
                 }
@@ -254,7 +368,14 @@ mod tests {
         let mgr = JobManager::start(1);
         let id = mgr.submit(spec).unwrap();
         let st = mgr.wait(id, Duration::from_secs(30)).unwrap();
-        assert!(matches!(st, JobStatus::Failed(_)), "{st:?}");
+        match st {
+            JobStatus::Failed(err) => {
+                assert_eq!(err.kind, JobErrorKind::BadSpec);
+                assert_eq!(err.stage, JobStage::BuildSpec);
+                assert!(err.message.contains("global_cov"), "{err}");
+            }
+            other => panic!("expected a failed job, got {other:?}"),
+        }
         mgr.shutdown();
     }
 }

@@ -10,5 +10,5 @@
 pub mod jobs;
 pub mod service;
 
-pub use jobs::{JobId, JobManager, JobStatus, TrainSpec};
-pub use service::{PredictionService, ServiceConfig, ServiceStats};
+pub use jobs::{JobError, JobErrorKind, JobId, JobManager, JobStage, JobStatus, TrainSpec};
+pub use service::{PredictionService, ServiceConfig, ServiceError, ServiceStats};

@@ -15,7 +15,33 @@ use std::time::{Duration, Instant};
 
 use crate::gp::model::FittedClassifier;
 use crate::gp::predict::class_probability;
+use crate::obs;
 use crate::runtime::Runtime;
+
+/// Why [`PredictionService::predict`] failed — lifecycle errors only
+/// (the compute path itself is infallible once a request is accepted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// `shutdown` already ran; no new requests are accepted.
+    Stopped,
+    /// The worker thread is gone (its receiver hung up).
+    WorkerGone,
+    /// The worker dropped the request without replying.
+    RequestDropped,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msg = match self {
+            ServiceError::Stopped => "service stopped",
+            ServiceError::WorkerGone => "service worker gone",
+            ServiceError::RequestDropped => "service dropped request",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// Service tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -85,15 +111,17 @@ impl PredictionService {
     }
 
     /// Submit one request and wait for the answer.
-    pub fn predict(&self, x: Vec<f64>) -> Result<Prediction, String> {
+    pub fn predict(&self, x: Vec<f64>) -> Result<Prediction, ServiceError> {
         let (reply_tx, reply_rx) = channel();
         {
             let guard = self.tx.lock().unwrap();
-            let tx = guard.as_ref().ok_or("service stopped")?;
+            let tx = guard.as_ref().ok_or(ServiceError::Stopped)?;
             tx.send(Request { x, enqueued: Instant::now(), reply: reply_tx })
-                .map_err(|_| "service worker gone".to_string())?;
+                .map_err(|_| ServiceError::WorkerGone)?;
         }
-        reply_rx.recv().map_err(|_| "service dropped request".to_string())
+        let pred = reply_rx.recv().map_err(|_| ServiceError::RequestDropped)?;
+        obs::counters::SVC_REQUEST_NS.record(pred.service_time);
+        Ok(pred)
     }
 
     /// Drain and stop the worker.
@@ -147,6 +175,13 @@ fn serve_loop(
         stats
             .batched_items_max
             .fetch_max(batch.len() as u64, AtomicOrdering::Relaxed);
+        // span covers the compute only — the batching wait above is the
+        // deadline's business, not the predictor's
+        let t_batch = if obs::counters_on() { Some(Instant::now()) } else { None };
+        let mut bspan = obs::span("svc.batch");
+        if bspan.is_active() {
+            bspan.field_u64("size", batch.len() as u64);
+        }
 
         // latent predictions: the batch's sparse solves fan out over the
         // worker pool (forked workspaces sharing the predictor's neighbor
@@ -167,6 +202,10 @@ fn serve_loop(
             }
             None => latents.iter().map(|&(m, v)| class_probability(m, v)).collect(),
         };
+        if let Some(t0) = t_batch {
+            obs::counters::SVC_BATCH_NS.record(t0.elapsed());
+        }
+        drop(bspan);
         for ((req, (m, v)), p) in batch.into_iter().zip(latents).zip(probs) {
             let _ = req.reply.send(Prediction {
                 probability: p,

@@ -225,10 +225,22 @@ impl PatternCache {
             // the fingerprint covers the length, so n_cols needs no check
             if self.data_fp == fp && cached.covers(cov) {
                 self.hits += 1;
+                crate::obs::counters::CACHE_HIT.add(1);
+                if cov.lengthscales != cached.lengthscales {
+                    // superset reuse: the ellipsoid shrank, values are
+                    // re-evaluated on the cached (bigger) pattern
+                    crate::obs::counters::CACHE_SHRINK_REUSE.add(1);
+                }
                 return cached.clone();
             }
         }
         self.misses += 1;
+        crate::obs::counters::CACHE_MISS.add(1);
+        if self.pattern.is_some() && self.data_fp == fp {
+            // same point set, grown support: new neighbor queries, new
+            // ordering, new symbolic analysis
+            crate::obs::counters::CACHE_GROW_REANALYZE.add(1);
+        }
         let pattern = match cov.support_radius() {
             Some(r) if x.len() >= INDEX_MIN_N => {
                 // one index serves every rebuild: grid/kd-tree queries
@@ -266,6 +278,11 @@ impl PatternCache {
             return (cached, plan.clone());
         }
         let n = x.len();
+        let mut pspan = crate::obs::span("cache.plan");
+        if pspan.is_active() {
+            pspan.field_u64("n", n as u64);
+            pspan.field_u64("nnz", cached.pattern.nnz() as u64);
+        }
         // the training inputs are exactly the pattern's node coordinates,
         // so nested dissection (chosen directly or by the Auto policy)
         // always gets its geometric-bisection fast path here

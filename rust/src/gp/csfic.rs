@@ -169,6 +169,11 @@ impl CsFicEp {
         let mut batch = SiteBatch::new();
 
         while sweeps < opts.max_sweeps {
+            // per-sweep convergence telemetry, observed only (see ep_parallel)
+            let track = crate::obs::counters_on();
+            let mut sweep_span = crate::obs::span("ep.sweep");
+            let mut max_site_delta = 0.0f64;
+            let mut updated = 0u64;
             // batched (parallel-EP) site updates from the current marginals
             batch.update(&yp, &mu, &sigma_diag, &sites.tau, &sites.nu);
             for i in 0..n {
@@ -178,8 +183,15 @@ impl CsFicEp {
                 sites.ln_zhat[i] = batch.ln_zhat[i];
                 sites.tau_cav[i] = batch.tau_cav[i];
                 sites.nu_cav[i] = batch.nu_cav[i];
-                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * sites.tau[i];
-                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * sites.nu[i];
+                let (tau_old, nu_old) = (sites.tau[i], sites.nu[i]);
+                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * tau_old;
+                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * nu_old;
+                if track {
+                    let delta =
+                        (sites.tau[i] - tau_old).abs().max((sites.nu[i] - nu_old).abs());
+                    max_site_delta = max_site_delta.max(delta);
+                    updated += 1;
+                }
             }
 
             // one refactor of B = S_B + Us Usᵀ for the whole batch
@@ -199,6 +211,20 @@ impl CsFicEp {
             sweeps += 1;
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
             log_z = ep_log_z(&sites, solver.logdet(), nu_dot_mu);
+            if track {
+                crate::obs::counters::EP_SWEEPS.add(1);
+                crate::obs::counters::EP_SITE_VISITS.add(n as u64);
+                crate::obs::counters::EP_DAMPED_UPDATES.add(updated);
+            }
+            if sweep_span.is_active() {
+                sweep_span.field_str("backend", "csfic");
+                sweep_span.field_u64("sweep", sweeps as u64);
+                sweep_span.field_f64("logz", log_z);
+                sweep_span.field_f64("dlogz", log_z - log_z_old);
+                sweep_span.field_f64("max_site_delta", max_site_delta);
+                sweep_span.field_u64("damped_updates", updated);
+                sweep_span.field_f64("damping", damping);
+            }
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 break;

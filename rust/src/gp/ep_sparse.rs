@@ -136,6 +136,14 @@ impl SparseEp {
         let mut converged = false;
 
         while sweeps < opts.max_sweeps {
+            // Per-sweep telemetry only (the per-site path is too hot for
+            // spans — its whole obs footprint is the gated counter inside
+            // `solve_sparse_rhs`); everything tracked here is observed
+            // from values the sweep computes anyway.
+            let track = crate::obs::counters_on();
+            let mut sweep_span = crate::obs::span("ep.sweep");
+            let mut max_site_delta = 0.0f64;
+            let mut updated = 0u64;
             for i in 0..n {
                 let (krows, kvals) = k.col(i);
                 // a = S̃^{1/2} K[:, i]
@@ -175,6 +183,13 @@ impl SparseEp {
                     nn = opts.damping * nn + (1.0 - opts.damping) * sites.nu[i];
                 }
                 let dnu = nn - sites.nu[i];
+                if track {
+                    let delta = (tn - sites.tau[i]).abs().max(dnu.abs());
+                    max_site_delta = max_site_delta.max(delta);
+                    if opts.damping < 1.0 {
+                        updated += 1;
+                    }
+                }
                 sites.ln_zhat[i] = lz;
                 sites.tau_cav[i] = tc;
                 sites.nu_cav[i] = nc;
@@ -218,6 +233,20 @@ impl SparseEp {
             let mu = posterior_mean(&k, &factor, &sites, &gamma, &mut solve_ws);
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
             log_z = ep_log_z(&sites, factor.logdet(), nu_dot_mu);
+            if track {
+                crate::obs::counters::EP_SWEEPS.add(1);
+                crate::obs::counters::EP_SITE_VISITS.add(n as u64);
+                crate::obs::counters::EP_DAMPED_UPDATES.add(updated);
+            }
+            if sweep_span.is_active() {
+                sweep_span.field_str("backend", "sparse");
+                sweep_span.field_u64("sweep", sweeps as u64);
+                sweep_span.field_f64("logz", log_z);
+                sweep_span.field_f64("dlogz", log_z - log_z_old);
+                sweep_span.field_f64("max_site_delta", max_site_delta);
+                sweep_span.field_u64("damped_updates", updated);
+                sweep_span.field_f64("damping", opts.damping);
+            }
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 mu_rec = mu;

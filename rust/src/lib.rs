@@ -39,6 +39,11 @@
 //!   solves, Takahashi gradient waves, covariance assembly, batched
 //!   prediction. Sized by `CSGP_THREADS` / available parallelism;
 //!   results are bitwise-identical to the serial path at any width.
+//! * [`obs`] — structured tracing + metrics: spans over EP sweeps /
+//!   factorization waves / pool chunks / coordinator jobs drained to a
+//!   JSONL sink, plus process-wide counters, gauges and latency
+//!   histograms. Gated by `CSGP_TRACE` (off / counters / full) and
+//!   provably inert with respect to results when off.
 //! * [`bench`] — a minimal measurement harness used by `benches/`.
 //!
 //! # Structure reuse contract
@@ -61,6 +66,7 @@ pub mod data;
 pub mod geom;
 pub mod gp;
 pub mod metrics;
+pub mod obs;
 pub mod opt;
 pub mod par;
 pub mod rng;

@@ -185,18 +185,18 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
         latencies.extend(h.join().unwrap());
     }
     let wall = t0.elapsed();
-    latencies.sort();
     let total = latencies.len();
+    let stats = csgp::bench::Stats::from_samples(latencies);
     println!(
         "served {total} requests in {:.3}s  ({:.0} req/s)",
         wall.as_secs_f64(),
         total as f64 / wall.as_secs_f64()
     );
     println!(
-        "latency p50 = {:?}  p95 = {:?}  p99 = {:?}  max batch = {}",
-        latencies[total / 2],
-        latencies[total * 95 / 100],
-        latencies[total * 99 / 100],
+        "latency p50 = {:?}  p90 = {:?}  p99 = {:?}  max batch = {}",
+        stats.p50,
+        stats.p90,
+        stats.p99,
         svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed)
     );
     svc.shutdown();
@@ -296,6 +296,17 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = args.first() else { usage() };
     let flags = parse_flags(&args[1..]);
+    // --trace [path]: full tracing to a JSONL sink (default trace.jsonl),
+    // overriding whatever CSGP_TRACE says
+    if let Some(path) = flags.get("trace") {
+        let path = if path == "true" { "trace.jsonl" } else { path.as_str() };
+        csgp::obs::set_mode(csgp::obs::TraceMode::Full);
+        if let Err(e) = csgp::obs::set_sink(path) {
+            eprintln!("error: cannot open trace sink '{path}': {e}");
+            std::process::exit(1);
+        }
+        eprintln!("tracing to {path}");
+    }
     let result = match cmd.as_str() {
         "train" => cmd_train(flags),
         "cv" => cmd_cv(flags),
@@ -305,6 +316,14 @@ fn main() {
         "profile" => cmd_profile(flags),
         _ => usage(),
     };
+    if csgp::obs::counters_on() {
+        eprintln!("{}", csgp::obs::summary());
+    }
+    match csgp::obs::flush() {
+        Ok(0) => {}
+        Ok(n) => eprintln!("flushed {n} trace spans"),
+        Err(e) => eprintln!("warning: trace flush failed: {e}"),
+    }
     if let Err(e) = result {
         eprintln!("error: {e}");
         std::process::exit(1);

@@ -1,0 +1,313 @@
+//! Process-wide atomic counters, max-gauges and the named latency
+//! histograms, plus [`snapshot`] / [`summary`] for benches and the CLI.
+//!
+//! Everything here is a `static` with const initialization — no
+//! registration, no locks, no allocation. Increments are gated on
+//! [`counters_on`](super::counters_on), so with `CSGP_TRACE` unset every
+//! site is one relaxed load and a skipped branch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::hist::Histogram;
+use crate::bench::fmt_duration;
+use std::time::Duration;
+
+/// A monotone event counter (relaxed atomic, gated on the trace mode).
+pub struct Counter(AtomicU64);
+
+impl Default for Counter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` (no-op unless counters are on).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if super::counters_on() {
+            self.0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A high-watermark gauge: `record` keeps the maximum value seen.
+pub struct MaxGauge(AtomicU64);
+
+impl Default for MaxGauge {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MaxGauge {
+    pub const fn new() -> MaxGauge {
+        MaxGauge(AtomicU64::new(0))
+    }
+
+    /// Raise the watermark to `v` if higher (no-op unless counters on).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        if super::counters_on() {
+            self.0.fetch_max(v, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+// --- PatternCache -----------------------------------------------------------
+
+/// Pattern/ordering/symbolic reuse across hyperparameter steps.
+pub static CACHE_HIT: Counter = Counter::new();
+pub static CACHE_MISS: Counter = Counter::new();
+/// Hits where the support ellipsoid shrank: the superset pattern was
+/// reused with re-evaluated values.
+pub static CACHE_SHRINK_REUSE: Counter = Counter::new();
+/// Misses where a previously built pattern existed but the support grew,
+/// forcing new neighbor queries + ordering + symbolic analysis.
+pub static CACHE_GROW_REANALYZE: Counter = Counter::new();
+
+// --- par:: pool -------------------------------------------------------------
+
+/// Chunks executed by any participant of a fanned-out region.
+pub static POOL_CHUNKS: Counter = Counter::new();
+/// Chunks executed by a pool worker rather than the issuing thread.
+pub static POOL_STEALS: Counter = Counter::new();
+/// Total in-chunk busy time across all participants.
+pub static POOL_BUSY_NS: Counter = Counter::new();
+/// Time the issuing thread spent waiting on stragglers after running out
+/// of chunks — the pool's idle-time / imbalance tail.
+pub static POOL_CALLER_WAIT_NS: Counter = Counter::new();
+/// Worst per-region imbalance seen: max participant busy time over the
+/// mean, in permille (1000 = perfectly balanced).
+pub static POOL_IMBALANCE_MAX_PERMILLE: MaxGauge = MaxGauge::new();
+
+// --- EP ---------------------------------------------------------------------
+
+pub static EP_SWEEPS: Counter = Counter::new();
+pub static EP_SITE_VISITS: Counter = Counter::new();
+/// Site-update merges performed with damping < 1.
+pub static EP_DAMPED_UPDATES: Counter = Counter::new();
+
+// --- solver stack -----------------------------------------------------------
+
+pub static FACTOR_REFACTORS: Counter = Counter::new();
+pub static FACTOR_WAVES: Counter = Counter::new();
+/// Sparse / dense triangular solve calls (per-site RHS solves dominate).
+pub static SOLVES: Counter = Counter::new();
+pub static TAKAHASHI_RUNS: Counter = Counter::new();
+
+// --- coordinator ------------------------------------------------------------
+
+pub static JOBS_DONE: Counter = Counter::new();
+pub static JOBS_FAILED: Counter = Counter::new();
+
+// --- latency histograms -----------------------------------------------------
+
+/// Per-chunk latency across every fanned-out pool region.
+pub static POOL_CHUNK_NS: Histogram = Histogram::new();
+/// Coordinator fit-job latency (spec build + EP, optionally SCG).
+pub static JOB_FIT_NS: Histogram = Histogram::new();
+/// Coordinator inference-job latency (EP at fixed hyperparameters).
+pub static JOB_INFER_NS: Histogram = Histogram::new();
+/// Prediction-service batch compute latency.
+pub static SVC_BATCH_NS: Histogram = Histogram::new();
+/// Prediction-service per-request service time (queueing included).
+pub static SVC_REQUEST_NS: Histogram = Histogram::new();
+
+/// A point-in-time copy of every counter (not the histograms). Benches
+/// snapshot before/after a measured region and report the difference.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub cache_hit: u64,
+    pub cache_miss: u64,
+    pub cache_shrink_reuse: u64,
+    pub cache_grow_reanalyze: u64,
+    pub pool_chunks: u64,
+    pub pool_steals: u64,
+    pub pool_busy_ns: u64,
+    pub pool_caller_wait_ns: u64,
+    pub ep_sweeps: u64,
+    pub ep_site_visits: u64,
+    pub ep_damped_updates: u64,
+    pub factor_refactors: u64,
+    pub factor_waves: u64,
+    pub solves: u64,
+    pub takahashi_runs: u64,
+    pub jobs_done: u64,
+    pub jobs_failed: u64,
+}
+
+/// Read every counter at once.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        cache_hit: CACHE_HIT.get(),
+        cache_miss: CACHE_MISS.get(),
+        cache_shrink_reuse: CACHE_SHRINK_REUSE.get(),
+        cache_grow_reanalyze: CACHE_GROW_REANALYZE.get(),
+        pool_chunks: POOL_CHUNKS.get(),
+        pool_steals: POOL_STEALS.get(),
+        pool_busy_ns: POOL_BUSY_NS.get(),
+        pool_caller_wait_ns: POOL_CALLER_WAIT_NS.get(),
+        ep_sweeps: EP_SWEEPS.get(),
+        ep_site_visits: EP_SITE_VISITS.get(),
+        ep_damped_updates: EP_DAMPED_UPDATES.get(),
+        factor_refactors: FACTOR_REFACTORS.get(),
+        factor_waves: FACTOR_WAVES.get(),
+        solves: SOLVES.get(),
+        takahashi_runs: TAKAHASHI_RUNS.get(),
+        jobs_done: JOBS_DONE.get(),
+        jobs_failed: JOBS_FAILED.get(),
+    }
+}
+
+/// Zero every counter, gauge and histogram. Benches call this between
+/// measurement windows; not atomic with respect to concurrent recording.
+pub fn reset_all() {
+    for c in [
+        &CACHE_HIT,
+        &CACHE_MISS,
+        &CACHE_SHRINK_REUSE,
+        &CACHE_GROW_REANALYZE,
+        &POOL_CHUNKS,
+        &POOL_STEALS,
+        &POOL_BUSY_NS,
+        &POOL_CALLER_WAIT_NS,
+        &EP_SWEEPS,
+        &EP_SITE_VISITS,
+        &EP_DAMPED_UPDATES,
+        &FACTOR_REFACTORS,
+        &FACTOR_WAVES,
+        &SOLVES,
+        &TAKAHASHI_RUNS,
+        &JOBS_DONE,
+        &JOBS_FAILED,
+    ] {
+        c.reset();
+    }
+    POOL_IMBALANCE_MAX_PERMILLE.reset();
+    for h in [&POOL_CHUNK_NS, &JOB_FIT_NS, &JOB_INFER_NS, &SVC_BATCH_NS, &SVC_REQUEST_NS] {
+        h.reset();
+    }
+}
+
+/// Human-readable report of every live counter, gauge and histogram —
+/// the coordinator CLI and the benches embed this after a run. Latency
+/// histograms report count / p50 / p90 / p99, matching the percentile
+/// fields [`crate::bench::Stats`] reports for exact samples.
+pub fn summary() -> String {
+    use std::fmt::Write;
+    let s = snapshot();
+    let ns = |v: u64| fmt_duration(Duration::from_nanos(v));
+    let mut out = String::new();
+    let _ = writeln!(out, "obs summary (mode={:?}):", super::mode());
+    let _ = writeln!(
+        out,
+        "  ep: sweeps={} site_visits={} damped_updates={}",
+        s.ep_sweeps, s.ep_site_visits, s.ep_damped_updates
+    );
+    let _ = writeln!(
+        out,
+        "  solver: refactors={} waves={} solves={} takahashi={}",
+        s.factor_refactors, s.factor_waves, s.solves, s.takahashi_runs
+    );
+    let _ = writeln!(
+        out,
+        "  cache: hit={} miss={} shrink_reuse={} grow_reanalyze={}",
+        s.cache_hit, s.cache_miss, s.cache_shrink_reuse, s.cache_grow_reanalyze
+    );
+    let _ = writeln!(
+        out,
+        "  pool: chunks={} steals={} busy={} caller_wait={} imbalance_max={}permille",
+        s.pool_chunks,
+        s.pool_steals,
+        ns(s.pool_busy_ns),
+        ns(s.pool_caller_wait_ns),
+        POOL_IMBALANCE_MAX_PERMILLE.get()
+    );
+    let _ = writeln!(out, "  jobs: done={} failed={}", s.jobs_done, s.jobs_failed);
+    for (name, h) in [
+        ("pool.chunk", &POOL_CHUNK_NS),
+        ("job.fit", &JOB_FIT_NS),
+        ("job.infer", &JOB_INFER_NS),
+        ("svc.batch", &SVC_BATCH_NS),
+        ("svc.request", &SVC_REQUEST_NS),
+    ] {
+        if h.count() == 0 {
+            continue;
+        }
+        let _ = writeln!(
+            out,
+            "  hist {name}: count={} p50={} p90={} p99={}",
+            h.count(),
+            fmt_duration(h.percentile(50.0)),
+            fmt_duration(h.percentile(90.0)),
+            fmt_duration(h.percentile(99.0))
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{with_mode, TraceMode};
+    use super::*;
+
+    #[test]
+    fn counters_are_gated_on_mode() {
+        static LOCAL: Counter = Counter::new();
+        with_mode(TraceMode::Off, || {
+            LOCAL.add(5);
+            assert_eq!(LOCAL.get(), 0);
+        });
+        with_mode(TraceMode::Counters, || {
+            LOCAL.add(5);
+            LOCAL.add(2);
+            assert_eq!(LOCAL.get(), 7);
+        });
+        LOCAL.reset();
+        assert_eq!(LOCAL.get(), 0);
+    }
+
+    #[test]
+    fn gauge_keeps_the_maximum() {
+        static G: MaxGauge = MaxGauge::new();
+        with_mode(TraceMode::Counters, || {
+            G.record(3);
+            G.record(9);
+            G.record(4);
+            assert_eq!(G.get(), 9);
+        });
+        G.reset();
+        assert_eq!(G.get(), 0);
+    }
+
+    #[test]
+    fn summary_mentions_every_section() {
+        let text = summary();
+        for needle in ["obs summary", "ep:", "solver:", "cache:", "pool:", "jobs:"] {
+            assert!(text.contains(needle), "missing {needle:?} in {text}");
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Log₂-bucketed latency histograms: fixed-size, lock-free, const-init.
+//!
+//! One bucket per power of two of nanoseconds (64 buckets cover the whole
+//! `u64` range), so recording is a `leading_zeros` plus three relaxed
+//! atomic adds and a percentile query walks 64 slots. Percentiles are
+//! therefore bucket-resolution estimates (within ~1.5× of the true
+//! value) — exactly enough to tell a 2 µs chunk from a 2 ms one, which is
+//! what the pool auto-tuning and serving-latency questions need. Exact
+//! percentiles over raw samples stay in [`crate::bench::Stats`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::counters_on;
+
+const BUCKETS: usize = 64;
+
+/// A histogram of durations in log₂(ns) buckets, plus total count and
+/// sum. All methods are lock-free; recording is gated on
+/// [`counters_on`], so a disabled histogram costs one relaxed load.
+pub struct Histogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            buckets: [const { AtomicU64::new(0) }; BUCKETS],
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn bucket_of(ns: u64) -> usize {
+        // floor(log2(max(ns, 1))): 0..=63
+        (63 - (ns | 1).leading_zeros()) as usize
+    }
+
+    /// Record one latency in nanoseconds (no-op unless counters are on).
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        if !counters_on() {
+            return;
+        }
+        self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    /// Record one latency as a [`Duration`].
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Mean recorded latency in nanoseconds (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            0
+        } else {
+            self.sum_ns() / n
+        }
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), reported as the midpoint
+    /// of the winning bucket `[2^b, 2^(b+1))`. Returns 0 when empty.
+    pub fn percentile_ns(&self, p: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (b, slot) in self.buckets.iter().enumerate() {
+            seen += slot.load(Ordering::Relaxed);
+            if seen >= rank {
+                return (1u64 << b) + ((1u64 << b) >> 1);
+            }
+        }
+        u64::MAX
+    }
+
+    /// [`Histogram::percentile_ns`] as a [`Duration`].
+    pub fn percentile(&self, p: f64) -> Duration {
+        Duration::from_nanos(self.percentile_ns(p))
+    }
+
+    /// Zero every bucket and the count/sum. Not atomic with respect to
+    /// concurrent recording — callers reset between measurement windows.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{with_mode, TraceMode};
+    use super::*;
+
+    #[test]
+    fn buckets_cover_the_u64_range() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 0);
+        assert_eq!(Histogram::bucket_of(2), 1);
+        assert_eq!(Histogram::bucket_of(3), 1);
+        assert_eq!(Histogram::bucket_of(1024), 10);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 63);
+    }
+
+    #[test]
+    fn percentiles_land_in_the_right_bucket() {
+        let h = Histogram::new();
+        with_mode(TraceMode::Counters, || {
+            // 90 fast (~1 µs) + 10 slow (~1 ms) samples
+            for _ in 0..90 {
+                h.record_ns(1_000);
+            }
+            for _ in 0..10 {
+                h.record_ns(1_000_000);
+            }
+            assert_eq!(h.count(), 100);
+            assert_eq!(h.sum_ns(), 90 * 1_000 + 10 * 1_000_000);
+            let p50 = h.percentile_ns(50.0);
+            let p99 = h.percentile_ns(99.0);
+            // bucket midpoints: 1000 -> [512, 1024) midpoint 768;
+            // 1_000_000 -> [2^19, 2^20) midpoint 786432
+            assert_eq!(p50, 768);
+            assert_eq!(p99, 786_432);
+            assert!(h.percentile_ns(0.0) <= p50 && p50 <= p99);
+            h.reset();
+            assert_eq!(h.count(), 0);
+            assert_eq!(h.percentile_ns(50.0), 0);
+        });
+    }
+
+    #[test]
+    fn disabled_histogram_records_nothing() {
+        let h = Histogram::new();
+        with_mode(TraceMode::Off, || {
+            h.record_ns(123);
+            h.record(Duration::from_micros(5));
+        });
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_ns(), 0);
+    }
+}

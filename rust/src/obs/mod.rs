@@ -1,0 +1,575 @@
+//! `obs` — structured tracing, metrics, and profiling hooks.
+//!
+//! The paper's argument is a cost model: EP sweep time decomposed into
+//! factorization, rank-one updates and marginal-variance passes. This
+//! module lets the *running* system report that decomposition — and EP's
+//! convergence trajectory — without a bespoke bench per question. Std
+//! only, no external crates, and near-zero cost when disabled.
+//!
+//! Three trace modes, selected by the `CSGP_TRACE` environment variable
+//! (read once, lazily) or programmatically via [`set_mode`]:
+//!
+//! * **Off** (`CSGP_TRACE` unset, `0`, or `off`) — every instrumentation
+//!   site reduces to one relaxed atomic load and a branch. No allocation,
+//!   no timestamps, no formatting.
+//! * **Counters** (`1` / `counters`) — process-wide atomic counters,
+//!   max-gauges and log₂-bucketed latency histograms ([`counters`]) are
+//!   live; spans stay inert. Cheap enough for benches to leave on.
+//! * **Full** (`2` / `full`) — counters plus structured spans: RAII
+//!   enter/exit pairs with `Instant` timestamps, parent links, static
+//!   names and small typed field maps, buffered per thread and drained to
+//!   a JSONL sink ([`set_sink`] / [`flush`]) or to tests ([`take_events`]).
+//!
+//! # Span tree across the pool
+//!
+//! Spans record their parent from a thread-local "current span" cell, so
+//! nesting on one thread needs no bookkeeping. Cross-thread edges — a
+//! factorization wave fanning out chunks to pool workers — are made
+//! explicit: the issuer captures [`current_span_id`] and each worker
+//! installs it with [`parent_scope`] for the duration of its
+//! participation, so `ep.sweep → factor → factor.wave → par.worker`
+//! parents correctly even though the `par.worker` span lives on another
+//! thread. Parents always close after children because `par::for_chunks`
+//! joins every chunk before the issuer's span guard drops.
+//!
+//! # Inertness contract
+//!
+//! Tracing must never change results. Instrumentation only *observes*
+//! (timestamps, counts, field reads); kernel selection, chunk splitting
+//! and scheduling never consult obs state, and per-thread buffers mean no
+//! instrumentation lock is ever contended on a hot path. The integration
+//! test `tracing_modes_never_change_results_and_spans_nest` pins
+//! bitwise-identical models across all three modes at pool widths 1/2/7.
+
+pub mod counters;
+pub mod hist;
+
+pub use counters::{snapshot, summary, Snapshot};
+pub use hist::Histogram;
+
+use std::cell::Cell;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Mode.
+// ---------------------------------------------------------------------------
+
+/// How much the process records. See the module docs for the cost of
+/// each level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceMode {
+    /// Nothing is recorded; every site is one relaxed load + branch.
+    Off = 0,
+    /// Atomic counters / gauges / histograms only.
+    Counters = 1,
+    /// Counters plus buffered spans.
+    Full = 2,
+}
+
+const MODE_UNINIT: u8 = 0xFF;
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNINIT);
+
+#[cold]
+fn init_mode_from_env() -> u8 {
+    let want = match std::env::var("CSGP_TRACE") {
+        Ok(v) => match v.trim().to_ascii_lowercase().as_str() {
+            "1" | "counters" => 1,
+            "2" | "full" => 2,
+            _ => 0,
+        },
+        Err(_) => 0,
+    };
+    // Racing initializers agree on the env value; an explicit `set_mode`
+    // that slipped in first wins.
+    let _ = MODE.compare_exchange(MODE_UNINIT, want, Ordering::Relaxed, Ordering::Relaxed);
+    MODE.load(Ordering::Relaxed)
+}
+
+#[inline]
+fn mode_u8() -> u8 {
+    let m = MODE.load(Ordering::Relaxed);
+    if m == MODE_UNINIT {
+        init_mode_from_env()
+    } else {
+        m
+    }
+}
+
+/// The current trace mode (lazily initialized from `CSGP_TRACE`).
+pub fn mode() -> TraceMode {
+    match mode_u8() {
+        2 => TraceMode::Full,
+        1 => TraceMode::Counters,
+        _ => TraceMode::Off,
+    }
+}
+
+/// Are counters (and histograms / gauges) live? One relaxed load.
+#[inline]
+pub fn counters_on() -> bool {
+    mode_u8() >= TraceMode::Counters as u8
+}
+
+/// Are spans live? One relaxed load.
+#[inline]
+pub fn spans_on() -> bool {
+    mode_u8() == TraceMode::Full as u8
+}
+
+/// Set the trace mode for the whole process (overrides `CSGP_TRACE`).
+pub fn set_mode(mode: TraceMode) {
+    MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Run `f` with the process trace mode set to `mode`, restoring the
+/// previous mode afterwards (even on panic). Mode-sensitive tests are
+/// serialized through an internal lock so they cannot observe each
+/// other's counters mid-assertion; the lock is not reentrant, so do not
+/// nest `with_mode` calls on one thread.
+pub fn with_mode<R>(mode: TraceMode, f: impl FnOnce() -> R) -> R {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    struct Restore<'a>(u8, #[allow(dead_code)] std::sync::MutexGuard<'a, ()>);
+    impl Drop for Restore<'_> {
+        fn drop(&mut self) {
+            MODE.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let restore = Restore(mode_u8(), guard);
+    set_mode(mode);
+    let out = f();
+    drop(restore);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Clock.
+// ---------------------------------------------------------------------------
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process-wide trace epoch (first use).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+// ---------------------------------------------------------------------------
+// Spans.
+// ---------------------------------------------------------------------------
+
+/// A typed span field value. `Str` is `&'static str` on purpose: field
+/// values are library-controlled identifiers, never user data, so spans
+/// allocate nothing beyond their field vector.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Value {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(&'static str),
+    Bool(bool),
+}
+
+/// One completed span, as drained by [`take_events`] / [`flush`].
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    /// Static span name ("ep.sweep", "factor.wave", …).
+    pub name: &'static str,
+    /// Obs-assigned thread id (small, stable per thread).
+    pub tid: u64,
+    /// Process-unique span id (never 0).
+    pub id: u64,
+    /// Parent span id, 0 for roots.
+    pub parent: u64,
+    /// Enter time, ns since the trace epoch.
+    pub t0_ns: u64,
+    /// Exit time, ns since the trace epoch (`t1_ns >= t0_ns`).
+    pub t1_ns: u64,
+    /// Small typed field map, in insertion order.
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static DROPPED_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Per-thread completed-event buffer cap: beyond this, new events are
+/// counted as dropped instead of buffered, bounding memory when a long
+/// run never drains (e.g. the whole test suite under `CSGP_TRACE=full`).
+const BUF_CAP: usize = 1 << 16;
+
+type EventBuf = Arc<Mutex<Vec<SpanEvent>>>;
+
+fn registry() -> &'static Mutex<Vec<EventBuf>> {
+    static REGISTRY: OnceLock<Mutex<Vec<EventBuf>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+struct ThreadBuf {
+    tid: u64,
+    /// Innermost open span on this thread (0 = none). Also settable by
+    /// [`parent_scope`] to splice cross-thread edges.
+    current: Cell<u64>,
+    /// Completed events. The mutex is only ever contended by a drain
+    /// ([`take_events`]); the owning thread's pushes are effectively
+    /// uncontended, which is what keeps Full-mode overhead flat and the
+    /// width contract intact (no cross-thread ordering is introduced).
+    events: EventBuf,
+}
+
+thread_local! {
+    static TB: ThreadBuf = {
+        let events: EventBuf = Arc::new(Mutex::new(Vec::new()));
+        registry().lock().unwrap_or_else(|e| e.into_inner()).push(events.clone());
+        ThreadBuf {
+            tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+            current: Cell::new(0),
+            events,
+        }
+    };
+}
+
+struct LiveSpan {
+    name: &'static str,
+    id: u64,
+    parent: u64,
+    t0_ns: u64,
+    fields: Vec<(&'static str, Value)>,
+}
+
+/// RAII span guard. Inert (no id, no timestamps, no allocation) unless
+/// [`spans_on`]; records one [`SpanEvent`] into the creating thread's
+/// buffer on drop. Create and drop on the same thread.
+pub struct Span {
+    live: Option<LiveSpan>,
+}
+
+#[cold]
+fn open_span(name: &'static str) -> LiveSpan {
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let parent = TB.with(|tb| {
+        let p = tb.current.get();
+        tb.current.set(id);
+        p
+    });
+    LiveSpan { name, id, parent, t0_ns: now_ns(), fields: Vec::new() }
+}
+
+/// Open a span named `name` (a no-op guard unless the mode is Full).
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !spans_on() {
+        return Span { live: None };
+    }
+    Span { live: Some(open_span(name)) }
+}
+
+impl Span {
+    /// Is this guard actually recording? Gate expensive field
+    /// computations on this.
+    #[inline]
+    pub fn is_active(&self) -> bool {
+        self.live.is_some()
+    }
+
+    /// This span's id (0 when inactive) — feed to [`parent_scope`] on
+    /// another thread to parent its spans here.
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.live.as_ref().map_or(0, |l| l.id)
+    }
+
+    /// Attach a typed field (no-op when inactive).
+    #[inline]
+    pub fn field(&mut self, key: &'static str, value: Value) {
+        if let Some(l) = self.live.as_mut() {
+            l.fields.push((key, value));
+        }
+    }
+
+    #[inline]
+    pub fn field_u64(&mut self, key: &'static str, v: u64) {
+        self.field(key, Value::U64(v));
+    }
+
+    #[inline]
+    pub fn field_f64(&mut self, key: &'static str, v: f64) {
+        self.field(key, Value::F64(v));
+    }
+
+    #[inline]
+    pub fn field_str(&mut self, key: &'static str, v: &'static str) {
+        self.field(key, Value::Str(v));
+    }
+
+    #[inline]
+    pub fn field_bool(&mut self, key: &'static str, v: bool) {
+        self.field(key, Value::Bool(v));
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(live) = self.live.take() {
+            let t1_ns = now_ns();
+            let LiveSpan { name, id, parent, t0_ns, fields } = live;
+            TB.with(|tb| {
+                tb.current.set(parent);
+                let mut buf = tb.events.lock().unwrap_or_else(|e| e.into_inner());
+                if buf.len() < BUF_CAP {
+                    buf.push(SpanEvent { name, tid: tb.tid, id, parent, t0_ns, t1_ns, fields });
+                } else {
+                    DROPPED_EVENTS.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    }
+}
+
+/// The innermost open span id on this thread (0 if none or spans off).
+#[inline]
+pub fn current_span_id() -> u64 {
+    if !spans_on() {
+        return 0;
+    }
+    TB.with(|tb| tb.current.get())
+}
+
+/// RAII guard installing a foreign span id as this thread's current
+/// parent; see [`parent_scope`].
+pub struct ParentScope {
+    prev: u64,
+    active: bool,
+}
+
+/// Make spans opened on this thread children of `parent` (a span id from
+/// [`Span::id`] / [`current_span_id`] on the issuing thread) until the
+/// returned guard drops. No-op when spans are off or `parent` is 0.
+pub fn parent_scope(parent: u64) -> ParentScope {
+    if !spans_on() || parent == 0 {
+        return ParentScope { prev: 0, active: false };
+    }
+    let prev = TB.with(|tb| {
+        let p = tb.current.get();
+        tb.current.set(parent);
+        p
+    });
+    ParentScope { prev, active: true }
+}
+
+impl Drop for ParentScope {
+    fn drop(&mut self) {
+        if self.active {
+            let prev = self.prev;
+            TB.with(|tb| tb.current.set(prev));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Draining: tests and the JSONL sink.
+// ---------------------------------------------------------------------------
+
+/// Drain every thread's completed spans (including long-lived pool
+/// workers'), ordered by enter time. Tests call this directly; [`flush`]
+/// uses it to feed the sink.
+pub fn take_events() -> Vec<SpanEvent> {
+    let bufs: Vec<EventBuf> = registry().lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut out = Vec::new();
+    for buf in bufs {
+        let mut guard = buf.lock().unwrap_or_else(|e| e.into_inner());
+        out.append(&mut guard);
+    }
+    out.sort_by_key(|e| (e.t0_ns, e.id));
+    out
+}
+
+/// Events discarded because a thread's buffer hit its cap since the last
+/// reset (see `BUF_CAP`).
+pub fn dropped_events() -> u64 {
+    DROPPED_EVENTS.load(Ordering::Relaxed)
+}
+
+static SINK: Mutex<Option<PathBuf>> = Mutex::new(None);
+
+/// Route [`flush`] output to `path` (created/truncated now, appended on
+/// each flush).
+pub fn set_sink(path: impl AsRef<Path>) -> std::io::Result<()> {
+    let p = path.as_ref().to_path_buf();
+    std::fs::File::create(&p)?;
+    *SINK.lock().unwrap_or_else(|e| e.into_inner()) = Some(p);
+    Ok(())
+}
+
+/// Drain all buffered spans and append them to the sink as JSONL (one
+/// object per line; see ARCHITECTURE.md for the schema). Returns the
+/// number of events written; a no-op returning 0 when no sink is set.
+pub fn flush() -> std::io::Result<usize> {
+    let path = match SINK.lock().unwrap_or_else(|e| e.into_inner()).clone() {
+        Some(p) => p,
+        None => return Ok(0),
+    };
+    let events = take_events();
+    if events.is_empty() {
+        return Ok(0);
+    }
+    let file = std::fs::OpenOptions::new().append(true).open(&path)?;
+    let mut w = std::io::BufWriter::new(file);
+    for ev in &events {
+        write_event_jsonl(&mut w, ev)?;
+    }
+    w.flush()?;
+    Ok(events.len())
+}
+
+fn write_value(w: &mut impl Write, v: &Value) -> std::io::Result<()> {
+    match *v {
+        Value::U64(x) => write!(w, "{x}"),
+        Value::I64(x) => write!(w, "{x}"),
+        // Rust's float Display is valid JSON for finite values; map the
+        // non-finite ones (first-sweep ΔlogZ is -inf) to null.
+        Value::F64(x) if x.is_finite() => write!(w, "{x}"),
+        Value::F64(_) => write!(w, "null"),
+        // Names and values are library-controlled static ASCII
+        // identifiers — nothing to escape.
+        Value::Str(s) => write!(w, "\"{s}\""),
+        Value::Bool(b) => write!(w, "{b}"),
+    }
+}
+
+fn write_event_jsonl(w: &mut impl Write, ev: &SpanEvent) -> std::io::Result<()> {
+    write!(
+        w,
+        "{{\"ev\":\"span\",\"name\":\"{}\",\"tid\":{},\"id\":{},\"parent\":",
+        ev.name, ev.tid, ev.id
+    )?;
+    if ev.parent == 0 {
+        write!(w, "null")?;
+    } else {
+        write!(w, "{}", ev.parent)?;
+    }
+    write!(w, ",\"t0_ns\":{},\"t1_ns\":{},\"fields\":{{", ev.t0_ns, ev.t1_ns)?;
+    for (i, (k, v)) in ev.fields.iter().enumerate() {
+        if i > 0 {
+            write!(w, ",")?;
+        }
+        write!(w, "\"{k}\":")?;
+        write_value(w, v)?;
+    }
+    writeln!(w, "}}}}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_mode_spans_are_inert() {
+        with_mode(TraceMode::Off, || {
+            let before = take_events().len();
+            {
+                let mut s = span("test.inert");
+                assert!(!s.is_active());
+                assert_eq!(s.id(), 0);
+                s.field_u64("k", 1);
+            }
+            assert_eq!(current_span_id(), 0);
+            // nothing new was buffered
+            let evs = take_events();
+            assert!(evs.iter().all(|e| e.name != "test.inert"), "inert span leaked");
+            let _ = before;
+        });
+    }
+
+    #[test]
+    fn full_mode_records_nested_spans_with_parents() {
+        with_mode(TraceMode::Full, || {
+            let _ = take_events();
+            let (outer_id, inner_id);
+            {
+                let mut outer = span("test.outer");
+                assert!(outer.is_active());
+                outer_id = outer.id();
+                assert_eq!(current_span_id(), outer_id);
+                {
+                    let inner = span("test.inner");
+                    inner_id = inner.id();
+                    assert_ne!(inner_id, outer_id);
+                    assert_eq!(current_span_id(), inner_id);
+                }
+                assert_eq!(current_span_id(), outer_id);
+                outer.field_f64("x", 2.5);
+            }
+            let evs = take_events();
+            let outer = evs.iter().find(|e| e.id == outer_id).expect("outer recorded");
+            let inner = evs.iter().find(|e| e.id == inner_id).expect("inner recorded");
+            assert_eq!(inner.parent, outer_id);
+            assert_eq!(outer.name, "test.outer");
+            assert!(outer.t0_ns <= inner.t0_ns && inner.t1_ns <= outer.t1_ns);
+            assert_eq!(outer.fields, vec![("x", Value::F64(2.5))]);
+        });
+    }
+
+    #[test]
+    fn parent_scope_splices_and_restores() {
+        with_mode(TraceMode::Full, || {
+            let _ = take_events();
+            let child_id;
+            {
+                let _scope = parent_scope(4242);
+                assert_eq!(current_span_id(), 4242);
+                let c = span("test.spliced");
+                child_id = c.id();
+            }
+            assert_eq!(current_span_id(), 0);
+            let evs = take_events();
+            let c = evs.iter().find(|e| e.id == child_id).expect("spliced recorded");
+            assert_eq!(c.parent, 4242);
+        });
+    }
+
+    #[test]
+    fn jsonl_lines_are_well_formed() {
+        let ev = SpanEvent {
+            name: "ep.sweep",
+            tid: 3,
+            id: 17,
+            parent: 0,
+            t0_ns: 5,
+            t1_ns: 9,
+            fields: vec![
+                ("sweep", Value::U64(2)),
+                ("dlogz", Value::F64(f64::NEG_INFINITY)),
+                ("backend", Value::Str("sparse")),
+                ("damped", Value::Bool(true)),
+                ("delta", Value::F64(0.25)),
+            ],
+        };
+        let mut out = Vec::new();
+        write_event_jsonl(&mut out, &ev).unwrap();
+        let line = String::from_utf8(out).unwrap();
+        assert_eq!(
+            line,
+            "{\"ev\":\"span\",\"name\":\"ep.sweep\",\"tid\":3,\"id\":17,\"parent\":null,\
+             \"t0_ns\":5,\"t1_ns\":9,\"fields\":{\"sweep\":2,\"dlogz\":null,\
+             \"backend\":\"sparse\",\"damped\":true,\"delta\":0.25}}\n"
+        );
+    }
+
+    #[test]
+    fn with_mode_restores_previous_mode() {
+        let before = mode();
+        with_mode(TraceMode::Counters, || {
+            assert!(counters_on());
+            assert!(!spans_on());
+        });
+        assert_eq!(mode(), before);
+    }
+}

@@ -28,6 +28,11 @@
 //!   the current thread — the bench and the thread-invariance tests use
 //!   it to sweep widths inside one process. Workers are spawned lazily
 //!   and only up to the widest request seen.
+//! * **Observed, never steered.** With `CSGP_TRACE` on, every fanned-out
+//!   region records per-chunk latencies, steal counts, caller wait time
+//!   and per-participant busy spans through [`crate::obs`] — the data the
+//!   chunk auto-tuning follow-on needs — but none of it feeds back into
+//!   splitting or scheduling, so the width contract is untouched.
 //!
 //! Per-worker state (a `SparseSolveWorkspace`, a forked
 //! `PredictWorkspace`, a dense scatter column, …) is created by the
@@ -41,9 +46,12 @@ pub use slice::SyncSlice;
 use std::cell::Cell;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::obs;
 
 /// Hard cap on pool workers, a backstop against absurd `CSGP_THREADS`
 /// values or runaway `with_max_threads` requests.
@@ -312,12 +320,32 @@ where
     let done = Mutex::new(0usize);
     let done_cv = Condvar::new();
 
-    let participate = || {
+    // Observation only: chunk timings, steal counts and per-participant
+    // busy time never influence chunk splitting or scheduling (the
+    // bitwise width contract must hold with tracing on, off, and mixed).
+    let obs_counters = obs::counters_on();
+    let obs_spans = obs::spans_on();
+    let issuer_span = if obs_spans { obs::current_span_id() } else { 0 };
+    let busy_max = AtomicU64::new(0);
+    let busy_sum = AtomicU64::new(0);
+    let busy_participants = AtomicUsize::new(0);
+
+    let participate = |is_caller: bool| {
+        // Workers parent their spans to the issuer's open span; the
+        // caller's thread-local parent chain already points there.
+        let _scope = if is_caller { None } else { Some(obs::parent_scope(issuer_span)) };
+        let mut wspan: Option<obs::Span> = None;
+        let mut busy_ns = 0u64;
+        let mut chunks_run = 0u64;
         let mut state: Option<S> = None;
         loop {
             let c = cursor.fetch_add(1, AtomicOrdering::Relaxed);
             if c >= n_chunks {
                 break;
+            }
+            let t_chunk = if obs_counters { Some(Instant::now()) } else { None };
+            if obs_spans && wspan.is_none() {
+                wspan = Some(obs::span("par.worker"));
             }
             let lo = c * chunk;
             let hi = ((c + 1) * chunk).min(n);
@@ -334,31 +362,70 @@ where
                 poisoned.store(true, AtomicOrdering::Relaxed);
                 state = None; // per-worker state may be mid-mutation
             }
+            if let Some(t0) = t_chunk {
+                let ns = t0.elapsed().as_nanos() as u64;
+                busy_ns += ns;
+                chunks_run += 1;
+                obs::counters::POOL_CHUNK_NS.record_ns(ns);
+            }
             let mut g = done.lock().unwrap();
             *g += 1;
             if *g == n_chunks {
                 done_cv.notify_all();
             }
         }
+        if chunks_run > 0 {
+            obs::counters::POOL_CHUNKS.add(chunks_run);
+            if !is_caller {
+                obs::counters::POOL_STEALS.add(chunks_run);
+            }
+            obs::counters::POOL_BUSY_NS.add(busy_ns);
+            busy_max.fetch_max(busy_ns, AtomicOrdering::Relaxed);
+            busy_sum.fetch_add(busy_ns, AtomicOrdering::Relaxed);
+            busy_participants.fetch_add(1, AtomicOrdering::Relaxed);
+        }
+        if let Some(mut s) = wspan {
+            s.field_u64("chunks", chunks_run);
+            s.field_u64("busy_ns", busy_ns);
+            s.field_bool("stolen", !is_caller);
+        }
     };
 
     let width = threads.min(n_chunks);
     let p = pool();
     let workers = p.ensure_workers(width - 1);
-    let msg = Arc::new(JobMsg::new(erase(&participate), threads));
+    let worker_run = || participate(false);
+    let msg = Arc::new(JobMsg::new(erase(&worker_run), threads));
     p.broadcast(&msg, (width - 1).min(workers));
 
-    participate(); // the caller is always a participant
+    participate(true); // the caller is always a participant
 
     {
+        let t_wait = if obs_counters { Some(Instant::now()) } else { None };
         let mut g = done.lock().unwrap();
         while *g < n_chunks {
             g = done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        if let Some(t0) = t_wait {
+            obs::counters::POOL_CALLER_WAIT_NS.add(t0.elapsed().as_nanos() as u64);
         }
     }
     // No worker may still be inside `participate` (it borrows this stack
     // frame) once we return.
     msg.revoke_and_wait();
+
+    if obs_counters {
+        let parts = busy_participants.load(AtomicOrdering::Relaxed) as u64;
+        if parts > 1 {
+            let mean = busy_sum.load(AtomicOrdering::Relaxed) / parts;
+            if mean > 0 {
+                let max = busy_max.load(AtomicOrdering::Relaxed);
+                obs::counters::POOL_IMBALANCE_MAX_PERMILLE
+                    .record(max.saturating_mul(1000) / mean);
+            }
+        }
+    }
 
     if poisoned.load(AtomicOrdering::Relaxed) {
         panic!("csgp::par: a worker panicked inside a parallel region");

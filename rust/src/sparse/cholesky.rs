@@ -136,12 +136,41 @@ impl LdlFactor {
         assert_eq!(a.n_cols, n);
         let sched = &sym.schedule;
         let failed = AtomicUsize::new(usize::MAX);
+        let mut fspan = crate::obs::span("factor");
+        if fspan.is_active() {
+            fspan.field_u64("n", n as u64);
+            fspan.field_u64("snodes", sched.n_snodes() as u64);
+            fspan.field_u64("waves", sched.n_waves() as u64);
+        }
+        crate::obs::counters::FACTOR_REFACTORS.add(1);
         {
             let l = SyncSlice::new(&mut self.l);
             let d = SyncSlice::new(&mut self.d);
             let mut ws_inline = FactorScratch::new(&sym); // caller's scratch
             for w in 0..sched.n_waves() {
                 let wave = sched.wave(w);
+                // Observation only: per-wave spans (and the pool's chunk
+                // telemetry below them) never influence the inline-vs-fanned
+                // dispatch — that stays a pure function of wave shape and
+                // configured width.
+                let mut wspan = crate::obs::span("factor.wave");
+                if wspan.is_active() {
+                    wspan.field_u64("wave", w as u64);
+                    wspan.field_u64("snodes", wave.len() as u64);
+                    let cols: usize = wave.iter().map(|&s| sched.columns(s).len()).sum();
+                    wspan.field_u64("cols", cols as u64);
+                    // flop estimate: each column's pull-and-scale work is
+                    // quadratic in its (padded) pattern length
+                    let flops: u64 = wave
+                        .iter()
+                        .flat_map(|&s| sched.columns(s))
+                        .map(|j| {
+                            let len = (sym.col_ptr[j + 1] - sym.col_ptr[j]) as u64;
+                            len * (len + 2)
+                        })
+                        .sum();
+                    wspan.field_u64("flops", flops);
+                }
                 if wave.len() < PAR_WAVE_MIN || crate::par::current_threads() <= 1 {
                     for &s in wave {
                         factor_supernode(&sym, a, s, &mut ws_inline, &l, &d, &failed);
@@ -158,6 +187,7 @@ impl LdlFactor {
                         },
                     );
                 }
+                crate::obs::counters::FACTOR_WAVES.add(1);
                 // Wave barriers double as failure checks: later waves
                 // would divide by the bad pivot, so stop scheduling. The
                 // break lands at the same wave at every width.

@@ -99,6 +99,12 @@ impl LdlFactor {
     pub fn takahashi_inverse_into(&self, zi: &mut SparseInverse) {
         let sym = &self.symbolic;
         let n = sym.n;
+        let mut tspan = crate::obs::span("takahashi");
+        if tspan.is_active() {
+            tspan.field_u64("n", n as u64);
+            tspan.field_u64("waves", sym.schedule.n_waves() as u64);
+        }
+        crate::obs::counters::TAKAHASHI_RUNS.add(1);
         // resize only (no clear): every slot is overwritten by the
         // supernode loop below, so the unchanged-pattern case touches no
         // memory here

@@ -158,6 +158,7 @@ impl LdlFactor {
     }
 
     pub fn solve_in_place(&self, x: &mut [f64]) {
+        crate::obs::counters::SOLVES.add(1);
         self.solve_lower_dense(x);
         self.solve_diag_dense(x);
         self.solve_upper_dense(x);
@@ -178,6 +179,9 @@ impl LdlFactor {
         ws: &mut SparseSolveWorkspace,
         t: &mut [f64],
     ) {
+        // per-site-hot: a gated counter add is the entire obs footprint
+        // (one relaxed load when tracing is off)
+        crate::obs::counters::SOLVES.add(1);
         let sym = self.symbolic.clone();
         ws.tag += 1;
         etree_reach(&sym.parent, a_rows, &mut ws.mark, ws.tag, &mut ws.reach);

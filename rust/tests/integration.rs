@@ -343,6 +343,141 @@ fn optimizer_loop_reuses_structure_across_evaluations() {
 }
 
 #[test]
+fn tracing_modes_never_change_results_and_spans_nest() {
+    // The obs inertness contract: the fitted state is bitwise-identical
+    // with tracing off, counters-only and full — at every pool width.
+    // Tracing only observes (timestamps, counts); it must never steer
+    // kernels, chunking or scheduling.
+    use csgp::gp::ParallelEp;
+    use csgp::obs::{self, TraceMode};
+
+    let data = cluster(200, 61);
+    let (train, test) = data.split(150);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
+    let opts = EpOptions { max_sweeps: 60, tol: 1e-8, damping: 0.8 };
+    let run = |width: usize| {
+        csgp::par::with_max_threads(width, || {
+            let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
+            let sig = ep.recompute_sigma_diag();
+            let preds = ep.predict_latent_batch(&cov, &test.x);
+            (ep.log_z, ep.mu.clone(), sig, preds)
+        })
+    };
+
+    let mut reference: Option<(f64, Vec<f64>, Vec<f64>, Vec<(f64, f64)>)> = None;
+    for mode in [TraceMode::Off, TraceMode::Counters, TraceMode::Full] {
+        obs::with_mode(mode, || {
+            for width in [1usize, 2, 7] {
+                let out = run(width);
+                match &reference {
+                    None => reference = Some(out),
+                    Some(r) => {
+                        assert!(
+                            out.0 == r.0,
+                            "mode {mode:?} width {width}: logZ bits differ ({} vs {})",
+                            out.0,
+                            r.0
+                        );
+                        assert_eq!(out.1, r.1, "mode {mode:?} width {width}: mu differs");
+                        assert_eq!(out.2, r.2, "mode {mode:?} width {width}: sigma differs");
+                        assert_eq!(out.3, r.3, "mode {mode:?} width {width}: preds differ");
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn full_trace_spans_are_well_formed_under_the_pool() {
+    // Every drained span must be balanced (exit after enter) and nest
+    // inside its parent's interval — including cross-thread par.worker
+    // spans spliced under the issuing span — at pool widths 1, 2 and 7.
+    use std::collections::{HashMap, HashSet};
+
+    use csgp::gp::ParallelEp;
+    use csgp::obs::{self, SpanEvent, TraceMode};
+
+    let data = cluster(200, 62);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
+    let opts = EpOptions { max_sweeps: 30, tol: 1e-8, damping: 0.8 };
+
+    obs::with_mode(TraceMode::Full, || {
+        let _ = obs::take_events(); // discard other tests' leftovers
+        for width in [1usize, 2, 7] {
+            let lz = csgp::par::with_max_threads(width, || {
+                ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap().log_z
+            });
+            assert!(lz.is_finite());
+        }
+        let events = obs::take_events();
+        assert!(!events.is_empty(), "a Full-mode fit must record spans");
+        let by_id: HashMap<u64, &SpanEvent> = events.iter().map(|e| (e.id, e)).collect();
+        for e in &events {
+            assert!(e.id != 0, "span ids are never 0");
+            assert!(e.t1_ns >= e.t0_ns, "span {} exits before it enters", e.name);
+            // parents close after children. A parent missing from this
+            // drain window belongs to a still-open span (or a concurrent
+            // test's earlier drain) — skip those, the invariant is only
+            // checkable when both ends were captured together.
+            if e.parent != 0 {
+                if let Some(p) = by_id.get(&e.parent) {
+                    assert!(
+                        p.t0_ns <= e.t0_ns && e.t1_ns <= p.t1_ns,
+                        "child {} [{}, {}] escapes parent {} [{}, {}]",
+                        e.name,
+                        e.t0_ns,
+                        e.t1_ns,
+                        p.name,
+                        p.t0_ns,
+                        p.t1_ns
+                    );
+                }
+            }
+        }
+        let names: HashSet<&str> = events.iter().map(|e| e.name).collect();
+        for required in ["ep.sweep", "factor", "factor.wave"] {
+            assert!(names.contains(required), "missing {required} spans in {names:?}");
+        }
+        // widths 2 and 7 broadcast to pool workers, which open par.worker
+        // spans spliced under the issuing thread's current span
+        assert!(names.contains("par.worker"), "no worker spans at widths >= 2: {names:?}");
+    });
+}
+
+#[test]
+fn pattern_cache_counters_track_hits_and_misses() {
+    // Counter accuracy for the PatternCache: the obs counters must agree
+    // with the cache's own hit/miss bookkeeping for the four documented
+    // step kinds (build / σ²-only / shrink / growth).
+    use csgp::gp::cache::PatternCache;
+    use csgp::obs::{self, TraceMode};
+
+    let x: Vec<Vec<f64>> = (0..60).map(|i| vec![(i % 10) as f64, (i / 10) as f64]).collect();
+    obs::with_mode(TraceMode::Counters, || {
+        let before = obs::snapshot();
+        let mut cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
+        let mut cache = PatternCache::new(Ordering::Rcm);
+        let _ = cache.plan_for(&cov, &x); // miss: first build
+        cov.sigma2 = 2.5;
+        let _ = cache.plan_for(&cov, &x); // hit: σ²-only step
+        cov.lengthscales = vec![1.5, 1.5];
+        let _ = cache.plan_for(&cov, &x); // hit: shrink, superset reuse
+        cov.lengthscales = vec![3.0, 3.0];
+        let _ = cache.plan_for(&cov, &x); // miss: growth, full reanalysis
+        assert_eq!((cache.hits, cache.misses), (2, 2));
+        let after = obs::snapshot();
+        // >= rather than ==: CI also runs this suite under
+        // CSGP_TRACE=full, where concurrently running tests bump the same
+        // process-wide counters
+        assert!(after.cache_hit - before.cache_hit >= 2, "{after:?} vs {before:?}");
+        assert!(after.cache_miss - before.cache_miss >= 2, "{after:?} vs {before:?}");
+        assert!(after.cache_shrink_reuse - before.cache_shrink_reuse >= 1);
+        assert!(after.cache_grow_reanalyze - before.cache_grow_reanalyze >= 1);
+    });
+}
+
+#[test]
 fn cv_and_jobs_compose() {
     let data = cluster(160, 15);
     let model = GpClassifier::new(
