@@ -22,13 +22,13 @@ fn main() {
     for &n in &ns {
         let data = cluster_dataset(&ClusterConfig::paper_2d(n), 21);
         let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3);
-        let opts = EpOptions { max_sweeps: 100, tol: 1e-6, damping: 1.0 };
+        let opts = EpOptions { max_sweeps: 100, tol: 1e-6, damping: 1.0, ..EpOptions::default() };
 
         let t0 = Instant::now();
         let seq = SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None).unwrap();
         let t_seq = t0.elapsed();
 
-        let opts_par = EpOptions { max_sweeps: 300, tol: 1e-6, damping: 0.8 };
+        let opts_par = EpOptions { max_sweeps: 300, tol: 1e-6, damping: 0.8, ..EpOptions::default() };
         let t0 = Instant::now();
         let par = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts_par).unwrap();
         let t_par = t0.elapsed();

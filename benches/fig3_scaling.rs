@@ -113,7 +113,7 @@ fn main() {
     let data = cluster_dataset(&cfg, 7);
     let (train, _) = data.split(n_big);
     let cs = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3);
-    let opts = EpOptions { max_sweeps: 40, tol: 1e-6, damping: 0.8 };
+    let opts = EpOptions { max_sweeps: 40, tol: 1e-6, damping: 0.8, ..EpOptions::default() };
     let t0 = Instant::now();
     let seq = SparseEp::run(&cs, &train.x, &train.y, Ordering::Rcm, &opts, None).unwrap();
     let t_seq = t0.elapsed() / seq.sweeps.max(1) as u32;

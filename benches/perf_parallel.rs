@@ -348,7 +348,7 @@ fn main() {
     // ---- CS backend: parallel EP on the pure Wendland prior -------------
     let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.2);
-    let opts = EpOptions { max_sweeps: 40, tol: 1e-6, damping: 0.8 };
+    let opts = EpOptions { max_sweeps: 40, tol: 1e-6, damping: 0.8, ..EpOptions::default() };
     let ep = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap();
     let probes = uniform_points(2000, 2, 10.0, 99);
 
@@ -375,7 +375,7 @@ fn main() {
     // ---- CS+FIC backend: hybrid prior through the Woodbury solver -------
     let hybrid = AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 0.6, 3.0), cov.clone()).unwrap();
     let xu = kmeans(&data.x, 64, 25, 0xf1c);
-    let hopts = EpOptions { max_sweeps: 15, tol: 1e-6, damping: 0.8 };
+    let hopts = EpOptions { max_sweeps: 15, tol: 1e-6, damping: 0.8, ..EpOptions::default() };
     let hep = CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &hopts).unwrap();
 
     // numeric LDLᵀ of S_B (the sparse half of the Woodbury B) — same

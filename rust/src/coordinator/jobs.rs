@@ -13,6 +13,7 @@ use crate::data::Dataset;
 use crate::gp::covariance::CovFunction;
 use crate::gp::model::{FittedClassifier, GpClassifier, Inference};
 use crate::obs;
+use crate::sparse::ordering::Ordering;
 
 /// Job identifier.
 pub type JobId = u64;
@@ -127,6 +128,163 @@ struct Shared {
     results: Mutex<HashMap<JobId, Arc<FittedClassifier>>>,
 }
 
+/// Mutex guard that survives a poisoned lock: a panicking job worker must
+/// not take the whole manager down with it — the protected maps stay
+/// usable (the panicked job simply never reaches `Done`).
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Wall-clock budget for one job *including* its recovery retries, from
+/// `CSGP_JOB_TIMEOUT_MS` (milliseconds; default 10 minutes). The budget
+/// is checked between ladder rungs — a running EP attempt is never
+/// preempted, so a timeout stops further fallbacks, not in-flight work.
+fn job_timeout() -> Duration {
+    static MS: std::sync::OnceLock<u64> = std::sync::OnceLock::new();
+    let ms = *MS.get_or_init(|| {
+        std::env::var("CSGP_JOB_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(600_000)
+    });
+    Duration::from_millis(ms)
+}
+
+/// Largest `n` the degradation ladder's dense-EP fallback will accept —
+/// dense EP is O(n³) per sweep, so the rung only exists for problems
+/// small enough to afford it.
+const DENSE_FALLBACK_MAX_N: usize = 2000;
+
+/// Validate the training inputs before any factorization work: NaN/∞
+/// coordinates, mismatched lengths, ragged dimensions, or labels outside
+/// {−1, +1} fail the job as [`JobErrorKind::BadSpec`] up front instead of
+/// surfacing later as a numeric error deep in the solver stack.
+fn validate_spec(spec: &TrainSpec) -> Result<(), JobError> {
+    let bad = |message: String| JobError {
+        kind: JobErrorKind::BadSpec,
+        stage: JobStage::BuildSpec,
+        message,
+    };
+    let n = spec.dataset.x.len();
+    if n == 0 {
+        return Err(bad("empty dataset".into()));
+    }
+    if spec.dataset.y.len() != n {
+        return Err(bad(format!(
+            "x/y length mismatch: {n} inputs vs {} labels",
+            spec.dataset.y.len()
+        )));
+    }
+    let dim = spec.dataset.x[0].len();
+    for (i, p) in spec.dataset.x.iter().enumerate() {
+        if p.len() != dim {
+            return Err(bad(format!(
+                "input {i} has dimension {} (expected {dim})",
+                p.len()
+            )));
+        }
+        if p.iter().any(|v| !v.is_finite()) {
+            return Err(bad(format!("non-finite coordinate in input {i}")));
+        }
+    }
+    for (i, &v) in spec.dataset.y.iter().enumerate() {
+        if v != 1.0 && v != -1.0 {
+            return Err(bad(format!("label {i} is {v} (labels must be ±1)")));
+        }
+    }
+    Ok(())
+}
+
+/// Run a job through the degradation ladder. The first attempt uses the
+/// spec as configured; on failure, the error kind picks a bounded
+/// sequence of fallbacks:
+///
+/// * pivot failure → retry with a deeper jitter budget and damping
+/// * any other numeric failure → retry on the sequential sweep with
+///   heavier damping and more sweeps (hybrid specs keep their backend —
+///   dropping the global term would change the model — and only soften
+///   the damping)
+/// * final fallback → dense EP, for problems small enough to afford it
+///
+/// Bad specs never retry. Every rung taken is recorded on a `job.retry`
+/// span (`rung`, `error_kind` fields) and in the `jobs.retries` counter;
+/// the per-job wall-clock budget ([`job_timeout`]) is checked between
+/// rungs.
+fn run_with_recovery(
+    spec: &TrainSpec,
+    model: GpClassifier,
+    stage: JobStage,
+) -> Result<FittedClassifier, JobError> {
+    let deadline = Instant::now() + job_timeout();
+    let attempt = |m: &GpClassifier| -> Result<FittedClassifier, JobError> {
+        let fitted = if spec.optimize {
+            m.fit(&spec.dataset.x, &spec.dataset.y)
+        } else {
+            m.infer_only(&spec.dataset.x, &spec.dataset.y)
+        };
+        fitted.map_err(|e| JobError::classify(stage, e))
+    };
+    let mut err = match attempt(&model) {
+        Ok(f) => return Ok(f),
+        Err(e) => e,
+    };
+    if err.kind == JobErrorKind::BadSpec {
+        return Err(err);
+    }
+    let mut rungs: Vec<&'static str> = Vec::new();
+    if err.kind == JobErrorKind::PivotFailure {
+        rungs.push("jitter");
+    }
+    if !matches!(model.inference, Inference::Dense) {
+        rungs.push("sequential_damped");
+    }
+    if !matches!(model.inference, Inference::Dense)
+        && model.global_cov.is_none()
+        && spec.dataset.x.len() <= DENSE_FALLBACK_MAX_N
+    {
+        rungs.push("dense");
+    }
+    for rung in rungs {
+        if Instant::now() >= deadline {
+            err.message = format!(
+                "{} (job timeout hit before the '{rung}' fallback)",
+                err.message
+            );
+            return Err(err);
+        }
+        let mut m = model.clone();
+        match rung {
+            "jitter" => {
+                m.ep_opts.max_jitter_retries = m.ep_opts.max_jitter_retries.max(40);
+                m.ep_opts.damping = m.ep_opts.damping.min(0.5);
+            }
+            "sequential_damped" => {
+                m.ep_opts.damping = (0.5 * m.ep_opts.damping).max(m.ep_opts.min_damping);
+                m.ep_opts.max_sweeps *= 2;
+                if m.global_cov.is_none() {
+                    m.inference = Inference::Sparse(Ordering::Auto);
+                }
+            }
+            "dense" => {
+                m.inference = Inference::Dense;
+                m.ep_opts.damping = m.ep_opts.damping.min(0.5);
+            }
+            _ => unreachable!(),
+        }
+        obs::counters::JOB_RETRIES.add(1);
+        let mut rspan = obs::span("job.retry");
+        if rspan.is_active() {
+            rspan.field_str("rung", rung);
+            rspan.field_str("error_kind", err.kind.as_str());
+        }
+        match attempt(&m) {
+            Ok(f) => return Ok(f),
+            Err(e) => err = e,
+        }
+    }
+    Err(err)
+}
+
 /// The manager handle.
 pub struct JobManager {
     tx: Mutex<Option<Sender<(JobId, TrainSpec)>>>,
@@ -149,14 +307,14 @@ impl JobManager {
             let shared = shared.clone();
             workers.push(std::thread::spawn(move || loop {
                 let job = {
-                    let guard = rx.lock().unwrap();
+                    let guard = relock(&rx);
                     guard.recv()
                 };
                 let (id, spec) = match job {
                     Ok(j) => j,
                     Err(_) => return,
                 };
-                shared.status.lock().unwrap().insert(id, JobStatus::Running);
+                relock(&shared.status).insert(id, JobStatus::Running);
                 let track = obs::counters_on();
                 let t_job = if track { Some(Instant::now()) } else { None };
                 let mut jspan = obs::span("job");
@@ -184,16 +342,11 @@ impl JobManager {
                     _ => Ok(GpClassifier::new(spec.cov.clone(), spec.inference.clone())),
                 };
                 let fit_stage = if spec.optimize { JobStage::Optimize } else { JobStage::Ep };
-                let outcome = model
-                    .map_err(|e| JobError::classify(JobStage::BuildSpec, e))
-                    .and_then(|model| {
-                        let fitted = if spec.optimize {
-                            model.fit(&spec.dataset.x, &spec.dataset.y)
-                        } else {
-                            model.infer_only(&spec.dataset.x, &spec.dataset.y)
-                        };
-                        fitted.map_err(|e| JobError::classify(fit_stage, e))
-                    });
+                let outcome = validate_spec(&spec)
+                    .and_then(|()| {
+                        model.map_err(|e| JobError::classify(JobStage::BuildSpec, e))
+                    })
+                    .and_then(|model| run_with_recovery(&spec, model, fit_stage));
                 match outcome {
                     Ok(fitted) => {
                         if let Some(t0) = t_job {
@@ -213,8 +366,8 @@ impl JobManager {
                             ep_time: fitted.report.ep_time,
                             opt_time: fitted.report.opt_time,
                         };
-                        shared.results.lock().unwrap().insert(id, Arc::new(fitted));
-                        shared.status.lock().unwrap().insert(id, st);
+                        relock(&shared.results).insert(id, Arc::new(fitted));
+                        relock(&shared.status).insert(id, st);
                     }
                     Err(e) => {
                         obs::counters::JOBS_FAILED.add(1);
@@ -223,7 +376,7 @@ impl JobManager {
                             jspan.field_str("error_kind", e.kind.as_str());
                             jspan.field_str("error_stage", e.stage.as_str());
                         }
-                        shared.status.lock().unwrap().insert(id, JobStatus::Failed(e));
+                        relock(&shared.status).insert(id, JobStatus::Failed(e));
                     }
                 }
             }));
@@ -238,12 +391,12 @@ impl JobManager {
 
     /// Enqueue a job; returns its id.
     pub fn submit(&self, spec: TrainSpec) -> Result<JobId, String> {
-        let mut next = self.next_id.lock().unwrap();
+        let mut next = relock(&self.next_id);
         let id = *next;
         *next += 1;
         drop(next);
-        self.shared.status.lock().unwrap().insert(id, JobStatus::Queued);
-        let guard = self.tx.lock().unwrap();
+        relock(&self.shared.status).insert(id, JobStatus::Queued);
+        let guard = relock(&self.tx);
         guard
             .as_ref()
             .ok_or("manager stopped")?
@@ -253,12 +406,12 @@ impl JobManager {
     }
 
     pub fn status(&self, id: JobId) -> Option<JobStatus> {
-        self.shared.status.lock().unwrap().get(&id).cloned()
+        relock(&self.shared.status).get(&id).cloned()
     }
 
     /// Fitted model of a finished job.
     pub fn result(&self, id: JobId) -> Option<Arc<FittedClassifier>> {
-        self.shared.results.lock().unwrap().get(&id).cloned()
+        relock(&self.shared.results).get(&id).cloned()
     }
 
     /// Block until `id` leaves Queued/Running (or the timeout hits).
@@ -279,8 +432,8 @@ impl JobManager {
 
     /// Stop accepting jobs and join the workers.
     pub fn shutdown(&self) {
-        self.tx.lock().unwrap().take();
-        for h in self.workers.lock().unwrap().drain(..) {
+        relock(&self.tx).take();
+        for h in relock(&self.workers).drain(..) {
             let _ = h.join();
         }
     }
@@ -356,6 +509,43 @@ mod tests {
         let fitted = mgr.result(id).unwrap();
         let (m, v) = fitted.predict_latent(&[1.0, 1.0]);
         assert!(m.is_finite() && v > 0.0);
+        mgr.shutdown();
+    }
+
+    /// Broken inputs fail up front as `BadSpec` — before any
+    /// factorization work, and without taking a recovery rung.
+    #[test]
+    fn invalid_inputs_fail_fast_as_bad_spec() {
+        let cases: Vec<(TrainSpec, &str)> = vec![
+            {
+                let mut s = toy_spec(1, false);
+                s.dataset.x[3][0] = f64::NAN;
+                (s, "non-finite")
+            },
+            {
+                let mut s = toy_spec(2, false);
+                s.dataset.y[0] = 0.5;
+                (s, "labels must be")
+            },
+            {
+                let mut s = toy_spec(3, false);
+                s.dataset.y.pop();
+                (s, "length mismatch")
+            },
+        ];
+        let mgr = JobManager::start(1);
+        for (spec, needle) in cases {
+            let id = mgr.submit(spec).unwrap();
+            let st = mgr.wait(id, Duration::from_secs(30)).unwrap();
+            match st {
+                JobStatus::Failed(err) => {
+                    assert_eq!(err.kind, JobErrorKind::BadSpec);
+                    assert_eq!(err.stage, JobStage::BuildSpec);
+                    assert!(err.message.contains(needle), "{err}");
+                }
+                other => panic!("expected a failed job, got {other:?}"),
+            }
+        }
         mgr.shutdown();
     }
 

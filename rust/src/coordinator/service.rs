@@ -28,6 +28,8 @@ pub enum ServiceError {
     WorkerGone,
     /// The worker dropped the request without replying.
     RequestDropped,
+    /// The handle's sender lock was poisoned by a panicking caller.
+    Poisoned,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -36,6 +38,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::Stopped => "service stopped",
             ServiceError::WorkerGone => "service worker gone",
             ServiceError::RequestDropped => "service dropped request",
+            ServiceError::Poisoned => "service handle poisoned",
         };
         f.write_str(msg)
     }
@@ -114,7 +117,7 @@ impl PredictionService {
     pub fn predict(&self, x: Vec<f64>) -> Result<Prediction, ServiceError> {
         let (reply_tx, reply_rx) = channel();
         {
-            let guard = self.tx.lock().unwrap();
+            let guard = self.tx.lock().map_err(|_| ServiceError::Poisoned)?;
             let tx = guard.as_ref().ok_or(ServiceError::Stopped)?;
             tx.send(Request { x, enqueued: Instant::now(), reply: reply_tx })
                 .map_err(|_| ServiceError::WorkerGone)?;
@@ -124,10 +127,12 @@ impl PredictionService {
         Ok(pred)
     }
 
-    /// Drain and stop the worker.
+    /// Drain and stop the worker. Poisoned handle locks are recovered
+    /// (`into_inner`) — shutdown must make progress even after a caller
+    /// panicked inside `predict`.
     pub fn shutdown(&self) {
-        self.tx.lock().unwrap().take();
-        if let Some(h) = self.worker.lock().unwrap().take() {
+        self.tx.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(h) = self.worker.lock().unwrap_or_else(|e| e.into_inner()).take() {
             let _ = h.join();
         }
     }

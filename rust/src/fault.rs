@@ -1,0 +1,341 @@
+//! `fault` — deterministic fault injection for exercising recovery paths.
+//!
+//! Recovery code that only runs when the numerics go bad is recovery code
+//! that never runs in CI. This module turns each failure the stack claims
+//! to survive — a lost pivot, a NaN site update, a straggling pool chunk —
+//! into something a test can *schedule*: a [`Plan`] names exact injection
+//! points, the kernels consult it at well-defined probes, and every fault
+//! fires exactly once so the retry that follows sees clean numerics.
+//!
+//! Determinism: each injection point is owned by exactly one task — an
+//! elimination column is factored by one chunk, an EP site visit happens
+//! on the (serial) sweep driver — so consuming a fault is race-free and
+//! the injected failure, and therefore the recovery sequence it triggers,
+//! is identical at every `CSGP_THREADS` width. Slow-chunk faults perturb
+//! timing only and can never change results (the pool's width contract).
+//!
+//! Activation, in precedence order:
+//!
+//! * programmatically via [`with_plan`] — tests; serialized process-wide
+//!   (like [`crate::obs::with_mode`]) so concurrent tests cannot observe
+//!   each other's plans;
+//! * the `CSGP_FAULT` environment variable, parsed lazily once, e.g.
+//!   `CSGP_FAULT="pivot@12;nansite@1:7;slowchunk@3:25"`. Entries are
+//!   `;`-separated:
+//!   - `pivot@COL` — the first factorization attempt to eliminate
+//!     post-ordering column `COL` reports a non-positive pivot;
+//!   - `nansite@SWEEP:SITE` — EP sweep `SWEEP` (0-based) poisons the
+//!     site-`SITE` update to NaN;
+//!   - `slowchunk@INDEX[:MS]` — sleep `MS` ms (default 20) before pool
+//!     chunk `INDEX` runs.
+//!
+//! With no plan installed every probe is a single relaxed atomic load —
+//! the same near-zero disabled cost as [`crate::obs`]. Each fired fault
+//! bumps `obs::counters::FAULTS_INJECTED` so tests can assert the
+//! injection actually happened (and clean runs can assert it did not).
+
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::obs;
+
+#[derive(Debug)]
+struct PivotFault {
+    col: usize,
+    fired: AtomicBool,
+}
+
+#[derive(Debug)]
+struct NanSiteFault {
+    sweep: usize,
+    site: usize,
+    fired: AtomicBool,
+}
+
+#[derive(Debug)]
+struct SlowChunkFault {
+    chunk: usize,
+    millis: u64,
+    fired: AtomicBool,
+}
+
+/// A deterministic fault-injection plan: a finite set of one-shot faults,
+/// each keyed to an exact point in the computation. Build one with the
+/// chained constructors ([`Plan::pivot`], [`Plan::nan_site`],
+/// [`Plan::slow_chunk`]) or parse the `CSGP_FAULT` syntax with
+/// [`Plan::parse`]; install it with [`with_plan`].
+#[derive(Debug, Default)]
+pub struct Plan {
+    pivots: Vec<PivotFault>,
+    nan_sites: Vec<NanSiteFault>,
+    slow_chunks: Vec<SlowChunkFault>,
+}
+
+impl Plan {
+    /// An empty plan (no faults).
+    pub fn new() -> Plan {
+        Plan::default()
+    }
+
+    /// Fail the pivot of post-ordering elimination column `col` on the
+    /// first factorization attempt that reaches it (consumed once, so
+    /// the jittered retry succeeds).
+    pub fn pivot(mut self, col: usize) -> Plan {
+        self.pivots.push(PivotFault { col, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Poison the site-`site` update of EP sweep `sweep` (0-based sweep
+    /// ordinal, which keeps advancing across rollbacks) to NaN, once.
+    pub fn nan_site(mut self, sweep: usize, site: usize) -> Plan {
+        self.nan_sites.push(NanSiteFault { sweep, site, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Sleep `millis` ms before pool chunk `chunk` runs, once. Timing
+    /// only — results are unaffected by construction.
+    pub fn slow_chunk(mut self, chunk: usize, millis: u64) -> Plan {
+        self.slow_chunks.push(SlowChunkFault { chunk, millis, fired: AtomicBool::new(false) });
+        self
+    }
+
+    /// Does this plan inject anything at all?
+    pub fn is_empty(&self) -> bool {
+        self.pivots.is_empty() && self.nan_sites.is_empty() && self.slow_chunks.is_empty()
+    }
+
+    /// Parse the `CSGP_FAULT` syntax (see the module docs for the
+    /// grammar). Whitespace around entries is ignored; empty entries are
+    /// skipped, so a trailing `;` is fine.
+    pub fn parse(raw: &str) -> Result<Plan, String> {
+        let mut plan = Plan::new();
+        for entry in raw.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, args) = entry
+                .split_once('@')
+                .ok_or_else(|| format!("fault entry `{entry}` is missing `@`"))?;
+            let num = |s: &str| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("bad number `{}` in fault entry `{entry}`", s.trim()))
+            };
+            match kind.trim() {
+                "pivot" => plan = plan.pivot(num(args)?),
+                "nansite" => {
+                    let (a, b) = args
+                        .split_once(':')
+                        .ok_or_else(|| format!("`{entry}` needs nansite@SWEEP:SITE"))?;
+                    plan = plan.nan_site(num(a)?, num(b)?);
+                }
+                "slowchunk" => {
+                    let (c, ms) = match args.split_once(':') {
+                        Some((c, ms)) => (num(c)?, num(ms)? as u64),
+                        None => (num(args)?, 20),
+                    };
+                    plan = plan.slow_chunk(c, ms);
+                }
+                other => return Err(format!("unknown fault kind `{other}` in `{entry}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Re-arm every fault (a plan installed by [`with_plan`] always
+    /// starts fresh, even if the same `Plan` value was fired before).
+    fn reset(&self) {
+        for p in &self.pivots {
+            p.fired.store(false, Ordering::Relaxed);
+        }
+        for s in &self.nan_sites {
+            s.fired.store(false, Ordering::Relaxed);
+        }
+        for c in &self.slow_chunks {
+            c.fired.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global installation: one relaxed load on the disabled fast path.
+// ---------------------------------------------------------------------------
+
+const STATE_UNINIT: u8 = 0xFF;
+const STATE_OFF: u8 = 0;
+const STATE_ON: u8 = 1;
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+
+fn store() -> &'static Mutex<Option<Arc<Plan>>> {
+    static STORE: OnceLock<Mutex<Option<Arc<Plan>>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(None))
+}
+
+#[cold]
+fn init_from_env() -> bool {
+    let plan = match std::env::var("CSGP_FAULT") {
+        Ok(raw) if !raw.trim().is_empty() => match Plan::parse(&raw) {
+            Ok(p) if !p.is_empty() => Some(Arc::new(p)),
+            Ok(_) => None,
+            Err(e) => {
+                eprintln!("csgp: ignoring invalid CSGP_FAULT: {e}");
+                None
+            }
+        },
+        _ => None,
+    };
+    let mut guard = store().lock().unwrap_or_else(|e| e.into_inner());
+    // A `with_plan` that raced in first wins; only fill the uninit slot.
+    if STATE.load(Ordering::Relaxed) == STATE_UNINIT {
+        let on = plan.is_some();
+        *guard = plan;
+        STATE.store(if on { STATE_ON } else { STATE_OFF }, Ordering::Relaxed);
+    }
+    STATE.load(Ordering::Relaxed) == STATE_ON
+}
+
+/// Is any fault plan installed? One relaxed load once initialized.
+#[inline]
+fn active() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_UNINIT => init_from_env(),
+        s => s == STATE_ON,
+    }
+}
+
+fn current() -> Option<Arc<Plan>> {
+    store().lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Run `f` with `plan` installed as the process fault plan, restoring the
+/// previous plan (env-derived or none) afterwards, even on panic. Like
+/// [`obs::with_mode`], callers are serialized through an internal lock so
+/// concurrent tests cannot observe each other's plans; the lock is not
+/// reentrant, so do not nest `with_plan` calls on one thread.
+pub fn with_plan<T>(plan: Plan, f: impl FnOnce() -> T) -> T {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let guard = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _ = active(); // force lazy env init so we restore the right state
+    let prev_state = STATE.load(Ordering::Relaxed);
+    let prev_plan = current();
+    plan.reset();
+    *store().lock().unwrap_or_else(|e| e.into_inner()) = Some(Arc::new(plan));
+    STATE.store(STATE_ON, Ordering::Relaxed);
+
+    struct Restore<'a> {
+        plan: Option<Arc<Plan>>,
+        state: u8,
+        _serial: std::sync::MutexGuard<'a, ()>,
+    }
+    impl Drop for Restore<'_> {
+        fn drop(&mut self) {
+            *store().lock().unwrap_or_else(|e| e.into_inner()) = self.plan.take();
+            STATE.store(self.state, Ordering::Relaxed);
+        }
+    }
+    let _restore = Restore { plan: prev_plan, state: prev_state, _serial: guard };
+    f()
+}
+
+// ---------------------------------------------------------------------------
+// Probes — the library's injection points.
+// ---------------------------------------------------------------------------
+
+/// Factorization probe: should the pivot of post-ordering column `col`
+/// be reported non-positive on this attempt? Consuming — returns `true`
+/// at most once per armed `pivot@col` fault. Only the task that owns
+/// column `col` calls this, so consumption is race-free at any width.
+pub fn should_fail_pivot(col: usize) -> bool {
+    if !active() {
+        return false;
+    }
+    let Some(plan) = current() else { return false };
+    for p in &plan.pivots {
+        if p.col == col && !p.fired.swap(true, Ordering::Relaxed) {
+            obs::counters::FAULTS_INJECTED.add(1);
+            return true;
+        }
+    }
+    false
+}
+
+/// EP probe: should the site-`site` update of sweep `sweep` be poisoned
+/// to NaN? Consuming. Called from the (serial) sweep driver only.
+pub fn should_poison_site(sweep: usize, site: usize) -> bool {
+    if !active() {
+        return false;
+    }
+    let Some(plan) = current() else { return false };
+    for f in &plan.nan_sites {
+        if f.sweep == sweep && f.site == site && !f.fired.swap(true, Ordering::Relaxed) {
+            obs::counters::FAULTS_INJECTED.add(1);
+            return true;
+        }
+    }
+    false
+}
+
+/// Pool probe: sleep before chunk `chunk` if a `slowchunk` fault is
+/// armed for it. Consuming; affects timing only, never results.
+pub fn maybe_slow_chunk(chunk: usize) {
+    if !active() {
+        return;
+    }
+    let Some(plan) = current() else { return };
+    for f in &plan.slow_chunks {
+        if f.chunk == chunk && !f.fired.swap(true, Ordering::Relaxed) {
+            obs::counters::FAULTS_INJECTED.add(1);
+            std::thread::sleep(Duration::from_millis(f.millis));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_the_documented_grammar() {
+        let p = Plan::parse("pivot@12; nansite@1:7 ;slowchunk@3:25;slowchunk@9;").unwrap();
+        assert_eq!(p.pivots.len(), 1);
+        assert_eq!(p.pivots[0].col, 12);
+        assert_eq!(p.nan_sites.len(), 1);
+        assert_eq!((p.nan_sites[0].sweep, p.nan_sites[0].site), (1, 7));
+        assert_eq!(p.slow_chunks.len(), 2);
+        assert_eq!(p.slow_chunks[0].millis, 25);
+        assert_eq!(p.slow_chunks[1].millis, 20); // default
+        assert!(Plan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        assert!(Plan::parse("pivot12").is_err());
+        assert!(Plan::parse("pivot@twelve").is_err());
+        assert!(Plan::parse("nansite@3").is_err());
+        assert!(Plan::parse("frobnicate@1").is_err());
+    }
+
+    #[test]
+    fn faults_fire_exactly_once_and_only_under_a_plan() {
+        // Outside any plan every probe is inert.
+        assert!(!should_fail_pivot(5) || active(), "no plan, no faults");
+        with_plan(Plan::new().pivot(5).nan_site(0, 2), || {
+            assert!(!should_fail_pivot(4), "wrong column must not fire");
+            assert!(should_fail_pivot(5), "armed fault fires");
+            assert!(!should_fail_pivot(5), "fault is consumed");
+            assert!(should_poison_site(0, 2));
+            assert!(!should_poison_site(0, 2));
+            assert!(!should_poison_site(1, 2), "wrong sweep must not fire");
+        });
+    }
+
+    #[test]
+    fn with_plan_rearms_and_restores() {
+        let plan = || Plan::new().pivot(3);
+        with_plan(plan(), || assert!(should_fail_pivot(3)));
+        // a fresh installation starts fresh
+        with_plan(plan(), || assert!(should_fail_pivot(3)));
+    }
+}

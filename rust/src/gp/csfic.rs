@@ -141,7 +141,12 @@ impl CsFicEp {
             }
             None => EpSites::zeros(n),
         };
-        let damping = opts.damping.min(0.8);
+        // CS+FIC EP is a batched update, so it needs heavier damping than
+        // the sequential sweep; the working value halves on every
+        // divergence rollback.
+        let mut damping = opts.effective_damping(0.8);
+        let mut monitor = crate::gp::marginal::DivergenceMonitor::new();
+        let mut recoveries = 0usize;
         let mut mu = vec![0.0; n];
         let mut sigma_diag = vec![0.0; n];
         let mut gamma = vec![0.0; n];
@@ -168,49 +173,89 @@ impl CsFicEp {
         let mut converged = false;
         let mut batch = SiteBatch::new();
 
+        // Last-good snapshot for rollback: sites plus the marginals the
+        // next sweep's batched update reads (the starting state — prior or
+        // warm start — is taken as healthy).
+        let mut snap_sites = sites.clone();
+        let mut snap_gamma = gamma.clone();
+        let mut snap_mu = mu.clone();
+        let mut snap_sigma = sigma_diag.clone();
+        let mut snap_m2 = m2.clone();
+        let mut snap_log_z = log_z;
+
         while sweeps < opts.max_sweeps {
             // per-sweep convergence telemetry, observed only (see ep_parallel)
             let track = crate::obs::counters_on();
             let mut sweep_span = crate::obs::span("ep.sweep");
             let mut max_site_delta = 0.0f64;
             let mut updated = 0u64;
+            let mut skipped = 0u64;
             // batched (parallel-EP) site updates from the current marginals
             batch.update(&yp, &mu, &sigma_diag, &sites.tau, &sites.nu);
             for i in 0..n {
                 if !batch.valid[i] {
                     continue;
                 }
+                let (tau_old, nu_old) = (sites.tau[i], sites.nu[i]);
+                let mut tau_new = batch.tau_new[i];
+                if crate::fault::should_poison_site(sweeps, i) {
+                    tau_new = f64::NAN;
+                }
+                let tau_next = damping * tau_new + (1.0 - damping) * tau_old;
+                let nu_next = damping * batch.nu_new[i] + (1.0 - damping) * nu_old;
+                // Per-site recovery guard (same contract as the other EP
+                // backends): a non-finite or negative site precision is
+                // not merged; the sweep-end rollback repairs the
+                // trajectory. `batch.valid` already filters the likelihood
+                // kernel's own rejects — only these new guards count
+                // toward recovery telemetry.
+                if !tau_next.is_finite() || !nu_next.is_finite() || tau_next < 0.0 {
+                    crate::obs::counters::EP_SKIPPED_SITES.add(1);
+                    skipped += 1;
+                    continue;
+                }
                 sites.ln_zhat[i] = batch.ln_zhat[i];
                 sites.tau_cav[i] = batch.tau_cav[i];
                 sites.nu_cav[i] = batch.nu_cav[i];
-                let (tau_old, nu_old) = (sites.tau[i], sites.nu[i]);
-                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * tau_old;
-                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * nu_old;
+                sites.tau[i] = tau_next;
+                sites.nu[i] = nu_next;
+                // max_site_delta feeds the divergence monitor, so it is
+                // tracked unconditionally (not gated on trace mode).
+                let delta = (tau_next - tau_old).abs().max((nu_next - nu_old).abs());
+                max_site_delta = max_site_delta.max(delta);
                 if track {
-                    let delta =
-                        (sites.tau[i] - tau_old).abs().max((sites.nu[i] - nu_old).abs());
-                    max_site_delta = max_site_delta.max(delta);
                     updated += 1;
                 }
             }
 
-            // one refactor of B = S_B + Us Usᵀ for the whole batch
+            // one refactor of B = S_B + Us Usᵀ for the whole batch. A
+            // refresh failure (pivot loss on this site state) is treated
+            // as divergence: the rollback below rebuilds the solver from
+            // the last-good sites instead of erroring out.
             let sb = build_sparse_b(&k_cs, &lambda, &sites.tau);
-            solver.refresh(&sb, scaled_u(&u, &sites.tau))?;
-            m2 = refresh_posterior(
-                &k_cs,
-                &lambda,
-                &u,
-                &solver,
-                &sites,
-                &mut gamma,
-                &mut mu,
-                &mut sigma_diag,
-            );
+            let refresh_err = solver.refresh(&sb, scaled_u(&u, &sites.tau)).err();
+            if refresh_err.is_none() {
+                m2 = refresh_posterior(
+                    &k_cs,
+                    &lambda,
+                    &u,
+                    &solver,
+                    &sites,
+                    &mut gamma,
+                    &mut mu,
+                    &mut sigma_diag,
+                );
+            }
 
             sweeps += 1;
-            let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
-            log_z = ep_log_z(&sites, solver.logdet(), nu_dot_mu);
+            if refresh_err.is_none() {
+                let nu_dot_mu: f64 =
+                    sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
+                log_z = ep_log_z(&sites, solver.logdet(), nu_dot_mu);
+            }
+            let diverged = refresh_err.is_some()
+                || skipped > 0
+                || monitor.diverged(log_z, max_site_delta, opts);
             if track {
                 crate::obs::counters::EP_SWEEPS.add(1);
                 crate::obs::counters::EP_SITE_VISITS.add(n as u64);
@@ -224,7 +269,41 @@ impl CsFicEp {
                 sweep_span.field_f64("max_site_delta", max_site_delta);
                 sweep_span.field_u64("damped_updates", updated);
                 sweep_span.field_f64("damping", damping);
+                sweep_span.field_u64("skipped_sites", skipped);
+                sweep_span.field_bool("rolled_back", diverged);
             }
+            if diverged {
+                // Roll back to the last-good snapshot and halve the
+                // damping before trying again (the sweep ordinal keeps
+                // advancing, so a one-shot injected fault is not re-hit).
+                if recoveries >= opts.max_recoveries {
+                    return Err(refresh_err.unwrap_or_else(|| {
+                        format!(
+                            "EP diverged at sweep {sweeps} with the recovery \
+                             budget ({}) exhausted",
+                            opts.max_recoveries
+                        )
+                    }));
+                }
+                recoveries += 1;
+                crate::obs::counters::EP_ROLLBACKS.add(1);
+                damping = (0.5 * damping).max(opts.min_damping);
+                sites.clone_from(&snap_sites);
+                gamma.clone_from(&snap_gamma);
+                mu.clone_from(&snap_mu);
+                sigma_diag.clone_from(&snap_sigma);
+                m2 = snap_m2.clone();
+                let sb = build_sparse_b(&k_cs, &lambda, &sites.tau);
+                solver.refresh(&sb, scaled_u(&u, &sites.tau))?;
+                log_z = snap_log_z;
+                continue;
+            }
+            snap_sites.clone_from(&sites);
+            snap_gamma.clone_from(&gamma);
+            snap_mu.clone_from(&mu);
+            snap_sigma.clone_from(&sigma_diag);
+            snap_m2.clone_from(&m2);
+            snap_log_z = log_z;
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 break;
@@ -634,7 +713,7 @@ mod tests {
     }
 
     fn tight() -> EpOptions {
-        EpOptions { max_sweeps: 400, tol: 1e-11, damping: 0.8 }
+        EpOptions { max_sweeps: 400, tol: 1e-11, damping: 0.8, ..EpOptions::default() }
     }
 
     /// Explicitly assembled dense prior `P = K_cs + Λ + U Uᵀ` over the
@@ -686,7 +765,7 @@ mod tests {
 
     fn dense_reference(p: &DenseMatrix, y: &[f64], opts: &EpOptions) -> DenseRef {
         let n = y.len();
-        let damping = opts.damping.min(0.8);
+        let damping = opts.effective_damping(0.8);
         let mut sites = EpSites::zeros(n);
         let mut mu = vec![0.0; n];
         let mut sigma_diag: Vec<f64> = (0..n).map(|i| p.at(i, i)).collect();

@@ -76,8 +76,12 @@ impl ParallelEp {
         }
         let mut factor = LdlFactor::identity(plan.symbolic.clone());
         let mut sites = EpSites::zeros(n);
-        // parallel EP needs damping; honour opts.damping but cap at 0.9
-        let damping = opts.damping.min(0.9);
+        // parallel EP needs damping; honour opts.damping but cap at 0.9.
+        // The working value halves on every divergence rollback.
+        let jitter = opts.jitter_policy();
+        let mut damping = opts.effective_damping(0.9);
+        let mut monitor = crate::gp::marginal::DivergenceMonitor::new();
+        let mut recoveries = 0usize;
 
         let mut gamma = vec![0.0; n];
         let mut mu = vec![0.0; n];
@@ -88,6 +92,15 @@ impl ParallelEp {
         let mut converged = false;
         let mut batch = SiteBatch::new();
 
+        // Last-good snapshot for rollback: sites plus the marginals the
+        // next sweep's batched update reads (the τ̃ = 0 prior start is
+        // trivially healthy).
+        let mut snap_sites = sites.clone();
+        let mut snap_gamma = gamma.clone();
+        let mut snap_mu = mu.clone();
+        let mut snap_sigma = sigma_diag.clone();
+        let mut snap_log_z = log_z;
+
         while sweeps < opts.max_sweeps {
             // Convergence telemetry (ΔlogZ, max site delta, damping count)
             // is observed from values the sweep computes anyway — the
@@ -96,6 +109,7 @@ impl ParallelEp {
             let mut sweep_span = crate::obs::span("ep.sweep");
             let mut max_site_delta = 0.0f64;
             let mut updated = 0u64;
+            let mut skipped = 0u64;
             // batched site updates from current marginals: the
             // transcendental kernel runs over the whole batch at once
             batch.update(&yp, &mu, &sigma_diag, &sites.tau, &sites.nu);
@@ -103,23 +117,41 @@ impl ParallelEp {
                 if !batch.valid[i] {
                     continue;
                 }
+                let (tau_old, nu_old) = (sites.tau[i], sites.nu[i]);
+                let mut tau_new = batch.tau_new[i];
+                if crate::fault::should_poison_site(sweeps, i) {
+                    tau_new = f64::NAN;
+                }
+                let tau_next = damping * tau_new + (1.0 - damping) * tau_old;
+                let nu_next = damping * batch.nu_new[i] + (1.0 - damping) * nu_old;
+                // Per-site recovery guard (same contract as the sequential
+                // sweep): a non-finite or negative site precision is not
+                // merged — the site keeps its last value and the sweep-end
+                // rollback repairs the trajectory. `batch.valid` already
+                // filters the likelihood kernel's own rejects; only these
+                // new guards count toward recovery telemetry.
+                if !tau_next.is_finite() || !nu_next.is_finite() || tau_next < 0.0 {
+                    crate::obs::counters::EP_SKIPPED_SITES.add(1);
+                    skipped += 1;
+                    continue;
+                }
                 sites.ln_zhat[i] = batch.ln_zhat[i];
                 sites.tau_cav[i] = batch.tau_cav[i];
                 sites.nu_cav[i] = batch.nu_cav[i];
-                let (tau_old, nu_old) = (sites.tau[i], sites.nu[i]);
-                sites.tau[i] = damping * batch.tau_new[i] + (1.0 - damping) * tau_old;
-                sites.nu[i] = damping * batch.nu_new[i] + (1.0 - damping) * nu_old;
+                sites.tau[i] = tau_next;
+                sites.nu[i] = nu_next;
+                // max_site_delta feeds the divergence monitor, so it is
+                // tracked unconditionally (not gated on trace mode).
+                let delta = (tau_next - tau_old).abs().max((nu_next - nu_old).abs());
+                max_site_delta = max_site_delta.max(delta);
                 if track {
-                    let delta =
-                        (sites.tau[i] - tau_old).abs().max((sites.nu[i] - nu_old).abs());
-                    max_site_delta = max_site_delta.max(delta);
                     updated += 1;
                 }
             }
 
-            // one refactor of B for the whole batch
+            // one refactor of B for the whole batch (with pivot recovery)
             let b = build_b(&k, &sites.tau);
-            factor.refactor(&b)?;
+            factor.refactor_with_recovery(&b, &jitter)?;
 
             // recompute γ = K ν̃ and all marginals through the new factor
             gamma = k.matvec(&sites.nu);
@@ -137,6 +169,7 @@ impl ParallelEp {
             sweeps += 1;
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
             log_z = ep_log_z(&sites, factor.logdet(), nu_dot_mu);
+            let diverged = skipped > 0 || monitor.diverged(log_z, max_site_delta, opts);
             if track {
                 crate::obs::counters::EP_SWEEPS.add(1);
                 crate::obs::counters::EP_SITE_VISITS.add(n as u64);
@@ -150,7 +183,37 @@ impl ParallelEp {
                 sweep_span.field_f64("max_site_delta", max_site_delta);
                 sweep_span.field_u64("damped_updates", updated);
                 sweep_span.field_f64("damping", damping);
+                sweep_span.field_u64("skipped_sites", skipped);
+                sweep_span.field_bool("rolled_back", diverged);
             }
+            if diverged {
+                // Roll back to the last-good snapshot and halve the
+                // damping before trying again (the sweep ordinal keeps
+                // advancing, so a one-shot injected fault is not re-hit).
+                if recoveries >= opts.max_recoveries {
+                    return Err(format!(
+                        "EP diverged at sweep {sweeps} with the recovery budget \
+                         ({}) exhausted",
+                        opts.max_recoveries
+                    ));
+                }
+                recoveries += 1;
+                crate::obs::counters::EP_ROLLBACKS.add(1);
+                damping = (0.5 * damping).max(opts.min_damping);
+                sites.clone_from(&snap_sites);
+                gamma.clone_from(&snap_gamma);
+                mu.clone_from(&snap_mu);
+                sigma_diag.clone_from(&snap_sigma);
+                let b = build_b(&k, &sites.tau);
+                factor.refactor_with_recovery(&b, &jitter)?;
+                log_z = snap_log_z;
+                continue;
+            }
+            snap_sites.clone_from(&sites);
+            snap_gamma.clone_from(&gamma);
+            snap_mu.clone_from(&mu);
+            snap_sigma.clone_from(&sigma_diag);
+            snap_log_z = log_z;
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 break;
@@ -255,7 +318,7 @@ mod tests {
         let y: Vec<f64> =
             x.iter().map(|p| if p[0] > 3.0 { 1.0 } else { -1.0 }).collect();
         let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0);
-        let opts = EpOptions { max_sweeps: 300, tol: 1e-10, damping: 0.8 };
+        let opts = EpOptions { max_sweeps: 300, tol: 1e-10, damping: 0.8, ..EpOptions::default() };
         let pe = ParallelEp::run(&cov, &x, &y, Ordering::Rcm, &opts).unwrap();
         let se = SparseEp::run(&cov, &x, &y, Ordering::Rcm, &opts, None).unwrap();
         assert!(pe.converged, "parallel EP failed to converge");

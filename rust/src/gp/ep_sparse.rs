@@ -135,6 +135,18 @@ impl SparseEp {
         let mut sweeps = 0;
         let mut converged = false;
 
+        // Recovery state: the working damping starts at the configured
+        // value and halves on every rollback; the snapshot is the site
+        // state at the end of the last healthy sweep (the τ̃ = 0 start is
+        // trivially healthy).
+        let jitter = opts.jitter_policy();
+        let mut damping = opts.effective_damping(1.0);
+        let mut monitor = crate::gp::marginal::DivergenceMonitor::new();
+        let mut recoveries = 0usize;
+        let mut snap_sites = sites.clone();
+        let mut snap_gamma = gamma.clone();
+        let mut snap_log_z = log_z;
+
         while sweeps < opts.max_sweeps {
             // Per-sweep telemetry only (the per-site path is too hot for
             // spans — its whole obs footprint is the gated counter inside
@@ -144,6 +156,7 @@ impl SparseEp {
             let mut sweep_span = crate::obs::span("ep.sweep");
             let mut max_site_delta = 0.0f64;
             let mut updated = 0u64;
+            let mut skipped = 0u64;
             for i in 0..n {
                 let (krows, kvals) = k.col(i);
                 // a = S̃^{1/2} K[:, i]
@@ -178,17 +191,31 @@ impl SparseEp {
                 else {
                     continue;
                 };
-                if opts.damping < 1.0 {
-                    tn = opts.damping * tn + (1.0 - opts.damping) * sites.tau[i];
-                    nn = opts.damping * nn + (1.0 - opts.damping) * sites.nu[i];
+                if crate::fault::should_poison_site(sweeps, i) {
+                    tn = f64::NAN;
+                }
+                if damping < 1.0 {
+                    tn = damping * tn + (1.0 - damping) * sites.tau[i];
+                    nn = damping * nn + (1.0 - damping) * sites.nu[i];
+                }
+                // Per-site recovery guard: a non-finite or negative site
+                // precision would corrupt the factor through the row
+                // modification below, so the visit is skipped (the site
+                // keeps its last value) and the sweep-end rollback repairs
+                // the trajectory. Probit site precisions are positive, so
+                // clean runs never take this branch.
+                if !tn.is_finite() || !nn.is_finite() || tn < 0.0 {
+                    crate::obs::counters::EP_SKIPPED_SITES.add(1);
+                    skipped += 1;
+                    continue;
                 }
                 let dnu = nn - sites.nu[i];
-                if track {
-                    let delta = (tn - sites.tau[i]).abs().max(dnu.abs());
-                    max_site_delta = max_site_delta.max(delta);
-                    if opts.damping < 1.0 {
-                        updated += 1;
-                    }
+                // max_site_delta feeds the divergence monitor, so it is
+                // tracked unconditionally (not gated on trace mode).
+                let delta = (tn - sites.tau[i]).abs().max(dnu.abs());
+                max_site_delta = max_site_delta.max(delta);
+                if track && damping < 1.0 {
+                    updated += 1;
                 }
                 sites.ln_zhat[i] = lz;
                 sites.tau_cav[i] = tc;
@@ -209,11 +236,20 @@ impl SparseEp {
                         base
                     }
                 }));
-                match metrics {
+                let rowmod = match metrics {
                     Some(m) => m.time("ep.rowmod", || {
                         factor.ldl_row_modify(i, krows, &b_vals, &mut rowmod_ws)
-                    })?,
-                    None => factor.ldl_row_modify(i, krows, &b_vals, &mut rowmod_ws)?,
+                    }),
+                    None => factor.ldl_row_modify(i, krows, &b_vals, &mut rowmod_ws),
+                };
+                if rowmod.is_err() {
+                    // A failed row modification leaves the factor partially
+                    // mutated (see the recovery contract in
+                    // `sparse::rowmod`), so retrying it in place is not an
+                    // option: rebuild B from the current sites and refactor
+                    // with pivot recovery.
+                    let b = build_b(&k, &sites.tau);
+                    factor.refactor_with_recovery(&b, &jitter)?;
                 }
                 // γ += K[:, i] Δν̃ᵢ (and the cached sw ⊙ γ alongside)
                 for (&r, &v) in krows.iter().zip(kvals) {
@@ -226,13 +262,14 @@ impl SparseEp {
             }
             sweeps += 1;
 
-            // sweep-end: refactor B from scratch (cheap, O(sparse chol))
-            // and evaluate log Z_EP
+            // sweep-end: refactor B from scratch (cheap, O(sparse chol),
+            // with pivot recovery) and evaluate log Z_EP
             let b = build_b(&k, &sites.tau);
-            factor.refactor(&b)?;
+            factor.refactor_with_recovery(&b, &jitter)?;
             let mu = posterior_mean(&k, &factor, &sites, &gamma, &mut solve_ws);
             let nu_dot_mu: f64 = sites.nu.iter().zip(&mu).map(|(a, b)| a * b).sum();
             log_z = ep_log_z(&sites, factor.logdet(), nu_dot_mu);
+            let diverged = skipped > 0 || monitor.diverged(log_z, max_site_delta, opts);
             if track {
                 crate::obs::counters::EP_SWEEPS.add(1);
                 crate::obs::counters::EP_SITE_VISITS.add(n as u64);
@@ -245,8 +282,39 @@ impl SparseEp {
                 sweep_span.field_f64("dlogz", log_z - log_z_old);
                 sweep_span.field_f64("max_site_delta", max_site_delta);
                 sweep_span.field_u64("damped_updates", updated);
-                sweep_span.field_f64("damping", opts.damping);
+                sweep_span.field_f64("damping", damping);
+                sweep_span.field_u64("skipped_sites", skipped);
+                sweep_span.field_bool("rolled_back", diverged);
             }
+            if diverged {
+                // Roll back to the last-good snapshot and halve the
+                // damping before trying again. The sweep ordinal keeps
+                // advancing across rollbacks, so a one-shot injected fault
+                // is not re-hit on the retry.
+                if recoveries >= opts.max_recoveries {
+                    return Err(format!(
+                        "EP diverged at sweep {sweeps} with the recovery budget \
+                         ({}) exhausted",
+                        opts.max_recoveries
+                    ));
+                }
+                recoveries += 1;
+                crate::obs::counters::EP_ROLLBACKS.add(1);
+                damping = (0.5 * damping).max(opts.min_damping);
+                sites.clone_from(&snap_sites);
+                gamma.clone_from(&snap_gamma);
+                for j in 0..n {
+                    sw[j] = sites.tau[j].max(0.0).sqrt();
+                    swg[j] = sw[j] * gamma[j];
+                }
+                let b = build_b(&k, &sites.tau);
+                factor.refactor_with_recovery(&b, &jitter)?;
+                log_z = snap_log_z;
+                continue;
+            }
+            snap_sites.clone_from(&sites);
+            snap_gamma.clone_from(&gamma);
+            snap_log_z = log_z;
             if (log_z - log_z_old).abs() < opts.tol {
                 converged = true;
                 mu_rec = mu;
@@ -443,7 +511,7 @@ mod tests {
     }
 
     fn tight() -> EpOptions {
-        EpOptions { max_sweeps: 200, tol: 1e-11, damping: 1.0 }
+        EpOptions { max_sweeps: 200, tol: 1e-11, damping: 1.0, ..EpOptions::default() }
     }
 
     /// The central correctness test: sparse EP and dense EP compute the

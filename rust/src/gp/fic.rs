@@ -142,7 +142,7 @@ impl FicEp {
         };
         let mut mu = vec![0.0; n];
         let mut sigma_diag = vec![0.0; n];
-        let damping = opts.damping.min(0.8);
+        let damping = opts.effective_damping(0.8);
         let mut log_z = f64::NEG_INFINITY;
         let mut log_z_old = f64::NEG_INFINITY;
         let mut sweeps = 0;
@@ -327,7 +327,7 @@ mod tests {
         let x = random_points(20, 2, 5.0, 31);
         let y: Vec<f64> = x.iter().map(|p| if p[0] > 2.5 { 1.0 } else { -1.0 }).collect();
         let cov = CovFunction::new(CovKind::Se, 2, 1.0, 1.5);
-        let opts = EpOptions { max_sweeps: 400, tol: 1e-10, damping: 0.8 };
+        let opts = EpOptions { max_sweeps: 400, tol: 1e-10, damping: 0.8, ..EpOptions::default() };
         let fic = FicEp::run(&cov, &x, &y, &x, &opts).unwrap();
         let de = DenseEp::run(&cov, &x, &y, &opts).unwrap();
         assert!(fic.converged);
@@ -358,7 +358,7 @@ mod tests {
                 xu.push(vec![1.0 + 2.0 * a as f64, 1.0 + 2.0 * b as f64]);
             }
         }
-        let opts = EpOptions { max_sweeps: 300, tol: 1e-9, damping: 0.8 };
+        let opts = EpOptions { max_sweeps: 300, tol: 1e-9, damping: 0.8, ..EpOptions::default() };
         let cold = FicEp::run(&cov, &x, &y, &xu, &opts).unwrap();
         assert!(cold.converged);
         // same θ: the warm run must stop almost immediately at the same logZ
@@ -390,7 +390,7 @@ mod tests {
                 xu.push(vec![1.0 + 2.0 * a as f64, 1.0 + 2.0 * b as f64]);
             }
         }
-        let opts = EpOptions { max_sweeps: 300, tol: 1e-8, damping: 0.8 };
+        let opts = EpOptions { max_sweeps: 300, tol: 1e-8, damping: 0.8, ..EpOptions::default() };
         let fic = FicEp::run(&cov, &x, &y, &xu, &opts).unwrap();
         assert!(fic.converged);
         let correct = x

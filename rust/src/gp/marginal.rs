@@ -70,11 +70,108 @@ pub struct EpOptions {
     pub tol: f64,
     /// Site-update damping in (0, 1]; 1 = undamped (paper setting).
     pub damping: f64,
+    /// Floor for adaptive damping: each rollback halves the working
+    /// damping, never below this.
+    pub min_damping: f64,
+    /// Rollback budget per run: after this many snapshot restores the run
+    /// errors out instead of recovering (0 disables rollback entirely).
+    pub max_recoveries: usize,
+    /// Pivot-recovery budget per factorization: how many times the
+    /// escalating-jitter retry may double before giving up (see
+    /// [`crate::sparse::cholesky::JitterPolicy`]).
+    pub max_jitter_retries: usize,
+    /// Relative log Z_EP regression that counts as divergence: a sweep
+    /// ending with `logZ < prev - divergence_tol·(1 + |prev|)` triggers a
+    /// rollback. Generous by design — healthy EP trajectories wobble by
+    /// tolerances, diverging ones fall off a cliff.
+    pub divergence_tol: f64,
 }
 
 impl Default for EpOptions {
     fn default() -> Self {
-        EpOptions { max_sweeps: 60, tol: 1e-6, damping: 1.0 }
+        EpOptions {
+            max_sweeps: 60,
+            tol: 1e-6,
+            damping: 1.0,
+            min_damping: 0.1,
+            max_recoveries: 4,
+            max_jitter_retries: 30,
+            divergence_tol: 0.5,
+        }
+    }
+}
+
+impl EpOptions {
+    /// The damping a backend actually starts with: `damping` clamped to
+    /// the backend's stability ceiling (the batched backends cannot take
+    /// full undamped steps — parallel EP caps at 0.9, CS+FIC at 0.8; the
+    /// sequential sweep passes `cap = 1.0`). The single source of truth
+    /// for the clamp, so adaptive halving composes with it: the working
+    /// damping starts at `effective_damping(cap)` and each rollback
+    /// halves it down to `min_damping`.
+    pub fn effective_damping(&self, cap: f64) -> f64 {
+        self.damping.min(cap)
+    }
+
+    /// The jitter schedule this run's factorizations recover with.
+    pub fn jitter_policy(&self) -> crate::sparse::cholesky::JitterPolicy {
+        crate::sparse::cholesky::JitterPolicy {
+            max_retries: self.max_jitter_retries,
+            ..crate::sparse::cholesky::JitterPolicy::default()
+        }
+    }
+}
+
+/// Sweep-level divergence detector shared by the EP backends: watches the
+/// `log Z_EP` trajectory and the per-sweep `max_site_delta` and reports
+/// when a sweep has gone off the rails. Conservative on purpose — the
+/// acceptance bar is that *clean* fixtures never trip it — so it only
+/// fires on a non-finite logZ, a logZ cliff (relative regression beyond
+/// `divergence_tol`), or a site-delta oscillation that has blown 10×
+/// past the best delta seen after the trajectory had settled.
+#[derive(Clone, Debug)]
+pub struct DivergenceMonitor {
+    prev_log_z: Option<f64>,
+    best_delta: f64,
+    healthy_sweeps: usize,
+}
+
+impl Default for DivergenceMonitor {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DivergenceMonitor {
+    pub fn new() -> DivergenceMonitor {
+        DivergenceMonitor { prev_log_z: None, best_delta: f64::INFINITY, healthy_sweeps: 0 }
+    }
+
+    /// Judge one finished sweep. Returns `true` if the sweep diverged (the
+    /// caller should roll back; the diverged values are *not* recorded, so
+    /// the restored trajectory is judged against the last good sweep).
+    pub fn diverged(&mut self, log_z: f64, max_site_delta: f64, opts: &EpOptions) -> bool {
+        if !log_z.is_finite() || !max_site_delta.is_finite() {
+            return true;
+        }
+        if let Some(prev) = self.prev_log_z {
+            if log_z < prev - opts.divergence_tol * (1.0 + prev.abs()) {
+                return true;
+            }
+        }
+        // Oscillation: deltas shrink as EP settles; a delta exploding two
+        // orders past the best seen (and past any convergence-scale noise)
+        // after at least three settled sweeps is a blow-up, not progress.
+        if self.healthy_sweeps >= 3
+            && max_site_delta > 10.0 * self.best_delta
+            && max_site_delta > 100.0 * opts.tol
+        {
+            return true;
+        }
+        self.prev_log_z = Some(log_z);
+        self.best_delta = self.best_delta.min(max_site_delta);
+        self.healthy_sweeps += 1;
+        false
     }
 }
 
@@ -178,6 +275,33 @@ mod tests {
         assert_eq!(back.tau_cav, sites.tau_cav);
         assert_eq!(back.nu_cav, sites.nu_cav);
         assert_eq!(back.ln_zhat, sites.ln_zhat);
+    }
+
+    #[test]
+    fn effective_damping_is_the_single_clamp() {
+        let opts = EpOptions::default(); // damping = 1.0
+        assert_eq!(opts.effective_damping(1.0), 1.0);
+        assert_eq!(opts.effective_damping(0.8), 0.8);
+        let gentle = EpOptions { damping: 0.5, ..EpOptions::default() };
+        assert_eq!(gentle.effective_damping(0.8), 0.5);
+    }
+
+    #[test]
+    fn divergence_monitor_passes_healthy_and_flags_cliffs() {
+        let opts = EpOptions::default();
+        let mut m = DivergenceMonitor::new();
+        // A settling trajectory with small wobbles is healthy.
+        for (lz, delta) in [(-60.0, 1.0), (-55.0, 0.3), (-55.2, 0.1), (-54.9, 0.02)] {
+            assert!(!m.diverged(lz, delta, &opts), "healthy sweep flagged at lz={lz}");
+        }
+        // Non-finite logZ always diverges, and is not recorded.
+        assert!(m.diverged(f64::NAN, 0.01, &opts));
+        // A cliff relative to the last *good* sweep diverges.
+        assert!(m.diverged(-54.9 - 0.5 * (1.0 + 54.9) - 1.0, 0.01, &opts));
+        // An exploded site delta after settling diverges too.
+        assert!(m.diverged(-54.8, 5.0, &opts));
+        // ... and the restored trajectory continues cleanly.
+        assert!(!m.diverged(-54.85, 0.015, &opts));
     }
 
     #[test]

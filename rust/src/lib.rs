@@ -44,6 +44,11 @@
 //!   JSONL sink, plus process-wide counters, gauges and latency
 //!   histograms. Gated by `CSGP_TRACE` (off / counters / full) and
 //!   provably inert with respect to results when off.
+//! * [`fault`] — deterministic fault injection (`CSGP_FAULT` / a
+//!   programmatic [`fault::Plan`]): one-shot pivot failures, NaN site
+//!   updates and slow pool chunks at chosen points, so every recovery
+//!   path (jittered refactorization, EP rollback, the coordinator's
+//!   degradation ladder) is exercised by tests rather than hoped-for.
 //! * [`bench`] — a minimal measurement harness used by `benches/`.
 //!
 //! # Structure reuse contract
@@ -63,6 +68,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod geom;
 pub mod gp;
 pub mod metrics;

@@ -109,11 +109,20 @@ pub static EP_SWEEPS: Counter = Counter::new();
 pub static EP_SITE_VISITS: Counter = Counter::new();
 /// Site-update merges performed with damping < 1.
 pub static EP_DAMPED_UPDATES: Counter = Counter::new();
+/// Site updates skipped because the proposed (tau, nu) was non-finite or
+/// the new site precision was negative — the per-site recovery guard.
+pub static EP_SKIPPED_SITES: Counter = Counter::new();
+/// Sweep-level recoveries: sites restored to the last-good snapshot and
+/// damping halved after a divergence signal.
+pub static EP_ROLLBACKS: Counter = Counter::new();
 
 // --- solver stack -----------------------------------------------------------
 
 pub static FACTOR_REFACTORS: Counter = Counter::new();
 pub static FACTOR_WAVES: Counter = Counter::new();
+/// Factorization attempts retried with escalated diagonal jitter after a
+/// non-positive pivot (pivot recovery; zero on healthy inputs).
+pub static FACTOR_JITTER_RETRIES: Counter = Counter::new();
 /// Sparse / dense triangular solve calls (per-site RHS solves dominate).
 pub static SOLVES: Counter = Counter::new();
 pub static TAKAHASHI_RUNS: Counter = Counter::new();
@@ -122,6 +131,15 @@ pub static TAKAHASHI_RUNS: Counter = Counter::new();
 
 pub static JOBS_DONE: Counter = Counter::new();
 pub static JOBS_FAILED: Counter = Counter::new();
+/// Degradation-ladder rungs taken: a failed fit retried with jitter
+/// headroom, a damped sequential sweep, or the dense fallback.
+pub static JOB_RETRIES: Counter = Counter::new();
+
+// --- fault injection --------------------------------------------------------
+
+/// Faults actually fired by an installed [`crate::fault::Plan`] (zero
+/// unless a plan is active; clean runs assert it stays zero).
+pub static FAULTS_INJECTED: Counter = Counter::new();
 
 // --- latency histograms -----------------------------------------------------
 
@@ -151,12 +169,17 @@ pub struct Snapshot {
     pub ep_sweeps: u64,
     pub ep_site_visits: u64,
     pub ep_damped_updates: u64,
+    pub ep_skipped_sites: u64,
+    pub ep_rollbacks: u64,
     pub factor_refactors: u64,
     pub factor_waves: u64,
+    pub factor_jitter_retries: u64,
     pub solves: u64,
     pub takahashi_runs: u64,
     pub jobs_done: u64,
     pub jobs_failed: u64,
+    pub job_retries: u64,
+    pub faults_injected: u64,
 }
 
 /// Read every counter at once.
@@ -173,12 +196,17 @@ pub fn snapshot() -> Snapshot {
         ep_sweeps: EP_SWEEPS.get(),
         ep_site_visits: EP_SITE_VISITS.get(),
         ep_damped_updates: EP_DAMPED_UPDATES.get(),
+        ep_skipped_sites: EP_SKIPPED_SITES.get(),
+        ep_rollbacks: EP_ROLLBACKS.get(),
         factor_refactors: FACTOR_REFACTORS.get(),
         factor_waves: FACTOR_WAVES.get(),
+        factor_jitter_retries: FACTOR_JITTER_RETRIES.get(),
         solves: SOLVES.get(),
         takahashi_runs: TAKAHASHI_RUNS.get(),
         jobs_done: JOBS_DONE.get(),
         jobs_failed: JOBS_FAILED.get(),
+        job_retries: JOB_RETRIES.get(),
+        faults_injected: FAULTS_INJECTED.get(),
     }
 }
 
@@ -197,12 +225,17 @@ pub fn reset_all() {
         &EP_SWEEPS,
         &EP_SITE_VISITS,
         &EP_DAMPED_UPDATES,
+        &EP_SKIPPED_SITES,
+        &EP_ROLLBACKS,
         &FACTOR_REFACTORS,
         &FACTOR_WAVES,
+        &FACTOR_JITTER_RETRIES,
         &SOLVES,
         &TAKAHASHI_RUNS,
         &JOBS_DONE,
         &JOBS_FAILED,
+        &JOB_RETRIES,
+        &FAULTS_INJECTED,
     ] {
         c.reset();
     }
@@ -224,13 +257,13 @@ pub fn summary() -> String {
     let _ = writeln!(out, "obs summary (mode={:?}):", super::mode());
     let _ = writeln!(
         out,
-        "  ep: sweeps={} site_visits={} damped_updates={}",
-        s.ep_sweeps, s.ep_site_visits, s.ep_damped_updates
+        "  ep: sweeps={} site_visits={} damped_updates={} skipped_sites={} rollbacks={}",
+        s.ep_sweeps, s.ep_site_visits, s.ep_damped_updates, s.ep_skipped_sites, s.ep_rollbacks
     );
     let _ = writeln!(
         out,
-        "  solver: refactors={} waves={} solves={} takahashi={}",
-        s.factor_refactors, s.factor_waves, s.solves, s.takahashi_runs
+        "  solver: refactors={} waves={} jitter_retries={} solves={} takahashi={}",
+        s.factor_refactors, s.factor_waves, s.factor_jitter_retries, s.solves, s.takahashi_runs
     );
     let _ = writeln!(
         out,
@@ -246,7 +279,14 @@ pub fn summary() -> String {
         ns(s.pool_caller_wait_ns),
         POOL_IMBALANCE_MAX_PERMILLE.get()
     );
-    let _ = writeln!(out, "  jobs: done={} failed={}", s.jobs_done, s.jobs_failed);
+    let _ = writeln!(
+        out,
+        "  jobs: done={} failed={} retries={}",
+        s.jobs_done, s.jobs_failed, s.job_retries
+    );
+    if s.faults_injected > 0 {
+        let _ = writeln!(out, "  fault: injected={}", s.faults_injected);
+    }
     for (name, h) in [
         ("pool.chunk", &POOL_CHUNK_NS),
         ("job.fit", &JOB_FIT_NS),

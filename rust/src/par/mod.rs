@@ -343,6 +343,10 @@ where
             if c >= n_chunks {
                 break;
             }
+            // Fault injection (timing only): an armed `slowchunk` fault
+            // stalls this chunk so tests can exercise the stealing /
+            // imbalance paths. Results cannot change — the width contract.
+            crate::fault::maybe_slow_chunk(c);
             let t_chunk = if obs_counters { Some(Instant::now()) } else { None };
             if obs_spans && wspan.is_none() {
                 wspan = Some(obs::span("par.worker"));

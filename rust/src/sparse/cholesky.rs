@@ -38,6 +38,22 @@
 //! Cost: identical flop count to the up-looking kernel (`Σⱼ |pat(j)|²`
 //! over the fill pattern); the wave barriers add `O(n_waves)` pool
 //! dispatches, amortized by running small waves inline on the caller.
+//!
+//! # Pivot recovery
+//!
+//! [`LdlFactor::refactor`] keeps its fail-fast contract (EP's row
+//! modification relies on a failed refactor being reported, not papered
+//! over). Callers that want to *survive* a lost pivot use
+//! [`LdlFactor::refactor_with_recovery`]: a clean attempt first, then
+//! retries with escalating diagonal jitter per [`JitterPolicy`]
+//! (`initial_rel · mean|diag|`, doubling each retry up to the budget).
+//! The retry decision is made after the wave join — the parallel kernel
+//! has already agreed on the smallest failing column — so the retry
+//! count, the final jitter and the recovered factor bits are identical
+//! at every `CSGP_THREADS` width. The applied jitter is recorded on the
+//! factor ([`LdlFactor::jitter`]), in
+//! `obs::counters::FACTOR_JITTER_RETRIES` and on a `factor.recover`
+//! span.
 
 use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
 use std::sync::Arc;
@@ -92,6 +108,32 @@ pub struct LdlFactor {
     pub l: Vec<f64>,
     /// Diagonal of D.
     pub d: Vec<f64>,
+    /// Diagonal jitter the last (re)factorization added to stay positive
+    /// definite: 0.0 on every clean factor, the absolute shift applied by
+    /// [`LdlFactor::refactor_with_recovery`] after a pivot recovery.
+    pub jitter: f64,
+}
+
+/// Escalating-jitter schedule for [`LdlFactor::refactor_with_recovery`]:
+/// retry `r` (1-based) adds `initial_rel · growth^(r-1) · mean|diag(A)|`
+/// to the diagonal. The defaults walk 1e-10 → ~5e-2 (relative) over 30
+/// doublings — enough to absorb EP's near-semidefinite failures, small
+/// enough that a genuinely indefinite matrix still errors out.
+#[derive(Clone, Copy, Debug)]
+pub struct JitterPolicy {
+    /// First retry's jitter, relative to `mean|diag(A)|`.
+    pub initial_rel: f64,
+    /// Multiplier between consecutive retries.
+    pub growth: f64,
+    /// Retry budget; after this many jittered attempts the original
+    /// failure is reported.
+    pub max_retries: usize,
+}
+
+impl Default for JitterPolicy {
+    fn default() -> Self {
+        JitterPolicy { initial_rel: 1e-10, growth: 2.0, max_retries: 30 }
+    }
 }
 
 impl LdlFactor {
@@ -101,7 +143,7 @@ impl LdlFactor {
     /// release — callers always pass the analysed matrix).
     pub fn factor(symbolic: Arc<Symbolic>, a: &CscMatrix) -> Result<LdlFactor, String> {
         let (n, nnz) = (symbolic.n, symbolic.row_idx.len());
-        let mut f = LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![0.0; n] };
+        let mut f = LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![0.0; n], jitter: 0.0 };
         f.refactor(a)?;
         Ok(f)
     }
@@ -111,7 +153,7 @@ impl LdlFactor {
     pub fn identity(symbolic: Arc<Symbolic>) -> LdlFactor {
         let n = symbolic.n;
         let nnz = symbolic.row_idx.len();
-        LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![1.0; n] }
+        LdlFactor { symbolic, l: vec![0.0; nnz], d: vec![1.0; n], jitter: 0.0 }
     }
 
     pub fn n(&self) -> usize {
@@ -203,7 +245,70 @@ impl LdlFactor {
                 self.d[bad]
             ));
         }
+        self.jitter = 0.0;
         Ok(())
+    }
+
+    /// [`LdlFactor::refactor`] with pivot recovery: on a non-positive
+    /// pivot, retry with escalating diagonal jitter per `policy` until the
+    /// factorization goes through, and return the jitter that was applied
+    /// (0.0 when the clean attempt succeeded). The retried matrix is
+    /// `A + jitter·I`, so the factor is exact for a perturbation the
+    /// caller knows about — recorded on [`LdlFactor::jitter`], counted in
+    /// `obs::counters::FACTOR_JITTER_RETRIES` (once per retried attempt)
+    /// and summarized on a `factor.recover` span.
+    ///
+    /// Deterministic at any pool width: each attempt reports the smallest
+    /// failing column after its wave join, so whether to retry — and with
+    /// how much jitter — never depends on thread interleaving.
+    pub fn refactor_with_recovery(
+        &mut self,
+        a: &CscMatrix,
+        policy: &JitterPolicy,
+    ) -> Result<f64, String> {
+        let first = match self.refactor(a) {
+            Ok(()) => return Ok(0.0),
+            Err(e) => e,
+        };
+        let n = a.n_rows;
+        let mut mean_diag = 0.0;
+        for j in 0..n {
+            let (rows, vals) = a.col(j);
+            if let Some(p) = rows.iter().position(|&i| i == j) {
+                mean_diag += vals[p].abs();
+            }
+        }
+        let scale = if mean_diag > 0.0 { mean_diag / n as f64 } else { 1.0 };
+        let mut span = crate::obs::span("factor.recover");
+        let mut jittered = a.clone();
+        let mut added = 0.0; // jitter currently on `jittered`'s diagonal
+        let mut rel = policy.initial_rel;
+        for retry in 1..=policy.max_retries {
+            let jitter = rel * scale;
+            for j in 0..n {
+                *jittered.get_mut(j, j) += jitter - added;
+            }
+            added = jitter;
+            crate::obs::counters::FACTOR_JITTER_RETRIES.add(1);
+            if self.refactor(&jittered).is_ok() {
+                self.jitter = jitter;
+                if span.is_active() {
+                    span.field_u64("retries", retry as u64);
+                    span.field_f64("jitter", jitter);
+                }
+                return Ok(jitter);
+            }
+            rel *= policy.growth;
+        }
+        if span.is_active() {
+            span.field_u64("retries", policy.max_retries as u64);
+            span.field_bool("gave_up", true);
+        }
+        Err(format!(
+            "matrix not positive definite even with diagonal jitter up to {added:.3e} \
+             ({} retries); first failure: {first}",
+            policy.max_retries
+        ))
     }
 
     /// The original serial up-looking factorization (Davis's LDL): row k
@@ -407,6 +512,9 @@ fn factor_supernode_scalar(
                 }
             }
         }
+        if crate::fault::should_fail_pivot(j) {
+            dj = -1.0; // injected failure takes the real recovery path
+        }
         if dj <= 0.0 {
             failed.fetch_min(j, AtomicOrdering::Relaxed);
         }
@@ -533,7 +641,10 @@ fn factor_supernode_blocked(
         let j = j0 + c;
         let (head, tail) = panel.split_at_mut((c + 1) * ld);
         let colc = &mut head[c * ld..];
-        let dj = colc[c];
+        let mut dj = colc[c];
+        if crate::fault::should_fail_pivot(j) {
+            dj = -1.0; // injected failure takes the real recovery path
+        }
         if dj <= 0.0 {
             failed.fetch_min(j, AtomicOrdering::Relaxed);
         }
@@ -767,6 +878,98 @@ mod tests {
                 assert_eq!(f.l, reference.l, "width {width}: L bits differ");
                 assert_eq!(f.d, reference.d, "width {width}: D bits differ");
             }
+        }
+    }
+
+    /// A barely-indefinite matrix (pivot lost to rounding-scale mass) is
+    /// recovered by a small jitter, and the recovered factor reproduces
+    /// the jittered matrix exactly.
+    #[test]
+    fn jitter_recovery_fixes_a_near_semidefinite_matrix() {
+        // [[1, 1], [1, 1 - 1e-12]]: second pivot = -1e-12.
+        let a = CscMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 0, 1.0), (1, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0 - 1e-12)],
+        );
+        let sym = Arc::new(Symbolic::analyze(&a));
+        let mut f = LdlFactor::identity(sym);
+        assert!(f.refactor(&a).is_err(), "fail-fast refactor must still error");
+        let jitter = f.refactor_with_recovery(&a, &JitterPolicy::default()).unwrap();
+        assert!(jitter > 0.0 && jitter < 1e-8, "tiny deficit, tiny jitter: {jitter}");
+        assert_eq!(f.jitter, jitter);
+        let mut aj = a.to_dense();
+        for j in 0..2 {
+            *aj.at_mut(j, j) += jitter;
+        }
+        assert!(f.reconstruct().max_abs_diff(&aj) < 1e-12);
+        // a clean refactor afterwards clears the recorded jitter
+        let spd = CscMatrix::from_triplets(2, 2, &[(0, 0, 2.0), (1, 1, 2.0)]);
+        // (same pattern superset not required: refactor only reads `a`'s
+        // entries, missing ones stay zero)
+        f.refactor_with_recovery(&spd, &JitterPolicy::default()).unwrap();
+        assert_eq!(f.jitter, 0.0);
+    }
+
+    /// The schedule escalates: a deeper deficit takes more doublings, and
+    /// each retried attempt is counted.
+    #[test]
+    fn jitter_recovery_escalates_and_counts() {
+        use crate::obs::{self, TraceMode};
+        // [[1, 1], [1, 1 - 1e-9]]: needs jitter > ~5e-10·mean|diag|,
+        // i.e. several doublings from 1e-10.
+        let a = CscMatrix::from_triplets(
+            2,
+            2,
+            &[(0, 0, 1.0), (1, 0, 1.0), (0, 1, 1.0), (1, 1, 1.0 - 1e-9)],
+        );
+        let sym = Arc::new(Symbolic::analyze(&a));
+        obs::with_mode(TraceMode::Counters, || {
+            let before = obs::snapshot();
+            let mut f = LdlFactor::identity(sym.clone());
+            let jitter = f.refactor_with_recovery(&a, &JitterPolicy::default()).unwrap();
+            assert!(jitter > 5e-10, "escalated past the first rungs: {jitter}");
+            let after = obs::snapshot();
+            assert!(
+                after.factor_jitter_retries - before.factor_jitter_retries >= 3,
+                "expected several counted retries"
+            );
+        });
+        // an exhausted budget reports the original failure
+        let mut f = LdlFactor::identity(sym);
+        let policy = JitterPolicy { max_retries: 2, ..JitterPolicy::default() };
+        let err = f.refactor_with_recovery(&a, &policy).unwrap_err();
+        assert!(err.contains("not positive definite"), "{err}");
+    }
+
+    /// An injected pivot failure takes the identical recovery path at
+    /// widths 1/2/7: same retry count, same jitter bits, same factor bits.
+    #[test]
+    fn injected_pivot_recovery_is_identical_across_widths() {
+        let a = cs_b_matrix(500, 1.2, 11);
+        let sym = Arc::new(Symbolic::analyze(&a));
+        assert!(
+            sym.schedule.wave(0).len() >= super::PAR_WAVE_MIN,
+            "fixture too small to exercise the parallel path"
+        );
+        let runs: Vec<(f64, Vec<f64>, Vec<f64>)> = [1usize, 2, 7]
+            .iter()
+            .map(|&w| {
+                crate::fault::with_plan(crate::fault::Plan::new().pivot(120), || {
+                    crate::par::with_max_threads(w, || {
+                        let mut f = LdlFactor::identity(sym.clone());
+                        let jitter =
+                            f.refactor_with_recovery(&a, &JitterPolicy::default()).unwrap();
+                        assert!(jitter > 0.0, "width {w}: the injected failure must recover");
+                        (jitter, f.l, f.d)
+                    })
+                })
+            })
+            .collect();
+        for (w, run) in [2usize, 7].iter().zip(&runs[1..]) {
+            assert_eq!(run.0.to_bits(), runs[0].0.to_bits(), "width {w}: jitter differs");
+            assert_eq!(run.1, runs[0].1, "width {w}: L bits differ");
+            assert_eq!(run.2, runs[0].2, "width {w}: D bits differ");
         }
     }
 

@@ -15,6 +15,19 @@
 //! pattern (the Cholesky fill rule `L[r,j]≠0 ∧ L[i,j]≠0 ∧ j<r<i ⇒ L[i,r]≠0`
 //! guarantees it), so no allocation and no symbolic re-analysis happen per
 //! site — the property the paper's speedup rests on.
+//!
+//! # Recovery contract
+//!
+//! A failed modification (a lost `d̄₂₂` pivot here, or an indefinite
+//! fused downdate in step 4) leaves the factor **partially mutated**: the
+//! new row-i entries of step 1 are written before the pivot check, and
+//! `rank1_pair` stops mid-path. There is therefore no in-place retry —
+//! recovery belongs to the caller, which still holds the site state the
+//! factor was tracking. The sparse EP sweep rebuilds from scratch:
+//! `build_b(K, τ̃)` from the *current* sites, then
+//! [`LdlFactor::refactor_with_recovery`] with the run's jitter schedule.
+//! That is deterministic at any pool width (the sweep driver is serial)
+//! and restores the exact factor the remaining sites expect.
 
 use crate::sparse::cholesky::LdlFactor;
 

@@ -28,8 +28,11 @@ impl LdlFactor {
     /// pattern (guaranteed when `w`'s pattern is a subset of a column
     /// pattern of `L`, or when the pattern is dense).
     ///
-    /// Errors (leaving the factor corrupt — callers treat this as fatal)
-    /// if a downdate makes the factor indefinite.
+    /// Errors if a downdate makes the factor indefinite. A failure leaves
+    /// the factor corrupt (partially swept), so there is no in-place
+    /// retry: callers recover by rebuilding the matrix and refactoring —
+    /// see the recovery contract in [`crate::sparse::rowmod`] and
+    /// [`LdlFactor::refactor_with_recovery`](crate::sparse::cholesky::LdlFactor::refactor_with_recovery).
     pub fn rank1(
         &mut self,
         w_rows: &[usize],

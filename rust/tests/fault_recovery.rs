@@ -1,0 +1,197 @@
+//! Fault-injection recovery tests, isolated in their own test binary:
+//! a [`csgp::fault::Plan`] is process-global, so an armed fault could be
+//! consumed by any concurrent factorization in the same process. Cargo
+//! runs test binaries sequentially, and every test here serializes on
+//! `obs::with_mode`, so planned faults only ever fire in the run that
+//! planned them.
+
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::fault::{self, Plan};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::marginal::EpOptions;
+use csgp::gp::SparseEp;
+use csgp::obs::{self, TraceMode};
+use csgp::sparse::ordering::Ordering;
+
+fn cluster(n: usize, seed: u64) -> csgp::data::Dataset {
+    cluster_dataset(&ClusterConfig::paper_2d(n), seed)
+}
+
+#[test]
+fn injected_faults_recover_identically_at_every_width() {
+    // The self-healing acceptance contract: an injected pivot failure and
+    // an injected NaN site update both complete through recovery (not an
+    // error), the recovered fit matches the clean fixed point, and the
+    // recovery sequence is bitwise-identical at pool widths 1, 2 and 7.
+    let data = cluster(150, 71);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
+    let opts = EpOptions { max_sweeps: 100, tol: 1e-8, damping: 1.0, ..EpOptions::default() };
+    let clean = SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None).unwrap();
+
+    obs::with_mode(TraceMode::Counters, || {
+        // pivot failure at elimination column 40: the recovery refactor
+        // absorbs it with escalating diagonal jitter
+        let before = obs::snapshot();
+        let runs: Vec<SparseEp> = [1usize, 2, 7]
+            .iter()
+            .map(|&width| {
+                fault::with_plan(Plan::new().pivot(40), || {
+                    csgp::par::with_max_threads(width, || {
+                        SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None)
+                            .unwrap()
+                    })
+                })
+            })
+            .collect();
+        let after = obs::snapshot();
+        assert!(after.faults_injected - before.faults_injected >= 3, "{after:?}");
+        assert!(after.factor_jitter_retries - before.factor_jitter_retries >= 3, "{after:?}");
+        for ep in &runs {
+            assert!(
+                (ep.log_z - clean.log_z).abs() < 1e-5,
+                "recovered fit drifted: {} vs clean {}",
+                ep.log_z,
+                clean.log_z
+            );
+        }
+        for ep in &runs[1..] {
+            assert!(ep.log_z == runs[0].log_z, "recovery is not width-invariant");
+            assert_eq!(ep.sweeps, runs[0].sweeps, "sweep counts differ across widths");
+            assert_eq!(ep.factor.l, runs[0].factor.l, "factor bits differ across widths");
+        }
+
+        // NaN site update at (sweep 1, site 5): the poisoned visit is
+        // skipped, the sweep rolls back to the last-good snapshot with
+        // halved damping, and EP still converges to the clean fixed point
+        let before = obs::snapshot();
+        let nruns: Vec<SparseEp> = [1usize, 2, 7]
+            .iter()
+            .map(|&width| {
+                fault::with_plan(Plan::new().nan_site(1, 5), || {
+                    csgp::par::with_max_threads(width, || {
+                        SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None)
+                            .unwrap()
+                    })
+                })
+            })
+            .collect();
+        let after = obs::snapshot();
+        assert!(after.faults_injected - before.faults_injected >= 3, "{after:?}");
+        assert!(after.ep_skipped_sites - before.ep_skipped_sites >= 3, "{after:?}");
+        assert!(after.ep_rollbacks - before.ep_rollbacks >= 3, "{after:?}");
+        for ep in &nruns {
+            assert!(
+                (ep.log_z - clean.log_z).abs() < 1e-5,
+                "rolled-back fit drifted: {} vs clean {}",
+                ep.log_z,
+                clean.log_z
+            );
+        }
+        for ep in &nruns[1..] {
+            assert!(ep.log_z == nruns[0].log_z, "rollback is not width-invariant");
+            assert_eq!(ep.sweeps, nruns[0].sweeps, "sweep counts differ across widths");
+        }
+    });
+}
+
+#[test]
+fn batched_backends_roll_back_injected_nan_sites() {
+    // The same NaN-site fault through the two batched backends: parallel
+    // EP and the CS+FIC hybrid both skip the poisoned merge, roll back,
+    // and still reach their clean fixed points.
+    use csgp::data::kmeans::kmeans;
+    use csgp::gp::covariance::AdditiveCov;
+    use csgp::gp::{CsFicEp, ParallelEp};
+
+    let data = cluster(150, 72);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
+    let opts = EpOptions { max_sweeps: 300, tol: 1e-8, damping: 0.8, ..EpOptions::default() };
+    let hybrid =
+        AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 0.7, 3.0), cov.clone()).unwrap();
+    let xu = kmeans(&data.x, 12, 25, 3);
+
+    let clean_pe = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap();
+    let clean_he = CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &opts).unwrap();
+
+    obs::with_mode(TraceMode::Counters, || {
+        let before = obs::snapshot();
+        let pe = fault::with_plan(Plan::new().nan_site(2, 9), || {
+            ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap()
+        });
+        let he = fault::with_plan(Plan::new().nan_site(2, 9), || {
+            CsFicEp::run(&hybrid, &data.x, &data.y, &xu, &opts).unwrap()
+        });
+        let after = obs::snapshot();
+        assert!(after.ep_skipped_sites - before.ep_skipped_sites >= 2, "{after:?}");
+        assert!(after.ep_rollbacks - before.ep_rollbacks >= 2, "{after:?}");
+        assert!(
+            (pe.log_z - clean_pe.log_z).abs() < 1e-5,
+            "parallel EP drifted: {} vs {}",
+            pe.log_z,
+            clean_pe.log_z
+        );
+        assert!(
+            (he.log_z - clean_he.log_z).abs() < 1e-5,
+            "CS+FIC drifted: {} vs {}",
+            he.log_z,
+            clean_he.log_z
+        );
+    });
+}
+
+#[test]
+fn job_ladder_recovers_from_exhausted_ep_divergence() {
+    // Five consecutive poisoned sweeps exhaust the in-backend rollback
+    // budget (max_recoveries = 4), so the EP run errors — and the job
+    // manager's degradation ladder retries on the sequential sweep with
+    // heavier damping, by which point the one-shot faults are consumed.
+    use csgp::coordinator::{JobManager, JobStatus, TrainSpec};
+    use csgp::gp::model::Inference;
+
+    let data = cluster(120, 91);
+    obs::with_mode(TraceMode::Counters, || {
+        let before = obs::snapshot();
+        let plan = Plan::new()
+            .nan_site(0, 3)
+            .nan_site(1, 3)
+            .nan_site(2, 3)
+            .nan_site(3, 3)
+            .nan_site(4, 3);
+        let st = fault::with_plan(plan, || {
+            let mgr = JobManager::start(1);
+            let id = mgr
+                .submit(TrainSpec {
+                    dataset: data.clone(),
+                    cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6),
+                    global_cov: None,
+                    inference: Inference::Sparse(Ordering::Rcm),
+                    optimize: false,
+                })
+                .unwrap();
+            let st = mgr.wait(id, std::time::Duration::from_secs(120)).unwrap();
+            mgr.shutdown();
+            st
+        });
+        assert!(matches!(st, JobStatus::Done { .. }), "ladder did not recover: {st:?}");
+        let after = obs::snapshot();
+        assert!(after.job_retries - before.job_retries >= 1, "{after:?}");
+        assert!(after.ep_rollbacks - before.ep_rollbacks >= 4, "{after:?}");
+    });
+}
+
+#[test]
+fn slow_chunk_faults_only_stretch_time_never_results() {
+    // `slowchunk` faults delay one pool chunk; the width contract says
+    // the numbers cannot move.
+    let data = cluster(150, 73);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
+    let opts = EpOptions::default();
+    let clean = SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None).unwrap();
+    let slowed = fault::with_plan(Plan::new().slow_chunk(0, 5), || {
+        csgp::par::with_max_threads(4, || {
+            SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None).unwrap()
+        })
+    });
+    assert!(slowed.log_z == clean.log_z, "a timing fault changed the result");
+    assert_eq!(slowed.mu, clean.mu);
+}

@@ -63,7 +63,7 @@ fn ordering_choice_does_not_change_the_answer() {
     // permutation, only the fill differs
     let data = cluster(150, 21);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
-    let opts = EpOptions { max_sweeps: 100, tol: 1e-10, damping: 1.0 };
+    let opts = EpOptions { max_sweeps: 100, tol: 1e-10, damping: 1.0, ..EpOptions::default() };
     let runs: Vec<SparseEp> =
         [Ordering::Natural, Ordering::Rcm, Ordering::MinDegree, Ordering::Nd, Ordering::Auto]
             .iter()
@@ -208,7 +208,7 @@ fn pool_width_never_changes_any_result() {
     let data = cluster(300, 41);
     let (train, test) = data.split(220);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
-    let opts = EpOptions { max_sweeps: 200, tol: 1e-8, damping: 0.8 };
+    let opts = EpOptions { max_sweeps: 200, tol: 1e-8, damping: 0.8, ..EpOptions::default() };
     let hybrid =
         AdditiveCov::new(CovFunction::new(CovKind::Se, 2, 0.7, 3.0), cov.clone()).unwrap();
     let xu = kmeans(&train.x, 12, 25, 3);
@@ -354,7 +354,7 @@ fn tracing_modes_never_change_results_and_spans_nest() {
     let data = cluster(200, 61);
     let (train, test) = data.split(150);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
-    let opts = EpOptions { max_sweeps: 60, tol: 1e-8, damping: 0.8 };
+    let opts = EpOptions { max_sweeps: 60, tol: 1e-8, damping: 0.8, ..EpOptions::default() };
     let run = |width: usize| {
         csgp::par::with_max_threads(width, || {
             let ep = ParallelEp::run(&cov, &train.x, &train.y, Ordering::Rcm, &opts).unwrap();
@@ -400,7 +400,7 @@ fn full_trace_spans_are_well_formed_under_the_pool() {
 
     let data = cluster(200, 62);
     let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.4);
-    let opts = EpOptions { max_sweeps: 30, tol: 1e-8, damping: 0.8 };
+    let opts = EpOptions { max_sweeps: 30, tol: 1e-8, damping: 0.8, ..EpOptions::default() };
 
     obs::with_mode(TraceMode::Full, || {
         let _ = obs::take_events(); // discard other tests' leftovers
@@ -499,4 +499,36 @@ fn cv_and_jobs_compose() {
     let st = mgr.wait(id, std::time::Duration::from_secs(60)).unwrap();
     assert!(matches!(st, csgp::coordinator::JobStatus::Done { .. }), "{st:?}");
     mgr.shutdown();
+}
+
+// The fault-injection recovery tests live in their own binary
+// (`tests/fault_recovery.rs`): fault plans are process-global, so they
+// must not share a test process with unrelated factorizations.
+
+#[test]
+fn clean_fixtures_record_zero_recovery_events() {
+    // Half of the self-healing acceptance contract: on healthy inputs the
+    // recovery machinery must be pure bookkeeping — no jitter retries, no
+    // skipped sites, no rollbacks, no injected faults, no job retries.
+    use csgp::gp::ParallelEp;
+    use csgp::obs::{self, TraceMode};
+
+    let data = cluster(150, 81);
+    let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6);
+    let opts = EpOptions::default();
+    obs::with_mode(TraceMode::Counters, || {
+        let before = obs::snapshot();
+        let se = SparseEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts, None).unwrap();
+        let pe = ParallelEp::run(&cov, &data.x, &data.y, Ordering::Rcm, &opts).unwrap();
+        assert!(se.converged && pe.converged);
+        let after = obs::snapshot();
+        assert_eq!(after.ep_rollbacks, before.ep_rollbacks, "clean run rolled back");
+        assert_eq!(after.ep_skipped_sites, before.ep_skipped_sites, "clean run skipped sites");
+        assert_eq!(
+            after.factor_jitter_retries, before.factor_jitter_retries,
+            "clean run needed jitter"
+        );
+        assert_eq!(after.faults_injected, before.faults_injected, "faults fired unplanned");
+        assert_eq!(after.job_retries, before.job_retries, "a clean job retried");
+    });
 }
