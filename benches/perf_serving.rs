@@ -1,0 +1,191 @@
+//! Serving-path benchmark: what the online story costs end to end.
+//!
+//! Stages, all on the sparse backend at the serving scale (n = 4000;
+//! `CSGP_SMOKE=1` shrinks to n = 600 for CI, `CSGP_FULL=1` grows to
+//! n = 8000):
+//!
+//! * `online_update` — absorb k ∈ {1, 16} fresh points through
+//!   `GpClassifier::update` (incremental factor extension + resumed EP)
+//!   vs `cold_refit` on the union. The acceptance contract, asserted
+//!   here at n ≥ 4000: the online update is ≥ 5× faster than the refit.
+//! * `snapshot_save` / `snapshot_load` — model durability round-trip.
+//! * `serve_request` / `serve_batch` — the prediction service under
+//!   concurrent client load; percentiles come from the service's own
+//!   admission-layer samplers.
+//!
+//! Results go to `BENCH_serving.json`. Every record carries `p50_ns`,
+//! `p90_ns` and `p99_ns` next to the median `ns_per_iter`; the
+//! `online_update` records add `k` and `speedup_vs_refit`.
+//!
+//! Run: `cargo bench --bench perf_serving`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use csgp::bench::report::Report;
+use csgp::bench::{fmt_duration, Stats};
+use csgp::coordinator::{PredictionService, ServiceConfig};
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{FittedClassifier, GpClassifier, Inference};
+use csgp::gp::UpdatePath;
+use csgp::rng::Rng;
+use csgp::sparse::ordering::Ordering;
+
+fn pcts(s: &Stats) -> [(&'static str, f64); 3] {
+    [
+        ("p50_ns", s.p50.as_nanos() as f64),
+        ("p90_ns", s.p90.as_nanos() as f64),
+        ("p99_ns", s.p99.as_nanos() as f64),
+    ]
+}
+
+fn main() {
+    let smoke = std::env::var("CSGP_SMOKE").is_ok();
+    let full = std::env::var("CSGP_FULL").is_ok();
+    let n = if smoke {
+        600
+    } else if full {
+        8000
+    } else {
+        4000
+    };
+    let reps = if smoke { 3 } else { 5 };
+    let refit_reps = if smoke { 2 } else { 3 };
+    let threads = csgp::par::default_threads();
+    let mut report = Report::new("BENCH_serving.json");
+
+    println!("# Serving-path benchmark (n = {n}, {threads} threads)");
+    let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.3),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let t0 = Instant::now();
+    let fitted = model.infer_only(&data.x, &data.y).unwrap();
+    println!("base fit: {} (fill-L {:.3})", fmt_duration(t0.elapsed()), fitted.report.fill_l);
+
+    // --- online update vs cold refit -----------------------------------
+    println!("\n| stage | k | median | p99 | speedup vs refit |");
+    println!("|---|---|---|---|---|");
+    for k in [1usize, 16] {
+        let batch = cluster_dataset(&ClusterConfig::paper_2d(k), 991);
+        let mut upd = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t = Instant::now();
+            let (_, rep) = model.update(&fitted, &batch.x, &batch.y).unwrap();
+            upd.push(t.elapsed());
+            assert_eq!(rep.path, UpdatePath::Incremental, "k={k} must take the fast path");
+        }
+        let upd = Stats::from_samples(upd);
+
+        let mut xu = data.x.clone();
+        xu.extend(batch.x.iter().cloned());
+        let mut yu = data.y.clone();
+        yu.extend_from_slice(&batch.y);
+        let mut ref_samples = Vec::with_capacity(refit_reps);
+        for _ in 0..refit_reps {
+            let t = Instant::now();
+            let _ = model.infer_only(&xu, &yu).unwrap();
+            ref_samples.push(t.elapsed());
+        }
+        let refit = Stats::from_samples(ref_samples);
+
+        let speedup = refit.median.as_secs_f64() / upd.median.as_secs_f64().max(1e-12);
+        println!(
+            "| online_update | {k} | {} | {} | {speedup:.1}x |",
+            fmt_duration(upd.median),
+            fmt_duration(upd.p99)
+        );
+        println!(
+            "| cold_refit | {k} | {} | {} | 1.0x |",
+            fmt_duration(refit.median),
+            fmt_duration(refit.p99)
+        );
+        let mut extra = pcts(&upd).to_vec();
+        extra.push(("k", k as f64));
+        extra.push(("speedup_vs_refit", speedup));
+        report.push_with("online_update", "sparse", n, threads, &upd, &extra);
+        let mut extra = pcts(&refit).to_vec();
+        extra.push(("k", k as f64));
+        report.push_with("cold_refit", "sparse", n, threads, &refit, &extra);
+        // the acceptance contract — only meaningful at serving scale
+        if n >= 4000 {
+            assert!(
+                speedup >= 5.0,
+                "online update of k={k} at n={n} is only {speedup:.1}x faster than refit"
+            );
+        }
+    }
+
+    // --- snapshot durability -------------------------------------------
+    let path = std::env::temp_dir().join(format!("csgp-perf-serving-{}.snap", std::process::id()));
+    let mut saves = Vec::with_capacity(reps);
+    let mut loads = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        fitted.save_snapshot(&path).unwrap();
+        saves.push(t.elapsed());
+        let t = Instant::now();
+        let _ = FittedClassifier::load_snapshot(&path).unwrap();
+        loads.push(t.elapsed());
+    }
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    let _ = std::fs::remove_file(&path);
+    let saves = Stats::from_samples(saves);
+    let loads = Stats::from_samples(loads);
+    println!("\nsnapshot: save {} / load {} ({bytes} bytes)", fmt_duration(saves.median), fmt_duration(loads.median));
+    let mut extra = pcts(&saves).to_vec();
+    extra.push(("snapshot_bytes", bytes as f64));
+    report.push_with("snapshot_save", "sparse", n, threads, &saves, &extra);
+    report.push_with("snapshot_load", "sparse", n, threads, &loads, &pcts(&loads));
+
+    // --- prediction service under load ---------------------------------
+    let requests = if smoke { 400 } else { 4000 };
+    let clients = 8;
+    let svc = Arc::new(PredictionService::start(
+        Arc::new(fitted),
+        None,
+        ServiceConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            ..ServiceConfig::default()
+        },
+    ));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let svc = svc.clone();
+        let per = requests / clients;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c as u64 + 1);
+            for _ in 0..per {
+                let x = vec![rng.uniform_in(0.0, 10.0), rng.uniform_in(0.0, 10.0)];
+                svc.predict(x).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let req = svc.stats.request_latency_stats().expect("request samples");
+    let bat = svc.stats.batch_latency_stats().expect("batch samples");
+    println!(
+        "service: {requests} requests in {} ({:.0} req/s) | request p50 {} p99 {} | batch p50 {} p99 {}",
+        fmt_duration(wall),
+        requests as f64 / wall.as_secs_f64(),
+        fmt_duration(req.p50),
+        fmt_duration(req.p99),
+        fmt_duration(bat.p50),
+        fmt_duration(bat.p99),
+    );
+    let mut extra = pcts(&req).to_vec();
+    extra.push(("req_per_s", requests as f64 / wall.as_secs_f64()));
+    report.push_with("serve_request", "sparse", n, threads, &req, &extra);
+    report.push_with("serve_batch", "sparse", n, threads, &bat, &pcts(&bat));
+    svc.shutdown();
+
+    report.write().expect("write BENCH_serving.json");
+    println!("\nwrote BENCH_serving.json");
+}

@@ -39,7 +39,11 @@ fn main() {
         let svc = Arc::new(PredictionService::start(
             fitted.clone(),
             use_xla.then(|| artifact_dir.clone()),
-            ServiceConfig { max_batch: batch, max_wait: Duration::from_millis(2) },
+            ServiceConfig {
+                max_batch: batch,
+                max_wait: Duration::from_millis(2),
+                ..ServiceConfig::default()
+            },
         ));
         let t0 = Instant::now();
         let mut handles = Vec::new();

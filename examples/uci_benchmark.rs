@@ -57,6 +57,7 @@ fn main() {
                     global_cov,
                     inference,
                     optimize: false,
+                    snapshot_save: None,
                 })
                 .unwrap();
             jobs.push((spec.name, label, id));

@@ -27,6 +27,8 @@ pub enum JobStage {
     Ep,
     /// Hyperparameter optimization (`fit`: SCG over EP evaluations).
     Optimize,
+    /// Persisting the fitted model to the spec's snapshot path.
+    Snapshot,
 }
 
 impl JobStage {
@@ -35,6 +37,7 @@ impl JobStage {
             JobStage::BuildSpec => "build_spec",
             JobStage::Ep => "ep",
             JobStage::Optimize => "optimize",
+            JobStage::Snapshot => "snapshot",
         }
     }
 }
@@ -53,6 +56,9 @@ pub enum JobErrorKind {
     NegativeVariance,
     /// Any other numeric failure from the model layer.
     Numeric,
+    /// Snapshot persistence failed (filesystem or serialization). The
+    /// fitted model is still collected — only the durability step failed.
+    Io,
 }
 
 impl JobErrorKind {
@@ -62,6 +68,7 @@ impl JobErrorKind {
             JobErrorKind::PivotFailure => "pivot_failure",
             JobErrorKind::NegativeVariance => "negative_variance",
             JobErrorKind::Numeric => "numeric",
+            JobErrorKind::Io => "io",
         }
     }
 }
@@ -112,6 +119,11 @@ pub struct TrainSpec {
     pub inference: Inference,
     /// Optimize hyperparameters (vs a single EP run).
     pub optimize: bool,
+    /// Persist the fitted model here after a successful fit (atomic
+    /// write-then-rename; see [`crate::gp::snapshot`]). A save failure
+    /// fails the job at [`JobStage::Snapshot`] but the fitted model is
+    /// still collectable via [`JobManager::result`].
+    pub snapshot_save: Option<std::path::PathBuf>,
 }
 
 /// Lifecycle of a job.
@@ -357,14 +369,37 @@ impl JobManager {
                             };
                             hist.record(t0.elapsed());
                         }
-                        obs::counters::JOBS_DONE.add(1);
-                        if jspan.is_active() {
-                            jspan.field_str("status", "done");
-                        }
-                        let st = JobStatus::Done {
-                            log_post: fitted.report.log_post,
-                            ep_time: fitted.report.ep_time,
-                            opt_time: fitted.report.opt_time,
+                        // durability step: a failed save fails the job but
+                        // the fitted model is still collected — callers can
+                        // retry the save without re-fitting
+                        let save_err = spec.snapshot_save.as_deref().and_then(|path| {
+                            fitted.save_snapshot(path).err().map(|e| JobError {
+                                kind: JobErrorKind::Io,
+                                stage: JobStage::Snapshot,
+                                message: e.to_string(),
+                            })
+                        });
+                        let st = match &save_err {
+                            None => {
+                                obs::counters::JOBS_DONE.add(1);
+                                if jspan.is_active() {
+                                    jspan.field_str("status", "done");
+                                }
+                                JobStatus::Done {
+                                    log_post: fitted.report.log_post,
+                                    ep_time: fitted.report.ep_time,
+                                    opt_time: fitted.report.opt_time,
+                                }
+                            }
+                            Some(e) => {
+                                obs::counters::JOBS_FAILED.add(1);
+                                if jspan.is_active() {
+                                    jspan.field_str("status", "failed");
+                                    jspan.field_str("error_kind", e.kind.as_str());
+                                    jspan.field_str("error_stage", e.stage.as_str());
+                                }
+                                JobStatus::Failed(e.clone())
+                            }
                         };
                         relock(&shared.results).insert(id, Arc::new(fitted));
                         relock(&shared.status).insert(id, st);
@@ -461,6 +496,7 @@ mod tests {
             global_cov: None,
             inference: Inference::Sparse(Ordering::Rcm),
             optimize,
+            snapshot_save: None,
         }
     }
 
@@ -502,6 +538,7 @@ mod tests {
                 global_cov: Some(CovFunction::new(CovKind::Se, 2, 0.6, 3.0)),
                 inference: Inference::CsFic { m: 8, ordering: Ordering::Auto },
                 optimize: false,
+                snapshot_save: None,
             })
             .unwrap();
         let st = mgr.wait(id, Duration::from_secs(60)).unwrap();
@@ -547,6 +584,30 @@ mod tests {
             }
         }
         mgr.shutdown();
+    }
+
+    /// A job with a snapshot path persists a loadable model that predicts
+    /// identically to the in-memory result.
+    #[test]
+    fn jobs_persist_snapshots() {
+        let dir = std::env::temp_dir().join("csgp-jobs-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("job-snap-{}.snap", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut spec = toy_spec(5, false);
+        spec.snapshot_save = Some(path.clone());
+        let mgr = JobManager::start(1);
+        let id = mgr.submit(spec).unwrap();
+        let st = mgr.wait(id, Duration::from_secs(30)).unwrap();
+        assert!(matches!(st, JobStatus::Done { .. }), "{st:?}");
+        let fitted = mgr.result(id).unwrap();
+        let loaded = FittedClassifier::load_snapshot(&path).unwrap();
+        let (m0, v0) = fitted.predict_latent(&[1.0, 1.0]);
+        let (m1, v1) = loaded.predict_latent(&[1.0, 1.0]);
+        assert_eq!(m0.to_bits(), m1.to_bits());
+        assert_eq!(v0.to_bits(), v1.to_bits());
+        mgr.shutdown();
+        let _ = std::fs::remove_file(&path);
     }
 
     /// A global kernel on a non-hybrid backend would be silently ignored;

@@ -6,6 +6,15 @@
 //! batch through the `predict_probit` XLA artifact when a runtime is
 //! attached (falling back to the native probit otherwise), and answers
 //! each caller on its private response channel.
+//!
+//! Admission is bounded: at most `queue_capacity` requests may be in
+//! flight (queued or computing); beyond that `predict` fails fast with
+//! [`ServiceError::Overloaded`] instead of letting the queue grow without
+//! limit — callers see backpressure, not unbounded latency. Per-request
+//! and per-batch latencies are sampled into [`ServiceStats`]
+//! ([`ServiceStats::request_latency_stats`] /
+//! [`ServiceStats::batch_latency_stats`] summarize them as
+//! p50/p90/p99), feeding `BENCH_serving.json` and capacity planning.
 
 use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
@@ -30,6 +39,9 @@ pub enum ServiceError {
     RequestDropped,
     /// The handle's sender lock was poisoned by a panicking caller.
     Poisoned,
+    /// Admission refused: `queue_capacity` requests are already in
+    /// flight. Back off and retry — nothing was enqueued.
+    Overloaded,
 }
 
 impl std::fmt::Display for ServiceError {
@@ -39,6 +51,7 @@ impl std::fmt::Display for ServiceError {
             ServiceError::WorkerGone => "service worker gone",
             ServiceError::RequestDropped => "service dropped request",
             ServiceError::Poisoned => "service handle poisoned",
+            ServiceError::Overloaded => "service overloaded (queue full)",
         };
         f.write_str(msg)
     }
@@ -51,11 +64,18 @@ impl std::error::Error for ServiceError {}
 pub struct ServiceConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Admission bound: maximum requests in flight (queued or computing)
+    /// before `predict` rejects with [`ServiceError::Overloaded`].
+    pub queue_capacity: usize,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { max_batch: 256, max_wait: Duration::from_millis(2) }
+        ServiceConfig {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: 1024,
+        }
     }
 }
 
@@ -75,18 +95,61 @@ struct Request {
     reply: Sender<Prediction>,
 }
 
-/// Aggregate counters (lock-free reads).
+/// How many latency samples each buffer retains (admission keeps the
+/// in-flight set small, so the first 64k samples characterize the run).
+const LATENCY_SAMPLE_CAP: usize = 65_536;
+
+/// Aggregate counters (lock-free reads) plus bounded latency sample
+/// buffers for the percentile summaries.
 #[derive(Default)]
 pub struct ServiceStats {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items_max: AtomicU64,
+    /// Requests refused at admission ([`ServiceError::Overloaded`]).
+    pub rejected: AtomicU64,
+    /// Admitted but not yet answered (the admission gate's level).
+    in_flight: AtomicU64,
+    request_latencies: Mutex<Vec<Duration>>,
+    batch_latencies: Mutex<Vec<Duration>>,
+}
+
+impl ServiceStats {
+    fn record(buf: &Mutex<Vec<Duration>>, d: Duration) {
+        let mut g = buf.lock().unwrap_or_else(|e| e.into_inner());
+        if g.len() < LATENCY_SAMPLE_CAP {
+            g.push(d);
+        }
+    }
+
+    /// p50/p90/p99 (and friends) over the sampled per-request service
+    /// times (queue + compute). `None` before the first answer.
+    pub fn request_latency_stats(&self) -> Option<crate::bench::Stats> {
+        let g = self.request_latencies.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_empty() {
+            None
+        } else {
+            Some(crate::bench::Stats::from_samples(g.clone()))
+        }
+    }
+
+    /// p50/p90/p99 (and friends) over the sampled per-batch compute
+    /// times. `None` before the first batch.
+    pub fn batch_latency_stats(&self) -> Option<crate::bench::Stats> {
+        let g = self.batch_latencies.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_empty() {
+            None
+        } else {
+            Some(crate::bench::Stats::from_samples(g.clone()))
+        }
+    }
 }
 
 /// Handle to a running service.
 pub struct PredictionService {
     tx: Mutex<Option<Sender<Request>>>,
     worker: Mutex<Option<JoinHandle<()>>>,
+    queue_capacity: usize,
     pub stats: Arc<ServiceStats>,
 }
 
@@ -109,12 +172,34 @@ impl PredictionService {
         PredictionService {
             tx: Mutex::new(Some(tx)),
             worker: Mutex::new(Some(worker)),
+            queue_capacity: config.queue_capacity,
             stats,
         }
     }
 
-    /// Submit one request and wait for the answer.
+    /// Submit one request and wait for the answer. Fails fast with
+    /// [`ServiceError::Overloaded`] when `queue_capacity` requests are
+    /// already in flight — backpressure instead of unbounded queueing.
     pub fn predict(&self, x: Vec<f64>) -> Result<Prediction, ServiceError> {
+        // admission gate: reserve a slot or reject without enqueueing
+        if self.stats.in_flight.fetch_add(1, AtomicOrdering::AcqRel)
+            >= self.queue_capacity as u64
+        {
+            self.stats.in_flight.fetch_sub(1, AtomicOrdering::AcqRel);
+            self.stats.rejected.fetch_add(1, AtomicOrdering::Relaxed);
+            obs::counters::SVC_REJECTED.add(1);
+            return Err(ServiceError::Overloaded);
+        }
+        // the slot is held until this request is answered (or fails), on
+        // every exit path below
+        struct Slot<'a>(&'a ServiceStats);
+        impl Drop for Slot<'_> {
+            fn drop(&mut self) {
+                self.0.in_flight.fetch_sub(1, AtomicOrdering::AcqRel);
+            }
+        }
+        let _slot = Slot(&self.stats);
+
         let (reply_tx, reply_rx) = channel();
         {
             let guard = self.tx.lock().map_err(|_| ServiceError::Poisoned)?;
@@ -124,6 +209,7 @@ impl PredictionService {
         }
         let pred = reply_rx.recv().map_err(|_| ServiceError::RequestDropped)?;
         obs::counters::SVC_REQUEST_NS.record(pred.service_time);
+        ServiceStats::record(&self.stats.request_latencies, pred.service_time);
         Ok(pred)
     }
 
@@ -182,7 +268,7 @@ fn serve_loop(
             .fetch_max(batch.len() as u64, AtomicOrdering::Relaxed);
         // span covers the compute only — the batching wait above is the
         // deadline's business, not the predictor's
-        let t_batch = if obs::counters_on() { Some(Instant::now()) } else { None };
+        let t_batch = Instant::now();
         let mut bspan = obs::span("svc.batch");
         if bspan.is_active() {
             bspan.field_u64("size", batch.len() as u64);
@@ -207,9 +293,9 @@ fn serve_loop(
             }
             None => latents.iter().map(|&(m, v)| class_probability(m, v)).collect(),
         };
-        if let Some(t0) = t_batch {
-            obs::counters::SVC_BATCH_NS.record(t0.elapsed());
-        }
+        let batch_time = t_batch.elapsed();
+        obs::counters::SVC_BATCH_NS.record(batch_time);
+        ServiceStats::record(&stats.batch_latencies, batch_time);
         drop(bspan);
         for ((req, (m, v)), p) in batch.into_iter().zip(latents).zip(probs) {
             let _ = req.reply.send(Prediction {
@@ -246,7 +332,11 @@ mod tests {
         let svc = Arc::new(PredictionService::start(
             model.clone(),
             None,
-            ServiceConfig { max_batch: 16, max_wait: Duration::from_millis(5) },
+            ServiceConfig {
+                max_batch: 16,
+                max_wait: Duration::from_millis(5),
+                ..ServiceConfig::default()
+            },
         ));
         // concurrent clients
         let mut handles = Vec::new();
@@ -310,7 +400,11 @@ mod tests {
         let svc = PredictionService::start(
             model.clone(),
             Some(std::env::temp_dir().join("csgp-no-artifacts")),
-            ServiceConfig { max_batch: 32, max_wait: Duration::from_millis(5) },
+            ServiceConfig {
+                max_batch: 32,
+                max_wait: Duration::from_millis(5),
+                ..ServiceConfig::default()
+            },
         );
         for x in [vec![1.0, 1.0], vec![4.0, 2.0], vec![2.5, 5.0]] {
             let served = svc.predict(x.clone()).unwrap();
@@ -328,5 +422,43 @@ mod tests {
         svc.shutdown();
         svc.shutdown();
         assert!(svc.predict(vec![0.0, 0.0]).is_err());
+    }
+
+    /// Capacity 0 admits nothing: every request is rejected with the
+    /// typed `Overloaded` error before touching the queue, and the
+    /// rejection counter tracks them.
+    #[test]
+    fn zero_capacity_rejects_with_backpressure() {
+        let svc = PredictionService::start(
+            fitted_toy(),
+            None,
+            ServiceConfig { queue_capacity: 0, ..ServiceConfig::default() },
+        );
+        for _ in 0..5 {
+            let err = svc.predict(vec![1.0, 1.0]).map(|_| ()).unwrap_err();
+            assert_eq!(err, ServiceError::Overloaded);
+        }
+        assert_eq!(svc.stats.rejected.load(AtomicOrdering::Relaxed), 5);
+        assert_eq!(svc.stats.requests.load(AtomicOrdering::Relaxed), 0);
+        // rejection leaks no slots: raising nothing, in_flight is back to 0
+        assert_eq!(svc.stats.in_flight.load(AtomicOrdering::Relaxed), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn latency_percentiles_are_sampled() {
+        let model = fitted_toy();
+        let svc = PredictionService::start(model, None, ServiceConfig::default());
+        assert!(svc.stats.request_latency_stats().is_none());
+        for i in 0..12 {
+            svc.predict(vec![i as f64 * 0.3, 1.0]).unwrap();
+        }
+        let req = svc.stats.request_latency_stats().expect("request samples");
+        assert_eq!(req.iters, 12);
+        assert!(req.p50 <= req.p90 && req.p90 <= req.p99);
+        let bat = svc.stats.batch_latency_stats().expect("batch samples");
+        assert!(bat.iters >= 1);
+        assert!(bat.p99 >= bat.p50);
+        svc.shutdown();
     }
 }

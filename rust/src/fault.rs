@@ -27,7 +27,9 @@
 //!   - `nansite@SWEEP:SITE` — EP sweep `SWEEP` (0-based) poisons the
 //!     site-`SITE` update to NaN;
 //!   - `slowchunk@INDEX[:MS]` — sleep `MS` ms (default 20) before pool
-//!     chunk `INDEX` runs.
+//!     chunk `INDEX` runs;
+//!   - `io@OP` — the next I/O operation labelled `OP` (e.g.
+//!     `snapshot.save`) fails before any durable effect, once.
 //!
 //! With no plan installed every probe is a single relaxed atomic load —
 //! the same near-zero disabled cost as [`crate::obs`]. Each fired fault
@@ -60,6 +62,12 @@ struct SlowChunkFault {
     fired: AtomicBool,
 }
 
+#[derive(Debug)]
+struct IoFault {
+    op: String,
+    fired: AtomicBool,
+}
+
 /// A deterministic fault-injection plan: a finite set of one-shot faults,
 /// each keyed to an exact point in the computation. Build one with the
 /// chained constructors ([`Plan::pivot`], [`Plan::nan_site`],
@@ -70,6 +78,7 @@ pub struct Plan {
     pivots: Vec<PivotFault>,
     nan_sites: Vec<NanSiteFault>,
     slow_chunks: Vec<SlowChunkFault>,
+    ios: Vec<IoFault>,
 }
 
 impl Plan {
@@ -100,9 +109,19 @@ impl Plan {
         self
     }
 
+    /// Fail the next I/O operation labelled `op` (see
+    /// [`should_fail_io`]) before it has any durable effect, once.
+    pub fn io(mut self, op: &str) -> Plan {
+        self.ios.push(IoFault { op: op.to_string(), fired: AtomicBool::new(false) });
+        self
+    }
+
     /// Does this plan inject anything at all?
     pub fn is_empty(&self) -> bool {
-        self.pivots.is_empty() && self.nan_sites.is_empty() && self.slow_chunks.is_empty()
+        self.pivots.is_empty()
+            && self.nan_sites.is_empty()
+            && self.slow_chunks.is_empty()
+            && self.ios.is_empty()
     }
 
     /// Parse the `CSGP_FAULT` syntax (see the module docs for the
@@ -138,6 +157,13 @@ impl Plan {
                     };
                     plan = plan.slow_chunk(c, ms);
                 }
+                "io" => {
+                    let op = args.trim();
+                    if op.is_empty() {
+                        return Err(format!("`{entry}` needs io@OP"));
+                    }
+                    plan = plan.io(op);
+                }
                 other => return Err(format!("unknown fault kind `{other}` in `{entry}`")),
             }
         }
@@ -155,6 +181,9 @@ impl Plan {
         }
         for c in &self.slow_chunks {
             c.fired.store(false, Ordering::Relaxed);
+        }
+        for f in &self.ios {
+            f.fired.store(false, Ordering::Relaxed);
         }
     }
 }
@@ -277,6 +306,24 @@ pub fn should_poison_site(sweep: usize, site: usize) -> bool {
     false
 }
 
+/// I/O probe: should the operation labelled `op` fail on this attempt?
+/// Consuming. Callers probe *before* any durable effect (e.g. the
+/// snapshot writer probes before publishing its temp file), so an
+/// injected failure models a crash that leaves no partial artifact.
+pub fn should_fail_io(op: &str) -> bool {
+    if !active() {
+        return false;
+    }
+    let Some(plan) = current() else { return false };
+    for f in &plan.ios {
+        if f.op == op && !f.fired.swap(true, Ordering::Relaxed) {
+            obs::counters::FAULTS_INJECTED.add(1);
+            return true;
+        }
+    }
+    false
+}
+
 /// Pool probe: sleep before chunk `chunk` if a `slowchunk` fault is
 /// armed for it. Consuming; affects timing only, never results.
 pub fn maybe_slow_chunk(chunk: usize) {
@@ -298,7 +345,9 @@ mod tests {
 
     #[test]
     fn parse_accepts_the_documented_grammar() {
-        let p = Plan::parse("pivot@12; nansite@1:7 ;slowchunk@3:25;slowchunk@9;").unwrap();
+        let p =
+            Plan::parse("pivot@12; nansite@1:7 ;slowchunk@3:25;slowchunk@9;io@snapshot.save;")
+                .unwrap();
         assert_eq!(p.pivots.len(), 1);
         assert_eq!(p.pivots[0].col, 12);
         assert_eq!(p.nan_sites.len(), 1);
@@ -306,6 +355,8 @@ mod tests {
         assert_eq!(p.slow_chunks.len(), 2);
         assert_eq!(p.slow_chunks[0].millis, 25);
         assert_eq!(p.slow_chunks[1].millis, 20); // default
+        assert_eq!(p.ios.len(), 1);
+        assert_eq!(p.ios[0].op, "snapshot.save");
         assert!(Plan::parse("").unwrap().is_empty());
     }
 
@@ -315,6 +366,16 @@ mod tests {
         assert!(Plan::parse("pivot@twelve").is_err());
         assert!(Plan::parse("nansite@3").is_err());
         assert!(Plan::parse("frobnicate@1").is_err());
+        assert!(Plan::parse("io@ ").is_err());
+    }
+
+    #[test]
+    fn io_faults_fire_once_per_labelled_op() {
+        with_plan(Plan::new().io("snapshot.save"), || {
+            assert!(!should_fail_io("snapshot.load"), "wrong op must not fire");
+            assert!(should_fail_io("snapshot.save"), "armed fault fires");
+            assert!(!should_fail_io("snapshot.save"), "fault is consumed");
+        });
     }
 
     #[test]

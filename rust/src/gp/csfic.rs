@@ -349,6 +349,61 @@ impl CsFicEp {
         self.sites.unpermuted(&self.perm)
     }
 
+    /// The private posterior blocks, for the snapshot writer
+    /// (`gp::snapshot`): `(L_uu, Woodbury solver, p_mean, M₂)`.
+    pub(crate) fn saved_parts(
+        &self,
+    ) -> (&DenseCholesky, &SparseLowRank, &[f64], &DenseMatrix) {
+        (&self.luu, &self.solver, &self.p_mean, &self.m2)
+    }
+
+    /// Reassemble a converged state from snapshotted parts — every field
+    /// is restored verbatim; no EP sweeps, no factorizations.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_saved(
+        perm: Arc<Vec<usize>>,
+        xp: Arc<Vec<Vec<f64>>>,
+        cov: AdditiveCov,
+        k_cs: CscMatrix,
+        lambda: Vec<f64>,
+        xu: Vec<Vec<f64>>,
+        sites: EpSites,
+        log_z: f64,
+        mu: Vec<f64>,
+        sigma_diag: Vec<f64>,
+        w_pred: Vec<f64>,
+        sweeps: usize,
+        converged: bool,
+        fill_k: f64,
+        fill_l: f64,
+        luu: DenseCholesky,
+        solver: SparseLowRank,
+        p_mean: Vec<f64>,
+        m2: DenseMatrix,
+    ) -> CsFicEp {
+        CsFicEp {
+            perm,
+            xp,
+            cov,
+            k_cs,
+            lambda,
+            xu,
+            sites,
+            log_z,
+            mu,
+            sigma_diag,
+            w_pred,
+            sweeps,
+            converged,
+            fill_k,
+            fill_l,
+            luu,
+            solver,
+            p_mean,
+            m2,
+        }
+    }
+
     /// Analytic gradient of `log Z_EP` w.r.t. the CS kernel's
     /// log-parameters `[ln σ²_cs, ln l…]` (paper eqs. 6, 11 with
     /// `∂P/∂θ = ∂K_cs/∂θ`): quadratic term through the representer

@@ -65,6 +65,27 @@ impl ParallelEp {
         opts: &EpOptions,
         cache: &mut PatternCache,
     ) -> Result<ParallelEp, String> {
+        ParallelEp::run_cached_warm(cov, x, y, opts, cache, None)
+    }
+
+    /// Accessor for warm starts and snapshots: the converged sites in the
+    /// *original* index order.
+    pub fn sites_unpermuted(&self) -> EpSites {
+        self.sites.unpermuted(&self.perm)
+    }
+
+    /// [`ParallelEp::run_cached`] with an optional warm start from
+    /// converged sites in the *original* (unpermuted) index order — the
+    /// online-update path appends τ̃ = 0 sites for the new points and
+    /// resumes from the old fixed point instead of re-deriving it.
+    pub fn run_cached_warm(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        y: &[f64],
+        opts: &EpOptions,
+        cache: &mut PatternCache,
+        warm_start: Option<&EpSites>,
+    ) -> Result<ParallelEp, String> {
         let n = x.len();
         let (_, plan) = cache.plan_for(cov, x);
         let k = cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm);
@@ -75,7 +96,13 @@ impl ParallelEp {
             yp[perm[old]] = y[old];
         }
         let mut factor = LdlFactor::identity(plan.symbolic.clone());
-        let mut sites = EpSites::zeros(n);
+        let mut sites = match warm_start {
+            Some(warm) => {
+                assert_eq!(warm.len(), n, "warm sites must match n");
+                warm.permuted(&perm)
+            }
+            None => EpSites::zeros(n),
+        };
         // parallel EP needs damping; honour opts.damping but cap at 0.9.
         // The working value halves on every divergence rollback.
         let jitter = opts.jitter_policy();
@@ -86,6 +113,26 @@ impl ParallelEp {
         let mut gamma = vec![0.0; n];
         let mut mu = vec![0.0; n];
         let mut sigma_diag: Vec<f64> = (0..n).map(|i| k.get(i, i)).collect();
+        if warm_start.is_some() {
+            // The first batched update reads the marginals, so a warm
+            // start must land the factor *and* the posterior state on the
+            // warm sites before the loop (one refactorization plus one
+            // round of marginal recomputation — the same per-sweep cost
+            // the resumed trajectory saves many times over).
+            let b = build_b(&k, &sites.tau);
+            factor.refactor_with_recovery(&b, &jitter)?;
+            gamma = k.matvec(&sites.nu);
+            let mut swg: Vec<f64> =
+                (0..n).map(|i| sites.tau[i].max(0.0).sqrt() * gamma[i]).collect();
+            factor.solve_in_place(&mut swg);
+            let scaled: Vec<f64> =
+                (0..n).map(|i| sites.tau[i].max(0.0).sqrt() * swg[i]).collect();
+            let kv = k.matvec(&scaled);
+            for i in 0..n {
+                mu[i] = gamma[i] - kv[i];
+            }
+            sigma_diag = marginal_variances(&k, &factor, &sites.tau);
+        }
         let mut log_z = f64::NEG_INFINITY;
         let mut log_z_old = f64::NEG_INFINITY;
         let mut sweeps = 0;

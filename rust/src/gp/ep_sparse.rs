@@ -64,6 +64,71 @@ pub struct SparseEp {
     pub fill_l: f64,
 }
 
+/// The structural inputs of one sparse-EP run: permutation, permuted
+/// inputs, permuted covariance values and the symbolic analysis. Normally
+/// built from a [`PatternCache`]; the online-update path
+/// (`gp::online`) assembles one directly by extending a fitted model's
+/// structure instead of re-running ordering + analysis.
+pub struct SparsePlan {
+    /// old index -> permuted index.
+    pub perm: Arc<Vec<usize>>,
+    /// Permuted inputs.
+    pub xp: Arc<Vec<Vec<f64>>>,
+    /// Permuted covariance values on the (possibly superset) pattern.
+    pub k: CscMatrix,
+    pub symbolic: Arc<Symbolic>,
+}
+
+impl SparsePlan {
+    /// The plan [`SparseEp::run_cached`] uses: pattern / ordering /
+    /// analysis from the cache, covariance values re-evaluated on it.
+    pub fn from_cache(
+        cov: &CovFunction,
+        x: &[Vec<f64>],
+        metrics: Option<&Metrics>,
+        cache: &mut PatternCache,
+    ) -> SparsePlan {
+        let (_, plan) = cache.plan_for(cov, x);
+        let k = match metrics {
+            Some(m) => m.time("ep.cov_values", || {
+                cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm)
+            }),
+            None => cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm),
+        };
+        SparsePlan {
+            perm: plan.perm.clone(),
+            xp: plan.xp.clone(),
+            k,
+            symbolic: plan.symbolic.clone(),
+        }
+    }
+}
+
+/// How a sparse-EP run initializes its site state and factor.
+pub enum SparseInit<'a> {
+    /// The τ̃ = 0 prior start (`B = I`).
+    Cold,
+    /// Warm start from converged sites given in the *original*
+    /// (unpermuted) index order — the warm-start currency (see
+    /// [`SparseEp::sites_unpermuted`]), so a warm start stays valid even
+    /// when the plan's permutation differs from the run that produced the
+    /// sites. Costs one upfront refactorization of `B` at the warm sites.
+    Warm(&'a EpSites),
+    /// Online extension: `sites` are already in this plan's *permuted*
+    /// order — the old converged sites followed by fresh τ̃ = 0 sites at
+    /// permuted indices `n_old..` — and `old_factor` is the old run's
+    /// converged factor, embedded into the extended analysis by pure data
+    /// movement ([`LdlFactor::embed`]; no refactorization). The first
+    /// sweep visits only the appended sites, integrating the new data
+    /// through the `ldl_row_modify` rank-one machinery; later sweeps
+    /// revise every site as usual.
+    Extend {
+        sites: EpSites,
+        old_factor: &'a LdlFactor,
+        n_old: usize,
+    },
+}
+
 impl SparseEp {
     /// Run sparse EP to convergence on `(x, y)` with a private, throwaway
     /// [`PatternCache`]. Optimizer loops should hold a cache and call
@@ -95,33 +160,70 @@ impl SparseEp {
         metrics: Option<&Metrics>,
         cache: &mut PatternCache,
     ) -> Result<SparseEp, String> {
-        let n = x.len();
-        assert_eq!(y.len(), n);
+        let plan = SparsePlan::from_cache(cov, x, metrics, cache);
+        SparseEp::run_with_init(plan, y, opts, metrics, SparseInit::Cold)
+    }
 
-        // ---- setup: covariance values on the (cached) structure ----------
-        let (_, plan) = cache.plan_for(cov, x);
-        let k = match metrics {
-            Some(m) => m.time("ep.cov_values", || {
-                cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm)
-            }),
-            None => cov.cov_values_on_pattern(&plan.xp, &plan.pattern_perm),
-        };
-        let perm = plan.perm.clone(); // Arc handle, not a deep copy
-        let xp = plan.xp.clone();
+    /// Accessor for warm starts and snapshots: the converged sites in the
+    /// *original* index order, so they stay meaningful when the next run
+    /// (or a serving replica) resolves a different permutation.
+    pub fn sites_unpermuted(&self) -> EpSites {
+        self.sites.unpermuted(&self.perm)
+    }
+
+    /// Run sparse EP on a prebuilt [`SparsePlan`] with an explicit
+    /// [`SparseInit`]. This is the core loop: `run`/`run_cached` call it
+    /// with [`SparseInit::Cold`] (bitwise-identical to the historical
+    /// path), the online-update layer calls it with
+    /// [`SparseInit::Extend`], and snapshot replicas with a foreign
+    /// ordering call it with [`SparseInit::Warm`].
+    pub fn run_with_init(
+        plan: SparsePlan,
+        y: &[f64],
+        opts: &EpOptions,
+        metrics: Option<&Metrics>,
+        init: SparseInit,
+    ) -> Result<SparseEp, String> {
+        let SparsePlan { perm, xp, k, symbolic } = plan;
+        let n = k.n_rows;
+        assert_eq!(y.len(), n);
         let mut yp = vec![0.0; n];
         for old in 0..n {
             yp[perm[old]] = y[old];
         }
-        let symbolic = plan.symbolic.clone();
         let fill_k = k.density();
         let fill_l = symbolic.fill_l();
+        let jitter = opts.jitter_policy();
 
-        // B starts as the identity (τ̃ = 0)
-        let mut factor = LdlFactor::identity(symbolic.clone());
-        let mut sites = EpSites::zeros(n);
-        let mut gamma = vec![0.0; n]; // γ = K ν̃
-        let mut sw = vec![0.0; n]; // cached sqrt(τ̃)
-        let mut swg = vec![0.0; n]; // cached sw ⊙ γ
+        // Initial factor / sites / first-sweep window. The cold path keeps
+        // its exact historical state (B = I at τ̃ = 0); warm starts pay one
+        // refactorization at the warm sites; extend embeds the old factor
+        // without any numeric work and sweeps only the appended tail first.
+        let (mut factor, mut sites, mut visit_from) = match init {
+            SparseInit::Cold => {
+                (LdlFactor::identity(symbolic.clone()), EpSites::zeros(n), 0usize)
+            }
+            SparseInit::Warm(warm) => {
+                assert_eq!(warm.len(), n, "warm sites must match n");
+                let sites = warm.permuted(&perm);
+                let mut factor = LdlFactor::identity(symbolic.clone());
+                let b = build_b(&k, &sites.tau);
+                factor.refactor_with_recovery(&b, &jitter)?;
+                (factor, sites, 0usize)
+            }
+            SparseInit::Extend { sites, old_factor, n_old } => {
+                assert_eq!(sites.len(), n, "extended sites must match n");
+                assert!(n_old <= n);
+                let factor = LdlFactor::embed(old_factor, symbolic.clone());
+                (factor, sites, n_old)
+            }
+        };
+        // γ = K ν̃ and the cached scalings, consistent with whatever sites
+        // we start from (all-zero for the cold path, matching its old
+        // explicit zero init bitwise).
+        let mut gamma = k.matvec(&sites.nu);
+        let mut sw: Vec<f64> = sites.tau.iter().map(|&t| t.max(0.0).sqrt()).collect();
+        let mut swg: Vec<f64> = (0..n).map(|i| sw[i] * gamma[i]).collect();
         let mut t = vec![0.0; n];
         let mut solve_ws = SparseSolveWorkspace::new(n);
         let mut rowmod_ws = RowModWorkspace::new(n);
@@ -139,7 +241,6 @@ impl SparseEp {
         // value and halves on every rollback; the snapshot is the site
         // state at the end of the last healthy sweep (the τ̃ = 0 start is
         // trivially healthy).
-        let jitter = opts.jitter_policy();
         let mut damping = opts.effective_damping(1.0);
         let mut monitor = crate::gp::marginal::DivergenceMonitor::new();
         let mut recoveries = 0usize;
@@ -157,7 +258,8 @@ impl SparseEp {
             let mut max_site_delta = 0.0f64;
             let mut updated = 0u64;
             let mut skipped = 0u64;
-            for i in 0..n {
+            let visited = (n - visit_from) as u64;
+            for i in visit_from..n {
                 let (krows, kvals) = k.col(i);
                 // a = S̃^{1/2} K[:, i]
                 a_vals.clear();
@@ -261,6 +363,11 @@ impl SparseEp {
                 }
             }
             sweeps += 1;
+            // Only the very first sweep of an Extend init is partial (it
+            // integrates just the appended sites); every later sweep —
+            // including the convergence-confirming one and any rollback
+            // retry — revises all sites.
+            visit_from = 0;
 
             // sweep-end: refactor B from scratch (cheap, O(sparse chol),
             // with pivot recovery) and evaluate log Z_EP
@@ -272,7 +379,7 @@ impl SparseEp {
             let diverged = skipped > 0 || monitor.diverged(log_z, max_site_delta, opts);
             if track {
                 crate::obs::counters::EP_SWEEPS.add(1);
-                crate::obs::counters::EP_SITE_VISITS.add(n as u64);
+                crate::obs::counters::EP_SITE_VISITS.add(visited);
                 crate::obs::counters::EP_DAMPED_UPDATES.add(updated);
             }
             if sweep_span.is_active() {

@@ -213,6 +213,31 @@ impl FicEp {
         })
     }
 
+    /// The private predictive blocks, for the snapshot writer
+    /// (`gp::snapshot`): `(U, L_uu, p_mean, G)`.
+    pub(crate) fn saved_parts(&self) -> (&DenseMatrix, &DenseCholesky, &[f64], &DenseMatrix) {
+        (&self.u, &self.luu, &self.p_mean, &self.g_var)
+    }
+
+    /// Reassemble a converged state from snapshotted parts — every field
+    /// is restored verbatim; no EP sweeps, no factorizations.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_saved(
+        xu: Vec<Vec<f64>>,
+        sites: EpSites,
+        log_z: f64,
+        mu: Vec<f64>,
+        sigma_diag: Vec<f64>,
+        sweeps: usize,
+        converged: bool,
+        u: DenseMatrix,
+        luu: DenseCholesky,
+        p_mean: Vec<f64>,
+        g_var: DenseMatrix,
+    ) -> FicEp {
+        FicEp { xu, sites, log_z, mu, sigma_diag, sweeps, converged, u, luu, p_mean, g_var }
+    }
+
     /// Latent predictive mean/variance at a test point.
     pub fn predict_latent(&self, cov: &CovFunction, xstar: &[f64]) -> (f64, f64) {
         let m = self.xu.len();

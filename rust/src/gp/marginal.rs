@@ -45,6 +45,28 @@ impl EpSites {
         out
     }
 
+    /// Append `k` untrained sites (τ̃ = 0, the prior), the online-update
+    /// seed: a model extended this way has exactly the posterior of the
+    /// old model on the old points and the prior on the new ones, so
+    /// `B_ext = diag(B_old, I_k)` and the old factor embeds unchanged
+    /// (see `LdlFactor::embed`).
+    pub fn extend(&mut self, k: usize) {
+        self.tau.extend(std::iter::repeat(0.0).take(k));
+        self.nu.extend(std::iter::repeat(0.0).take(k));
+        self.tau_cav.extend(std::iter::repeat(1.0).take(k));
+        self.nu_cav.extend(std::iter::repeat(0.0).take(k));
+        self.ln_zhat.extend(std::iter::repeat(0.0).take(k));
+    }
+
+    /// Number of sites.
+    pub fn len(&self) -> usize {
+        self.tau.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tau.is_empty()
+    }
+
     /// Inverse of [`EpSites::permuted`]: `out[i] = self[perm[i]]`.
     pub fn unpermuted(&self, perm: &[usize]) -> EpSites {
         let n = self.tau.len();

@@ -14,9 +14,11 @@ pub mod fic;
 pub mod likelihood;
 pub mod marginal;
 pub mod model;
+pub mod online;
 pub mod predict;
 pub mod priors;
 pub mod regression;
+pub mod snapshot;
 
 pub use cache::PatternCache;
 pub use covariance::{AdditiveCov, CovFunction, CovKind};
@@ -25,4 +27,6 @@ pub use ep_dense::DenseEp;
 pub use ep_parallel::ParallelEp;
 pub use ep_sparse::SparseEp;
 pub use model::{FittedClassifier, GpClassifier, Inference};
+pub use online::{UpdatePath, UpdateReport};
 pub use predict::{LatentPredictor, PredictWorkspace};
+pub use snapshot::SnapshotError;

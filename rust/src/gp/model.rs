@@ -104,7 +104,7 @@ impl GpClassifier {
     /// A [`PatternCache`] matching this model's ordering choice. One cache
     /// serves one training set; `fit` holds it across the whole SCG loop
     /// so structure is re-analysed only when the support radius grows.
-    fn fresh_cache(&self) -> PatternCache {
+    pub(crate) fn fresh_cache(&self) -> PatternCache {
         let ordering = match &self.inference {
             Inference::Sparse(ord)
             | Inference::Parallel(ord)
@@ -348,6 +348,7 @@ impl GpClassifier {
         Ok(FittedClassifier {
             cov,
             x: x.to_vec(),
+            y: y.to_vec(),
             backend,
             report: FitReport {
                 log_z,
@@ -376,6 +377,7 @@ impl GpClassifier {
         Ok(FittedClassifier {
             cov: self.cov.clone(),
             x: x.to_vec(),
+            y: y.to_vec(),
             backend,
             report: FitReport {
                 log_z,
@@ -428,6 +430,10 @@ pub struct FitReport {
 pub struct FittedClassifier {
     pub cov: CovFunction,
     pub x: Vec<Vec<f64>>,
+    /// Training labels (±1), kept so the online-update path
+    /// ([`GpClassifier::update`](crate::gp::online)) can refit or extend
+    /// on the union without the caller re-supplying the history.
+    pub y: Vec<f64>,
     pub backend: Backend,
     pub report: FitReport,
 }

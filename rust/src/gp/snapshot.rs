@@ -1,0 +1,1037 @@
+//! Versioned binary model snapshots — save a [`FittedClassifier`] to
+//! disk and reload it predict-ready, **without re-running symbolic
+//! analysis or numeric factorization**.
+//!
+//! The serving story this enables: fit once (expensive — SCG over EP),
+//! snapshot, and have replicas `load` the converged state in I/O time.
+//! Every posterior block a prediction touches is stored verbatim — sites,
+//! the numeric LDLᵀ values, the Woodbury capacitance blocks, permutation
+//! and symbolic pattern — so a loaded model answers its first prediction
+//! without a single factorization, and an online update
+//! ([`crate::gp::online`]) can extend the restored factor directly.
+//!
+//! ## Format (all little-endian, std-only)
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic "CSGPSNAP"
+//! 8       4     format version (u32, currently 1)
+//! 12      1     backend tag (0 dense, 1 sparse, 2 parallel, 3 fic, 4 csfic)
+//! 13      8     payload length (u64)
+//! 21      8     FNV-1a 64 checksum of the payload
+//! 29      …     payload
+//! ```
+//!
+//! The payload is a flat field-by-field encoding: `u64` lengths, `f64`
+//! values, UTF-8 strings for kernel kind names. `usize` values are stored
+//! as `u64` (the `usize::MAX` etree-root sentinel round-trips as
+//! `u64::MAX`). The symbolic analysis stores only its *defining* parts
+//! (etree parent, padded pattern, strict nnz, supernode partition);
+//! [`Symbolic::from_parts`] rebuilds the derived row map and wave
+//! schedule in `O(nnz)` — data movement, not analysis.
+//!
+//! ## Durability
+//!
+//! [`save`] writes to a `<path>.tmp` sibling and `rename`s it into place,
+//! so a crash (or an injected `io@snapshot.save` fault, see
+//! [`crate::fault`]) never leaves a partial file at the destination:
+//! readers see the old snapshot or the new one, nothing in between.
+//!
+//! ## Failure model
+//!
+//! Loading is total: corrupted, truncated, or foreign files produce a
+//! typed [`SnapshotError`], never a panic. The checksum rejects payload
+//! corruption before any structure is built; structural invariants that
+//! downstream kernels assume (pattern shapes, aligned lengths) are
+//! re-validated after decoding.
+
+use std::fmt;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::gp::covariance::{AdditiveCov, CovFunction, CovKind};
+use crate::gp::csfic::CsFicEp;
+use crate::gp::ep_dense::DenseEp;
+use crate::gp::ep_parallel::ParallelEp;
+use crate::gp::ep_sparse::SparseEp;
+use crate::gp::fic::FicEp;
+use crate::gp::marginal::EpSites;
+use crate::gp::model::{Backend, FitReport, FittedClassifier};
+use crate::sparse::cholesky::LdlFactor;
+use crate::sparse::csc::CscMatrix;
+use crate::sparse::dense::{DenseCholesky, DenseMatrix};
+use crate::sparse::lowrank::SparseLowRank;
+use crate::sparse::symbolic::Symbolic;
+
+const MAGIC: &[u8; 8] = b"CSGPSNAP";
+const VERSION: u32 = 1;
+const HEADER_LEN: usize = 8 + 4 + 1 + 8 + 8;
+
+const TAG_DENSE: u8 = 0;
+const TAG_SPARSE: u8 = 1;
+const TAG_PARALLEL: u8 = 2;
+const TAG_FIC: u8 = 3;
+const TAG_CSFIC: u8 = 4;
+
+/// Why a snapshot could not be written or read back.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SnapshotError {
+    /// Filesystem-level failure (open, write, rename, read).
+    Io(String),
+    /// The file does not start with the `CSGPSNAP` magic.
+    BadMagic,
+    /// The file is a snapshot, but of a format version this build does
+    /// not understand.
+    UnsupportedVersion(u32),
+    /// The backend tag byte names no known backend.
+    BadBackendTag(u8),
+    /// The file ends before the declared payload does.
+    Truncated,
+    /// The payload checksum does not match the header.
+    ChecksumMismatch,
+    /// The payload decoded, but violates a structural invariant.
+    Corrupted(String),
+}
+
+impl fmt::Display for SnapshotError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SnapshotError::Io(e) => write!(f, "snapshot I/O error: {e}"),
+            SnapshotError::BadMagic => write!(f, "not a csgp snapshot (bad magic)"),
+            SnapshotError::UnsupportedVersion(v) => {
+                write!(f, "unsupported snapshot version {v} (this build reads {VERSION})")
+            }
+            SnapshotError::BadBackendTag(t) => write!(f, "unknown backend tag {t}"),
+            SnapshotError::Truncated => write!(f, "snapshot file is truncated"),
+            SnapshotError::ChecksumMismatch => {
+                write!(f, "snapshot payload checksum mismatch (file corrupted)")
+            }
+            SnapshotError::Corrupted(why) => write!(f, "snapshot payload corrupted: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for SnapshotError {}
+
+/// What [`probe`] reports without building any model state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapshotInfo {
+    pub version: u32,
+    /// Backend name: `dense`, `sparse`, `parallel`, `fic` or `csfic`.
+    pub backend: &'static str,
+    pub payload_len: u64,
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn tag_name(tag: u8) -> Result<&'static str, SnapshotError> {
+    match tag {
+        TAG_DENSE => Ok("dense"),
+        TAG_SPARSE => Ok("sparse"),
+        TAG_PARALLEL => Ok("parallel"),
+        TAG_FIC => Ok("fic"),
+        TAG_CSFIC => Ok("csfic"),
+        other => Err(SnapshotError::BadBackendTag(other)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Flat little-endian encoding
+// ---------------------------------------------------------------------------
+
+fn w_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_usize(buf: &mut Vec<u8>, v: usize) {
+    w_u64(buf, v as u64);
+}
+
+fn w_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn w_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(v as u8);
+}
+
+fn w_f64s(buf: &mut Vec<u8>, v: &[f64]) {
+    w_usize(buf, v.len());
+    for &x in v {
+        w_f64(buf, x);
+    }
+}
+
+fn w_usizes(buf: &mut Vec<u8>, v: &[usize]) {
+    w_usize(buf, v.len());
+    for &x in v {
+        w_usize(buf, x);
+    }
+}
+
+fn w_str(buf: &mut Vec<u8>, s: &str) {
+    w_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Point sets are rectangular (`n` points × `dim` coordinates), stored
+/// flat.
+fn w_points(buf: &mut Vec<u8>, pts: &[Vec<f64>]) {
+    let dim = pts.first().map_or(0, Vec::len);
+    w_usize(buf, pts.len());
+    w_usize(buf, dim);
+    for p in pts {
+        debug_assert_eq!(p.len(), dim);
+        for &c in p {
+            w_f64(buf, c);
+        }
+    }
+}
+
+/// Bounds-checked payload reader: every decode either yields a value or a
+/// typed error — no slicing panics, no unchecked allocations (vector
+/// lengths are capped by the bytes actually remaining).
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+
+    fn take(&mut self, k: usize) -> Result<&'a [u8], SnapshotError> {
+        let end = self.pos.checked_add(k).ok_or(SnapshotError::Truncated)?;
+        if end > self.buf.len() {
+            return Err(SnapshotError::Truncated);
+        }
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8, SnapshotError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u64(&mut self) -> Result<u64, SnapshotError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn usize(&mut self) -> Result<usize, SnapshotError> {
+        Ok(self.u64()? as usize)
+    }
+
+    fn f64(&mut self) -> Result<f64, SnapshotError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bool(&mut self) -> Result<bool, SnapshotError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(SnapshotError::Corrupted(format!("bad bool byte {other}"))),
+        }
+    }
+
+    /// A declared element count, rejected unless `count * elem_size`
+    /// bytes actually remain — a corrupted length can never trigger a
+    /// huge allocation.
+    fn len(&mut self, elem_size: usize) -> Result<usize, SnapshotError> {
+        let len = self.usize()?;
+        if len > (self.buf.len() - self.pos) / elem_size.max(1) {
+            return Err(SnapshotError::Truncated);
+        }
+        Ok(len)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, SnapshotError> {
+        let len = self.len(8)?;
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    fn usizes(&mut self) -> Result<Vec<usize>, SnapshotError> {
+        let len = self.len(8)?;
+        (0..len).map(|_| self.usize()).collect()
+    }
+
+    fn str(&mut self) -> Result<String, SnapshotError> {
+        let len = self.len(1)?;
+        String::from_utf8(self.take(len)?.to_vec())
+            .map_err(|_| SnapshotError::Corrupted("non-UTF-8 string".into()))
+    }
+
+    fn points(&mut self) -> Result<Vec<Vec<f64>>, SnapshotError> {
+        let n = self.len(8)?;
+        let dim = self.usize()?;
+        let row_bytes = dim.checked_mul(8).ok_or(SnapshotError::Truncated)?;
+        if dim > 0 && n > (self.buf.len() - self.pos) / row_bytes {
+            return Err(SnapshotError::Truncated);
+        }
+        (0..n).map(|_| (0..dim).map(|_| self.f64()).collect()).collect()
+    }
+
+    fn duration(&mut self) -> Result<Duration, SnapshotError> {
+        let secs = self.f64()?;
+        if !secs.is_finite() || !(0.0..1e15).contains(&secs) {
+            return Err(SnapshotError::Corrupted(format!("bad duration {secs}")));
+        }
+        Ok(Duration::from_secs_f64(secs))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Component codecs
+// ---------------------------------------------------------------------------
+
+fn w_cov(buf: &mut Vec<u8>, cov: &CovFunction) {
+    w_str(buf, &cov.kind.name());
+    w_usize(buf, cov.input_dim);
+    w_f64(buf, cov.sigma2);
+    w_f64s(buf, &cov.lengthscales);
+}
+
+fn r_cov(r: &mut Reader) -> Result<CovFunction, SnapshotError> {
+    let kind = CovKind::parse(&r.str()?).map_err(SnapshotError::Corrupted)?;
+    let input_dim = r.usize()?;
+    let sigma2 = r.f64()?;
+    let lengthscales = r.f64s()?;
+    if lengthscales.len() != input_dim {
+        return Err(SnapshotError::Corrupted(format!(
+            "{} lengthscales for input_dim {input_dim}",
+            lengthscales.len()
+        )));
+    }
+    Ok(CovFunction { kind, input_dim, sigma2, lengthscales })
+}
+
+fn w_sites(buf: &mut Vec<u8>, s: &EpSites) {
+    w_f64s(buf, &s.tau);
+    w_f64s(buf, &s.nu);
+    w_f64s(buf, &s.tau_cav);
+    w_f64s(buf, &s.nu_cav);
+    w_f64s(buf, &s.ln_zhat);
+}
+
+fn r_sites(r: &mut Reader) -> Result<EpSites, SnapshotError> {
+    let tau = r.f64s()?;
+    let nu = r.f64s()?;
+    let tau_cav = r.f64s()?;
+    let nu_cav = r.f64s()?;
+    let ln_zhat = r.f64s()?;
+    let n = tau.len();
+    if [&nu, &tau_cav, &nu_cav, &ln_zhat].iter().any(|v| v.len() != n) {
+        return Err(SnapshotError::Corrupted("site vectors disagree on n".into()));
+    }
+    Ok(EpSites { tau, nu, tau_cav, nu_cav, ln_zhat })
+}
+
+fn w_csc(buf: &mut Vec<u8>, m: &CscMatrix) {
+    w_usize(buf, m.n_rows);
+    w_usize(buf, m.n_cols);
+    w_usizes(buf, &m.col_ptr);
+    w_usizes(buf, &m.row_idx);
+    w_f64s(buf, &m.values);
+}
+
+fn r_csc(r: &mut Reader) -> Result<CscMatrix, SnapshotError> {
+    let n_rows = r.usize()?;
+    let n_cols = r.usize()?;
+    let col_ptr = r.usizes()?;
+    let row_idx = r.usizes()?;
+    let values = r.f64s()?;
+    let ok = n_cols.checked_add(1) == Some(col_ptr.len())
+        && col_ptr.first() == Some(&0)
+        && col_ptr.windows(2).all(|w| w[0] <= w[1])
+        && col_ptr.last() == Some(&row_idx.len())
+        && values.len() == row_idx.len()
+        && row_idx.iter().all(|&i| i < n_rows);
+    if !ok {
+        return Err(SnapshotError::Corrupted("malformed CSC matrix".into()));
+    }
+    Ok(CscMatrix { n_rows, n_cols, col_ptr, row_idx, values })
+}
+
+fn w_dense(buf: &mut Vec<u8>, m: &DenseMatrix) {
+    w_usize(buf, m.n_rows);
+    w_usize(buf, m.n_cols);
+    w_f64s(buf, &m.data);
+}
+
+fn r_dense(r: &mut Reader) -> Result<DenseMatrix, SnapshotError> {
+    let n_rows = r.usize()?;
+    let n_cols = r.usize()?;
+    let data = r.f64s()?;
+    if n_rows.checked_mul(n_cols) != Some(data.len()) {
+        return Err(SnapshotError::Corrupted("dense matrix shape mismatch".into()));
+    }
+    Ok(DenseMatrix { n_rows, n_cols, data })
+}
+
+fn w_chol(buf: &mut Vec<u8>, c: &DenseCholesky) {
+    w_usize(buf, c.n);
+    w_f64s(buf, &c.l);
+}
+
+fn r_chol(r: &mut Reader) -> Result<DenseCholesky, SnapshotError> {
+    let n = r.usize()?;
+    let l = r.f64s()?;
+    if n.checked_mul(n) != Some(l.len()) {
+        return Err(SnapshotError::Corrupted("Cholesky factor shape mismatch".into()));
+    }
+    Ok(DenseCholesky { n, l })
+}
+
+/// The symbolic analysis stores its defining parts; the derived row map
+/// and supernodal wave schedule are rebuilt by [`Symbolic::from_parts`]
+/// in `O(nnz)` on load (data movement — not an `analyze` rerun).
+fn w_symbolic(buf: &mut Vec<u8>, s: &Symbolic) {
+    w_usize(buf, s.n);
+    w_usizes(buf, &s.parent);
+    w_usizes(buf, &s.col_ptr);
+    w_usizes(buf, &s.row_idx);
+    w_usize(buf, s.nnz_strict);
+    w_usizes(buf, &s.schedule.snode_ptr);
+}
+
+fn r_symbolic(r: &mut Reader) -> Result<Arc<Symbolic>, SnapshotError> {
+    let n = r.usize()?;
+    let parent = r.usizes()?;
+    let col_ptr = r.usizes()?;
+    let row_idx = r.usizes()?;
+    let nnz_strict = r.usize()?;
+    let snode_ptr = r.usizes()?;
+    // Everything `Symbolic::from_parts` (and the schedule rebuild it
+    // drives) indexes with must be pre-validated — a corrupted file must
+    // produce an error here, not an out-of-bounds panic there.
+    let ok = parent.len() == n
+        && parent.iter().enumerate().all(|(j, &p)| p == usize::MAX || (p > j && p < n))
+        && n.checked_add(1) == Some(col_ptr.len())
+        && col_ptr.first() == Some(&0)
+        && col_ptr.windows(2).all(|w| w[0] <= w[1])
+        && col_ptr.last() == Some(&row_idx.len())
+        && row_idx.iter().all(|&i| i < n)
+        && snode_ptr.first() == Some(&0)
+        && snode_ptr.last() == Some(&n)
+        && snode_ptr.windows(2).all(|w| w[0] < w[1]);
+    if !ok {
+        return Err(SnapshotError::Corrupted("malformed symbolic analysis".into()));
+    }
+    Ok(Arc::new(Symbolic::from_parts(n, parent, col_ptr, row_idx, nnz_strict, snode_ptr)))
+}
+
+fn w_factor(buf: &mut Vec<u8>, f: &LdlFactor) {
+    w_f64s(buf, &f.l);
+    w_f64s(buf, &f.d);
+    w_f64(buf, f.jitter);
+}
+
+/// Numeric LDLᵀ values, realigned with an already-decoded symbolic
+/// pattern — the factor is solve-ready as stored, nothing is refactored.
+fn r_factor(r: &mut Reader, symbolic: Arc<Symbolic>) -> Result<LdlFactor, SnapshotError> {
+    let l = r.f64s()?;
+    let d = r.f64s()?;
+    let jitter = r.f64()?;
+    if l.len() != symbolic.row_idx.len() || d.len() != symbolic.n {
+        return Err(SnapshotError::Corrupted("factor values misaligned with pattern".into()));
+    }
+    Ok(LdlFactor { symbolic, l, d, jitter })
+}
+
+fn w_report(buf: &mut Vec<u8>, rep: &FitReport) {
+    w_f64(buf, rep.log_z);
+    w_f64(buf, rep.log_post);
+    w_usize(buf, rep.opt_iters);
+    w_usize(buf, rep.fn_evals);
+    w_f64(buf, rep.opt_time.as_secs_f64());
+    w_f64(buf, rep.ep_time.as_secs_f64());
+    w_f64(buf, rep.fill_k);
+    w_f64(buf, rep.fill_l);
+    w_bool(buf, rep.opt_converged);
+}
+
+fn r_report(r: &mut Reader) -> Result<FitReport, SnapshotError> {
+    Ok(FitReport {
+        log_z: r.f64()?,
+        log_post: r.f64()?,
+        opt_iters: r.usize()?,
+        fn_evals: r.usize()?,
+        opt_time: r.duration()?,
+        ep_time: r.duration()?,
+        fill_k: r.f64()?,
+        fill_l: r.f64()?,
+        opt_converged: r.bool()?,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Backend payloads
+// ---------------------------------------------------------------------------
+
+fn backend_tag(backend: &Backend) -> u8 {
+    match backend {
+        Backend::Dense(_) => TAG_DENSE,
+        Backend::Sparse(_) => TAG_SPARSE,
+        Backend::Parallel(_) => TAG_PARALLEL,
+        Backend::Fic(_) => TAG_FIC,
+        Backend::CsFic(_) => TAG_CSFIC,
+    }
+}
+
+fn w_backend(buf: &mut Vec<u8>, backend: &Backend) {
+    match backend {
+        Backend::Dense(ep) => {
+            w_sites(buf, &ep.sites);
+            w_f64(buf, ep.log_z);
+            w_f64s(buf, &ep.mu);
+            w_f64s(buf, &ep.sigma_diag);
+            w_usize(buf, ep.sweeps);
+            w_bool(buf, ep.converged);
+            w_f64s(buf, &ep.sw);
+            w_chol(buf, &ep.chol_b);
+            w_f64s(buf, &ep.w_pred);
+        }
+        Backend::Sparse(ep) => {
+            w_usizes(buf, &ep.perm);
+            w_points(buf, &ep.xp);
+            w_csc(buf, &ep.k);
+            w_symbolic(buf, &ep.symbolic);
+            w_factor(buf, &ep.factor);
+            w_sites(buf, &ep.sites);
+            w_f64(buf, ep.log_z);
+            w_f64s(buf, &ep.mu);
+            w_f64s(buf, &ep.sigma_diag);
+            w_f64s(buf, &ep.w_pred);
+            w_usize(buf, ep.sweeps);
+            w_bool(buf, ep.converged);
+            w_f64(buf, ep.fill_k);
+            w_f64(buf, ep.fill_l);
+        }
+        Backend::Parallel(ep) => {
+            w_usizes(buf, &ep.perm);
+            w_points(buf, &ep.xp);
+            w_csc(buf, &ep.k);
+            w_symbolic(buf, &ep.factor.symbolic);
+            w_factor(buf, &ep.factor);
+            w_sites(buf, &ep.sites);
+            w_f64(buf, ep.log_z);
+            w_f64s(buf, &ep.mu);
+            w_f64s(buf, &ep.w_pred);
+            w_usize(buf, ep.sweeps);
+            w_bool(buf, ep.converged);
+        }
+        Backend::Fic(ep) => {
+            let (u, luu, p_mean, g_var) = ep.saved_parts();
+            w_points(buf, &ep.xu);
+            w_sites(buf, &ep.sites);
+            w_f64(buf, ep.log_z);
+            w_f64s(buf, &ep.mu);
+            w_f64s(buf, &ep.sigma_diag);
+            w_usize(buf, ep.sweeps);
+            w_bool(buf, ep.converged);
+            w_dense(buf, u);
+            w_chol(buf, luu);
+            w_f64s(buf, p_mean);
+            w_dense(buf, g_var);
+        }
+        Backend::CsFic(ep) => {
+            let (luu, solver, p_mean, m2) = ep.saved_parts();
+            w_usizes(buf, &ep.perm);
+            w_points(buf, &ep.xp);
+            w_cov(buf, &ep.cov.global);
+            w_cov(buf, &ep.cov.cs);
+            w_csc(buf, &ep.k_cs);
+            w_f64s(buf, &ep.lambda);
+            w_points(buf, &ep.xu);
+            w_sites(buf, &ep.sites);
+            w_f64(buf, ep.log_z);
+            w_f64s(buf, &ep.mu);
+            w_f64s(buf, &ep.sigma_diag);
+            w_f64s(buf, &ep.w_pred);
+            w_usize(buf, ep.sweeps);
+            w_bool(buf, ep.converged);
+            w_f64(buf, ep.fill_k);
+            w_f64(buf, ep.fill_l);
+            w_chol(buf, luu);
+            // Woodbury solver: sparse factor + low-rank blocks, verbatim
+            w_symbolic(buf, &solver.factor.symbolic);
+            w_factor(buf, &solver.factor);
+            w_dense(buf, &solver.u);
+            w_dense(buf, &solver.w);
+            w_dense(buf, &solver.m1);
+            w_chol(buf, &solver.cap);
+            w_f64s(buf, p_mean);
+            w_dense(buf, m2);
+        }
+    }
+}
+
+/// `n` aligned vectors sanity check: every per-site vector of a backend
+/// payload must agree with the site count.
+fn check_n(n: usize, lens: &[usize]) -> Result<(), SnapshotError> {
+    if lens.iter().any(|&l| l != n) {
+        return Err(SnapshotError::Corrupted("per-site vectors disagree on n".into()));
+    }
+    Ok(())
+}
+
+fn r_backend(r: &mut Reader, tag: u8) -> Result<Backend, SnapshotError> {
+    match tag {
+        TAG_DENSE => {
+            let sites = r_sites(r)?;
+            let log_z = r.f64()?;
+            let mu = r.f64s()?;
+            let sigma_diag = r.f64s()?;
+            let sweeps = r.usize()?;
+            let converged = r.bool()?;
+            let sw = r.f64s()?;
+            let chol_b = r_chol(r)?;
+            let w_pred = r.f64s()?;
+            let n = sites.tau.len();
+            check_n(n, &[mu.len(), sigma_diag.len(), sw.len(), chol_b.n, w_pred.len()])?;
+            Ok(Backend::Dense(DenseEp {
+                sites,
+                log_z,
+                mu,
+                sigma_diag,
+                sweeps,
+                converged,
+                sw,
+                chol_b,
+                w_pred,
+            }))
+        }
+        TAG_SPARSE => {
+            let perm = Arc::new(r.usizes()?);
+            let xp = Arc::new(r.points()?);
+            let k = r_csc(r)?;
+            let symbolic = r_symbolic(r)?;
+            let factor = r_factor(r, symbolic.clone())?;
+            let sites = r_sites(r)?;
+            let log_z = r.f64()?;
+            let mu = r.f64s()?;
+            let sigma_diag = r.f64s()?;
+            let w_pred = r.f64s()?;
+            let sweeps = r.usize()?;
+            let converged = r.bool()?;
+            let fill_k = r.f64()?;
+            let fill_l = r.f64()?;
+            let n = symbolic.n;
+            check_n(
+                n,
+                &[
+                    perm.len(),
+                    xp.len(),
+                    k.n_rows,
+                    k.n_cols,
+                    sites.tau.len(),
+                    mu.len(),
+                    sigma_diag.len(),
+                    w_pred.len(),
+                ],
+            )?;
+            Ok(Backend::Sparse(SparseEp {
+                perm,
+                xp,
+                k,
+                symbolic,
+                factor,
+                sites,
+                log_z,
+                mu,
+                sigma_diag,
+                w_pred,
+                sweeps,
+                converged,
+                fill_k,
+                fill_l,
+            }))
+        }
+        TAG_PARALLEL => {
+            let perm = Arc::new(r.usizes()?);
+            let xp = Arc::new(r.points()?);
+            let k = r_csc(r)?;
+            let symbolic = r_symbolic(r)?;
+            let factor = r_factor(r, symbolic)?;
+            let sites = r_sites(r)?;
+            let log_z = r.f64()?;
+            let mu = r.f64s()?;
+            let w_pred = r.f64s()?;
+            let sweeps = r.usize()?;
+            let converged = r.bool()?;
+            let n = factor.symbolic.n;
+            check_n(
+                n,
+                &[perm.len(), xp.len(), k.n_rows, k.n_cols, sites.tau.len(), mu.len(), w_pred.len()],
+            )?;
+            Ok(Backend::Parallel(ParallelEp {
+                perm,
+                xp,
+                k,
+                factor,
+                sites,
+                log_z,
+                mu,
+                sweeps,
+                converged,
+                w_pred,
+            }))
+        }
+        TAG_FIC => {
+            let xu = r.points()?;
+            let sites = r_sites(r)?;
+            let log_z = r.f64()?;
+            let mu = r.f64s()?;
+            let sigma_diag = r.f64s()?;
+            let sweeps = r.usize()?;
+            let converged = r.bool()?;
+            let u = r_dense(r)?;
+            let luu = r_chol(r)?;
+            let p_mean = r.f64s()?;
+            let g_var = r_dense(r)?;
+            let n = sites.tau.len();
+            let m = xu.len();
+            check_n(n, &[mu.len(), sigma_diag.len(), u.n_rows])?;
+            if u.n_cols != m || luu.n != m || p_mean.len() != m || g_var.n_rows != m {
+                return Err(SnapshotError::Corrupted("FIC low-rank blocks disagree on m".into()));
+            }
+            Ok(Backend::Fic(FicEp::from_saved(
+                xu, sites, log_z, mu, sigma_diag, sweeps, converged, u, luu, p_mean, g_var,
+            )))
+        }
+        TAG_CSFIC => {
+            let perm = Arc::new(r.usizes()?);
+            let xp = Arc::new(r.points()?);
+            let global = r_cov(r)?;
+            let cs = r_cov(r)?;
+            let cov = AdditiveCov::new(global, cs).map_err(SnapshotError::Corrupted)?;
+            let k_cs = r_csc(r)?;
+            let lambda = r.f64s()?;
+            let xu = r.points()?;
+            let sites = r_sites(r)?;
+            let log_z = r.f64()?;
+            let mu = r.f64s()?;
+            let sigma_diag = r.f64s()?;
+            let w_pred = r.f64s()?;
+            let sweeps = r.usize()?;
+            let converged = r.bool()?;
+            let fill_k = r.f64()?;
+            let fill_l = r.f64()?;
+            let luu = r_chol(r)?;
+            let symbolic = r_symbolic(r)?;
+            let factor = r_factor(r, symbolic)?;
+            let u = r_dense(r)?;
+            let w = r_dense(r)?;
+            let m1 = r_dense(r)?;
+            let cap = r_chol(r)?;
+            let p_mean = r.f64s()?;
+            let m2 = r_dense(r)?;
+            let n = factor.symbolic.n;
+            let m = xu.len();
+            check_n(
+                n,
+                &[
+                    perm.len(),
+                    xp.len(),
+                    k_cs.n_rows,
+                    k_cs.n_cols,
+                    lambda.len(),
+                    sites.tau.len(),
+                    mu.len(),
+                    sigma_diag.len(),
+                    w_pred.len(),
+                    u.n_rows,
+                    w.n_rows,
+                ],
+            )?;
+            let blocks_ok = luu.n == m
+                && u.n_cols == m
+                && w.n_cols == m
+                && m1.n_rows == m
+                && m1.n_cols == m
+                && cap.n == m
+                && p_mean.len() == m
+                && m2.n_rows == m
+                && m2.n_cols == m;
+            if !blocks_ok {
+                return Err(SnapshotError::Corrupted(
+                    "CS+FIC low-rank blocks disagree on m".into(),
+                ));
+            }
+            let solver = SparseLowRank { factor, u, w, m1, cap };
+            Ok(Backend::CsFic(CsFicEp::from_saved(
+                perm, xp, cov, k_cs, lambda, xu, sites, log_z, mu, sigma_diag, w_pred, sweeps,
+                converged, fill_k, fill_l, luu, solver, p_mean, m2,
+            )))
+        }
+        other => Err(SnapshotError::BadBackendTag(other)),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Container
+// ---------------------------------------------------------------------------
+
+/// Parse + verify the container: magic, version, tag, length, checksum.
+/// Returns the backend tag and the checksum-verified payload slice.
+fn parse_container(bytes: &[u8]) -> Result<(u8, &[u8]), SnapshotError> {
+    if bytes.len() < MAGIC.len() || &bytes[..MAGIC.len()] != MAGIC {
+        return Err(SnapshotError::BadMagic);
+    }
+    if bytes.len() < HEADER_LEN {
+        return Err(SnapshotError::Truncated);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != VERSION {
+        return Err(SnapshotError::UnsupportedVersion(version));
+    }
+    let tag = bytes[12];
+    tag_name(tag)?;
+    let payload_len = u64::from_le_bytes(bytes[13..21].try_into().unwrap());
+    let checksum = u64::from_le_bytes(bytes[21..29].try_into().unwrap());
+    let body = &bytes[HEADER_LEN..];
+    if (body.len() as u64) < payload_len {
+        return Err(SnapshotError::Truncated);
+    }
+    if (body.len() as u64) > payload_len {
+        return Err(SnapshotError::Corrupted("trailing bytes after payload".into()));
+    }
+    if fnv1a(body) != checksum {
+        return Err(SnapshotError::ChecksumMismatch);
+    }
+    Ok((tag, body))
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+/// Serialize `fitted` to `path`, atomically: the bytes land in a
+/// `<path>.tmp` sibling first and are `rename`d into place only once
+/// fully written and synced. On any failure — including an injected
+/// `io@snapshot.save` fault — the temp file is removed and the
+/// destination is left exactly as it was.
+pub fn save(fitted: &FittedClassifier, path: &Path) -> Result<(), SnapshotError> {
+    let mut payload = Vec::new();
+    w_cov(&mut payload, &fitted.cov);
+    w_points(&mut payload, &fitted.x);
+    w_f64s(&mut payload, &fitted.y);
+    w_report(&mut payload, &fitted.report);
+    w_backend(&mut payload, &fitted.backend);
+
+    let mut bytes = Vec::with_capacity(HEADER_LEN + payload.len());
+    bytes.extend_from_slice(MAGIC);
+    w_u32(&mut bytes, VERSION);
+    bytes.push(backend_tag(&fitted.backend));
+    w_u64(&mut bytes, payload.len() as u64);
+    w_u64(&mut bytes, fnv1a(&payload));
+    bytes.extend_from_slice(&payload);
+
+    let tmp = tmp_path(path);
+    let write_all = |bytes: &[u8]| -> std::io::Result<()> {
+        let mut f = fs::File::create(&tmp)?;
+        // An injected fault models a crash mid-write: half the bytes
+        // land in the temp file and the operation errors out before the
+        // publishing rename.
+        if crate::fault::should_fail_io("snapshot.save") {
+            f.write_all(&bytes[..bytes.len() / 2])?;
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "injected snapshot.save fault",
+            ));
+        }
+        f.write_all(bytes)?;
+        f.sync_all()
+    };
+    if let Err(e) = write_all(&bytes) {
+        let _ = fs::remove_file(&tmp);
+        return Err(SnapshotError::Io(e.to_string()));
+    }
+    if let Err(e) = fs::rename(&tmp, path) {
+        let _ = fs::remove_file(&tmp);
+        return Err(SnapshotError::Io(e.to_string()));
+    }
+    crate::obs::counters::SNAPSHOT_SAVES.add(1);
+    Ok(())
+}
+
+/// Load a snapshot into a predict-ready [`FittedClassifier`]. The stored
+/// factors, permutations and posterior blocks are restored verbatim —
+/// no symbolic analysis, no numeric factorization, no EP sweeps.
+pub fn load(path: &Path) -> Result<FittedClassifier, SnapshotError> {
+    let bytes = fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    let (tag, payload) = parse_container(&bytes)?;
+    let mut r = Reader::new(payload);
+    let cov = r_cov(&mut r)?;
+    let x = r.points()?;
+    let y = r.f64s()?;
+    let report = r_report(&mut r)?;
+    let backend = r_backend(&mut r, tag)?;
+    if !r.is_empty() {
+        return Err(SnapshotError::Corrupted("unread payload bytes".into()));
+    }
+    if x.len() != y.len() {
+        return Err(SnapshotError::Corrupted("x/y length mismatch".into()));
+    }
+    crate::obs::counters::SNAPSHOT_LOADS.add(1);
+    Ok(FittedClassifier { cov, x, y, backend, report })
+}
+
+/// Compatibility probe: validate the container (magic, version, backend
+/// tag, length, checksum) without decoding the payload into model state.
+pub fn probe(path: &Path) -> Result<SnapshotInfo, SnapshotError> {
+    let bytes = fs::read(path).map_err(|e| SnapshotError::Io(e.to_string()))?;
+    let (tag, payload) = parse_container(&bytes)?;
+    Ok(SnapshotInfo {
+        version: VERSION,
+        backend: tag_name(tag)?,
+        payload_len: payload.len() as u64,
+    })
+}
+
+impl FittedClassifier {
+    /// [`snapshot::save`](save) as a method.
+    pub fn save_snapshot(&self, path: &Path) -> Result<(), SnapshotError> {
+        save(self, path)
+    }
+
+    /// [`snapshot::load`](load) as a method.
+    pub fn load_snapshot(path: &Path) -> Result<FittedClassifier, SnapshotError> {
+        load(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::model::{GpClassifier, Inference};
+    use crate::gp::covariance::{CovFunction, CovKind};
+    use crate::sparse::ordering::Ordering;
+    use crate::testutil::random_points;
+
+    fn blob_data(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let x = random_points(n, 2, 6.0, seed);
+        let y: Vec<f64> = x
+            .iter()
+            .map(|p| if (p[0] - 3.0).hypot(p[1] - 3.0) < 2.0 { 1.0 } else { -1.0 })
+            .collect();
+        (x, y)
+    }
+
+    fn tmp_file(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("csgp-snapshot-tests");
+        fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}-{}.snap", std::process::id()))
+    }
+
+    fn fit_sparse(n: usize, seed: u64) -> FittedClassifier {
+        let (x, y) = blob_data(n, seed);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 0.8, 1.6);
+        let model = GpClassifier::new(cov, Inference::Sparse(Ordering::Auto));
+        model.infer_only(&x, &y).unwrap()
+    }
+
+    #[test]
+    fn sparse_roundtrip_is_bitwise() {
+        let fitted = fit_sparse(90, 5);
+        let path = tmp_file("sparse-roundtrip");
+        fitted.save_snapshot(&path).unwrap();
+        let loaded = FittedClassifier::load_snapshot(&path).unwrap();
+        let xs = random_points(25, 2, 6.0, 99);
+        let want = fitted.predict_latent_batch(&xs);
+        let got = loaded.predict_latent_batch(&xs);
+        for (w, g) in want.iter().zip(&got) {
+            assert_eq!(w.0.to_bits(), g.0.to_bits(), "mean must round-trip bitwise");
+            assert_eq!(w.1.to_bits(), g.1.to_bits(), "variance must round-trip bitwise");
+        }
+        assert_eq!(fitted.report.log_z, loaded.report.log_z);
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn probe_reports_backend_without_decoding() {
+        let fitted = fit_sparse(60, 7);
+        let path = tmp_file("probe");
+        fitted.save_snapshot(&path).unwrap();
+        let info = probe(&path).unwrap();
+        assert_eq!(info.version, VERSION);
+        assert_eq!(info.backend, "sparse");
+        assert!(info.payload_len > 0);
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupted_truncated_and_foreign_files_yield_typed_errors() {
+        let fitted = fit_sparse(60, 11);
+        let path = tmp_file("corrupt");
+        fitted.save_snapshot(&path).unwrap();
+        let good = fs::read(&path).unwrap();
+
+        // flip one payload byte -> checksum mismatch
+        let mut bad = good.clone();
+        let i = HEADER_LEN + bad[HEADER_LEN..].len() / 2;
+        bad[i] ^= 0xff;
+        fs::write(&path, &bad).unwrap();
+        assert_eq!(load(&path).unwrap_err(), SnapshotError::ChecksumMismatch);
+
+        // truncate -> Truncated
+        fs::write(&path, &good[..good.len() / 2]).unwrap();
+        assert_eq!(load(&path).unwrap_err(), SnapshotError::Truncated);
+
+        // foreign file -> BadMagic
+        fs::write(&path, b"definitely not a snapshot").unwrap();
+        assert_eq!(load(&path).unwrap_err(), SnapshotError::BadMagic);
+
+        // future version -> UnsupportedVersion
+        let mut future = good.clone();
+        future[8..12].copy_from_slice(&99u32.to_le_bytes());
+        fs::write(&path, &future).unwrap();
+        assert_eq!(load(&path).unwrap_err(), SnapshotError::UnsupportedVersion(99));
+
+        // unknown backend tag -> BadBackendTag
+        let mut tagged = good.clone();
+        tagged[12] = 42;
+        fs::write(&path, &tagged).unwrap();
+        assert_eq!(load(&path).unwrap_err(), SnapshotError::BadBackendTag(42));
+
+        fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn injected_save_fault_leaves_no_file_behind() {
+        let fitted = fit_sparse(60, 13);
+        let path = tmp_file("fault");
+        let _ = fs::remove_file(&path);
+        crate::fault::with_plan(crate::fault::Plan::new().io("snapshot.save"), || {
+            let err = fitted.save_snapshot(&path).unwrap_err();
+            assert!(matches!(err, SnapshotError::Io(_)), "got {err:?}");
+        });
+        assert!(!path.exists(), "failed save must not leave a destination file");
+        assert!(!tmp_path(&path).exists(), "failed save must clean up its temp file");
+        // the very next save (fault consumed) succeeds and is loadable
+        fitted.save_snapshot(&path).unwrap();
+        assert!(FittedClassifier::load_snapshot(&path).is_ok());
+        fs::remove_file(&path).unwrap();
+    }
+}

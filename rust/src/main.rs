@@ -3,13 +3,20 @@
 //!
 //! Subcommands (argument parsing is hand-rolled; no clap offline):
 //!
-//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic|csfic>] [--ordering <natural|rcm|mindeg|nd|auto>] [--optimize]`
+//! * `train     --data <cluster2d|cluster5d|uci:<name>> --n <n> --cov <se|pp0..3> [--inference <dense|sparse|parallel|fic|csfic>] [--ordering <natural|rcm|mindeg|nd|auto>] [--optimize] [--snapshot-save <path>]`
 //!   (`csfic` pairs the compact `--cov` with a global SE term;
 //!   `--global-lengthscale` and `--m` tune the hybrid; `--ordering`
 //!   defaults to `auto` — the pattern-statistics policy — and applies to
-//!   every sparse-factorization backend, `csfic` included)
+//!   every sparse-factorization backend, `csfic` included;
+//!   `--snapshot-save` persists the fitted model to a versioned binary
+//!   snapshot)
 //! * `cv        --data uci:<name> --cov pp3 --folds 10`
-//! * `serve     --n <train size> [--requests <r>] [--batch <b>]` — demo server + load
+//! * `serve     --n <train size> [--requests <r>] [--batch <b>] [--queue <capacity>] [--snapshot-load <path>] [--online-append <k>]` — demo server + load
+//!   (`--snapshot-load` serves a previously saved model instead of
+//!   fitting; `--online-append` absorbs k fresh points through the
+//!   incremental EP update before serving — the model/cov flags must
+//!   match the snapshot's configuration for the fast paths to engage)
+//! * `snapshot  --probe <path>` — validate a snapshot container (magic, version, checksum) and report its backend
 //! * `artifacts-check` — verify the PJRT artifacts load and agree with native code
 //! * `fill      --n <n> --dim <2|5> --cov pp3` — fill-K/fill-L statistics (Table 1)
 
@@ -21,7 +28,7 @@ use csgp::coordinator::{PredictionService, ServiceConfig};
 use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
 use csgp::data::{cv, uci, Dataset};
 use csgp::gp::covariance::{CovFunction, CovKind};
-use csgp::gp::model::{GpClassifier, Inference};
+use csgp::gp::model::{FittedClassifier, GpClassifier, Inference};
 use csgp::rng::Rng;
 use csgp::runtime::Runtime;
 use csgp::sparse::ordering::Ordering;
@@ -124,6 +131,12 @@ fn cmd_train(flags: HashMap<String, String>) -> Result<(), String> {
         fitted.report.ep_time
     );
     println!("test err = {:.4}  nlpd = {:.4}  (n_test = {})", m.err, m.nlpd, m.n);
+    if let Some(path) = flags.get("snapshot-save") {
+        fitted
+            .save_snapshot(std::path::Path::new(path))
+            .map_err(|e| format!("snapshot save failed: {e}"))?;
+        println!("snapshot saved to {path}");
+    }
     Ok(())
 }
 
@@ -146,10 +159,48 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
     let n: usize = flags.get("n").map(|s| s.parse().unwrap()).unwrap_or(500);
     let requests: usize = flags.get("requests").map(|s| s.parse().unwrap()).unwrap_or(2000);
     let batch: usize = flags.get("batch").map(|s| s.parse().unwrap()).unwrap_or(256);
-    let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
-    let model = build_model(&flags, 2)?;
-    println!("fitting serving model on n={n}...");
-    let fitted = Arc::new(model.infer_only(&data.x, &data.y)?);
+    let queue: usize = flags
+        .get("queue")
+        .map(|s| s.parse().unwrap())
+        .unwrap_or(ServiceConfig::default().queue_capacity);
+    let mut fitted = if let Some(path) = flags.get("snapshot-load") {
+        let path = std::path::Path::new(path);
+        let info =
+            csgp::gp::snapshot::probe(path).map_err(|e| format!("snapshot probe failed: {e}"))?;
+        println!(
+            "loading snapshot {} (v{}, backend {}, {} payload bytes)",
+            path.display(),
+            info.version,
+            info.backend,
+            info.payload_len
+        );
+        FittedClassifier::load_snapshot(path).map_err(|e| format!("snapshot load failed: {e}"))?
+    } else {
+        let data = cluster_dataset(&ClusterConfig::paper_2d(n), 7);
+        let model = build_model(&flags, 2)?;
+        println!("fitting serving model on n={n}...");
+        model.infer_only(&data.x, &data.y)?
+    };
+    if let Some(k) = flags.get("online-append") {
+        let k: usize = k.parse().map_err(|_| "bad --online-append".to_string())?;
+        let dim = fitted.x.first().map(Vec::len).unwrap_or(2);
+        if dim != 2 {
+            return Err("--online-append demo generates 2-d cluster points".into());
+        }
+        let extra = cluster_dataset(&ClusterConfig::paper_2d(k), 99);
+        let model = build_model(&flags, dim)?;
+        let (updated, rep) = model.update(&fitted, &extra.x, &extra.y)?;
+        println!(
+            "online update: +{} points via {:?} in {:?} ({} sweeps, n now {})",
+            rep.k_new,
+            rep.path,
+            rep.update_time,
+            rep.sweeps,
+            updated.x.len()
+        );
+        fitted = updated;
+    }
+    let fitted = Arc::new(fitted);
     let artifact_dir = std::path::PathBuf::from(
         std::env::var("CSGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string()),
     );
@@ -161,7 +212,11 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
     let svc = Arc::new(PredictionService::start(
         fitted,
         artifacts,
-        ServiceConfig { max_batch: batch, max_wait: Duration::from_millis(2) },
+        ServiceConfig {
+            max_batch: batch,
+            max_wait: Duration::from_millis(2),
+            queue_capacity: queue,
+        },
     ));
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
@@ -193,13 +248,30 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
         total as f64 / wall.as_secs_f64()
     );
     println!(
-        "latency p50 = {:?}  p90 = {:?}  p99 = {:?}  max batch = {}",
+        "latency p50 = {:?}  p90 = {:?}  p99 = {:?}  max batch = {}  rejected = {}",
         stats.p50,
         stats.p90,
         stats.p99,
-        svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed)
+        svc.stats.batched_items_max.load(std::sync::atomic::Ordering::Relaxed),
+        svc.stats.rejected.load(std::sync::atomic::Ordering::Relaxed)
     );
+    if let Some(b) = svc.stats.batch_latency_stats() {
+        println!("batch compute p50 = {:?}  p99 = {:?}  over {} batches", b.p50, b.p99, b.iters);
+    }
     svc.shutdown();
+    Ok(())
+}
+
+fn cmd_snapshot(flags: HashMap<String, String>) -> Result<(), String> {
+    let Some(path) = flags.get("probe") else {
+        return Err("snapshot: expected --probe <path>".into());
+    };
+    let info = csgp::gp::snapshot::probe(std::path::Path::new(path))
+        .map_err(|e| format!("snapshot probe failed: {e}"))?;
+    println!(
+        "{path}: version {} backend {} payload {} bytes (checksum OK)",
+        info.version, info.backend, info.payload_len
+    );
     Ok(())
 }
 
@@ -286,7 +358,7 @@ fn cmd_profile(flags: HashMap<String, String>) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: csgp <train|cv|serve|artifacts-check|fill> [--flags ...]\n\
+        "usage: csgp <train|cv|serve|snapshot|artifacts-check|fill> [--flags ...]\n\
          see rust/src/main.rs header for the flag reference"
     );
     std::process::exit(2);
@@ -311,6 +383,7 @@ fn main() {
         "train" => cmd_train(flags),
         "cv" => cmd_cv(flags),
         "serve" => cmd_serve(flags),
+        "snapshot" => cmd_snapshot(flags),
         "artifacts-check" => cmd_artifacts_check(),
         "fill" => cmd_fill(flags),
         "profile" => cmd_profile(flags),

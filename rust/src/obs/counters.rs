@@ -135,6 +135,21 @@ pub static JOBS_FAILED: Counter = Counter::new();
 /// headroom, a damped sequential sweep, or the dense fallback.
 pub static JOB_RETRIES: Counter = Counter::new();
 
+// --- online serving ---------------------------------------------------------
+
+/// Online `GpClassifier::update` calls that resumed from the old fixed
+/// point (factor embed + partial sweep, or a warm-started run).
+pub static ONLINE_UPDATES: Counter = Counter::new();
+/// Online updates that fell back to a cold refit on the union (backend
+/// without an incremental path, oversized batch, or a failed resume).
+pub static ONLINE_REFITS: Counter = Counter::new();
+/// Model snapshots written (after the atomic rename).
+pub static SNAPSHOT_SAVES: Counter = Counter::new();
+/// Model snapshots successfully loaded into a predict-ready model.
+pub static SNAPSHOT_LOADS: Counter = Counter::new();
+/// Prediction requests rejected by admission control (queue full).
+pub static SVC_REJECTED: Counter = Counter::new();
+
 // --- fault injection --------------------------------------------------------
 
 /// Faults actually fired by an installed [`crate::fault::Plan`] (zero
@@ -179,6 +194,11 @@ pub struct Snapshot {
     pub jobs_done: u64,
     pub jobs_failed: u64,
     pub job_retries: u64,
+    pub online_updates: u64,
+    pub online_refits: u64,
+    pub snapshot_saves: u64,
+    pub snapshot_loads: u64,
+    pub svc_rejected: u64,
     pub faults_injected: u64,
 }
 
@@ -206,6 +226,11 @@ pub fn snapshot() -> Snapshot {
         jobs_done: JOBS_DONE.get(),
         jobs_failed: JOBS_FAILED.get(),
         job_retries: JOB_RETRIES.get(),
+        online_updates: ONLINE_UPDATES.get(),
+        online_refits: ONLINE_REFITS.get(),
+        snapshot_saves: SNAPSHOT_SAVES.get(),
+        snapshot_loads: SNAPSHOT_LOADS.get(),
+        svc_rejected: SVC_REJECTED.get(),
         faults_injected: FAULTS_INJECTED.get(),
     }
 }
@@ -235,6 +260,11 @@ pub fn reset_all() {
         &JOBS_DONE,
         &JOBS_FAILED,
         &JOB_RETRIES,
+        &ONLINE_UPDATES,
+        &ONLINE_REFITS,
+        &SNAPSHOT_SAVES,
+        &SNAPSHOT_LOADS,
+        &SVC_REJECTED,
         &FAULTS_INJECTED,
     ] {
         c.reset();
@@ -283,6 +313,12 @@ pub fn summary() -> String {
         out,
         "  jobs: done={} failed={} retries={}",
         s.jobs_done, s.jobs_failed, s.job_retries
+    );
+    let _ = writeln!(
+        out,
+        "  serving: online_updates={} online_refits={} snapshot_saves={} \
+         snapshot_loads={} rejected={}",
+        s.online_updates, s.online_refits, s.snapshot_saves, s.snapshot_loads, s.svc_rejected
     );
     if s.faults_injected > 0 {
         let _ = writeln!(out, "  fault: injected={}", s.faults_injected);

@@ -160,6 +160,68 @@ impl LdlFactor {
         self.symbolic.n
     }
 
+    /// Embed an existing factor of `B_old` (n_old × n_old) into a larger
+    /// analysis whose leading n_old columns/rows describe the same matrix
+    /// — the online-update fast path. Appended EP sites start at τ̃ = 0,
+    /// so the extended `B = I + S̃^{1/2} K S̃^{1/2}` is exactly
+    /// `diag(B_old, I_k)`: its LDLᵀ factor is the old factor's values in
+    /// the new layout plus an identity tail, *pure data movement* — no
+    /// numeric factorization, no pivoting. The subsequent partial EP
+    /// sweep then revises the new rows/columns through
+    /// [`LdlFactor::ldl_row_modify`].
+    ///
+    /// Why the copy is exact:
+    ///
+    /// * the leading principal block of an LDLᵀ factor depends only on
+    ///   the leading principal block of the matrix, and block-diagonal
+    ///   input gives a block-diagonal factor — every entry outside the
+    ///   old block is structurally zero;
+    /// * old-pattern positions absent from the new pattern hold exact
+    ///   `±0.0` (structural zeros and amalgamation padding are computed
+    ///   as `0/d` from all-zero products — pinned by
+    ///   `padded_entries_are_exactly_zero`), so dropping them loses
+    ///   nothing;
+    /// * new-pattern positions absent from the old pattern (new-point
+    ///   rows, fresh padding) are true zeros of `diag(B_old, I)`'s
+    ///   factor.
+    ///
+    /// The per-column merge walks both sorted row lists once — `O(nnz)`.
+    /// `symbolic.n` must be ≥ the old factor's n, and the leading columns
+    /// of the new pattern must describe the same matrix values (the
+    /// caller guarantees this by building the extended pattern from the
+    /// same covariance on the same leading points).
+    pub fn embed(old: &LdlFactor, symbolic: Arc<Symbolic>) -> LdlFactor {
+        let n_old = old.n();
+        let n = symbolic.n;
+        assert!(n >= n_old, "embed target must not shrink ({n} < {n_old})");
+        let mut f = LdlFactor::identity(symbolic);
+        f.d[..n_old].copy_from_slice(&old.d);
+        f.jitter = old.jitter;
+        let osym = &old.symbolic;
+        let nsym = f.symbolic.clone();
+        for j in 0..n_old {
+            let orows = osym.col_pattern(j);
+            let ovals = &old.l[osym.col_ptr[j]..osym.col_ptr[j + 1]];
+            let nrows = nsym.col_pattern(j);
+            let nbase = nsym.col_ptr[j];
+            let (mut op, mut np) = (0usize, 0usize);
+            while op < orows.len() && np < nrows.len() {
+                match orows[op].cmp(&nrows[np]) {
+                    std::cmp::Ordering::Equal => {
+                        f.l[nbase + np] = ovals[op];
+                        op += 1;
+                        np += 1;
+                    }
+                    // old-only position: exact 0.0 in the old factor
+                    std::cmp::Ordering::Less => op += 1,
+                    // new-only position: structurally zero here
+                    std::cmp::Ordering::Greater => np += 1,
+                }
+            }
+        }
+        f
+    }
+
     /// Re-run the numeric factorization of `a` in place — the supernodal,
     /// wave-scheduled kernel (see the module docs). Supernodes of one
     /// assembly-tree wave are independent tasks dispatched over
@@ -767,6 +829,65 @@ mod tests {
             *k.get_mut(j, j) += 1.0;
         }
         k
+    }
+
+    /// The online-update embed: a factor of `B_old` copied into the
+    /// analysis of the extended matrix `diag(B_old, I_k)` (the exact
+    /// shape appended τ̃ = 0 EP sites produce — the cross-block pattern
+    /// entries exist but hold zero values) matches a direct factorization
+    /// of the extended matrix, with exactly-zero new rows/columns and an
+    /// identity tail — no numeric factorization happened.
+    #[test]
+    fn embed_matches_direct_factor_of_block_extended_matrix() {
+        use crate::gp::covariance::{CovFunction, CovKind};
+        use crate::testutil::random_points;
+        let (n_old, k) = (90usize, 7usize);
+        let x = random_points(n_old + k, 2, 8.0, 17);
+        let cov = CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.2);
+        let tau = |i: usize| if i < n_old { 0.4 + (i % 5) as f64 * 0.3 } else { 0.0 };
+        let scale = |kmat: &CscMatrix| {
+            let mut b = kmat.clone();
+            for j in 0..b.n_cols {
+                for p in b.col_ptr[j]..b.col_ptr[j + 1] {
+                    let i = b.row_idx[p];
+                    let v = tau(i).sqrt() * tau(j).sqrt() * b.values[p];
+                    b.values[p] = if i == j { 1.0 + v } else { v };
+                }
+            }
+            b
+        };
+        let b_old = scale(&cov.cov_matrix(&x[..n_old]));
+        let b_ext = scale(&cov.cov_matrix(&x));
+        let sym_old = Arc::new(Symbolic::analyze(&b_old));
+        let sym_ext = Arc::new(Symbolic::analyze(&b_ext));
+        let f_old = LdlFactor::factor(sym_old, &b_old).unwrap();
+        let embedded = LdlFactor::embed(&f_old, sym_ext.clone());
+        let direct = LdlFactor::factor(sym_ext.clone(), &b_ext).unwrap();
+        for j in 0..n_old + k {
+            for (p, &i) in sym_ext.col_pattern(j).iter().enumerate() {
+                let (e, d) = (
+                    embedded.l[sym_ext.col_ptr[j] + p],
+                    direct.l[sym_ext.col_ptr[j] + p],
+                );
+                if i >= n_old || j >= n_old {
+                    assert_eq!(e, 0.0, "new row/col entry ({i},{j}) must be zero");
+                    assert_eq!(d, 0.0, "direct factor disagrees at ({i},{j})");
+                } else {
+                    assert!((e - d).abs() < 1e-12, "({i},{j}): {e} vs {d}");
+                }
+            }
+        }
+        for j in 0..n_old {
+            assert!((embedded.d[j] - direct.d[j]).abs() < 1e-12, "d[{j}]");
+        }
+        assert_eq!(&embedded.d[n_old..], &vec![1.0; k][..], "identity tail");
+        // and the embedded factor actually solves the extended system
+        let rhs: Vec<f64> = (0..n_old + k).map(|i| 0.3 + (i % 7) as f64).collect();
+        let xs = embedded.solve(&rhs);
+        let back = b_ext.matvec(&xs);
+        for (a, b) in back.iter().zip(&rhs) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
     }
 
     /// The supernodal wave-scheduled kernel against the up-looking serial

@@ -112,8 +112,11 @@ impl SparseLowRank {
     /// sparse step scales with the pool like its W-column solves do. The
     /// low-rank blocks (`W`, `M₁`, the capacitance factor) are recomputed
     /// from scratch — they depend on every entry of the new factor, so
-    /// there is nothing incremental to salvage (`O(m·nnz(L) + n·m²)` per
-    /// call, and the old buffers are freed as the new ones land).
+    /// when `S` changes there is nothing incremental to salvage
+    /// (`O(m·nnz(L) + n·m²)` per call, and the old buffers are freed as
+    /// the new ones land). When `S` is *unchanged* and only a few rows of
+    /// `U` moved, [`SparseLowRank::update_rows`] revises the blocks
+    /// incrementally instead.
     pub fn refresh(&mut self, s: &CscMatrix, u: DenseMatrix) -> Result<(), String> {
         assert_eq!(u.n_rows, self.factor.n());
         assert_eq!(u.n_cols, self.u.n_cols, "rank m must not change across refresh");
@@ -123,6 +126,101 @@ impl SparseLowRank {
         self.w = w;
         self.m1 = m1;
         self.cap = cap;
+        Ok(())
+    }
+
+    /// Incrementally revise `B = S + U Uᵀ` after a *row-sparse* change of
+    /// `U`: row `rows[t]` takes the values `new_rows[t]` (each `m` wide);
+    /// `S` — and therefore the sparse LDLᵀ factor — is unchanged. This is
+    /// the online-serving currency: an EP site update at `k ≪ n` appended
+    /// or revised sites moves only those rows of `Us = S̃^{1/2} U`.
+    ///
+    /// With `ΔU` supported on `k = rows.len()` rows,
+    ///
+    /// ```text
+    /// W  += S⁻¹ ΔU                      (m solves, no refactorization)
+    /// M₁ += A + Aᵀ + ΔUᵀ S⁻¹ ΔU,   A = ΔUᵀ W_old   (O(k·m²))
+    /// cap = chol(I + M₁)                (O(m³))
+    /// ```
+    ///
+    /// versus [`SparseLowRank::refresh`]'s full numeric refactorization
+    /// plus `O(n·m²)` block rebuild. Row indices must be in-bounds and
+    /// distinct (duplicates would double-count the rank-k correction).
+    pub fn update_rows(&mut self, rows: &[usize], new_rows: &[Vec<f64>]) -> Result<(), String> {
+        let (n, m) = (self.u.n_rows, self.u.n_cols);
+        assert_eq!(rows.len(), new_rows.len(), "one replacement row per index");
+        // ΔU on the touched rows
+        let mut delta: Vec<Vec<f64>> = Vec::with_capacity(rows.len());
+        for (&i, row) in rows.iter().zip(new_rows) {
+            assert!(i < n, "row {i} out of bounds for n = {n}");
+            assert_eq!(row.len(), m, "replacement rows must be m wide");
+            delta.push((0..m).map(|a| row[a] - self.u.at(i, a)).collect());
+        }
+        // A = ΔUᵀ W_old — read before W moves
+        let mut amat = DenseMatrix::zeros(m, m);
+        for (d, &i) in delta.iter().zip(rows) {
+            let wrow = self.w.row(i);
+            for p in 0..m {
+                for q in 0..m {
+                    *amat.at_mut(p, q) += d[p] * wrow[q];
+                }
+            }
+        }
+        // ΔW = S⁻¹ ΔU: one k-nonzero RHS per column against the existing
+        // factor, fanned out like the full build in `low_rank_parts`.
+        let mut dw = DenseMatrix::zeros(n, m);
+        {
+            let dwd = SyncSlice::new(&mut dw.data);
+            crate::par::for_chunks(
+                m,
+                1,
+                || vec![0.0; n],
+                |col, range| {
+                    for a in range {
+                        for c in col.iter_mut() {
+                            *c = 0.0;
+                        }
+                        for (d, &i) in delta.iter().zip(rows) {
+                            col[i] = d[a];
+                        }
+                        self.factor.solve_in_place(col);
+                        for (i, &c) in col.iter().enumerate() {
+                            // SAFETY: column a's slots (stride m) belong
+                            // to exactly this chunk.
+                            unsafe { dwd.set(i * m + a, c) };
+                        }
+                    }
+                },
+            );
+        }
+        // ΔUᵀ ΔW touches only the k revised rows
+        let mut dd = DenseMatrix::zeros(m, m);
+        for (d, &i) in delta.iter().zip(rows) {
+            let dwrow = dw.row(i);
+            for p in 0..m {
+                for q in 0..m {
+                    *dd.at_mut(p, q) += d[p] * dwrow[q];
+                }
+            }
+        }
+        // merge the revision
+        for (row, &i) in new_rows.iter().zip(rows) {
+            for (a, &v) in row.iter().enumerate() {
+                *self.u.at_mut(i, a) = v;
+            }
+        }
+        for (wv, &dv) in self.w.data.iter_mut().zip(&dw.data) {
+            *wv += dv;
+        }
+        for p in 0..m {
+            for q in 0..m {
+                *self.m1.at_mut(p, q) += amat.at(p, q) + amat.at(q, p) + dd.at(p, q);
+            }
+        }
+        let mut c = self.m1.clone();
+        c.add_diag(1.0);
+        self.cap =
+            c.cholesky().map_err(|e| format!("capacitance after row update: {e}"))?;
         Ok(())
     }
 
@@ -430,6 +528,54 @@ mod tests {
                 slr.inverse_on_pattern_into(&s, &mut scratch, &mut out)
             });
             assert_eq!(out, serial, "width {width}");
+        }
+    }
+
+    /// The online-update primitive against the from-scratch oracle: a
+    /// row-sparse revision of `U` through `update_rows` must agree with a
+    /// fresh construction at the revised `U` — solve, logdet and the
+    /// capacitance blocks all flow through the updated `W`/`M₁`.
+    #[test]
+    fn update_rows_matches_fresh_construction() {
+        for seed in 0..4 {
+            let n = 34;
+            let m = 4;
+            let s = random_sparse_spd(n, 0.14, seed + 300);
+            let u1 = random_u(n, m, seed + 300);
+            let sym = Arc::new(Symbolic::analyze(&s));
+            let mut slr = SparseLowRank::new(&s, sym.clone(), u1.clone()).unwrap();
+
+            // revise three rows (one at the boundary), keep S fixed
+            let rows = vec![0usize, 17, n - 1];
+            let mut rng = Rng::new(seed + 11);
+            let new_rows: Vec<Vec<f64>> =
+                rows.iter().map(|_| (0..m).map(|_| rng.normal() * 0.7).collect()).collect();
+            slr.update_rows(&rows, &new_rows).unwrap();
+
+            let mut u2 = u1.clone();
+            for (row, &i) in new_rows.iter().zip(&rows) {
+                for (a, &v) in row.iter().enumerate() {
+                    *u2.at_mut(i, a) = v;
+                }
+            }
+            let fresh = SparseLowRank::new(&s, sym, u2).unwrap();
+            let rhs = random_vec(n, seed + 23);
+            assert_close(&slr.solve(&rhs), &fresh.solve(&rhs), 1e-9, "updated solve");
+            assert!(
+                (slr.logdet() - fresh.logdet()).abs() < 1e-9,
+                "seed {seed}: logdet {} vs {}",
+                slr.logdet(),
+                fresh.logdet()
+            );
+            let (m2a, m2b) = (slr.m2(), fresh.m2());
+            for a in 0..m {
+                for b in 0..m {
+                    assert!(
+                        (m2a.at(a, b) - m2b.at(a, b)).abs() < 1e-9,
+                        "M2 ({a},{b}) after update_rows"
+                    );
+                }
+            }
         }
     }
 

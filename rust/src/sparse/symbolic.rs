@@ -521,6 +521,60 @@ impl Symbolic {
         Symbolic { n, parent, col_ptr, row_idx, nnz_strict, rowmap_ptr, rowmap, schedule, septree }
     }
 
+    /// Reassemble an analysis from its serialized parts (the model
+    /// snapshot loader): the elimination tree, the (possibly padded)
+    /// column pattern, the strict nonzero count and the supernode
+    /// partition are stored verbatim; the derived structures — the row
+    /// map and the wave/source schedule — are deterministic functions of
+    /// them and are rebuilt here in `O(nnz)`, so a loaded factor is
+    /// solve- and refactor-ready without re-running `analyze` (no etree,
+    /// no ereach passes, no amalgamation policy — the snapshot pins the
+    /// exact pattern the factor's values are aligned with). The separator
+    /// tree is not restored: it only accelerates fresh ND *orderings*,
+    /// which a loaded plan never recomputes.
+    pub fn from_parts(
+        n: usize,
+        parent: Vec<usize>,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<usize>,
+        nnz_strict: usize,
+        snode_ptr: Vec<usize>,
+    ) -> Symbolic {
+        assert_eq!(parent.len(), n);
+        assert_eq!(col_ptr.len(), n + 1);
+        assert_eq!(*col_ptr.last().unwrap_or(&0), row_idx.len());
+        let nnz = row_idx.len();
+        let mut rcount = vec![0usize; n + 1];
+        for &i in &row_idx {
+            rcount[i + 1] += 1;
+        }
+        for i in 0..n {
+            rcount[i + 1] += rcount[i];
+        }
+        let rowmap_ptr = rcount.clone();
+        let mut rnext = rcount;
+        let mut rowmap = vec![(0usize, 0usize); nnz];
+        for j in 0..n {
+            for p in col_ptr[j]..col_ptr[j + 1] {
+                let i = row_idx[p];
+                rowmap[rnext[i]] = (j, p);
+                rnext[i] += 1;
+            }
+        }
+        let schedule = SupernodeSchedule::build(&parent, snode_ptr, &col_ptr, &row_idx);
+        Symbolic {
+            n,
+            parent,
+            col_ptr,
+            row_idx,
+            nnz_strict,
+            rowmap_ptr,
+            rowmap,
+            schedule,
+            septree: None,
+        }
+    }
+
     /// Number of nonzeros in L including the diagonal — the *strict*
     /// count (padding excluded), so fill statistics and ordering-quality
     /// comparisons measure true fill regardless of the amalgamation
@@ -788,6 +842,35 @@ mod tests {
                 assert_eq!(s.row_idx[p], i);
                 assert!(s.col_ptr[j] <= p && p < s.col_ptr[j + 1]);
             }
+        }
+    }
+
+    /// The snapshot loader's contract: rebuilding an analysis from its
+    /// serialized parts reproduces every derived structure of the
+    /// original `analyze` exactly (row map, supernode partition, wave
+    /// schedule, source lists).
+    #[test]
+    fn from_parts_reproduces_analyze() {
+        for a in [tridiag(9), cs_pattern(80, 1.8, 5)] {
+            let s = Symbolic::analyze(&a);
+            let r = Symbolic::from_parts(
+                s.n,
+                s.parent.clone(),
+                s.col_ptr.clone(),
+                s.row_idx.clone(),
+                s.nnz_strict,
+                s.schedule.snode_ptr.clone(),
+            );
+            assert_eq!(r.rowmap_ptr, s.rowmap_ptr);
+            assert_eq!(r.rowmap, s.rowmap);
+            assert_eq!(r.schedule.snode_ptr, s.schedule.snode_ptr);
+            assert_eq!(r.schedule.snode_of, s.schedule.snode_of);
+            assert_eq!(r.schedule.sparent, s.schedule.sparent);
+            assert_eq!(r.schedule.wave_snodes, s.schedule.wave_snodes);
+            assert_eq!(r.schedule.wave_ptr, s.schedule.wave_ptr);
+            assert_eq!(r.schedule.src_ptr, s.schedule.src_ptr);
+            assert_eq!(r.schedule.src_snodes, s.schedule.src_snodes);
+            assert_eq!(r.nnz_l(), s.nnz_l());
         }
     }
 

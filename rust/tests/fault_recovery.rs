@@ -166,6 +166,7 @@ fn job_ladder_recovers_from_exhausted_ep_divergence() {
                     global_cov: None,
                     inference: Inference::Sparse(Ordering::Rcm),
                     optimize: false,
+                    snapshot_save: None,
                 })
                 .unwrap();
             let st = mgr.wait(id, std::time::Duration::from_secs(120)).unwrap();
@@ -194,4 +195,121 @@ fn slow_chunk_faults_only_stretch_time_never_results() {
     });
     assert!(slowed.log_z == clean.log_z, "a timing fault changed the result");
     assert_eq!(slowed.mu, clean.mu);
+}
+
+#[test]
+fn online_updates_recover_from_injected_faults() {
+    // Satellite of the serving story: a pivot failure and a NaN site
+    // update injected *during the incremental online update* must travel
+    // the same recovery ladder as a cold fit — the update still converges
+    // to the union fixed point instead of erroring out or drifting.
+    use csgp::gp::model::{GpClassifier, Inference};
+
+    let all = cluster(170, 77);
+    let n_old = 160;
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let fitted = model.infer_only(&all.x[..n_old], &all.y[..n_old]).unwrap();
+    let refit = model.infer_only(&all.x, &all.y).unwrap();
+
+    obs::with_mode(TraceMode::Counters, || {
+        // pivot failure in the embedded factor's first refactor
+        let before = obs::snapshot();
+        let (up, _) = fault::with_plan(Plan::new().pivot(40), || {
+            model.update(&fitted, &all.x[n_old..], &all.y[n_old..]).unwrap()
+        });
+        let after = obs::snapshot();
+        assert!(after.faults_injected - before.faults_injected >= 1, "{after:?}");
+        assert!(
+            after.factor_jitter_retries - before.factor_jitter_retries >= 1
+                || after.online_refits - before.online_refits >= 1,
+            "neither jitter recovery nor refit fallback engaged: {after:?}"
+        );
+        assert!(
+            (up.report.log_z - refit.report.log_z).abs() < 1e-5,
+            "pivot-faulted update drifted: {} vs {}",
+            up.report.log_z,
+            refit.report.log_z
+        );
+
+        // NaN site during the resumed sweep: skip + rollback, then converge
+        let before = obs::snapshot();
+        let (un, _) = fault::with_plan(Plan::new().nan_site(0, 3), || {
+            model.update(&fitted, &all.x[n_old..], &all.y[n_old..]).unwrap()
+        });
+        let after = obs::snapshot();
+        assert!(after.faults_injected - before.faults_injected >= 1, "{after:?}");
+        assert!(
+            after.ep_rollbacks - before.ep_rollbacks >= 1
+                || after.ep_skipped_sites - before.ep_skipped_sites >= 1,
+            "the poisoned site was never skipped or rolled back: {after:?}"
+        );
+        assert!(
+            (un.report.log_z - refit.report.log_z).abs() < 1e-5,
+            "NaN-faulted update drifted: {} vs {}",
+            un.report.log_z,
+            refit.report.log_z
+        );
+    });
+}
+
+#[test]
+fn snapshot_save_faults_never_leave_partial_files() {
+    // A crash injected mid-write (`io@snapshot.save`) fails the save —
+    // through the job manager it fails the job at the snapshot stage —
+    // but the destination path is never touched and no temp file stays
+    // behind: the pre-existing snapshot (if any) remains loadable.
+    use csgp::coordinator::{JobErrorKind, JobManager, JobStage, JobStatus, TrainSpec};
+    use csgp::gp::model::{FittedClassifier, Inference};
+
+    let dir = std::env::temp_dir().join("csgp-fault-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("save-fault-{}.snap", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+
+    let data = cluster(80, 79);
+    let spec = TrainSpec {
+        dataset: data.clone(),
+        cov: CovFunction::new(CovKind::Pp(3), 2, 1.0, 1.6),
+        global_cov: None,
+        inference: Inference::Sparse(Ordering::Rcm),
+        optimize: false,
+        snapshot_save: Some(path.clone()),
+    };
+
+    // serialized through the with_mode lock like every planned fault here
+    let st = obs::with_mode(TraceMode::Counters, || {
+        fault::with_plan(Plan::new().io("snapshot.save"), || {
+            let mgr = JobManager::start(1);
+            let id = mgr.submit(spec.clone()).unwrap();
+            let st = mgr.wait(id, std::time::Duration::from_secs(120)).unwrap();
+            // the fit itself succeeded: the model is still collectable
+            assert!(mgr.result(id).is_some(), "fitted model lost with the save");
+            mgr.shutdown();
+            st
+        })
+    });
+    match st {
+        JobStatus::Failed(err) => {
+            assert_eq!(err.kind, JobErrorKind::Io);
+            assert_eq!(err.stage, JobStage::Snapshot);
+        }
+        other => panic!("expected a snapshot-stage failure, got {other:?}"),
+    }
+    assert!(!path.exists(), "faulted save published a destination file");
+    let mut tmp = path.clone().into_os_string();
+    tmp.push(".tmp");
+    assert!(!std::path::Path::new(&tmp).exists(), "faulted save leaked its temp file");
+
+    // the fault is consumed: the same job succeeds and the file loads
+    let mgr = JobManager::start(1);
+    let id = mgr.submit(spec).unwrap();
+    let st = mgr.wait(id, std::time::Duration::from_secs(120)).unwrap();
+    assert!(matches!(st, JobStatus::Done { .. }), "{st:?}");
+    mgr.shutdown();
+    let loaded = FittedClassifier::load_snapshot(&path).unwrap();
+    assert_eq!(loaded.x.len(), data.x.len());
+    let _ = std::fs::remove_file(&path);
 }

@@ -494,6 +494,7 @@ fn cv_and_jobs_compose() {
             global_cov: None,
             inference: Inference::Sparse(Ordering::Rcm),
             optimize: false,
+            snapshot_save: None,
         })
         .unwrap();
     let st = mgr.wait(id, std::time::Duration::from_secs(60)).unwrap();

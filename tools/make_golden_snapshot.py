@@ -1,0 +1,113 @@
+#!/usr/bin/env python3
+"""Generate the golden snapshot fixture pinned by the serving test suite.
+
+Writes ``rust/tests/fixtures/golden_dense_v1.snap``: a version-1 dense-backend
+snapshot produced *independently* of the Rust writer, byte for byte per the
+format documented in ``rust/src/gp/snapshot.rs``. The fixture pins the on-disk
+format: if the codec changes without a version bump, loading this file fails
+and `golden_fixture_still_loads` (rust/tests/serving.rs) catches it.
+
+The numeric content is a tiny shape-consistent EP state (identity chol(B),
+n = 3); it exists to exercise the decoder, not to be a meaningful posterior.
+
+Run from the repo root: python3 tools/make_golden_snapshot.py
+"""
+
+import struct
+from pathlib import Path
+
+MAGIC = b"CSGPSNAP"
+VERSION = 1
+TAG_DENSE = 0
+
+buf = bytearray()
+
+
+def w_u64(v):
+    buf.extend(struct.pack("<Q", v))
+
+
+def w_f64(v):
+    buf.extend(struct.pack("<d", float(v)))
+
+
+def w_bool(v):
+    buf.append(1 if v else 0)
+
+
+def w_f64s(vs):
+    w_u64(len(vs))
+    for v in vs:
+        w_f64(v)
+
+
+def w_str(s):
+    raw = s.encode()
+    w_u64(len(raw))
+    buf.extend(raw)
+
+
+def w_points(pts):
+    dim = len(pts[0]) if pts else 0
+    w_u64(len(pts))
+    w_u64(dim)
+    for p in pts:
+        assert len(p) == dim
+        for c in p:
+            w_f64(c)
+
+
+def fnv1a(data):
+    h = 0xCBF2_9CE4_8422_2325
+    for b in data:
+        h = ((h ^ b) * 0x100_0000_01B3) & 0xFFFF_FFFF_FFFF_FFFF
+    return h
+
+
+n = 3
+
+# cov: pp3 in 2-d, sigma2 = 1, lengthscales = [2, 2]
+w_str("pp3")
+w_u64(2)
+w_f64(1.0)
+w_f64s([2.0, 2.0])
+
+# training data
+w_points([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0]])
+w_f64s([1.0, -1.0, 1.0])
+
+# FitReport
+w_f64(-2.0)  # log_z
+w_f64(-2.0)  # log_post
+w_u64(0)  # opt_iters
+w_u64(0)  # fn_evals
+w_f64(0.0)  # opt_time (s)
+w_f64(0.001)  # ep_time (s)
+w_f64(1.0)  # fill_k
+w_f64(1.0)  # fill_l
+w_bool(False)  # opt_converged
+
+# dense backend payload
+w_f64s([0.5] * n)  # sites.tau
+w_f64s([0.1] * n)  # sites.nu
+w_f64s([0.4] * n)  # sites.tau_cav
+w_f64s([0.05] * n)  # sites.nu_cav
+w_f64s([-0.6] * n)  # sites.ln_zhat
+w_f64(-2.0)  # log_z
+w_f64s([0.2, -0.2, 0.2])  # mu
+w_f64s([0.8] * n)  # sigma_diag
+w_u64(5)  # sweeps
+w_bool(True)  # converged
+w_f64s([0.7] * n)  # sw
+w_u64(n)  # chol_b.n
+w_f64s([1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0])  # chol_b.l (identity)
+w_f64s([0.1, -0.1, 0.1])  # w_pred
+
+payload = bytes(buf)
+header = MAGIC + struct.pack("<I", VERSION) + bytes([TAG_DENSE])
+header += struct.pack("<Q", len(payload)) + struct.pack("<Q", fnv1a(payload))
+
+out = Path(__file__).resolve().parent.parent / "rust/tests/fixtures/golden_dense_v1.snap"
+out.parent.mkdir(parents=True, exist_ok=True)
+out.write_bytes(header + payload)
+print(f"wrote {out} ({len(header) + len(payload)} bytes)")
