@@ -336,8 +336,18 @@ fn main() {
     // behaviour land in BENCH_parallel.json next to the timings (spans
     // stay off — the bench measures the hot loops, not the trace path)
     csgp::obs::set_mode(csgp::obs::TraceMode::Counters);
+    // CSGP_SMOKE: the CI bench-gate size — small enough for a PR check,
+    // keyed identically (bench, backend, n, threads) to the committed
+    // baselines in benches/baselines/
+    let smoke = std::env::var("CSGP_SMOKE").is_ok();
     let full = std::env::var("CSGP_FULL").is_ok();
-    let n = if full { 8000 } else { 4000 };
+    let n = if smoke {
+        600
+    } else if full {
+        8000
+    } else {
+        4000
+    };
     let cores = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     let mut rep = Report::new("BENCH_parallel.json");
 

@@ -11,4 +11,7 @@ pub mod jobs;
 pub mod service;
 
 pub use jobs::{JobError, JobErrorKind, JobId, JobManager, JobStage, JobStatus, TrainSpec};
-pub use service::{PredictionService, ServiceConfig, ServiceError, ServiceStats};
+pub use service::{
+    flush_all_exporters, metrics_interval_from_env, MetricsExporter, PredictionService,
+    ServiceConfig, ServiceError, ServiceStats,
+};

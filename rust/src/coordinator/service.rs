@@ -16,9 +16,9 @@
 //! [`ServiceStats::batch_latency_stats`] summarize them as
 //! p50/p90/p99), feeding `BENCH_serving.json` and capacity planning.
 
-use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering as AtomicOrdering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -142,6 +142,12 @@ impl ServiceStats {
         } else {
             Some(crate::bench::Stats::from_samples(g.clone()))
         }
+    }
+
+    /// Current admission-gate level: requests admitted but not yet
+    /// answered (queued or computing). The metrics exporter samples this.
+    pub fn in_flight(&self) -> u64 {
+        self.in_flight.load(AtomicOrdering::Relaxed)
     }
 }
 
@@ -308,6 +314,222 @@ fn serve_loop(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Metrics exporter.
+// ---------------------------------------------------------------------------
+
+/// Exporter cadence: `CSGP_METRICS_INTERVAL_MS` (milliseconds), default
+/// 1000.
+pub fn metrics_interval_from_env() -> Duration {
+    std::env::var("CSGP_METRICS_INTERVAL_MS")
+        .ok()
+        .and_then(|v| v.trim().parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(1000))
+}
+
+struct ExporterState {
+    seq: u64,
+    /// Previous counter snapshot, for the per-interval `delta` object.
+    prev: Option<obs::Snapshot>,
+    file: std::fs::File,
+}
+
+struct ExporterInner {
+    interval: Duration,
+    stats: Option<Arc<ServiceStats>>,
+    stop: AtomicBool,
+    state: Mutex<ExporterState>,
+}
+
+impl ExporterInner {
+    /// Append one `{"ev":"metrics",...}` JSONL line: monotone `t_ns`
+    /// (trace-epoch clock, so lines interleave meaningfully with span
+    /// events), wall-clock `unix_ms`, admission state and latency
+    /// percentiles from [`ServiceStats`], the pool-chunk histogram tail
+    /// (exact min/max via `obs::hist`), the full counter snapshot, and
+    /// the nonzero counter deltas since the previous line.
+    fn write_snapshot(&self, final_line: bool) -> std::io::Result<()> {
+        use std::fmt::Write as _;
+        use std::io::Write as _;
+        let snap = obs::snapshot();
+        let mut state = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        let seq = state.seq;
+        state.seq += 1;
+        let delta = state.prev.map(|p| snap.delta(&p)).unwrap_or(snap);
+        state.prev = Some(snap);
+        let unix_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        let mut line = String::with_capacity(1024);
+        let _ = write!(
+            line,
+            "{{\"ev\":\"metrics\",\"seq\":{seq},\"t_ns\":{},\"unix_ms\":{unix_ms}",
+            obs::now_ns()
+        );
+        if let Some(stats) = &self.stats {
+            let _ = write!(
+                line,
+                ",\"in_flight\":{},\"requests\":{},\"batches\":{},\
+                 \"batched_items_max\":{},\"rejected\":{}",
+                stats.in_flight(),
+                stats.requests.load(AtomicOrdering::Relaxed),
+                stats.batches.load(AtomicOrdering::Relaxed),
+                stats.batched_items_max.load(AtomicOrdering::Relaxed),
+                stats.rejected.load(AtomicOrdering::Relaxed)
+            );
+            if let Some(r) = stats.request_latency_stats() {
+                let _ = write!(
+                    line,
+                    ",\"request_p50_ns\":{},\"request_p90_ns\":{},\"request_p99_ns\":{}",
+                    r.p50.as_nanos(),
+                    r.p90.as_nanos(),
+                    r.p99.as_nanos()
+                );
+            }
+            if let Some(b) = stats.batch_latency_stats() {
+                let _ = write!(
+                    line,
+                    ",\"batch_p50_ns\":{},\"batch_p99_ns\":{}",
+                    b.p50.as_nanos(),
+                    b.p99.as_nanos()
+                );
+            }
+        }
+        let chunk_hist = &obs::counters::POOL_CHUNK_NS;
+        if chunk_hist.count() > 0 {
+            let _ = write!(
+                line,
+                ",\"pool_chunk_p50_ns\":{},\"pool_chunk_p99_ns\":{},\
+                 \"pool_chunk_min_ns\":{},\"pool_chunk_max_ns\":{}",
+                chunk_hist.percentile_ns(50.0),
+                chunk_hist.percentile_ns(99.0),
+                chunk_hist.min_ns(),
+                chunk_hist.max_ns()
+            );
+        }
+        line.push_str(",\"counters\":{");
+        for (i, (k, v)) in snap.fields().iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            let _ = write!(line, "\"{k}\":{v}");
+        }
+        line.push_str("},\"delta\":{");
+        let mut first = true;
+        for (k, v) in delta.fields() {
+            if v == 0 {
+                continue;
+            }
+            if !first {
+                line.push(',');
+            }
+            first = false;
+            let _ = write!(line, "\"{k}\":{v}");
+        }
+        line.push('}');
+        if final_line {
+            line.push_str(",\"final\":true");
+        }
+        line.push_str("}\n");
+        state.file.write_all(line.as_bytes())?;
+        state.file.flush()
+    }
+}
+
+/// Every live exporter, so shutdown paths (`flush_all_exporters`, the
+/// CLI's SIGINT handler) can force a final snapshot without owning the
+/// handles.
+static EXPORTERS: Mutex<Vec<Weak<ExporterInner>>> = Mutex::new(Vec::new());
+
+/// Write a final snapshot through every live [`MetricsExporter`] — the
+/// SIGINT/shutdown path, so an interrupted server's metrics file still
+/// ends with its last state.
+pub fn flush_all_exporters() {
+    let list: Vec<Weak<ExporterInner>> =
+        EXPORTERS.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    for weak in list {
+        if let Some(inner) = weak.upgrade() {
+            let _ = inner.write_snapshot(true);
+        }
+    }
+}
+
+/// Periodic JSONL metrics exporter (`serve --metrics <path>` /
+/// `CSGP_METRICS_INTERVAL_MS`): a background thread appends one
+/// timestamped snapshot line per interval — counters, admission state,
+/// latency percentiles — so a long-running server is inspectable without
+/// full span tracing. One line is written immediately on start and one on
+/// [`stop`](MetricsExporter::stop) (or drop), so even short runs
+/// round-trip through `csgp trace analyze`.
+pub struct MetricsExporter {
+    inner: Arc<ExporterInner>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl MetricsExporter {
+    /// Create/truncate `path` and start the ticker. Bumps the trace mode
+    /// to Counters when it is Off (never downgrades Full): an exporter
+    /// whose counters cannot move would report a flatline.
+    pub fn start(
+        path: impl AsRef<std::path::Path>,
+        interval: Duration,
+        stats: Option<Arc<ServiceStats>>,
+    ) -> std::io::Result<MetricsExporter> {
+        let file = std::fs::File::create(path.as_ref())?;
+        if !obs::counters_on() {
+            obs::set_mode(obs::TraceMode::Counters);
+        }
+        let inner = Arc::new(ExporterInner {
+            interval,
+            stats,
+            stop: AtomicBool::new(false),
+            state: Mutex::new(ExporterState { seq: 0, prev: None, file }),
+        });
+        inner.write_snapshot(false)?;
+        {
+            let mut reg = EXPORTERS.lock().unwrap_or_else(|e| e.into_inner());
+            reg.retain(|w| w.strong_count() > 0);
+            reg.push(Arc::downgrade(&inner));
+        }
+        let worker = inner.clone();
+        let thread = std::thread::spawn(move || {
+            // poll in small steps so stop() never waits a full interval
+            let tick = worker
+                .interval
+                .min(Duration::from_millis(20))
+                .max(Duration::from_millis(1));
+            let mut next = Instant::now() + worker.interval;
+            while !worker.stop.load(AtomicOrdering::Relaxed) {
+                std::thread::sleep(tick);
+                if Instant::now() >= next {
+                    let _ = worker.write_snapshot(false);
+                    next += worker.interval;
+                }
+            }
+        });
+        Ok(MetricsExporter { inner, thread: Mutex::new(Some(thread)) })
+    }
+
+    /// Stop the ticker and write one final snapshot (idempotent; also
+    /// runs on drop).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, AtomicOrdering::Relaxed);
+        let handle = self.thread.lock().unwrap_or_else(|e| e.into_inner()).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+            let _ = self.inner.write_snapshot(true);
+        }
+    }
+}
+
+impl Drop for MetricsExporter {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -443,6 +665,66 @@ mod tests {
         // rejection leaks no slots: raising nothing, in_flight is back to 0
         assert_eq!(svc.stats.in_flight.load(AtomicOrdering::Relaxed), 0);
         svc.shutdown();
+    }
+
+    /// The exporter writes an immediate line, periodic lines, and a final
+    /// line on stop — all parseable by the trace analyzer, with strictly
+    /// increasing `seq` and monotone `t_ns`.
+    #[test]
+    fn metrics_exporter_round_trips_through_the_analyzer() {
+        use crate::obs::profile;
+        crate::obs::with_mode(crate::obs::TraceMode::Counters, || {
+            let model = fitted_toy();
+            let svc = PredictionService::start(model, None, ServiceConfig::default());
+            let path = std::env::temp_dir()
+                .join(format!("csgp-metrics-unit-{}.jsonl", std::process::id()));
+            let exporter = MetricsExporter::start(
+                &path,
+                Duration::from_millis(5),
+                Some(svc.stats.clone()),
+            )
+            .expect("exporter start");
+            for i in 0..20 {
+                svc.predict(vec![i as f64 * 0.2, 1.0]).unwrap();
+            }
+            std::thread::sleep(Duration::from_millis(40));
+            exporter.stop();
+            svc.shutdown();
+            let text = std::fs::read_to_string(&path).expect("metrics file");
+            let _ = std::fs::remove_file(&path);
+            let data = profile::parse_trace(&text).expect("every line parses");
+            assert!(data.metrics.len() >= 3, "immediate + periodic + final lines");
+            assert_eq!(data.skipped, 0);
+            for w in data.metrics.windows(2) {
+                assert!(w[1].seq > w[0].seq, "seq strictly increasing");
+                assert!(w[1].t_ns >= w[0].t_ns, "t_ns monotone");
+            }
+            let last = data.metrics.last().unwrap();
+            assert_eq!(last.requests, 20);
+            assert_eq!(last.in_flight, 0, "all requests answered before stop");
+            let prof = profile::Profile::from_trace(&data);
+            let m = prof.metrics.expect("metrics profile");
+            assert!(m.monotone);
+            assert_eq!(m.requests_delta, 20);
+        });
+    }
+
+    /// `flush_all_exporters` reaches exporters it does not own — the
+    /// SIGINT path — and writes a marked final snapshot.
+    #[test]
+    fn flush_all_exporters_writes_a_final_snapshot() {
+        crate::obs::with_mode(crate::obs::TraceMode::Counters, || {
+            let path = std::env::temp_dir()
+                .join(format!("csgp-metrics-flush-{}.jsonl", std::process::id()));
+            let exporter =
+                MetricsExporter::start(&path, Duration::from_secs(3600), None).unwrap();
+            flush_all_exporters();
+            let text = std::fs::read_to_string(&path).unwrap();
+            assert!(text.lines().count() >= 2, "start line + flushed line");
+            assert!(text.lines().last().unwrap().contains("\"final\":true"));
+            drop(exporter);
+            let _ = std::fs::remove_file(&path);
+        });
     }
 
     #[test]

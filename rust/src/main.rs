@@ -19,6 +19,17 @@
 //! * `snapshot  --probe <path>` — validate a snapshot container (magic, version, checksum) and report its backend
 //! * `artifacts-check` — verify the PJRT artifacts load and agree with native code
 //! * `fill      --n <n> --dim <2|5> --cov pp3` — fill-K/fill-L statistics (Table 1)
+//! * `trace     analyze <trace.jsonl> [--json]` — aggregate a span/metrics
+//!   JSONL file into a hierarchical profile with flops/s, pool
+//!   utilization and the measured-vs-predicted cost-model table;
+//!   `trace diff <a.jsonl> <b.jsonl> [--tolerance 0.25] [--json]`
+//!   compares two traces and flags drifting phases
+//!
+//! `serve` also takes `--metrics <path>`: a background exporter appends
+//! one JSONL counters/latency snapshot per `CSGP_METRICS_INTERVAL_MS`
+//! (default 1000) while serving. On SIGINT/SIGTERM the trace sink, the
+//! obs summary and a final metrics snapshot are flushed before exit, so
+//! interrupted servers keep their telemetry.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -218,6 +229,22 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
             queue_capacity: queue,
         },
     ));
+    // --metrics [path]: periodic counters/latency snapshots while serving
+    let metrics = match flags.get("metrics") {
+        Some(p) => {
+            let path = if p == "true" { "metrics.jsonl" } else { p.as_str() };
+            let interval = csgp::coordinator::metrics_interval_from_env();
+            let exporter = csgp::coordinator::MetricsExporter::start(
+                path,
+                interval,
+                Some(svc.stats.clone()),
+            )
+            .map_err(|e| format!("cannot open metrics file '{path}': {e}"))?;
+            println!("metrics to {path} every {interval:?}");
+            Some(exporter)
+        }
+        None => None,
+    };
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     let client_count = 8;
@@ -258,9 +285,103 @@ fn cmd_serve(flags: HashMap<String, String>) -> Result<(), String> {
     if let Some(b) = svc.stats.batch_latency_stats() {
         println!("batch compute p50 = {:?}  p99 = {:?}  over {} batches", b.p50, b.p99, b.iters);
     }
+    if let Some(m) = &metrics {
+        m.stop(); // writes the final snapshot line
+    }
     svc.shutdown();
     Ok(())
 }
+
+fn load_profile(path: &str) -> Result<csgp::obs::Profile, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read '{path}': {e}"))?;
+    let data = csgp::obs::parse_trace(&text).map_err(|e| format!("{path}: {e}"))?;
+    if data.spans.is_empty() && data.metrics.is_empty() {
+        return Err(format!("{path}: no span or metrics events found"));
+    }
+    Ok(csgp::obs::Profile::from_trace(&data))
+}
+
+fn cmd_trace(args: &[String]) -> Result<(), String> {
+    let usage = "trace: expected 'analyze <trace.jsonl> [--json]' or \
+                 'diff <a.jsonl> <b.jsonl> [--tolerance 0.25] [--json]'";
+    let Some(sub) = args.first() else {
+        return Err(usage.into());
+    };
+    let mut paths: Vec<&str> = Vec::new();
+    let mut json = false;
+    let mut tolerance = 0.25_f64;
+    let mut i = 1;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--json" => json = true,
+            "--tolerance" => {
+                i += 1;
+                tolerance = args
+                    .get(i)
+                    .and_then(|s| s.parse().ok())
+                    .ok_or("trace: --tolerance needs a number")?;
+            }
+            a if !a.starts_with("--") => paths.push(a),
+            a => return Err(format!("trace: unknown flag '{a}'")),
+        }
+        i += 1;
+    }
+    match (sub.as_str(), paths.as_slice()) {
+        ("analyze", [path]) => {
+            let profile = load_profile(path)?;
+            print!("{}", if json { profile.render_json() } else { profile.render_text() });
+            Ok(())
+        }
+        ("diff", [a, b]) => {
+            let pa = load_profile(a)?;
+            let pb = load_profile(b)?;
+            let d = csgp::obs::profile::diff(&pa, &pb, tolerance);
+            print!("{}", if json { d.render_json() } else { d.render_text() });
+            Ok(())
+        }
+        _ => Err(usage.into()),
+    }
+}
+
+/// Install a SIGINT/SIGTERM watchdog that flushes telemetry before exit:
+/// final metrics snapshots for every live exporter, the obs summary, and
+/// the trace sink. The handler itself only sets a flag (async-signal
+/// safe); a polling thread does the I/O and exits with the conventional
+/// 128+SIGINT status.
+#[cfg(unix)]
+fn install_signal_flush() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static INTERRUPTED: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_signal(_sig: i32) {
+        INTERRUPTED.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal as usize); // SIGINT
+        signal(15, on_signal as usize); // SIGTERM
+    }
+    std::thread::spawn(|| loop {
+        if INTERRUPTED.load(Ordering::SeqCst) {
+            csgp::coordinator::flush_all_exporters();
+            if csgp::obs::counters_on() {
+                eprintln!("{}", csgp::obs::summary());
+            }
+            match csgp::obs::flush() {
+                Ok(0) => {}
+                Ok(n) => eprintln!("flushed {n} trace spans"),
+                Err(e) => eprintln!("warning: trace flush failed: {e}"),
+            }
+            std::process::exit(130);
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    });
+}
+
+#[cfg(not(unix))]
+fn install_signal_flush() {}
 
 fn cmd_snapshot(flags: HashMap<String, String>) -> Result<(), String> {
     let Some(path) = flags.get("probe") else {
@@ -358,7 +479,7 @@ fn cmd_profile(flags: HashMap<String, String>) -> Result<(), String> {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: csgp <train|cv|serve|snapshot|artifacts-check|fill> [--flags ...]\n\
+        "usage: csgp <train|cv|serve|snapshot|artifacts-check|fill|trace> [--flags ...]\n\
          see rust/src/main.rs header for the flag reference"
     );
     std::process::exit(2);
@@ -379,6 +500,7 @@ fn main() {
         }
         eprintln!("tracing to {path}");
     }
+    install_signal_flush();
     let result = match cmd.as_str() {
         "train" => cmd_train(flags),
         "cv" => cmd_cv(flags),
@@ -387,6 +509,7 @@ fn main() {
         "artifacts-check" => cmd_artifacts_check(),
         "fill" => cmd_fill(flags),
         "profile" => cmd_profile(flags),
+        "trace" => cmd_trace(&args[1..]),
         _ => usage(),
     };
     if csgp::obs::counters_on() {

@@ -169,70 +169,78 @@ pub static SVC_BATCH_NS: Histogram = Histogram::new();
 /// Prediction-service per-request service time (queueing included).
 pub static SVC_REQUEST_NS: Histogram = Histogram::new();
 
-/// A point-in-time copy of every counter (not the histograms). Benches
-/// snapshot before/after a measured region and report the difference.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct Snapshot {
-    pub cache_hit: u64,
-    pub cache_miss: u64,
-    pub cache_shrink_reuse: u64,
-    pub cache_grow_reanalyze: u64,
-    pub pool_chunks: u64,
-    pub pool_steals: u64,
-    pub pool_busy_ns: u64,
-    pub pool_caller_wait_ns: u64,
-    pub ep_sweeps: u64,
-    pub ep_site_visits: u64,
-    pub ep_damped_updates: u64,
-    pub ep_skipped_sites: u64,
-    pub ep_rollbacks: u64,
-    pub factor_refactors: u64,
-    pub factor_waves: u64,
-    pub factor_jitter_retries: u64,
-    pub solves: u64,
-    pub takahashi_runs: u64,
-    pub jobs_done: u64,
-    pub jobs_failed: u64,
-    pub job_retries: u64,
-    pub online_updates: u64,
-    pub online_refits: u64,
-    pub snapshot_saves: u64,
-    pub snapshot_loads: u64,
-    pub svc_rejected: u64,
-    pub faults_injected: u64,
+/// Defines [`Snapshot`] plus everything that must stay in lock-step with
+/// its field list: [`snapshot`] (the reads), [`Snapshot::delta`]
+/// (field-wise difference) and [`Snapshot::fields`] (the named view the
+/// metrics exporter and `trace analyze` serialize). One macro invocation
+/// so a new counter cannot be added to one and forgotten in another.
+macro_rules! snapshot_def {
+    ($($(#[$doc:meta])* $name:ident = $read:expr;)*) => {
+        /// A point-in-time copy of every counter (not the histograms).
+        /// Benches snapshot before/after a measured region and report the
+        /// difference; the metrics exporter snapshots per interval and
+        /// reports both absolutes and [`Snapshot::delta`]s.
+        #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+        pub struct Snapshot {
+            $($(#[$doc])* pub $name: u64,)*
+        }
+
+        /// Read every counter at once (including the span-buffer drop
+        /// count, [`super::dropped_events`]).
+        pub fn snapshot() -> Snapshot {
+            Snapshot { $($name: $read,)* }
+        }
+
+        impl Snapshot {
+            /// Field-wise `self - earlier`, saturating at zero — the
+            /// interval view the metrics exporter and per-request
+            /// attribution need (counters are monotone, so deltas are the
+            /// meaningful quantity between two points in time).
+            pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+                Snapshot { $($name: self.$name.saturating_sub(earlier.$name),)* }
+            }
+
+            /// Every field as a `(name, value)` pair, in declaration
+            /// order — the serialization view (exporter JSONL, profile
+            /// reports) that cannot drift from the struct.
+            pub fn fields(&self) -> Vec<(&'static str, u64)> {
+                vec![$((stringify!($name), self.$name),)*]
+            }
+        }
+    };
 }
 
-/// Read every counter at once.
-pub fn snapshot() -> Snapshot {
-    Snapshot {
-        cache_hit: CACHE_HIT.get(),
-        cache_miss: CACHE_MISS.get(),
-        cache_shrink_reuse: CACHE_SHRINK_REUSE.get(),
-        cache_grow_reanalyze: CACHE_GROW_REANALYZE.get(),
-        pool_chunks: POOL_CHUNKS.get(),
-        pool_steals: POOL_STEALS.get(),
-        pool_busy_ns: POOL_BUSY_NS.get(),
-        pool_caller_wait_ns: POOL_CALLER_WAIT_NS.get(),
-        ep_sweeps: EP_SWEEPS.get(),
-        ep_site_visits: EP_SITE_VISITS.get(),
-        ep_damped_updates: EP_DAMPED_UPDATES.get(),
-        ep_skipped_sites: EP_SKIPPED_SITES.get(),
-        ep_rollbacks: EP_ROLLBACKS.get(),
-        factor_refactors: FACTOR_REFACTORS.get(),
-        factor_waves: FACTOR_WAVES.get(),
-        factor_jitter_retries: FACTOR_JITTER_RETRIES.get(),
-        solves: SOLVES.get(),
-        takahashi_runs: TAKAHASHI_RUNS.get(),
-        jobs_done: JOBS_DONE.get(),
-        jobs_failed: JOBS_FAILED.get(),
-        job_retries: JOB_RETRIES.get(),
-        online_updates: ONLINE_UPDATES.get(),
-        online_refits: ONLINE_REFITS.get(),
-        snapshot_saves: SNAPSHOT_SAVES.get(),
-        snapshot_loads: SNAPSHOT_LOADS.get(),
-        svc_rejected: SVC_REJECTED.get(),
-        faults_injected: FAULTS_INJECTED.get(),
-    }
+snapshot_def! {
+    cache_hit = CACHE_HIT.get();
+    cache_miss = CACHE_MISS.get();
+    cache_shrink_reuse = CACHE_SHRINK_REUSE.get();
+    cache_grow_reanalyze = CACHE_GROW_REANALYZE.get();
+    pool_chunks = POOL_CHUNKS.get();
+    pool_steals = POOL_STEALS.get();
+    pool_busy_ns = POOL_BUSY_NS.get();
+    pool_caller_wait_ns = POOL_CALLER_WAIT_NS.get();
+    ep_sweeps = EP_SWEEPS.get();
+    ep_site_visits = EP_SITE_VISITS.get();
+    ep_damped_updates = EP_DAMPED_UPDATES.get();
+    ep_skipped_sites = EP_SKIPPED_SITES.get();
+    ep_rollbacks = EP_ROLLBACKS.get();
+    factor_refactors = FACTOR_REFACTORS.get();
+    factor_waves = FACTOR_WAVES.get();
+    factor_jitter_retries = FACTOR_JITTER_RETRIES.get();
+    solves = SOLVES.get();
+    takahashi_runs = TAKAHASHI_RUNS.get();
+    jobs_done = JOBS_DONE.get();
+    jobs_failed = JOBS_FAILED.get();
+    job_retries = JOB_RETRIES.get();
+    online_updates = ONLINE_UPDATES.get();
+    online_refits = ONLINE_REFITS.get();
+    snapshot_saves = SNAPSHOT_SAVES.get();
+    snapshot_loads = SNAPSHOT_LOADS.get();
+    svc_rejected = SVC_REJECTED.get();
+    faults_injected = FAULTS_INJECTED.get();
+    /// Span events discarded because a thread's buffer hit its cap —
+    /// nonzero means a trace (and any profile built from it) is partial.
+    span_dropped = super::dropped_events();
 }
 
 /// Zero every counter, gauge and histogram. Benches call this between
@@ -270,6 +278,7 @@ pub fn reset_all() {
         c.reset();
     }
     POOL_IMBALANCE_MAX_PERMILLE.reset();
+    super::DROPPED_EVENTS.store(0, Ordering::Relaxed);
     for h in [&POOL_CHUNK_NS, &JOB_FIT_NS, &JOB_INFER_NS, &SVC_BATCH_NS, &SVC_REQUEST_NS] {
         h.reset();
     }
@@ -284,7 +293,12 @@ pub fn summary() -> String {
     let s = snapshot();
     let ns = |v: u64| fmt_duration(Duration::from_nanos(v));
     let mut out = String::new();
-    let _ = writeln!(out, "obs summary (mode={:?}):", super::mode());
+    let _ = writeln!(
+        out,
+        "obs summary (mode={:?}, spans_dropped={}):",
+        super::mode(),
+        s.span_dropped
+    );
     let _ = writeln!(
         out,
         "  ep: sweeps={} site_visits={} damped_updates={} skipped_sites={} rollbacks={}",
@@ -382,8 +396,39 @@ mod tests {
     #[test]
     fn summary_mentions_every_section() {
         let text = summary();
-        for needle in ["obs summary", "ep:", "solver:", "cache:", "pool:", "jobs:"] {
+        for needle in
+            ["obs summary", "spans_dropped=", "ep:", "solver:", "cache:", "pool:", "jobs:"]
+        {
             assert!(text.contains(needle), "missing {needle:?} in {text}");
         }
+    }
+
+    #[test]
+    fn snapshot_delta_is_fieldwise_and_saturating() {
+        let a = Snapshot { ep_sweeps: 10, solves: 100, ..Snapshot::default() };
+        // solves went backwards (a reset between snapshots) — must not underflow
+        let b = Snapshot { ep_sweeps: 4, solves: 120, ..Snapshot::default() };
+        let d = a.delta(&b);
+        assert_eq!(d.ep_sweeps, 6);
+        assert_eq!(d.solves, 0);
+        assert_eq!(d.cache_hit, 0);
+    }
+
+    /// `fields()` is the exporter's serialization view: one entry per
+    /// struct field, names matching the field identifiers, values
+    /// matching the struct.
+    #[test]
+    fn snapshot_fields_cover_every_counter() {
+        let s = Snapshot { ep_sweeps: 3, span_dropped: 7, ..Snapshot::default() };
+        let fields = s.fields();
+        assert_eq!(
+            fields.len(),
+            std::mem::size_of::<Snapshot>() / std::mem::size_of::<u64>(),
+            "fields() must cover every Snapshot field"
+        );
+        let get = |name: &str| fields.iter().find(|(k, _)| *k == name).map(|(_, v)| *v);
+        assert_eq!(get("ep_sweeps"), Some(3));
+        assert_eq!(get("span_dropped"), Some(7));
+        assert_eq!(get("svc_rejected"), Some(0));
     }
 }

@@ -1,12 +1,18 @@
 //! Log₂-bucketed latency histograms: fixed-size, lock-free, const-init.
 //!
 //! One bucket per power of two of nanoseconds (64 buckets cover the whole
-//! `u64` range), so recording is a `leading_zeros` plus three relaxed
-//! atomic adds and a percentile query walks 64 slots. Percentiles are
-//! therefore bucket-resolution estimates (within ~1.5× of the true
-//! value) — exactly enough to tell a 2 µs chunk from a 2 ms one, which is
-//! what the pool auto-tuning and serving-latency questions need. Exact
-//! percentiles over raw samples stay in [`crate::bench::Stats`].
+//! `u64` range), so recording is a `leading_zeros` plus a handful of
+//! relaxed atomic ops and a percentile query walks 64 slots. Percentile
+//! queries interpolate linearly inside the winning bucket and clamp to
+//! the exact min/max seen, so tails stay honest even though storage is
+//! log-bucketed — enough resolution to tell a 2 µs chunk from a 2 ms
+//! one, which is what the pool auto-tuning and serving-latency questions
+//! need. Exact percentiles over raw samples stay in
+//! [`crate::bench::Stats`].
+//!
+//! Histograms [`merge`](Histogram::merge): the metrics exporter and
+//! `csgp trace diff` combine per-window or per-run histograms without
+//! losing tail resolution (bucket-wise addition, min/max folded).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -15,13 +21,17 @@ use super::counters_on;
 
 const BUCKETS: usize = 64;
 
-/// A histogram of durations in log₂(ns) buckets, plus total count and
-/// sum. All methods are lock-free; recording is gated on
+/// A histogram of durations in log₂(ns) buckets, plus total count, sum,
+/// and exact min/max. All methods are lock-free; recording is gated on
 /// [`counters_on`], so a disabled histogram costs one relaxed load.
 pub struct Histogram {
     buckets: [AtomicU64; BUCKETS],
     count: AtomicU64,
     sum_ns: AtomicU64,
+    /// Smallest recorded value (`u64::MAX` while empty).
+    min_ns: AtomicU64,
+    /// Largest recorded value (0 while empty).
+    max_ns: AtomicU64,
 }
 
 impl Default for Histogram {
@@ -36,6 +46,8 @@ impl Histogram {
             buckets: [const { AtomicU64::new(0) }; BUCKETS],
             count: AtomicU64::new(0),
             sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
         }
     }
 
@@ -54,6 +66,8 @@ impl Histogram {
         self.buckets[Self::bucket_of(ns)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
     }
 
     /// Record one latency as a [`Duration`].
@@ -80,8 +94,50 @@ impl Histogram {
         }
     }
 
-    /// Nearest-rank percentile (`p` in 0..=100), reported as the midpoint
-    /// of the winning bucket `[2^b, 2^(b+1))`. Returns 0 when empty.
+    /// Exact smallest recorded value in nanoseconds (0 when empty).
+    pub fn min_ns(&self) -> u64 {
+        let v = self.min_ns.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            0
+        } else {
+            v
+        }
+    }
+
+    /// Exact largest recorded value in nanoseconds (0 when empty).
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Fold `other` into `self`: bucket-wise addition plus count/sum, with
+    /// the exact min/max taken across both. Not gated on the trace mode —
+    /// merging is aggregation (the metrics exporter combining windows,
+    /// `trace diff` combining runs), not hot-path recording. Not atomic
+    /// with respect to concurrent recording into `other`.
+    pub fn merge(&self, other: &Histogram) {
+        for (dst, src) in self.buckets.iter().zip(&other.buckets) {
+            let v = src.load(Ordering::Relaxed);
+            if v > 0 {
+                dst.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        let c = other.count.load(Ordering::Relaxed);
+        if c == 0 {
+            return;
+        }
+        self.count.fetch_add(c, Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_ns.fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), interpolated linearly
+    /// *within* the winning bucket `[2^b, 2^(b+1))` by the rank's position
+    /// among that bucket's samples, then clamped to the exact observed
+    /// `[min, max]`. Interpolation keeps percentiles monotone in `p` and
+    /// removes the old bucket-edge bias (every percentile inside one
+    /// bucket used to collapse to the same midpoint). Returns 0 when
+    /// empty.
     pub fn percentile_ns(&self, p: f64) -> u64 {
         let total = self.count();
         if total == 0 {
@@ -90,12 +146,17 @@ impl Histogram {
         let rank = (((p / 100.0) * total as f64).ceil() as u64).clamp(1, total);
         let mut seen = 0u64;
         for (b, slot) in self.buckets.iter().enumerate() {
-            seen += slot.load(Ordering::Relaxed);
-            if seen >= rank {
-                return (1u64 << b) + ((1u64 << b) >> 1);
+            let c = slot.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= rank {
+                let lo = if b == 0 { 0u64 } else { 1u64 << b };
+                let hi = if b == BUCKETS - 1 { u64::MAX } else { 1u64 << (b + 1) };
+                let frac = (rank - seen) as f64 / c as f64;
+                let est = lo as f64 + frac * (hi - lo) as f64;
+                return (est as u64).clamp(self.min_ns(), self.max_ns());
             }
+            seen += c;
         }
-        u64::MAX
+        self.max_ns()
     }
 
     /// [`Histogram::percentile_ns`] as a [`Duration`].
@@ -111,6 +172,8 @@ impl Histogram {
         }
         self.count.store(0, Ordering::Relaxed);
         self.sum_ns.store(0, Ordering::Relaxed);
+        self.min_ns.store(u64::MAX, Ordering::Relaxed);
+        self.max_ns.store(0, Ordering::Relaxed);
     }
 }
 
@@ -130,7 +193,7 @@ mod tests {
     }
 
     #[test]
-    fn percentiles_land_in_the_right_bucket() {
+    fn percentiles_interpolate_within_the_bucket() {
         let h = Histogram::new();
         with_mode(TraceMode::Counters, || {
             // 90 fast (~1 µs) + 10 slow (~1 ms) samples
@@ -142,17 +205,76 @@ mod tests {
             }
             assert_eq!(h.count(), 100);
             assert_eq!(h.sum_ns(), 90 * 1_000 + 10 * 1_000_000);
+            assert_eq!(h.min_ns(), 1_000);
+            assert_eq!(h.max_ns(), 1_000_000);
             let p50 = h.percentile_ns(50.0);
             let p99 = h.percentile_ns(99.0);
-            // bucket midpoints: 1000 -> [512, 1024) midpoint 768;
-            // 1_000_000 -> [2^19, 2^20) midpoint 786432
-            assert_eq!(p50, 768);
-            assert_eq!(p99, 786_432);
+            // p50: rank 50 of 90 in [512, 1024) interpolates to ~796,
+            // then the exact-min clamp pulls it to the true 1000 (the old
+            // midpoint answer was 768, off by 23%)
+            assert_eq!(p50, 1_000);
+            // p99: rank 99 = 9th of 10 in [2^19, 2^20) -> 524288 + 0.9*524288
+            assert_eq!(p99, 996_147);
+            assert!((p99 as f64 - 1_000_000.0).abs() / 1_000_000.0 < 0.01);
             assert!(h.percentile_ns(0.0) <= p50 && p50 <= p99);
+            assert!(h.percentile_ns(100.0) <= h.max_ns());
             h.reset();
             assert_eq!(h.count(), 0);
             assert_eq!(h.percentile_ns(50.0), 0);
+            assert_eq!(h.min_ns(), 0);
+            assert_eq!(h.max_ns(), 0);
         });
+    }
+
+    /// Uniform samples inside one bucket: interpolated percentiles are
+    /// monotone and track the true quantiles far better than the bucket
+    /// midpoint.
+    #[test]
+    fn interpolation_tracks_uniform_samples() {
+        let h = Histogram::new();
+        with_mode(TraceMode::Counters, || {
+            for v in 1024..2048u64 {
+                h.record_ns(v);
+            }
+            let mut prev = 0;
+            for p in [10.0, 25.0, 50.0, 75.0, 90.0] {
+                let got = h.percentile_ns(p);
+                let want = 1024.0 + (p / 100.0) * 1024.0;
+                assert!(
+                    (got as f64 - want).abs() / want < 0.01,
+                    "p{p}: got {got}, want ~{want}"
+                );
+                assert!(got >= prev, "percentiles must be monotone");
+                prev = got;
+            }
+        });
+    }
+
+    #[test]
+    fn merge_combines_without_losing_the_tail() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        with_mode(TraceMode::Counters, || {
+            for _ in 0..90 {
+                a.record_ns(1_000);
+            }
+            for _ in 0..10 {
+                b.record_ns(1_000_000);
+            }
+        });
+        // merging is aggregation, not recording: works in any mode
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert_eq!(a.sum_ns(), 90 * 1_000 + 10 * 1_000_000);
+        assert_eq!(a.min_ns(), 1_000);
+        assert_eq!(a.max_ns(), 1_000_000);
+        // the slow tail survives the merge at full resolution
+        assert_eq!(a.percentile_ns(99.0), 996_147);
+        // merging an empty histogram is a no-op
+        let before = a.count();
+        a.merge(&Histogram::new());
+        assert_eq!(a.count(), before);
+        assert_eq!(a.min_ns(), 1_000);
     }
 
     #[test]
@@ -164,5 +286,7 @@ mod tests {
         });
         assert_eq!(h.count(), 0);
         assert_eq!(h.sum_ns(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
     }
 }

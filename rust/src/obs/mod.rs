@@ -43,9 +43,11 @@
 
 pub mod counters;
 pub mod hist;
+pub mod profile;
 
 pub use counters::{snapshot, summary, Snapshot};
 pub use hist::Histogram;
+pub use profile::{parse_trace, Profile};
 
 use std::cell::Cell;
 use std::io::Write;

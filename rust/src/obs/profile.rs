@@ -1,0 +1,1570 @@
+//! Trace profiling and cost-model attribution — the *consumption* side
+//! of the observability layer.
+//!
+//! PR 7 made the system emit structured telemetry (JSONL span traces,
+//! counters, histograms); this module makes that telemetry answer the
+//! paper's question. The paper's argument is a cost model — EP on
+//! compactly supported covariances wins because per-sweep work scales
+//! with `nnz(L)`, not `n²` — so a profile here is not just a flame
+//! graph: it aggregates a drained trace into per-phase inclusive /
+//! exclusive wall time, flop throughput for the factorization waves,
+//! pool utilization and imbalance, a critical-path analysis over the
+//! factor's wave barriers, and a **cost-model attribution table** that
+//! divides each phase's measured nanoseconds by its predicted work units
+//! (`flops` for the factor and Takahashi passes, `nnz(L)` per EP sweep,
+//! batch items for serving) so a regression shows up as a drifting
+//! ns-per-unit instead of an unexplained total.
+//!
+//! Everything is std-only: [`Json`] is a minimal recursive-descent JSON
+//! parser for the trace schema (`obs::flush` span lines and the metrics
+//! exporter's snapshot lines), [`parse_trace`] splits a JSONL file into
+//! the two event kinds, [`Profile::from_trace`] aggregates, and
+//! [`Profile::render_text`] / [`Profile::render_json`] feed the
+//! `csgp trace analyze` subcommand. [`diff`] compares two profiles
+//! phase-by-phase for `csgp trace diff`, flagging phases whose
+//! ns-per-unit ratio drifts beyond a tolerance — the CI-facing answer to
+//! "did this PR regress a stage or just move time around?".
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::time::Duration;
+
+use crate::bench::fmt_duration;
+
+// ---------------------------------------------------------------------------
+// Minimal JSON.
+// ---------------------------------------------------------------------------
+
+/// A parsed JSON value. Object fields keep insertion order (the trace
+/// schema is small; no hashing needed).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one complete JSON document (no trailing garbage).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = JsonParser { b: text.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing characters at byte {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.is_finite() => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(format!("expected '{}' at byte {}", c as char, self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(format!("unexpected '{}' at byte {}", c as char, self.i)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, value: Json) -> Result<Json, String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(value)
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.i += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?;
+        text.parse::<f64>().map(Json::Num).map_err(|e| format!("bad number '{text}': {e}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err("unterminated string".to_string()),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err("truncated \\u escape".to_string());
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|e| e.to_string())?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|e| format!("bad \\u escape: {e}"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        c => return Err(format!("bad escape '\\{}'", c as char)),
+                    }
+                }
+                Some(_) => {
+                    // copy a run of plain bytes (UTF-8 passes through)
+                    let start = self.i;
+                    while matches!(self.peek(), Some(c) if c != b'"' && c != b'\\') {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i]).map_err(|e| e.to_string())?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let value = self.value()?;
+            fields.push((key, value));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace events.
+// ---------------------------------------------------------------------------
+
+/// One span line from a trace file (the serialized form of
+/// [`super::SpanEvent`], with owned strings).
+#[derive(Clone, Debug)]
+pub struct SpanRec {
+    pub name: String,
+    pub tid: u64,
+    pub id: u64,
+    /// 0 = root (`"parent": null` in the JSONL).
+    pub parent: u64,
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    pub fields: Vec<(String, Json)>,
+}
+
+impl SpanRec {
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+
+    pub fn field_f64(&self, key: &str) -> Option<f64> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_f64())
+    }
+
+    pub fn field_u64(&self, key: &str) -> Option<u64> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_u64())
+    }
+
+    pub fn field_bool(&self, key: &str) -> Option<bool> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_bool())
+    }
+
+    pub fn field_str(&self, key: &str) -> Option<&str> {
+        self.fields.iter().find(|(k, _)| k == key).and_then(|(_, v)| v.as_str())
+    }
+}
+
+/// One metrics-exporter snapshot line (`"ev":"metrics"`, see
+/// `coordinator::service::MetricsExporter`).
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRec {
+    pub seq: u64,
+    /// Monotone nanoseconds since the emitting process's trace epoch.
+    pub t_ns: u64,
+    pub in_flight: u64,
+    pub requests: u64,
+    pub rejected: u64,
+    pub request_p50_ns: Option<u64>,
+    pub request_p99_ns: Option<u64>,
+    /// The full counter snapshot at this instant.
+    pub counters: Vec<(String, u64)>,
+}
+
+/// A parsed trace file: span events, metrics snapshots, and a count of
+/// lines that were valid JSON but neither event kind.
+#[derive(Clone, Debug, Default)]
+pub struct TraceData {
+    pub spans: Vec<SpanRec>,
+    pub metrics: Vec<MetricsRec>,
+    pub skipped: usize,
+}
+
+/// Parse a JSONL trace (span lines, metrics lines, or a mix — the
+/// analyzer accepts both `--trace` output and `serve --metrics` output).
+/// Blank lines are ignored; malformed JSON is an error naming the line.
+pub fn parse_trace(text: &str) -> Result<TraceData, String> {
+    let mut data = TraceData::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let v = Json::parse(line).map_err(|e| format!("line {}: {e}", lineno + 1))?;
+        match v.get("ev").and_then(Json::as_str) {
+            Some("span") => {
+                let req_u64 = |key: &str| {
+                    v.get(key)
+                        .and_then(Json::as_u64)
+                        .ok_or_else(|| format!("line {}: span missing '{key}'", lineno + 1))
+                };
+                let fields = match v.get("fields") {
+                    Some(Json::Obj(f)) => f.clone(),
+                    _ => Vec::new(),
+                };
+                data.spans.push(SpanRec {
+                    name: v
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| format!("line {}: span missing 'name'", lineno + 1))?
+                        .to_string(),
+                    tid: req_u64("tid")?,
+                    id: req_u64("id")?,
+                    parent: v.get("parent").and_then(Json::as_u64).unwrap_or(0),
+                    t0_ns: req_u64("t0_ns")?,
+                    t1_ns: req_u64("t1_ns")?,
+                    fields,
+                });
+            }
+            Some("metrics") => {
+                let u = |key: &str| v.get(key).and_then(Json::as_u64);
+                let counters = match v.get("counters") {
+                    Some(Json::Obj(f)) => f
+                        .iter()
+                        .filter_map(|(k, x)| x.as_u64().map(|n| (k.clone(), n)))
+                        .collect(),
+                    _ => Vec::new(),
+                };
+                data.metrics.push(MetricsRec {
+                    seq: u("seq").unwrap_or(data.metrics.len() as u64),
+                    t_ns: u("t_ns")
+                        .ok_or_else(|| format!("line {}: metrics missing 't_ns'", lineno + 1))?,
+                    in_flight: u("in_flight").unwrap_or(0),
+                    requests: u("requests").unwrap_or(0),
+                    rejected: u("rejected").unwrap_or(0),
+                    request_p50_ns: u("request_p50_ns"),
+                    request_p99_ns: u("request_p99_ns"),
+                    counters,
+                });
+            }
+            _ => data.skipped += 1,
+        }
+    }
+    Ok(data)
+}
+
+// ---------------------------------------------------------------------------
+// Profile aggregation.
+// ---------------------------------------------------------------------------
+
+/// Per-span-name aggregate: inclusive time (span enter→exit) and
+/// exclusive time (inclusive minus the inclusive time of direct
+/// children), so a phase table sums to wall time without double counting
+/// nesting.
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    pub name: String,
+    pub count: u64,
+    pub inclusive_ns: u64,
+    pub exclusive_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+/// A factor instance whose ns-per-flop is an outlier against the run's
+/// median — the within-run drift flag (a jitter-retry storm, a cold page
+/// wave, a pool stall show up here before they show up in totals).
+#[derive(Clone, Debug)]
+pub struct FactorOutlier {
+    pub span_id: u64,
+    pub ns: u64,
+    pub flops: u64,
+    pub ratio_vs_median: f64,
+}
+
+/// Aggregated factorization profile: throughput, wave critical path and
+/// the parallel headroom it implies.
+#[derive(Clone, Debug)]
+pub struct FactorProfile {
+    pub count: u64,
+    pub total_ns: u64,
+    pub flops: u64,
+    /// Padded `nnz(L)` (max over factor spans; the pattern is fixed per
+    /// run, so max == the run's value).
+    pub nnz: u64,
+    pub waves: u64,
+    /// Lower bound on factor wall time given the wave barriers: the sum
+    /// over waves of the longest participant's busy time (wave duration
+    /// when a wave ran inline).
+    pub critical_path_ns: u64,
+    /// Total participant busy time — the serial-equivalent work.
+    pub busy_ns: u64,
+    pub outliers: Vec<FactorOutlier>,
+}
+
+impl FactorProfile {
+    /// flops per second over measured factor wall time.
+    pub fn flops_per_s(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.flops as f64 / (self.total_ns as f64 * 1e-9)
+        }
+    }
+
+    /// Speedup actually achieved over running every chunk serially.
+    pub fn achieved_parallelism(&self) -> f64 {
+        if self.total_ns == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / self.total_ns as f64
+        }
+    }
+
+    /// Upper bound on that speedup given the wave barriers.
+    pub fn max_parallelism(&self) -> f64 {
+        if self.critical_path_ns == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / self.critical_path_ns as f64
+        }
+    }
+}
+
+/// Pool behaviour reconstructed from `par.worker` spans.
+#[derive(Clone, Debug)]
+pub struct PoolProfile {
+    pub worker_spans: u64,
+    pub chunks: u64,
+    pub stolen_spans: u64,
+    pub busy_ns: u64,
+    /// Sum of worker span durations (busy + steal-loop overhead + waiting
+    /// for the last chunk grab).
+    pub span_ns: u64,
+    pub regions: u64,
+    /// Worst region's max-participant-busy over mean-participant-busy,
+    /// in permille (1000 = perfectly balanced).
+    pub imbalance_max_permille: u64,
+}
+
+impl PoolProfile {
+    /// Fraction of worker span time spent inside chunk bodies.
+    pub fn utilization(&self) -> f64 {
+        if self.span_ns == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / self.span_ns as f64
+        }
+    }
+}
+
+/// EP convergence trajectory summarized from `ep.sweep` spans.
+#[derive(Clone, Debug)]
+pub struct EpProfile {
+    pub sweeps: u64,
+    pub backends: Vec<String>,
+    pub final_dlogz: Option<f64>,
+    pub final_max_site_delta: Option<f64>,
+    pub rollbacks: u64,
+    pub skipped_sites: u64,
+}
+
+/// One row of the cost-model attribution table: a phase's measured time
+/// divided by its predicted work units, per the ARCHITECTURE.md per-sweep
+/// cost model. Comparable across runs of the *same* phase (that is what
+/// [`diff`] does); not across phases (the units differ).
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub phase: String,
+    /// What a "unit" is for this phase ("flop", "nnz·sweep", "item").
+    pub unit: &'static str,
+    pub measured_ns: u64,
+    pub units: f64,
+    pub ns_per_unit: f64,
+    pub note: String,
+}
+
+/// Metrics-exporter stream summary (`serve --metrics` round-trip).
+#[derive(Clone, Debug)]
+pub struct MetricsProfile {
+    pub snapshots: u64,
+    /// Timestamps strictly non-decreasing in file order.
+    pub monotone: bool,
+    pub span_ns: u64,
+    pub last_in_flight: u64,
+    pub requests_delta: u64,
+    pub rejected_delta: u64,
+    pub last_request_p50_ns: Option<u64>,
+    pub last_request_p99_ns: Option<u64>,
+    /// last − first per counter, nonzero entries only.
+    pub counter_deltas: Vec<(String, u64)>,
+}
+
+/// The aggregated profile of one trace.
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub spans: u64,
+    /// Spans whose parent id never appeared (dropped buffers, partial
+    /// file) — treated as roots.
+    pub orphans: u64,
+    pub wall_ns: u64,
+    /// Sorted by inclusive time, descending.
+    pub phases: Vec<PhaseStat>,
+    pub factor: Option<FactorProfile>,
+    pub pool: Option<PoolProfile>,
+    pub ep: Option<EpProfile>,
+    pub cost: Vec<CostRow>,
+    pub metrics: Option<MetricsProfile>,
+}
+
+/// Instances slower than this multiple of the median ns-per-flop are
+/// flagged as within-run drift.
+const OUTLIER_RATIO: f64 = 2.0;
+
+impl Profile {
+    pub fn from_trace(data: &TraceData) -> Profile {
+        let spans = &data.spans;
+        let mut index: HashMap<u64, usize> = HashMap::with_capacity(spans.len());
+        for (i, s) in spans.iter().enumerate() {
+            index.insert(s.id, i);
+        }
+        // direct-children inclusive sums + child lists (for factor waves)
+        let mut child_incl = vec![0u64; spans.len()];
+        let mut children: HashMap<u64, Vec<usize>> = HashMap::new();
+        let mut orphans = 0u64;
+        for (i, s) in spans.iter().enumerate() {
+            if s.parent == 0 {
+                continue;
+            }
+            match index.get(&s.parent) {
+                Some(&pi) => {
+                    child_incl[pi] += s.dur_ns();
+                    children.entry(s.parent).or_default().push(i);
+                }
+                None => orphans += 1,
+            }
+        }
+
+        // per-phase table
+        let mut phase_map: HashMap<&str, PhaseStat> = HashMap::new();
+        for (i, s) in spans.iter().enumerate() {
+            let dur = s.dur_ns();
+            let excl = dur.saturating_sub(child_incl[i]);
+            let e = phase_map.entry(&s.name).or_insert_with(|| PhaseStat {
+                name: s.name.clone(),
+                count: 0,
+                inclusive_ns: 0,
+                exclusive_ns: 0,
+                min_ns: u64::MAX,
+                max_ns: 0,
+            });
+            e.count += 1;
+            e.inclusive_ns += dur;
+            e.exclusive_ns += excl;
+            e.min_ns = e.min_ns.min(dur);
+            e.max_ns = e.max_ns.max(dur);
+        }
+        let mut phases: Vec<PhaseStat> = phase_map.into_values().collect();
+        phases.sort_by(|a, b| b.inclusive_ns.cmp(&a.inclusive_ns).then(a.name.cmp(&b.name)));
+
+        let wall_ns = {
+            let t0 = spans.iter().map(|s| s.t0_ns).min();
+            let t1 = spans.iter().map(|s| s.t1_ns).max();
+            match (t0, t1) {
+                (Some(a), Some(b)) => b.saturating_sub(a),
+                _ => data
+                    .metrics
+                    .last()
+                    .zip(data.metrics.first())
+                    .map(|(l, f)| l.t_ns.saturating_sub(f.t_ns))
+                    .unwrap_or(0),
+            }
+        };
+
+        let factor = Self::factor_profile(spans, &children);
+        let pool = Self::pool_profile(spans);
+        let ep = Self::ep_profile(spans);
+        let cost = Self::cost_rows(&phases, factor.as_ref());
+        let metrics = Self::metrics_profile(&data.metrics);
+
+        Profile {
+            spans: spans.len() as u64,
+            orphans,
+            wall_ns,
+            phases,
+            factor,
+            pool,
+            ep,
+            cost,
+            metrics,
+        }
+    }
+
+    fn factor_profile(
+        spans: &[SpanRec],
+        children: &HashMap<u64, Vec<usize>>,
+    ) -> Option<FactorProfile> {
+        let mut out = FactorProfile {
+            count: 0,
+            total_ns: 0,
+            flops: 0,
+            nnz: 0,
+            waves: 0,
+            critical_path_ns: 0,
+            busy_ns: 0,
+            outliers: Vec::new(),
+        };
+        // (span id, ns, flops) per factor instance for outlier flagging
+        let mut instances: Vec<(u64, u64, u64)> = Vec::new();
+        for f in spans.iter().filter(|s| s.name == "factor") {
+            out.count += 1;
+            out.total_ns += f.dur_ns();
+            out.nnz = out.nnz.max(f.field_u64("nnz").unwrap_or(0));
+            let mut f_flops = 0u64;
+            for &wi in children.get(&f.id).map(Vec::as_slice).unwrap_or(&[]) {
+                let w = &spans[wi];
+                if w.name != "factor.wave" {
+                    continue;
+                }
+                out.waves += 1;
+                f_flops += w.field_u64("flops").unwrap_or(0);
+                // critical path: the longest participant of this wave
+                // (the wave itself when it ran inline, no workers)
+                let mut wave_busy = 0u64;
+                let mut wave_crit = 0u64;
+                for &pi in children.get(&w.id).map(Vec::as_slice).unwrap_or(&[]) {
+                    let p = &spans[pi];
+                    if p.name != "par.worker" {
+                        continue;
+                    }
+                    let busy = p.field_u64("busy_ns").unwrap_or(p.dur_ns());
+                    wave_busy += busy;
+                    wave_crit = wave_crit.max(busy);
+                }
+                if wave_crit == 0 {
+                    wave_crit = w.dur_ns();
+                    wave_busy = w.dur_ns();
+                }
+                out.critical_path_ns += wave_crit;
+                out.busy_ns += wave_busy;
+            }
+            out.flops += f_flops;
+            if f_flops > 0 {
+                instances.push((f.id, f.dur_ns(), f_flops));
+            }
+        }
+        if out.count == 0 {
+            return None;
+        }
+        // within-run drift: instances whose ns/flop exceeds 2x the median
+        if instances.len() >= 2 {
+            let mut ratios: Vec<f64> =
+                instances.iter().map(|&(_, ns, fl)| ns as f64 / fl as f64).collect();
+            ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let median = ratios[ratios.len() / 2];
+            if median > 0.0 {
+                for &(id, ns, fl) in &instances {
+                    let r = (ns as f64 / fl as f64) / median;
+                    if r > OUTLIER_RATIO {
+                        out.outliers.push(FactorOutlier {
+                            span_id: id,
+                            ns,
+                            flops: fl,
+                            ratio_vs_median: r,
+                        });
+                    }
+                }
+                out.outliers.sort_by(|a, b| {
+                    b.ratio_vs_median.partial_cmp(&a.ratio_vs_median).unwrap()
+                });
+            }
+        }
+        Some(out)
+    }
+
+    fn pool_profile(spans: &[SpanRec]) -> Option<PoolProfile> {
+        let mut out = PoolProfile {
+            worker_spans: 0,
+            chunks: 0,
+            stolen_spans: 0,
+            busy_ns: 0,
+            span_ns: 0,
+            regions: 0,
+            imbalance_max_permille: 0,
+        };
+        // region = the issuing span a worker parented under
+        let mut regions: HashMap<u64, Vec<u64>> = HashMap::new();
+        for w in spans.iter().filter(|s| s.name == "par.worker") {
+            out.worker_spans += 1;
+            out.chunks += w.field_u64("chunks").unwrap_or(0);
+            if w.field_bool("stolen").unwrap_or(false) {
+                out.stolen_spans += 1;
+            }
+            let busy = w.field_u64("busy_ns").unwrap_or(0);
+            out.busy_ns += busy;
+            out.span_ns += w.dur_ns();
+            regions.entry(w.parent).or_default().push(busy);
+        }
+        if out.worker_spans == 0 {
+            return None;
+        }
+        out.regions = regions.len() as u64;
+        for busys in regions.values() {
+            let max = busys.iter().copied().max().unwrap_or(0) as f64;
+            let mean = busys.iter().sum::<u64>() as f64 / busys.len() as f64;
+            if mean > 0.0 {
+                out.imbalance_max_permille =
+                    out.imbalance_max_permille.max((max / mean * 1000.0) as u64);
+            }
+        }
+        Some(out)
+    }
+
+    fn ep_profile(spans: &[SpanRec]) -> Option<EpProfile> {
+        let mut sweeps: Vec<&SpanRec> = spans.iter().filter(|s| s.name == "ep.sweep").collect();
+        if sweeps.is_empty() {
+            return None;
+        }
+        sweeps.sort_by_key(|s| s.t0_ns);
+        let mut backends: Vec<String> = Vec::new();
+        let mut rollbacks = 0u64;
+        let mut skipped = 0u64;
+        for s in &sweeps {
+            if let Some(b) = s.field_str("backend") {
+                if !backends.iter().any(|x| x == b) {
+                    backends.push(b.to_string());
+                }
+            }
+            if s.field_bool("rolled_back").unwrap_or(false) {
+                rollbacks += 1;
+            }
+            skipped += s.field_u64("skipped_sites").unwrap_or(0);
+        }
+        let last = sweeps.last().unwrap();
+        Some(EpProfile {
+            sweeps: sweeps.len() as u64,
+            backends,
+            final_dlogz: last.field_f64("dlogz"),
+            final_max_site_delta: last.field_f64("max_site_delta"),
+            rollbacks,
+            skipped_sites: skipped,
+        })
+    }
+
+    /// The attribution table. Per the ARCHITECTURE.md cost model:
+    /// factorization and Takahashi work is counted in flops (exact, from
+    /// the wave instrumentation), per-sweep EP work scales with `nnz(L)`
+    /// (the paper's core claim), and service batches scale with items.
+    fn cost_rows(phases: &[PhaseStat], factor: Option<&FactorProfile>) -> Vec<CostRow> {
+        let mut rows = Vec::new();
+        let phase = |name: &str| phases.iter().find(|p| p.name == name);
+        if let Some(f) = factor {
+            if f.flops > 0 && f.total_ns > 0 {
+                let note = if f.outliers.is_empty() {
+                    String::new()
+                } else {
+                    format!(
+                        "{} instance(s) > {OUTLIER_RATIO:.0}x median ns/flop (worst {:.1}x)",
+                        f.outliers.len(),
+                        f.outliers[0].ratio_vs_median
+                    )
+                };
+                rows.push(CostRow {
+                    phase: "factor".to_string(),
+                    unit: "flop",
+                    measured_ns: f.total_ns,
+                    units: f.flops as f64,
+                    ns_per_unit: f.total_ns as f64 / f.flops as f64,
+                    note,
+                });
+            }
+            if let Some(p) = phase("takahashi") {
+                // same dense-panel traffic over the same pattern as the
+                // factor, so the factor's mean flop count per pass is the
+                // model (the wave fields live on the factor spans)
+                let per_pass = f.flops as f64 / f.count.max(1) as f64;
+                let units = per_pass * p.count as f64;
+                if units > 0.0 && p.inclusive_ns > 0 {
+                    rows.push(CostRow {
+                        phase: "takahashi".to_string(),
+                        unit: "flop",
+                        measured_ns: p.inclusive_ns,
+                        units,
+                        ns_per_unit: p.inclusive_ns as f64 / units,
+                        note: "flops modeled from factor panel work".to_string(),
+                    });
+                }
+            }
+            if let Some(p) = phase("ep.sweep") {
+                // the paper's claim: per-sweep work (site visits, solves,
+                // marginals — everything except the nested factor, hence
+                // exclusive time) is O(nnz(L))
+                let units = f.nnz as f64 * p.count as f64;
+                if units > 0.0 && p.exclusive_ns > 0 {
+                    rows.push(CostRow {
+                        phase: "ep.sweep".to_string(),
+                        unit: "nnz·sweep",
+                        measured_ns: p.exclusive_ns,
+                        units,
+                        ns_per_unit: p.exclusive_ns as f64 / units,
+                        note: "exclusive of the nested factor".to_string(),
+                    });
+                }
+            }
+        }
+        if let Some(p) = phase("svc.batch") {
+            // units come from the per-span `size` field; the phase table
+            // has no field sums, so this row is only emitted when the
+            // factor path isn't the story (serving traces)
+            rows.push(CostRow {
+                phase: "svc.batch".to_string(),
+                unit: "batch",
+                measured_ns: p.inclusive_ns,
+                units: p.count as f64,
+                ns_per_unit: p.inclusive_ns as f64 / p.count.max(1) as f64,
+                note: String::new(),
+            });
+        }
+        rows
+    }
+
+    fn metrics_profile(metrics: &[MetricsRec]) -> Option<MetricsProfile> {
+        let (first, last) = (metrics.first()?, metrics.last()?);
+        let monotone = metrics.windows(2).all(|w| w[0].t_ns <= w[1].t_ns);
+        let first_counters: HashMap<&str, u64> =
+            first.counters.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+        let mut counter_deltas: Vec<(String, u64)> = last
+            .counters
+            .iter()
+            .map(|(k, v)| {
+                let base = first_counters.get(k.as_str()).copied().unwrap_or(0);
+                (k.clone(), v.saturating_sub(base))
+            })
+            .filter(|(_, d)| *d > 0)
+            .collect();
+        counter_deltas.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        Some(MetricsProfile {
+            snapshots: metrics.len() as u64,
+            monotone,
+            span_ns: last.t_ns.saturating_sub(first.t_ns),
+            last_in_flight: last.in_flight,
+            requests_delta: last.requests.saturating_sub(first.requests),
+            rejected_delta: last.rejected.saturating_sub(first.rejected),
+            last_request_p50_ns: last.request_p50_ns,
+            last_request_p99_ns: last.request_p99_ns,
+            counter_deltas,
+        })
+    }
+
+    // -- rendering ---------------------------------------------------------
+
+    /// Human-readable report (the default `csgp trace analyze` output).
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let ns = |v: u64| fmt_duration(Duration::from_nanos(v));
+        let _ = writeln!(
+            out,
+            "trace profile: {} spans, wall {}{}",
+            self.spans,
+            ns(self.wall_ns),
+            if self.orphans > 0 {
+                format!(" ({} orphaned spans treated as roots)", self.orphans)
+            } else {
+                String::new()
+            }
+        );
+        if !self.phases.is_empty() {
+            let _ = writeln!(out, "\nphases:");
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>7} {:>12} {:>12} {:>7} {:>12}",
+                "phase", "count", "inclusive", "exclusive", "incl%", "max"
+            );
+            for p in &self.phases {
+                let pct = if self.wall_ns > 0 {
+                    100.0 * p.inclusive_ns as f64 / self.wall_ns as f64
+                } else {
+                    0.0
+                };
+                let _ = writeln!(
+                    out,
+                    "  {:<14} {:>7} {:>12} {:>12} {:>6.1}% {:>12}",
+                    p.name,
+                    p.count,
+                    ns(p.inclusive_ns),
+                    ns(p.exclusive_ns),
+                    pct,
+                    ns(p.max_ns)
+                );
+            }
+        }
+        if let Some(f) = &self.factor {
+            let _ = writeln!(
+                out,
+                "\nfactor: {} refactor(s), {} over {} waves -> {} \
+                 (nnz(L) = {}, critical path {} => max parallel {:.2}x, achieved {:.2}x)",
+                f.count,
+                fmt_flops(f.flops),
+                f.waves,
+                fmt_flops_per_s(f.flops_per_s()),
+                f.nnz,
+                ns(f.critical_path_ns),
+                f.max_parallelism(),
+                f.achieved_parallelism(),
+            );
+            for o in f.outliers.iter().take(3) {
+                let _ = writeln!(
+                    out,
+                    "  WARNING: factor span {} ran {:.1}x the median ns/flop ({} for {})",
+                    o.span_id,
+                    o.ratio_vs_median,
+                    ns(o.ns),
+                    fmt_flops(o.flops)
+                );
+            }
+        }
+        if let Some(p) = &self.pool {
+            let _ = writeln!(
+                out,
+                "pool: {} worker span(s) over {} region(s): {} chunks, {:.0}% utilization, \
+                 {} stolen, imbalance max {} permille",
+                p.worker_spans,
+                p.regions,
+                p.chunks,
+                100.0 * p.utilization(),
+                p.stolen_spans,
+                p.imbalance_max_permille
+            );
+        }
+        if let Some(e) = &self.ep {
+            let _ = writeln!(
+                out,
+                "ep: {} sweep(s) [{}], final |dlogz| {}, max site delta {}, \
+                 rollbacks {}, skipped sites {}",
+                e.sweeps,
+                e.backends.join(", "),
+                e.final_dlogz.map(|v| format!("{:.3e}", v.abs())).unwrap_or_else(|| "-".into()),
+                e.final_max_site_delta
+                    .map(|v| format!("{v:.3e}"))
+                    .unwrap_or_else(|| "-".into()),
+                e.rollbacks,
+                e.skipped_sites
+            );
+        }
+        if !self.cost.is_empty() {
+            let _ = writeln!(out, "\ncost model (measured vs predicted work units):");
+            let _ = writeln!(
+                out,
+                "  {:<12} {:>12} {:>14} {:>12}  note",
+                "phase", "measured", "units", "ns/unit"
+            );
+            for r in &self.cost {
+                let _ = writeln!(
+                    out,
+                    "  {:<12} {:>12} {:>14} {:>12.4}  {}",
+                    r.phase,
+                    ns(r.measured_ns),
+                    format!("{} {}", fmt_units(r.units), r.unit),
+                    r.ns_per_unit,
+                    r.note
+                );
+            }
+        }
+        if let Some(m) = &self.metrics {
+            let _ = writeln!(
+                out,
+                "\nmetrics: {} snapshot(s) over {} (timestamps {}), last in_flight {}, \
+                 +requests {}, +rejected {}{}",
+                m.snapshots,
+                ns(m.span_ns),
+                if m.monotone { "monotone" } else { "NOT MONOTONE" },
+                m.last_in_flight,
+                m.requests_delta,
+                m.rejected_delta,
+                match (m.last_request_p50_ns, m.last_request_p99_ns) {
+                    (Some(p50), Some(p99)) =>
+                        format!(", request p50 {} p99 {}", ns(p50), ns(p99)),
+                    _ => String::new(),
+                }
+            );
+            if !m.counter_deltas.is_empty() {
+                let deltas: Vec<String> = m
+                    .counter_deltas
+                    .iter()
+                    .take(12)
+                    .map(|(k, v)| format!("{k} +{v}"))
+                    .collect();
+                let _ = writeln!(out, "  counter deltas: {}", deltas.join(", "));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable report (`csgp trace analyze --json`). Stable
+    /// field order; consumed by CI smokes and downstream tooling.
+    pub fn render_json(&self) -> String {
+        let mut o = String::new();
+        o.push_str("{\n");
+        let _ = write!(
+            o,
+            "  \"spans\": {}, \"orphans\": {}, \"wall_ns\": {},\n",
+            self.spans, self.orphans, self.wall_ns
+        );
+        o.push_str("  \"phases\": [\n");
+        for (i, p) in self.phases.iter().enumerate() {
+            let _ = write!(
+                o,
+                "    {{\"name\": \"{}\", \"count\": {}, \"inclusive_ns\": {}, \
+                 \"exclusive_ns\": {}, \"min_ns\": {}, \"max_ns\": {}}}{}\n",
+                p.name,
+                p.count,
+                p.inclusive_ns,
+                p.exclusive_ns,
+                p.min_ns,
+                p.max_ns,
+                if i + 1 < self.phases.len() { "," } else { "" }
+            );
+        }
+        o.push_str("  ],\n");
+        match &self.factor {
+            Some(f) => {
+                let _ = write!(
+                    o,
+                    "  \"factor\": {{\"count\": {}, \"total_ns\": {}, \"flops\": {}, \
+                     \"nnz\": {}, \"waves\": {}, \"critical_path_ns\": {}, \"busy_ns\": {}, \
+                     \"flops_per_s\": {:.1}, \"outliers\": {}}},\n",
+                    f.count,
+                    f.total_ns,
+                    f.flops,
+                    f.nnz,
+                    f.waves,
+                    f.critical_path_ns,
+                    f.busy_ns,
+                    f.flops_per_s(),
+                    f.outliers.len()
+                );
+            }
+            None => o.push_str("  \"factor\": null,\n"),
+        }
+        match &self.pool {
+            Some(p) => {
+                let _ = write!(
+                    o,
+                    "  \"pool\": {{\"worker_spans\": {}, \"chunks\": {}, \"stolen_spans\": {}, \
+                     \"busy_ns\": {}, \"span_ns\": {}, \"regions\": {}, \
+                     \"utilization\": {:.4}, \"imbalance_max_permille\": {}}},\n",
+                    p.worker_spans,
+                    p.chunks,
+                    p.stolen_spans,
+                    p.busy_ns,
+                    p.span_ns,
+                    p.regions,
+                    p.utilization(),
+                    p.imbalance_max_permille
+                );
+            }
+            None => o.push_str("  \"pool\": null,\n"),
+        }
+        match &self.ep {
+            Some(e) => {
+                let backends: Vec<String> =
+                    e.backends.iter().map(|b| format!("\"{b}\"")).collect();
+                let _ = write!(
+                    o,
+                    "  \"ep\": {{\"sweeps\": {}, \"backends\": [{}], \"rollbacks\": {}, \
+                     \"skipped_sites\": {}}},\n",
+                    e.sweeps,
+                    backends.join(", "),
+                    e.rollbacks,
+                    e.skipped_sites
+                );
+            }
+            None => o.push_str("  \"ep\": null,\n"),
+        }
+        o.push_str("  \"cost\": [\n");
+        for (i, r) in self.cost.iter().enumerate() {
+            let _ = write!(
+                o,
+                "    {{\"phase\": \"{}\", \"unit\": \"{}\", \"measured_ns\": {}, \
+                 \"units\": {:.1}, \"ns_per_unit\": {:.6}, \"note\": \"{}\"}}{}\n",
+                r.phase,
+                r.unit,
+                r.measured_ns,
+                r.units,
+                r.ns_per_unit,
+                r.note,
+                if i + 1 < self.cost.len() { "," } else { "" }
+            );
+        }
+        o.push_str("  ],\n");
+        match &self.metrics {
+            Some(m) => {
+                let deltas: Vec<String> = m
+                    .counter_deltas
+                    .iter()
+                    .map(|(k, v)| format!("\"{k}\": {v}"))
+                    .collect();
+                let _ = write!(
+                    o,
+                    "  \"metrics\": {{\"snapshots\": {}, \"monotone\": {}, \"span_ns\": {}, \
+                     \"last_in_flight\": {}, \"requests_delta\": {}, \"rejected_delta\": {}, \
+                     \"counter_deltas\": {{{}}}}}\n",
+                    m.snapshots,
+                    m.monotone,
+                    m.span_ns,
+                    m.last_in_flight,
+                    m.requests_delta,
+                    m.rejected_delta,
+                    deltas.join(", ")
+                );
+            }
+            None => o.push_str("  \"metrics\": null\n"),
+        }
+        o.push_str("}\n");
+        o
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Diff.
+// ---------------------------------------------------------------------------
+
+/// One phase's A-vs-B comparison.
+#[derive(Clone, Debug)]
+pub struct PhaseDelta {
+    pub name: String,
+    pub a_inclusive_ns: u64,
+    pub b_inclusive_ns: u64,
+    /// b/a (None when the phase is missing on either side).
+    pub ratio: Option<f64>,
+    pub flagged: bool,
+}
+
+/// One cost-model row's ns-per-unit drift between runs.
+#[derive(Clone, Debug)]
+pub struct CostDelta {
+    pub phase: String,
+    pub unit: &'static str,
+    pub a_ns_per_unit: f64,
+    pub b_ns_per_unit: f64,
+    pub ratio: f64,
+    pub flagged: bool,
+}
+
+/// `csgp trace diff` result: per-phase wall-time deltas plus
+/// cost-model-normalized drift (the latter is the regression signal —
+/// ns-per-unit factors out "run B simply did more sweeps").
+#[derive(Clone, Debug)]
+pub struct ProfileDiff {
+    pub tolerance: f64,
+    pub a_wall_ns: u64,
+    pub b_wall_ns: u64,
+    pub phases: Vec<PhaseDelta>,
+    pub cost: Vec<CostDelta>,
+}
+
+impl ProfileDiff {
+    pub fn flagged(&self) -> usize {
+        self.phases.iter().filter(|p| p.flagged).count()
+            + self.cost.iter().filter(|c| c.flagged).count()
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        let ns = |v: u64| fmt_duration(Duration::from_nanos(v));
+        let _ = writeln!(
+            out,
+            "trace diff (tolerance {:.0}%): wall {} -> {}",
+            self.tolerance * 100.0,
+            ns(self.a_wall_ns),
+            ns(self.b_wall_ns)
+        );
+        let _ = writeln!(
+            out,
+            "  {:<14} {:>12} {:>12} {:>9}",
+            "phase", "a inclusive", "b inclusive", "b/a"
+        );
+        for p in &self.phases {
+            let ratio = match p.ratio {
+                Some(r) => format!("{r:.2}x"),
+                None => "-".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<14} {:>12} {:>12} {:>9}{}",
+                p.name,
+                ns(p.a_inclusive_ns),
+                ns(p.b_inclusive_ns),
+                ratio,
+                if p.flagged { "  <-- drift" } else { "" }
+            );
+        }
+        if !self.cost.is_empty() {
+            let _ = writeln!(out, "cost-model drift (ns/unit, normalized for work done):");
+            for c in &self.cost {
+                let _ = writeln!(
+                    out,
+                    "  {:<14} {:>10.4} -> {:>10.4} ns/{} ({:.2}x){}",
+                    c.phase,
+                    c.a_ns_per_unit,
+                    c.b_ns_per_unit,
+                    c.unit,
+                    c.ratio,
+                    if c.flagged { "  <-- drift" } else { "" }
+                );
+            }
+        }
+        let flagged = self.flagged();
+        let _ = writeln!(
+            out,
+            "{}",
+            if flagged == 0 {
+                "no drift beyond tolerance".to_string()
+            } else {
+                format!("{flagged} phase(s) drifted beyond tolerance")
+            }
+        );
+        out
+    }
+
+    pub fn render_json(&self) -> String {
+        let mut o = String::new();
+        o.push_str("{\n");
+        let _ = write!(
+            o,
+            "  \"tolerance\": {}, \"a_wall_ns\": {}, \"b_wall_ns\": {}, \"flagged\": {},\n",
+            self.tolerance,
+            self.a_wall_ns,
+            self.b_wall_ns,
+            self.flagged()
+        );
+        o.push_str("  \"phases\": [\n");
+        for (i, p) in self.phases.iter().enumerate() {
+            let ratio = match p.ratio {
+                Some(r) => format!("{r:.6}"),
+                None => "null".to_string(),
+            };
+            let _ = write!(
+                o,
+                "    {{\"name\": \"{}\", \"a_inclusive_ns\": {}, \"b_inclusive_ns\": {}, \
+                 \"ratio\": {}, \"flagged\": {}}}{}\n",
+                p.name,
+                p.a_inclusive_ns,
+                p.b_inclusive_ns,
+                ratio,
+                p.flagged,
+                if i + 1 < self.phases.len() { "," } else { "" }
+            );
+        }
+        o.push_str("  ],\n");
+        o.push_str("  \"cost\": [\n");
+        for (i, c) in self.cost.iter().enumerate() {
+            let _ = write!(
+                o,
+                "    {{\"phase\": \"{}\", \"unit\": \"{}\", \"a_ns_per_unit\": {:.6}, \
+                 \"b_ns_per_unit\": {:.6}, \"ratio\": {:.6}, \"flagged\": {}}}{}\n",
+                c.phase,
+                c.unit,
+                c.a_ns_per_unit,
+                c.b_ns_per_unit,
+                c.ratio,
+                c.flagged,
+                if i + 1 < self.cost.len() { "," } else { "" }
+            );
+        }
+        o.push_str("  ]\n}\n");
+        o
+    }
+}
+
+/// Compare two profiles. A phase or cost row is flagged when its b/a
+/// ratio exceeds `1 + tolerance` (slower) — one-sided, like the bench
+/// gate: getting faster is not a regression.
+pub fn diff(a: &Profile, b: &Profile, tolerance: f64) -> ProfileDiff {
+    let mut names: Vec<&str> = a.phases.iter().map(|p| p.name.as_str()).collect();
+    for p in &b.phases {
+        if !names.contains(&p.name.as_str()) {
+            names.push(&p.name);
+        }
+    }
+    let phases = names
+        .iter()
+        .map(|&name| {
+            let pa = a.phases.iter().find(|p| p.name == name);
+            let pb = b.phases.iter().find(|p| p.name == name);
+            let a_ns = pa.map_or(0, |p| p.inclusive_ns);
+            let b_ns = pb.map_or(0, |p| p.inclusive_ns);
+            let ratio = match (pa, pb) {
+                (Some(x), Some(_)) if x.inclusive_ns > 0 => {
+                    Some(b_ns as f64 / x.inclusive_ns as f64)
+                }
+                _ => None,
+            };
+            PhaseDelta {
+                name: name.to_string(),
+                a_inclusive_ns: a_ns,
+                b_inclusive_ns: b_ns,
+                ratio,
+                // missing-on-one-side is structural change, not drift;
+                // wall-time ratios are only advisory (cost rows below are
+                // the normalized signal), but still flagged so a doubled
+                // phase cannot hide
+                flagged: ratio.is_some_and(|r| r > 1.0 + tolerance),
+            }
+        })
+        .collect();
+    let cost = a
+        .cost
+        .iter()
+        .filter_map(|ra| {
+            let rb = b.cost.iter().find(|r| r.phase == ra.phase)?;
+            if ra.ns_per_unit <= 0.0 {
+                return None;
+            }
+            let ratio = rb.ns_per_unit / ra.ns_per_unit;
+            Some(CostDelta {
+                phase: ra.phase.clone(),
+                unit: ra.unit,
+                a_ns_per_unit: ra.ns_per_unit,
+                b_ns_per_unit: rb.ns_per_unit,
+                ratio,
+                flagged: ratio > 1.0 + tolerance,
+            })
+        })
+        .collect();
+    ProfileDiff { tolerance, a_wall_ns: a.wall_ns, b_wall_ns: b.wall_ns, phases, cost }
+}
+
+// ---------------------------------------------------------------------------
+// Formatting helpers.
+// ---------------------------------------------------------------------------
+
+fn fmt_flops(f: u64) -> String {
+    fmt_scaled(f as f64, "flop")
+}
+
+fn fmt_flops_per_s(f: f64) -> String {
+    fmt_scaled(f, "flop/s")
+}
+
+fn fmt_units(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+fn fmt_scaled(v: f64, unit: &str) -> String {
+    if v >= 1e9 {
+        format!("{:.2} G{unit}", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2} M{unit}", v / 1e6)
+    } else if v >= 1e3 {
+        format!("{:.2} k{unit}", v / 1e3)
+    } else {
+        format!("{v:.0} {unit}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_parses_the_trace_schema() {
+        let line = "{\"ev\":\"span\",\"name\":\"ep.sweep\",\"tid\":3,\"id\":17,\
+                    \"parent\":null,\"t0_ns\":5,\"t1_ns\":9,\"fields\":{\"sweep\":2,\
+                    \"dlogz\":null,\"backend\":\"sparse\",\"damped\":true,\"delta\":0.25}}";
+        let v = Json::parse(line).unwrap();
+        assert_eq!(v.get("ev").and_then(Json::as_str), Some("span"));
+        assert_eq!(v.get("id").and_then(Json::as_u64), Some(17));
+        assert_eq!(v.get("parent"), Some(&Json::Null));
+        let fields = v.get("fields").unwrap();
+        assert_eq!(fields.get("sweep").and_then(Json::as_u64), Some(2));
+        assert_eq!(fields.get("dlogz"), Some(&Json::Null));
+        assert_eq!(fields.get("backend").and_then(Json::as_str), Some("sparse"));
+        assert_eq!(fields.get("damped").and_then(Json::as_bool), Some(true));
+        assert_eq!(fields.get("delta").and_then(Json::as_f64), Some(0.25));
+    }
+
+    #[test]
+    fn json_handles_escapes_arrays_and_exponents() {
+        let v = Json::parse("{\"s\":\"a\\\"b\\\\c\\u0041\",\"a\":[1,-2.5,1e3],\"b\":false}")
+            .unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some("a\"b\\cA"));
+        match v.get("a") {
+            Some(Json::Arr(items)) => {
+                assert_eq!(items.len(), 3);
+                assert_eq!(items[1].as_f64(), Some(-2.5));
+                assert_eq!(items[2].as_f64(), Some(1000.0));
+            }
+            other => panic!("expected array, got {other:?}"),
+        }
+        assert_eq!(v.get("b").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("{\"a\":}").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    fn span(name: &str, id: u64, parent: u64, t0: u64, t1: u64) -> String {
+        format!(
+            "{{\"ev\":\"span\",\"name\":\"{name}\",\"tid\":1,\"id\":{id},\
+             \"parent\":{},\"t0_ns\":{t0},\"t1_ns\":{t1},\"fields\":{{}}}}",
+            if parent == 0 { "null".to_string() } else { parent.to_string() }
+        )
+    }
+
+    #[test]
+    fn inclusive_exclusive_accounting() {
+        // root [0,100] with children [10,30] and [40,80]; grandchild [45,55]
+        let text = [
+            span("root", 1, 0, 0, 100),
+            span("child", 2, 1, 10, 30),
+            span("child", 3, 1, 40, 80),
+            span("grand", 4, 3, 45, 55),
+        ]
+        .join("\n");
+        let data = parse_trace(&text).unwrap();
+        let p = Profile::from_trace(&data);
+        assert_eq!(p.spans, 4);
+        assert_eq!(p.orphans, 0);
+        assert_eq!(p.wall_ns, 100);
+        let phase = |n: &str| p.phases.iter().find(|x| x.name == n).unwrap();
+        assert_eq!(phase("root").inclusive_ns, 100);
+        assert_eq!(phase("root").exclusive_ns, 40); // 100 - 20 - 40
+        assert_eq!(phase("child").inclusive_ns, 60);
+        assert_eq!(phase("child").exclusive_ns, 50); // 20 + (40 - 10)
+        assert_eq!(phase("grand").exclusive_ns, 10);
+        // invariant: sum of exclusive over all phases == root inclusive
+        let total_excl: u64 = p.phases.iter().map(|x| x.exclusive_ns).sum();
+        assert_eq!(total_excl, 100);
+    }
+
+    #[test]
+    fn orphaned_parents_are_counted_not_dropped() {
+        let text = span("lost", 9, 777, 5, 15);
+        let p = Profile::from_trace(&parse_trace(&text).unwrap());
+        assert_eq!(p.spans, 1);
+        assert_eq!(p.orphans, 1);
+        assert_eq!(p.phases[0].inclusive_ns, 10);
+    }
+
+    #[test]
+    fn metrics_lines_round_trip() {
+        let text = "\
+            {\"ev\":\"metrics\",\"seq\":0,\"t_ns\":100,\"in_flight\":1,\"requests\":10,\
+             \"rejected\":0,\"request_p50_ns\":500,\"request_p99_ns\":900,\
+             \"counters\":{\"ep_sweeps\":5,\"solves\":100}}\n\
+            {\"ev\":\"metrics\",\"seq\":1,\"t_ns\":200,\"in_flight\":3,\"requests\":25,\
+             \"rejected\":2,\"request_p50_ns\":600,\"request_p99_ns\":950,\
+             \"counters\":{\"ep_sweeps\":8,\"solves\":100}}";
+        let data = parse_trace(text).unwrap();
+        assert_eq!(data.metrics.len(), 2);
+        let p = Profile::from_trace(&data);
+        let m = p.metrics.expect("metrics profile");
+        assert_eq!(m.snapshots, 2);
+        assert!(m.monotone);
+        assert_eq!(m.span_ns, 100);
+        assert_eq!(m.last_in_flight, 3);
+        assert_eq!(m.requests_delta, 15);
+        assert_eq!(m.rejected_delta, 2);
+        assert_eq!(m.last_request_p50_ns, Some(600));
+        // only the counter that moved is reported
+        assert_eq!(m.counter_deltas, vec![("ep_sweeps".to_string(), 3)]);
+        // and the renderers mention the stream
+        assert!(p.render_text().contains("metrics: 2 snapshot(s)"));
+        assert!(p.render_json().contains("\"snapshots\": 2"));
+    }
+
+    #[test]
+    fn non_monotone_metrics_are_called_out() {
+        let text = "{\"ev\":\"metrics\",\"t_ns\":200,\"counters\":{}}\n\
+                    {\"ev\":\"metrics\",\"t_ns\":100,\"counters\":{}}";
+        let p = Profile::from_trace(&parse_trace(text).unwrap());
+        assert!(!p.metrics.as_ref().unwrap().monotone);
+        assert!(p.render_text().contains("NOT MONOTONE"));
+    }
+
+    #[test]
+    fn diff_flags_slower_phases_one_sided() {
+        let mk = |scale: u64| {
+            let text =
+                [span("ep.sweep", 1, 0, 0, 100 * scale), span("predict", 2, 0, 0, 50)].join("\n");
+            Profile::from_trace(&parse_trace(&text).unwrap())
+        };
+        let a = mk(1);
+        let b = mk(2);
+        let d = diff(&a, &b, 0.25);
+        let sweep = d.phases.iter().find(|p| p.name == "ep.sweep").unwrap();
+        assert!(sweep.flagged, "2x slower must be flagged at 25% tolerance");
+        assert_eq!(sweep.ratio, Some(2.0));
+        let predict = d.phases.iter().find(|p| p.name == "predict").unwrap();
+        assert!(!predict.flagged);
+        // the reverse direction (faster) is not a regression
+        let d2 = diff(&b, &a, 0.25);
+        assert!(!d2.phases.iter().find(|p| p.name == "ep.sweep").unwrap().flagged);
+        assert!(d.render_text().contains("drift"));
+        assert!(d.render_json().contains("\"flagged\": true"));
+    }
+}

@@ -245,6 +245,9 @@ impl LdlFactor {
             fspan.field_u64("n", n as u64);
             fspan.field_u64("snodes", sched.n_snodes() as u64);
             fspan.field_u64("waves", sched.n_waves() as u64);
+            // padded nnz(L): what the O(nnz) cost-model rows in `csgp
+            // trace analyze` normalize per-sweep time by
+            fspan.field_u64("nnz", sym.row_idx.len() as u64);
         }
         crate::obs::counters::FACTOR_REFACTORS.add(1);
         {

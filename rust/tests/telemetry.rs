@@ -1,0 +1,333 @@
+//! Telemetry-consumption conformance: the contracts `csgp trace` and the
+//! metrics exporter rely on.
+//!
+//! * **Golden trace** — `fixtures/golden_trace_v1.jsonl` is a hand-built
+//!   trace with every span kind the profiler consumes (nested EP sweeps,
+//!   a two-wave factor with pool workers, Takahashi, a service batch,
+//!   two metrics snapshots). Every profile aggregate is pinned against
+//!   hand-computed values, so a change to the aggregation semantics —
+//!   inclusive/exclusive accounting, critical-path definition, cost-row
+//!   units — fails loudly instead of silently re-baselining.
+//! * **Inclusive/exclusive invariant** — on randomly generated
+//!   well-nested span forests, each span's inclusive time equals its
+//!   exclusive time plus its direct children's inclusive times, and the
+//!   forest's total exclusive time equals the roots' inclusive total.
+//! * **Exporter under load** — `serve --metrics`-style snapshots written
+//!   while concurrent clients hammer `predict` stay parseable, strictly
+//!   sequenced, and monotone in `t_ns`, and round-trip through the
+//!   analyzer.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use csgp::coordinator::{MetricsExporter, PredictionService, ServiceConfig};
+use csgp::data::synthetic::{cluster_dataset, ClusterConfig};
+use csgp::gp::covariance::{CovFunction, CovKind};
+use csgp::gp::model::{GpClassifier, Inference};
+use csgp::obs::profile::{self, Profile, SpanRec, TraceData};
+use csgp::rng::Rng;
+use csgp::sparse::ordering::Ordering;
+
+const GOLDEN: &str = include_str!("fixtures/golden_trace_v1.jsonl");
+
+#[test]
+fn golden_trace_v1_aggregates_are_pinned() {
+    let data = profile::parse_trace(GOLDEN).expect("fixture parses");
+    assert_eq!(data.spans.len(), 9);
+    assert_eq!(data.metrics.len(), 2);
+    assert_eq!(data.skipped, 0);
+    let p = Profile::from_trace(&data);
+
+    assert_eq!(p.spans, 9);
+    assert_eq!(p.orphans, 0);
+    assert_eq!(p.wall_ns, 2_100_000);
+
+    // phase table, sorted by inclusive time descending
+    let names: Vec<&str> = p.phases.iter().map(|x| x.name.as_str()).collect();
+    assert_eq!(
+        names,
+        ["ep.sweep", "factor", "factor.wave", "par.worker", "takahashi", "svc.batch"]
+    );
+    let phase = |n: &str| p.phases.iter().find(|x| x.name == n).unwrap();
+    let sweep = phase("ep.sweep");
+    assert_eq!((sweep.count, sweep.inclusive_ns), (2, 1_800_000));
+    // exclusive = inclusive minus the nested factor (400k) and takahashi (300k)
+    assert_eq!(sweep.exclusive_ns, 1_100_000);
+    assert_eq!((sweep.min_ns, sweep.max_ns), (800_000, 1_000_000));
+    let factor = phase("factor");
+    assert_eq!((factor.inclusive_ns, factor.exclusive_ns), (400_000, 30_000));
+    let wave = phase("factor.wave");
+    assert_eq!(wave.inclusive_ns, 370_000);
+    // wave 0's overlapping parallel workers saturate its exclusive to 0;
+    // wave 1 ran inline, so only its 180k survives
+    assert_eq!(wave.exclusive_ns, 180_000);
+    assert_eq!(phase("par.worker").inclusive_ns, 358_000);
+    assert_eq!(phase("takahashi").exclusive_ns, 300_000);
+    assert_eq!(phase("svc.batch").inclusive_ns, 100_000);
+
+    // factor: flops from the wave fields, critical path over wave barriers
+    let f = p.factor.as_ref().expect("factor profile");
+    assert_eq!((f.count, f.total_ns), (1, 400_000));
+    assert_eq!(f.flops, 1_000_000);
+    assert_eq!(f.nnz, 1_500);
+    assert_eq!(f.waves, 2);
+    // wave 0: longest worker busy 180k; wave 1 inline: its 180k duration
+    assert_eq!(f.critical_path_ns, 360_000);
+    assert_eq!(f.busy_ns, 480_000);
+    assert!((f.flops_per_s() - 2.5e9).abs() < 1e3);
+    assert!((f.achieved_parallelism() - 1.2).abs() < 1e-12);
+    assert!((f.max_parallelism() - 480.0 / 360.0).abs() < 1e-12);
+    assert!(f.outliers.is_empty(), "a single instance has no outliers");
+
+    // pool: both workers parent under wave 0 => one region
+    let pool = p.pool.as_ref().expect("pool profile");
+    assert_eq!((pool.worker_spans, pool.regions), (2, 1));
+    assert_eq!(pool.chunks, 5);
+    assert_eq!(pool.stolen_spans, 1);
+    assert_eq!((pool.busy_ns, pool.span_ns), (300_000, 358_000));
+    assert!((pool.utilization() - 300_000.0 / 358_000.0).abs() < 1e-12);
+    // busy 180k vs 120k: max/mean = 180/150 = 1.2
+    assert_eq!(pool.imbalance_max_permille, 1_200);
+
+    // ep trajectory
+    let ep = p.ep.as_ref().expect("ep profile");
+    assert_eq!(ep.sweeps, 2);
+    assert_eq!(ep.backends, ["sparse"]);
+    assert_eq!(ep.final_dlogz, Some(-0.01));
+    assert_eq!(ep.final_max_site_delta, Some(0.001));
+    assert_eq!((ep.rollbacks, ep.skipped_sites), (1, 2));
+
+    // cost-model attribution rows
+    let row = |n: &str| p.cost.iter().find(|r| r.phase == n).unwrap();
+    let rf = row("factor");
+    assert_eq!((rf.measured_ns, rf.units as u64), (400_000, 1_000_000));
+    assert!((rf.ns_per_unit - 0.4).abs() < 1e-12);
+    let rt = row("takahashi");
+    assert_eq!(rt.measured_ns, 300_000);
+    assert!((rt.ns_per_unit - 0.3).abs() < 1e-12);
+    let rs = row("ep.sweep");
+    assert_eq!(rs.unit, "nnz·sweep");
+    // exclusive 1.1M ns over nnz(L)=1500 x 2 sweeps
+    assert_eq!(rs.measured_ns, 1_100_000);
+    assert_eq!(rs.units as u64, 3_000);
+    assert!((rs.ns_per_unit - 1_100_000.0 / 3_000.0).abs() < 1e-9);
+    assert!(p.cost.iter().any(|r| r.phase == "svc.batch"));
+
+    // metrics stream summary
+    let m = p.metrics.as_ref().expect("metrics profile");
+    assert_eq!(m.snapshots, 2);
+    assert!(m.monotone);
+    assert_eq!(m.span_ns, 100_000);
+    assert_eq!(m.last_in_flight, 1);
+    assert_eq!(m.requests_delta, 32);
+    assert_eq!(m.rejected_delta, 0);
+    assert_eq!(m.last_request_p50_ns, Some(90_000));
+    assert_eq!(m.last_request_p99_ns, Some(100_000));
+    assert_eq!(
+        m.counter_deltas,
+        vec![("solves".to_string(), 40), ("ep_sweeps".to_string(), 2)]
+    );
+}
+
+/// The rendered reports are pinned on their load-bearing fragments (not
+/// byte-for-byte, so cosmetic spacing can evolve without re-baselining
+/// the numbers).
+#[test]
+fn golden_trace_v1_report_is_pinned() {
+    let data = profile::parse_trace(GOLDEN).unwrap();
+    let p = Profile::from_trace(&data);
+    let text = p.render_text();
+    for needle in [
+        "trace profile: 9 spans",
+        "ep.sweep",
+        "1.00 Mflop over 2 waves -> 2.50 Gflop/s",
+        "nnz(L) = 1500",
+        "84% utilization",
+        "imbalance max 1200 permille",
+        "ep: 2 sweep(s) [sparse]",
+        "rollbacks 1, skipped sites 2",
+        "cost model (measured vs predicted work units)",
+        "nnz·sweep",
+        "metrics: 2 snapshot(s)",
+    ] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    let json = p.render_json();
+    for needle in [
+        "\"wall_ns\": 2100000",
+        "\"flops\": 1000000",
+        "\"critical_path_ns\": 360000",
+        "\"imbalance_max_permille\": 1200",
+        "\"phase\": \"ep.sweep\"",
+        "\"snapshots\": 2",
+    ] {
+        assert!(json.contains(needle), "missing {needle:?} in:\n{json}");
+    }
+    // and the JSON report parses with the same parser the CLI uses
+    let parsed = profile::Json::parse(&json).expect("render_json emits valid JSON");
+    assert_eq!(parsed.get("wall_ns").and_then(profile::Json::as_u64), Some(2_100_000));
+}
+
+/// Diffing a trace against itself never flags drift, and ratios are 1.
+#[test]
+fn self_diff_is_clean() {
+    let data = profile::parse_trace(GOLDEN).unwrap();
+    let p = Profile::from_trace(&data);
+    let d = profile::diff(&p, &p, 0.25);
+    assert_eq!(d.flagged(), 0);
+    assert!(d.phases.iter().all(|x| x.ratio == Some(1.0)));
+    assert!(d.cost.iter().all(|c| (c.ratio - 1.0).abs() < 1e-12));
+    assert!(d.render_text().contains("no drift beyond tolerance"));
+}
+
+// ---------------------------------------------------------------------------
+// Property: inclusive/exclusive accounting on random well-nested forests.
+// ---------------------------------------------------------------------------
+
+/// Append a span covering [t0, t1) under `parent`, then recursively carve
+/// disjoint child intervals out of it. Names are unique per span so the
+/// per-phase table is a per-span table.
+fn build_tree(
+    spans: &mut Vec<SpanRec>,
+    next_id: &mut u64,
+    rng: &mut Rng,
+    parent: u64,
+    t0: u64,
+    t1: u64,
+    depth: usize,
+) {
+    let id = *next_id;
+    *next_id += 1;
+    spans.push(SpanRec {
+        name: format!("s{id}"),
+        tid: 1,
+        id,
+        parent,
+        t0_ns: t0,
+        t1_ns: t1,
+        fields: Vec::new(),
+    });
+    if depth == 0 || t1 - t0 < 16 {
+        return;
+    }
+    let children = rng.below(4); // 0..=3
+    let mut cursor = t0;
+    for _ in 0..children {
+        if t1 - cursor < 8 {
+            break;
+        }
+        let start = cursor + 1 + rng.below(((t1 - cursor) / 4).max(1) as usize) as u64;
+        if start >= t1 {
+            break;
+        }
+        let end = start + 1 + rng.below((t1 - start).max(1) as usize) as u64;
+        let end = end.min(t1);
+        if end <= start {
+            break;
+        }
+        build_tree(spans, next_id, rng, id, start, end, depth - 1);
+        cursor = end;
+    }
+}
+
+#[test]
+fn inclusive_equals_exclusive_plus_direct_children_on_random_forests() {
+    let mut rng = Rng::new(0x2026_0808);
+    for trial in 0..25 {
+        let mut spans = Vec::new();
+        let mut next_id = 1u64;
+        let mut t = 0u64;
+        for _ in 0..(1 + rng.below(4)) {
+            let dur = 1_000 + rng.below(50_000) as u64;
+            build_tree(&mut spans, &mut next_id, &mut rng, 0, t, t + dur, 4);
+            t += dur + 1 + rng.below(100) as u64;
+        }
+        let data = TraceData { spans: spans.clone(), metrics: Vec::new(), skipped: 0 };
+        let p = Profile::from_trace(&data);
+        assert_eq!(p.spans as usize, spans.len(), "trial {trial}");
+        assert_eq!(p.orphans, 0, "trial {trial}");
+
+        // names are unique, so phases are spans
+        let phase = |name: &str| p.phases.iter().find(|x| x.name == name).unwrap();
+        for s in &spans {
+            let child_sum: u64 = spans
+                .iter()
+                .filter(|c| c.parent == s.id)
+                .map(|c| c.t1_ns - c.t0_ns)
+                .sum();
+            let ph = phase(&s.name);
+            assert_eq!(ph.inclusive_ns, s.t1_ns - s.t0_ns, "trial {trial} span {}", s.id);
+            assert_eq!(
+                ph.inclusive_ns,
+                ph.exclusive_ns + child_sum,
+                "trial {trial} span {}: inclusive must equal exclusive + direct children",
+                s.id
+            );
+        }
+        // forest-level: total exclusive == total root inclusive (time is
+        // partitioned, never double counted)
+        let total_exclusive: u64 = p.phases.iter().map(|x| x.exclusive_ns).sum();
+        let root_inclusive: u64 =
+            spans.iter().filter(|s| s.parent == 0).map(|s| s.t1_ns - s.t0_ns).sum();
+        assert_eq!(total_exclusive, root_inclusive, "trial {trial}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exporter under concurrent predict load.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn exporter_stays_monotone_under_concurrent_predict_load() {
+    csgp::obs::set_mode(csgp::obs::TraceMode::Counters);
+    let data = cluster_dataset(&ClusterConfig::paper_2d(60), 5);
+    let model = GpClassifier::new(
+        CovFunction::new(CovKind::Pp(3), 2, 1.0, 2.0),
+        Inference::Sparse(Ordering::Rcm),
+    );
+    let fitted = Arc::new(model.infer_only(&data.x, &data.y).unwrap());
+    let svc = Arc::new(PredictionService::start(fitted, None, ServiceConfig::default()));
+    let path = std::env::temp_dir()
+        .join(format!("csgp-telemetry-exporter-{}.jsonl", std::process::id()));
+    let exporter =
+        MetricsExporter::start(&path, Duration::from_millis(3), Some(svc.stats.clone()))
+            .expect("exporter start");
+
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let svc = svc.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(c);
+            for _ in 0..30 {
+                let x = vec![rng.uniform_in(0.0, 10.0), rng.uniform_in(0.0, 10.0)];
+                svc.predict(x).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(10));
+    exporter.stop();
+    svc.shutdown();
+
+    let text = std::fs::read_to_string(&path).expect("metrics file");
+    let _ = std::fs::remove_file(&path);
+    let data = profile::parse_trace(&text).expect("every exporter line parses");
+    assert_eq!(data.skipped, 0, "no foreign lines");
+    assert!(data.metrics.len() >= 3, "immediate + periodic + final snapshots");
+    for w in data.metrics.windows(2) {
+        assert!(w[1].seq == w[0].seq + 1, "seq is dense and increasing");
+        assert!(w[1].t_ns >= w[0].t_ns, "t_ns is monotone");
+    }
+    let last = data.metrics.last().unwrap();
+    assert_eq!(last.requests, 120, "final snapshot sees every request");
+    assert_eq!(last.in_flight, 0);
+
+    // round-trip: the analyzer consumes serve --metrics output directly
+    let p = Profile::from_trace(&data);
+    let m = p.metrics.expect("metrics profile");
+    assert!(m.monotone);
+    assert_eq!(m.requests_delta, 120);
+    assert!(p.render_text().contains("snapshot(s)"));
+}

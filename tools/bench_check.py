@@ -1,0 +1,238 @@
+#!/usr/bin/env python3
+"""Compare a bench JSON report against a committed baseline.
+
+The perf benches (`cargo bench --bench perf_parallel`, `--bench
+perf_serving`, run with CSGP_SMOKE=1 in CI) write flat JSON arrays of
+records::
+
+    {"bench": "sweep", "backend": "cs", "n": 600, "threads": 4,
+     "ns_per_iter": 123456.0, ...extra fields...}
+
+This script matches every baseline row against the current report by a
+configurable key (default: bench, backend, n, threads, k — `k`
+participates only when a record carries it, which disambiguates the
+serving bench's online_update/cold_refit rows) and fails when
+
+  * a baseline row has no matching current row (a bench silently rotted
+    away), or
+  * the current value exceeds baseline * (1 + tolerance).
+
+Improvements beyond the tolerance pass, with a note suggesting a
+re-seed.  Baselines are committed under benches/baselines/ and are
+deliberately seeded on the slow side; tighten them from a trusted run
+with `--update`.
+
+Usage:
+    bench_check.py [--tolerance 0.25] [--key bench,backend,n,threads,k]
+                   [--field ns_per_iter] BASELINE CURRENT
+    bench_check.py --update BASELINE CURRENT   # reseed BASELINE from CURRENT
+    bench_check.py --self-test                 # verify the gate mechanism
+
+Exit codes: 0 = pass, 1 = regression or missing row, 2 = usage/parse error.
+"""
+
+import argparse
+import json
+import sys
+
+DEFAULT_KEY = "bench,backend,n,threads,k"
+DEFAULT_FIELD = "ns_per_iter"
+DEFAULT_TOLERANCE = 0.25
+
+
+def load_rows(path):
+    try:
+        with open(path) as f:
+            rows = json.load(f)
+    except OSError as e:
+        raise SystemExit(f"bench_check: cannot read {path}: {e}")
+    except json.JSONDecodeError as e:
+        raise SystemExit(f"bench_check: {path} is not valid JSON: {e}")
+    if not isinstance(rows, list):
+        raise SystemExit(f"bench_check: {path}: expected a JSON array of records")
+    return rows
+
+
+def row_key(row, key_fields):
+    # A field absent from the record contributes None, so records that
+    # never carry `k` still key consistently.
+    return tuple(row.get(f) for f in key_fields)
+
+
+def index_rows(rows, key_fields, path):
+    out = {}
+    for row in rows:
+        k = row_key(row, key_fields)
+        if k in out:
+            raise SystemExit(
+                f"bench_check: {path}: duplicate key {fmt_key(k, key_fields)}; "
+                f"extend --key to disambiguate"
+            )
+        out[k] = row
+    return out
+
+
+def fmt_key(key, key_fields):
+    parts = [f"{f}={v}" for f, v in zip(key_fields, key) if v is not None]
+    return "/".join(parts)
+
+
+def compare(baseline_rows, current_rows, key_fields, field, tolerance,
+            baseline_path="baseline", current_path="current", out=sys.stdout):
+    """Returns the number of failures (missing rows + regressions)."""
+    base = index_rows(baseline_rows, key_fields, baseline_path)
+    cur = index_rows(current_rows, key_fields, current_path)
+    failures = 0
+    improvements = 0
+    print(f"bench_check: {len(base)} baseline row(s), tolerance {tolerance:.0%}", file=out)
+    for k, brow in base.items():
+        label = fmt_key(k, key_fields)
+        if field not in brow:
+            print(f"  FAIL  {label}: baseline row has no '{field}' field", file=out)
+            failures += 1
+            continue
+        crow = cur.get(k)
+        if crow is None:
+            print(f"  FAIL  {label}: missing from {current_path}", file=out)
+            failures += 1
+            continue
+        if field not in crow:
+            print(f"  FAIL  {label}: current row has no '{field}' field", file=out)
+            failures += 1
+            continue
+        bv, cv = float(brow[field]), float(crow[field])
+        if bv <= 0.0:
+            print(f"  FAIL  {label}: non-positive baseline value {bv}", file=out)
+            failures += 1
+            continue
+        ratio = cv / bv
+        if ratio > 1.0 + tolerance:
+            print(
+                f"  FAIL  {label}: {field} {cv:.0f} vs baseline {bv:.0f} "
+                f"({ratio:.2f}x, limit {1.0 + tolerance:.2f}x)",
+                file=out,
+            )
+            failures += 1
+        elif ratio < 1.0 / (1.0 + tolerance):
+            print(
+                f"  ok    {label}: {ratio:.2f}x baseline — faster than the seed; "
+                f"consider --update to tighten",
+                file=out,
+            )
+            improvements += 1
+        else:
+            print(f"  ok    {label}: {ratio:.2f}x baseline", file=out)
+    verdict = "FAIL" if failures else "PASS"
+    print(
+        f"bench_check: {verdict} ({failures} failure(s), "
+        f"{improvements} improvement(s) beyond tolerance)",
+        file=out,
+    )
+    return failures
+
+
+def update_baseline(baseline_path, current_rows):
+    with open(baseline_path, "w") as f:
+        json.dump(current_rows, f, indent=2)
+        f.write("\n")
+    print(f"bench_check: reseeded {baseline_path} with {len(current_rows)} row(s)")
+
+
+def self_test():
+    """Verify the gate mechanism itself: a deliberate regression must
+    fail, a matching run must pass, a vanished row must fail."""
+    import io
+
+    key_fields = DEFAULT_KEY.split(",")
+    base = [
+        {"bench": "sweep", "backend": "cs", "n": 600, "threads": 4, "ns_per_iter": 1000.0},
+        {"bench": "online_update", "backend": "sparse", "n": 600, "threads": 4,
+         "k": 1, "ns_per_iter": 500.0},
+        {"bench": "online_update", "backend": "sparse", "n": 600, "threads": 4,
+         "k": 16, "ns_per_iter": 900.0},
+    ]
+
+    def run(cur, tol=0.25):
+        return compare(base, cur, key_fields, DEFAULT_FIELD, tol, out=io.StringIO())
+
+    checks = []
+
+    # identical run passes
+    checks.append(("identical run passes", run(json.loads(json.dumps(base))) == 0))
+
+    # within-tolerance noise passes
+    noisy = json.loads(json.dumps(base))
+    noisy[0]["ns_per_iter"] = 1200.0  # +20% < 25%
+    checks.append(("within-tolerance noise passes", run(noisy) == 0))
+
+    # deliberate regression fails — the property the CI gate exists for
+    slow = json.loads(json.dumps(base))
+    slow[0]["ns_per_iter"] = 1300.0  # +30% > 25%
+    checks.append(("deliberate 30% regression fails", run(slow) == 1))
+
+    # the k-keyed rows regress independently
+    slow_k = json.loads(json.dumps(base))
+    slow_k[2]["ns_per_iter"] = 2000.0
+    checks.append(("k=16 row regresses independently", run(slow_k) == 1))
+
+    # a vanished row fails
+    missing = json.loads(json.dumps(base))[:2]
+    checks.append(("missing row fails", run(missing) == 1))
+
+    # big improvement still passes
+    fast = json.loads(json.dumps(base))
+    fast[0]["ns_per_iter"] = 100.0
+    checks.append(("improvement passes", run(fast) == 0))
+
+    # tolerance is honoured
+    checks.append(("wider tolerance admits the regression", run(slow, tol=0.5) == 0))
+
+    ok = True
+    for name, passed in checks:
+        print(f"  {'ok' if passed else 'FAIL'}  {name}")
+        ok = ok and passed
+    print(f"bench_check --self-test: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", nargs="?", help="committed baseline JSON")
+    ap.add_argument("current", nargs="?", help="freshly generated bench JSON")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed slowdown fraction (default %(default)s)")
+    ap.add_argument("--key", default=DEFAULT_KEY,
+                    help="comma-separated record fields forming the match key "
+                         "(default %(default)s; absent fields match as null)")
+    ap.add_argument("--field", default=DEFAULT_FIELD,
+                    help="numeric field to compare (default %(default)s)")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite BASELINE with CURRENT's rows and exit")
+    ap.add_argument("--self-test", action="store_true",
+                    help="verify the gate catches a deliberate regression")
+    args = ap.parse_args(argv)
+
+    if args.self_test:
+        return self_test()
+    if not args.baseline or not args.current:
+        ap.error("BASELINE and CURRENT are required unless --self-test")
+    if args.tolerance <= 0.0:
+        ap.error("--tolerance must be positive")
+
+    key_fields = [f.strip() for f in args.key.split(",") if f.strip()]
+    if not key_fields:
+        ap.error("--key must name at least one field")
+
+    current_rows = load_rows(args.current)
+    if args.update:
+        update_baseline(args.baseline, current_rows)
+        return 0
+    baseline_rows = load_rows(args.baseline)
+    failures = compare(baseline_rows, current_rows, key_fields, args.field,
+                       args.tolerance, args.baseline, args.current)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
